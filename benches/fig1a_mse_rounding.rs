@@ -1,0 +1,55 @@
+//! Fig. 1a regeneration + rounding-primitive micro-benchmarks.
+//!
+//! Prints the analytic MSE curves of SR vs RDN over a unit bin (the exact
+//! content of Fig. 1a), validates them against Monte-Carlo estimates, and
+//! benches the two rounding primitives.
+
+use luq::bench::{group, Bencher};
+use luq::quant::rounding::{rdn, rdn_mse, sr, sr_mse};
+use luq::rng::Xoshiro256;
+
+fn main() {
+    group("Fig. 1a — MSE of SR vs RDN over one bin");
+    println!("{:>6} {:>12} {:>12} {:>14} {:>14}", "x", "MSE[RDN]", "MSE[SR]", "MC[RDN]", "MC[SR]");
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let trials = 200_000;
+    for i in 0..=20 {
+        let x = i as f64 / 20.0;
+        let mc_sr: f64 = (0..trials)
+            .map(|_| ((sr(x as f32, 0.0, 1.0, rng.uniform_f32()) as f64) - x).powi(2))
+            .sum::<f64>()
+            / trials as f64;
+        let mc_rdn = ((rdn(x as f32, 0.0, 1.0) as f64) - x).powi(2);
+        println!(
+            "{:>6.2} {:>12.5} {:>12.5} {:>14.5} {:>14.5}",
+            x,
+            rdn_mse(x, 0.0, 1.0),
+            sr_mse(x, 0.0, 1.0),
+            mc_rdn,
+            mc_sr
+        );
+    }
+
+    group("rounding primitive throughput");
+    let b = Bencher::from_env();
+    let n = 1 << 16;
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let xs: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+    let us: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+    let r = b.bench_throughput("sr 64k", n as u64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += sr(xs[i], 0.0, 1.0, us[i]);
+        }
+        acc
+    });
+    println!("{}", r.report());
+    let r = b.bench_throughput("rdn 64k", n as u64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += rdn(xs[i], 0.0, 1.0);
+        }
+        acc
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,46 @@
+//! Runtime GEMM-path latency: execute the standalone Pallas artifacts
+//! (LUQ quant op, tiled matmul) through PJRT — the request-path cost the
+//! coordinator pays per call, including literal copies.
+
+use luq::bench::{group, Bencher};
+use luq::rng::Xoshiro256;
+use luq::runtime::{Engine, HostTensor};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+    let b = Bencher::from_env();
+    let mut rng = Xoshiro256::seed_from_u64(1);
+
+    group("op__luq_quant (1M elements, Pallas interpret kernel via PJRT)");
+    let op = engine.load("op__luq_quant")?;
+    let n = op.meta.inputs[0].numel();
+    let x: Vec<f32> = (0..n).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let noise: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+    let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let args = [
+        HostTensor::f32(vec![n], x),
+        HostTensor::f32(vec![n], noise),
+        HostTensor::scalar_f32(max_abs),
+    ];
+    let r = b.bench_throughput("execute luq_quant", n as u64, || op.run(&args).unwrap());
+    println!("{}", r.report());
+
+    group("op__qmatmul (256x256x256 Pallas tiles via PJRT)");
+    let mm = engine.load("op__qmatmul")?;
+    let (m, k) = (mm.meta.inputs[0].shape[0], mm.meta.inputs[0].shape[1]);
+    let n2 = mm.meta.inputs[1].shape[1];
+    let xs: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let ws: Vec<f32> = (0..k * n2).map(|_| rng.normal_f32()).collect();
+    let args = [
+        HostTensor::f32(vec![m, k], xs),
+        HostTensor::f32(vec![k, n2], ws),
+    ];
+    let flops = (2 * m * k * n2) as u64;
+    let r = b.bench_throughput("execute qmatmul", flops, || mm.run(&args).unwrap());
+    println!("{} (elements = flops)", r.report());
+    println!(
+        "  -> {:.2} GFLOP/s through the full PJRT round trip",
+        flops as f64 / r.median.as_secs_f64() / 1e9
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quantizer throughput on the L3 hot path (the §Perf "rust LUQ within 4×
+//! of memcpy bandwidth" target), comparing every gradient scheme the
+//! experiments use, plus noise generation and nibble packing.
+
+use luq::bench::{group, Bencher};
+use luq::data::gradients::GradientModel;
+use luq::quant::{
+    LogFormat, LogQuantConfig, LogQuantizer, Radix4Format, Radix4Quantizer, SawbQuantizer,
+    TprPhase, UniformQuantizer, UniformRounding,
+};
+use luq::rng::Xoshiro256;
+
+fn main() {
+    let b = Bencher::from_env();
+    let n = 1 << 20;
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let x = GradientModel::default().sample(n, &mut rng);
+    let mut noise = vec![0.0f32; n];
+    rng.fill_uniform(&mut noise);
+    let mut out = vec![0.0f32; n];
+
+    group("reference: memory bandwidth");
+    let r = b.bench_throughput("memcpy 1M f32", n as u64, || {
+        out.copy_from_slice(&x);
+        out[0]
+    });
+    println!("{}", r.report());
+    let memcpy = r.median;
+
+    group("gradient quantizers, 1M lognormal elements");
+    let mut luq_median = memcpy;
+    for (name, cfg) in [
+        ("LUQ (FP4)", LogQuantConfig::luq(LogFormat::FP4)),
+        ("naive FP4", LogQuantConfig::naive(LogFormat::FP4)),
+        ("FP4+SP+RDNP", LogQuantConfig::sp_rdnp(LogFormat::FP4)),
+        ("LUQ (FP2)", LogQuantConfig::luq(LogFormat::FP2)),
+    ] {
+        let q = LogQuantizer::new(cfg);
+        let r = b.bench_throughput(name, n as u64, || q.quantize_into(&x, &noise, &mut out));
+        println!("{}", r.report());
+        if name == "LUQ (FP4)" {
+            luq_median = r.median;
+        }
+    }
+    let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+    let r = b.bench_throughput("radix-4 TPR base (Ultra-low)", n as u64, || {
+        r4.quantize(&x, TprPhase::Base)
+    });
+    println!("{}", r.report());
+
+    group("forward-pass quantizers");
+    let sawb = SawbQuantizer::new(4);
+    let r = b.bench_throughput("SAWB INT4 (stats + quantize)", n as u64, || sawb.quantize(&x));
+    println!("{}", r.report());
+    let uq = UniformQuantizer::new(4, 3.0, UniformRounding::Rdn);
+    let r = b.bench_throughput("uniform INT4 RDN", n as u64, || {
+        uq.quantize_into(&x, &[], &mut out)
+    });
+    println!("{}", r.report());
+
+    group("noise generation (SR uniforms)");
+    let r = b.bench_throughput("xoshiro fill 1M", n as u64, || rng.fill_uniform(&mut noise));
+    println!("{}", r.report());
+    println!(
+        "  -> {:.2} GB/s (perf target: >= 1 GB/s/core)",
+        4.0 * n as f64 / r.median.as_secs_f64() / 1e9
+    );
+
+    group("FP4 code packing");
+    let codes: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+    let r = b.bench_throughput("pack 2/byte", n as u64, || LogFormat::pack_nibbles(&codes));
+    println!("{}", r.report());
+
+    // §Perf gate: LUQ within 4x of memcpy.
+    println!(
+        "\nLUQ / memcpy ratio: {:.2}x (target <= 4x)",
+        luq_median.as_secs_f64() / memcpy.as_secs_f64()
+    );
+}

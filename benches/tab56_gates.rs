@@ -1,0 +1,57 @@
+//! Tables 5/6 regeneration + MF-BPROP functional-simulator throughput.
+
+use luq::bench::{group, Bencher};
+use luq::hw::mac::{AccumWidth, MacSimulator};
+use luq::hw::{
+    gate_table_mfbprop, gate_table_standard, gates, mfbprop_multiply, Fp4Code, Int4Code,
+};
+use luq::rng::Xoshiro256;
+
+fn main() {
+    group("Table 5 — standard hybrid GEMM block (gates)");
+    for e in gate_table_standard() {
+        println!("  {:<26} {:<26} {:>4}", e.block, e.operation, e.gates);
+    }
+    println!("  TOTAL: {}", gates::total(&gate_table_standard()));
+
+    group("Table 6 — MF-BPROP block (gates)");
+    for e in gate_table_mfbprop() {
+        println!("  {:<26} {:<26} {:>4}", e.block, e.operation, e.gates);
+    }
+    println!("  TOTAL: {}", gates::total(&gate_table_mfbprop()));
+
+    let s = gates::area_summary();
+    println!(
+        "\nheadlines: {:.2}x block reduction | {:.1}% total (FP32 accum) | {:.1}% total (FP16 accum)",
+        s.gemm_reduction,
+        s.total_saving_fp32_accum * 100.0,
+        s.total_saving_fp16_accum * 100.0
+    );
+
+    group("MF-BPROP functional simulator throughput");
+    let b = Bencher::from_env();
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let n = 1 << 14;
+    let a: Vec<Int4Code> = (0..n)
+        .map(|_| Int4Code::new(rng.next_u64() & 1 == 0, (rng.next_u64() % 8) as u8))
+        .collect();
+    let g: Vec<Fp4Code> = (0..n)
+        .map(|_| Fp4Code::new(rng.next_u64() & 1 == 0, (rng.next_u64() % 8) as u8))
+        .collect();
+    let r = b.bench_throughput("mfbprop product 16k", n as u64, || {
+        let mut acc = 0u32;
+        for i in 0..n {
+            acc = acc.wrapping_add(mfbprop_multiply(a[i], g[i]));
+        }
+        acc
+    });
+    println!("{}", r.report());
+    let mac = MacSimulator::new(AccumWidth::Fp32);
+    let r = b.bench_throughput("mfbprop dot 16k (fp32 accum)", n as u64, || mac.dot(&a, &g));
+    println!("{}", r.report());
+    let mac16 = MacSimulator::new(AccumWidth::Fp16Chunked(64));
+    let r = b.bench_throughput("mfbprop dot 16k (fp16 chunked)", n as u64, || {
+        mac16.dot(&a, &g)
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,56 @@
+//! End-to-end train-step latency per profile and scheme — the Table-1
+//! cost axis on this testbed, and the §Perf L3-overhead measurement
+//! (non-XLA time in the step loop must stay < 5%).
+
+use luq::bench::group;
+use luq::coordinator::{Trainer, TrainerOptions};
+use luq::runtime::Engine;
+use std::time::Instant;
+
+fn bench_profile(engine: &Engine, profile: &str, scheme: &str, iters: usize) -> anyhow::Result<()> {
+    let name = format!("{profile}__train__{scheme}");
+    let mut t = Trainer::new(engine, &name, None, TrainerOptions::default())?;
+    // warmup (includes XLA compile)
+    t.train_step(0.01)?;
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        t.train_step(0.01)?;
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let toks = match t.meta().model.kind.as_str() {
+        "transformer" => t.meta().batch * t.meta().model.seq_len,
+        _ => t.meta().batch,
+    };
+    println!(
+        "{:<34} median {:>10.3?}/step  ({:.0} items/s, params {})",
+        name,
+        median,
+        toks as f64 / median.as_secs_f64(),
+        t.meta().param_count()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+    let fast = std::env::var("LUQ_BENCH_FAST").is_ok();
+    group("train-step latency (full 3-layer round trip)");
+    for (profile, scheme, iters) in [
+        ("mlp_s", "base", 30),
+        ("mlp_s", "luq", 30),
+        ("mlp_s", "luq_smp2", 30),
+        ("mlp_s", "luq_pallas", 10),
+        ("mlp_s", "ultralow", 30),
+        ("cnn_s", "base", 15),
+        ("cnn_s", "luq", 15),
+        ("tfm_s", "base", 4),
+        ("tfm_s", "luq", 4),
+    ] {
+        let iters = if fast { iters / 3 + 1 } else { iters };
+        bench_profile(&engine, profile, scheme, iters)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! A tour of the numeric-format substrate — the paper's §3/§4 story told
+//! with the rust quantizers, no artifacts needed.
+//!
+//! ```bash
+//! cargo run --release --example quantizer_tour
+//! ```
+
+use luq::data::gradients::GradientModel;
+use luq::quant::rounding::{rdn_mse, sr_mse};
+use luq::quant::{
+    LogFormat, LogQuantConfig, LogQuantizer, Radix4Format, Radix4Quantizer, SawbQuantizer,
+    TprPhase,
+};
+use luq::rng::Xoshiro256;
+use luq::stats::moments::{bias_variance_mse, cosine_similarity};
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(7);
+
+    // --- §3: the MSE/bias trade-off of SR vs RDN (Fig. 1a) -------------
+    println!("== Fig. 1a: rounding error inside one bin [0,1] ==");
+    println!("{:>6} {:>12} {:>12}", "x", "MSE[RDN]", "MSE[SR]");
+    for i in 0..=10 {
+        let x = i as f64 / 10.0;
+        println!("{:>6.2} {:>12.4} {:>12.4}", x, rdn_mse(x, 0.0, 1.0), sr_mse(x, 0.0, 1.0));
+    }
+    println!("(SR MSE >= RDN MSE pointwise — Eq. 9 — but SR is unbiased)\n");
+
+    // --- §4: the FP4 grid and LUQ's unbiasedness ------------------------
+    println!("== FP4 [1,3,0] grid (alpha = 1) ==");
+    println!("{:?}", LogFormat::FP4.grid(1.0));
+    println!("== radix-4 grid (Ultra-low) and its TPR phases ==");
+    println!("base   : {:?}", Radix4Format::FP4.grid(1.0, 1.0));
+    println!("shifted: {:?}\n", Radix4Format::FP4.grid(1.0, 2.0));
+
+    let model = GradientModel::default();
+    let x = model.sample(1 << 16, &mut rng);
+    let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+
+    // Empirical bias/variance at a fixed mid-bin probe.
+    let probe = vec![64.0f32, 2.9];
+    let samples: Vec<f64> = (0..20_000)
+        .map(|_| q.quantize(&probe, &mut rng).0[1] as f64)
+        .collect();
+    let (bias, var, mse) = bias_variance_mse(2.9, &samples);
+    println!("== LUQ at x = 2.9 (bin [2,4], alpha = 1) over 20k draws ==");
+    println!("bias {bias:+.4}   variance {var:.4}   mse {mse:.4}  (Eq. 7: mse = var + bias^2)");
+
+    // SMP variance reduction (§4.1).
+    println!("\n== SMP: variance of the mean of N samples ==");
+    for n in [1usize, 2, 4, 8, 16] {
+        let samples: Vec<f64> = (0..8_000)
+            .map(|_| q.quantize_smp(&probe, n, &mut rng).0[1] as f64)
+            .collect();
+        let (b, v, _) = bias_variance_mse(2.9, &samples);
+        println!("N = {n:>2}: variance {v:.4} (bias stays {b:+.4})");
+    }
+
+    // Whole-tensor fidelity on lognormal gradients.
+    let (y, stats) = q.quantize(&x, &mut rng);
+    println!("\n== LUQ on 64k lognormal gradients ==");
+    println!(
+        "alpha {:.3e}  underflow {:.1}%  cosine {:.4}",
+        stats.alpha,
+        stats.frac_underflow * 100.0,
+        cosine_similarity(&x, &y)
+    );
+    let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+    let y4 = r4.quantize(&x, TprPhase::Base);
+    println!("radix-4 (Ultra-low) cosine {:.4}", cosine_similarity(&x, &y4));
+
+    // SAWB on a Gaussian "activation" tensor (§4.3 forward pass).
+    let acts: Vec<f32> = (0..65_536).map(|_| rng.normal_ms_f32(0.0, 0.7)).collect();
+    let sawb = SawbQuantizer::new(4);
+    let clip = sawb.clip_for(&acts);
+    let qa = sawb.quantize(&acts);
+    let mse_a: f64 = acts
+        .iter()
+        .zip(qa.iter())
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / acts.len() as f64;
+    println!("\n== SAWB INT4 on N(0, 0.7) activations ==");
+    println!("clip {clip:.3}  mse {mse_a:.5}  cosine {:.4}", cosine_similarity(&acts, &qa));
+    println!("\nquantizer_tour OK");
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! Loads the standalone LUQ Pallas-kernel artifact (L1, AOT-lowered by
+//! `make artifacts`), executes it through the rust PJRT runtime (L3),
+//! and cross-checks the result against the bit-exact rust quantizer —
+//! the same check `python/tests` runs against the pure-jnp oracle.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use luq::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+use luq::rng::Xoshiro256;
+use luq::runtime::{Engine, HostTensor};
+use luq::stats::moments::cosine_similarity;
+
+fn main() -> Result<()> {
+    let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // The artifact quantizes 1M gradients with LUQ (FP4 [1,3,0]).
+    let op = engine.load("op__luq_quant")?;
+    let n = op.meta.inputs[0].numel();
+    println!(
+        "artifact `{}`: {} -> {} elements",
+        op.meta.name,
+        n,
+        op.meta.outputs[0].numel()
+    );
+
+    // Lognormal "neural gradients" (the paper's model of them) + uniforms.
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    let x: Vec<f32> = (0..n).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let noise: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+    let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+
+    let out = op.run(&[
+        HostTensor::f32(vec![n], x.clone()),
+        HostTensor::f32(vec![n], noise.clone()),
+        HostTensor::scalar_f32(max_abs),
+    ])?;
+    let y_kernel = out[0].as_f32()?;
+
+    // Same computation through the rust substrate (bit-exact semantics).
+    let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+    let mut y_rust = vec![0.0f32; n];
+    let stats = q.quantize_into(&x, &noise, &mut y_rust);
+
+    let exact = y_kernel
+        .iter()
+        .zip(y_rust.iter())
+        .filter(|(a, b)| (**a - **b).abs() <= a.abs().max(1e-30) * 1e-5)
+        .count();
+    println!(
+        "Pallas kernel vs rust substrate: {}/{} elements identical",
+        exact, n
+    );
+    println!(
+        "alpha = {:.4e}, underflow fraction = {:.1}%, cosine(x, LUQ(x)) = {:.4}",
+        stats.alpha,
+        stats.frac_underflow * 100.0,
+        cosine_similarity(&x, y_kernel)
+    );
+    assert!(exact as f64 / n as f64 > 0.999, "layers disagree");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! SMP + FNT scenario (paper §4.1/§4.2 at example scale): train the CNN
+//! with aggressive FP2 gradients, show SMP averaging recovering accuracy,
+//! then fine-tune in high precision with the Eq. 23 triangle schedule.
+//!
+//! ```bash
+//! cargo run --release --example smp_fnt -- [steps]
+//! ```
+
+use anyhow::Result;
+use luq::coordinator::schedule::{FntSchedule, LrSchedule};
+use luq::coordinator::{checkpoint, StepDecay, Trainer, TrainerOptions};
+use luq::runtime::Engine;
+
+fn run(
+    engine: &Engine,
+    scheme: &str,
+    steps: usize,
+) -> Result<(Trainer, f32, f32)> {
+    let mut t = Trainer::new(
+        engine,
+        &format!("cnn_s__train__{scheme}"),
+        Some("cnn_s__eval__luq"),
+        TrainerOptions { seed: 3, ..Default::default() },
+    )?;
+    let sched = StepDecay::new(0.02, 0.1, steps, &[0.5, 0.75, 0.9]);
+    t.run(steps, &sched, 0)?;
+    let (l, a) = t.evaluate(8)?;
+    Ok((t, l, a))
+}
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+
+    println!("== SMP at 2-bit gradients (FP2 [1,1,0]) ==");
+    let mut keep: Option<Trainer> = None;
+    for (scheme, label) in [
+        ("luq2_smp1", "FP2, SMP 1"),
+        ("luq2_smp4", "FP2, SMP 4"),
+        ("luq2_smp16", "FP2, SMP 16"),
+        ("luq", "FP4 (reference)"),
+    ] {
+        let (t, loss, acc) = run(&engine, scheme, steps)?;
+        println!("  {label:<18} eval loss {loss:.4}  acc {:.1}%", acc * 100.0);
+        if scheme == "luq" {
+            keep = Some(t);
+        }
+    }
+
+    println!("\n== FNT: high-precision fine-tuning of the FP4 model (Eq. 23) ==");
+    let trained = keep.expect("luq run");
+    let ckpt = "runs/smp_fnt_example.ckpt";
+    checkpoint::save(ckpt, &trained.params)?;
+    let fnt_exe = engine.load("cnn_s__train__fnt")?;
+    let eval_exe = engine.load("cnn_s__eval__luq")?;
+    let fnt_steps = steps / 2;
+    let params = checkpoint::load(ckpt)?;
+    let mut ft = Trainer::from_params(
+        fnt_exe,
+        Some(eval_exe),
+        params,
+        TrainerOptions { seed: 11, ..Default::default() },
+    )?;
+    let sched = FntSchedule {
+        lr_end_of_training: 0.02 * 0.001, // final LR of the decayed run
+        lr_base: 1e-3,
+        total: fnt_steps,
+    };
+    println!(
+        "  triangle LR: {:.2e} -> {:.2e} -> {:.2e} over {fnt_steps} steps",
+        sched.lr(0),
+        sched.lr(fnt_steps / 2),
+        sched.lr(fnt_steps)
+    );
+    ft.run(fnt_steps, &sched, 0)?;
+    let (loss, acc) = ft.evaluate(8)?;
+    println!("  after FNT: eval loss {loss:.4}  acc {:.1}%", acc * 100.0);
+    println!("\nsmp_fnt OK");
+    Ok(())
+}

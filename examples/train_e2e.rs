@@ -1,0 +1,102 @@
+//! End-to-end driver (DESIGN.md §5 "E2E"): full 4-bit training of the
+//! decoder-only transformer LM on the synthetic token corpus, through all
+//! three layers — rust coordinator → PJRT → AOT HLO with INT4-SAWB
+//! forward and FP4-LUQ backward, hindsight scale estimation on.
+//!
+//! Logs the loss curve to `runs/e2e_loss.jsonl`, reports eval loss vs the
+//! corpus's entropy-rate floor, and saves a checkpoint. Results recorded
+//! in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example train_e2e -- [steps] [profile]
+//! # default: 300 steps on tfm_e2e (d=256, L=4, ~3.6M params)
+//! ```
+
+use anyhow::Result;
+use luq::coordinator::checkpoint;
+use luq::coordinator::schedule::LrSchedule;
+use luq::coordinator::{StepDecay, Trainer, TrainerOptions};
+use luq::data::{CorpusConfig, TokenCorpus};
+use luq::metrics::{Json, JsonlWriter};
+use luq::runtime::Engine;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let profile = args.get(1).cloned().unwrap_or_else(|| "tfm_e2e".to_string());
+
+    let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+    let train_name = format!("{profile}__train__luq");
+    let mut t = Trainer::new(
+        &engine,
+        &train_name,
+        Some(&format!("{profile}__eval__luq")),
+        TrainerOptions { seed: 1, hindsight: true, ..Default::default() },
+    )?;
+    let meta = t.meta().clone();
+    println!(
+        "model: {} dim={} depth={} params={} | fwd={} bwd={} (eb={})",
+        meta.model.kind,
+        meta.model.dim,
+        meta.model.depth,
+        meta.param_count(),
+        meta.spec.fwd,
+        meta.spec.bwd,
+        meta.spec.bwd_exp_bits,
+    );
+    let corpus = TokenCorpus::new(CorpusConfig { vocab: meta.model.vocab, ..Default::default() });
+    let floor = corpus.transition_entropy();
+    println!(
+        "corpus: vocab {} entropy-rate floor {:.3} nats/token (uniform = {:.3})",
+        meta.model.vocab,
+        floor,
+        (meta.model.vocab as f64).ln()
+    );
+
+    let sched = StepDecay::new(0.3, 0.1, steps, &[0.6, 0.85, 0.95]);
+    let mut log = JsonlWriter::create("runs/e2e_loss.jsonl")?;
+    let t0 = Instant::now();
+    let mut step_times = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let s0 = Instant::now();
+        let rec = t.train_step(sched.lr(s))?;
+        step_times.push(s0.elapsed().as_secs_f64());
+        log.write(&Json::obj(vec![
+            ("step", Json::num(rec.step as f64)),
+            ("loss", Json::num(rec.loss as f64)),
+            ("lr", Json::num(rec.lr as f64)),
+            ("acc", Json::num(rec.train_acc as f64)),
+        ]))?;
+        if (s + 1) % 20 == 0 || s == 0 {
+            println!(
+                "step {:>4}/{steps}  loss {:.4}  acc {:.3}  lr {:.3e}  ({:.2}s/step)",
+                s + 1,
+                rec.loss,
+                rec.train_acc,
+                rec.lr,
+                step_times.last().unwrap()
+            );
+        }
+        if !rec.loss.is_finite() {
+            anyhow::bail!("loss diverged at step {s}");
+        }
+    }
+    log.flush()?;
+
+    let (eval_loss, eval_acc) = t.evaluate(8)?;
+    step_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = step_times[step_times.len() / 2];
+    let first = t.history.first().unwrap().loss;
+    let last = t.history.last().unwrap().loss;
+    println!("\n=== E2E summary ===");
+    println!("steps               : {steps} ({:.1}s total)", t0.elapsed().as_secs_f64());
+    println!("median step time    : {median:.3}s");
+    println!("train loss          : {first:.4} -> {last:.4}");
+    println!("eval loss           : {eval_loss:.4} (floor {floor:.4})");
+    println!("eval next-token acc : {:.1}%", eval_acc * 100.0);
+    checkpoint::save("runs/e2e_final.ckpt", &t.params)?;
+    println!("checkpoint          : runs/e2e_final.ckpt");
+    assert!(last < first, "training must reduce the loss");
+    Ok(())
+}

@@ -1,0 +1,217 @@
+"""AOT driver: lower every manifest entry to HLO **text** + a JSON meta
+sidecar, into ``artifacts/``.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the rust crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here — never on the request path. ``make artifacts``
+invokes this module once; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .manifest import PROFILES, SCHEMES, Entry, manifest
+from .model import (
+    build_model,
+    example_args_eval,
+    example_args_train,
+    make_eval_step,
+    make_init,
+    make_train_step,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_meta(shape_dtypes, names):
+    assert len(shape_dtypes) == len(names), (len(shape_dtypes), len(names))
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+        for n, s in zip(names, shape_dtypes)
+    ]
+
+
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def build_entry(entry: Entry, out_dir: str) -> None:
+    """Lower one manifest entry to {name}.hlo.txt + {name}.meta.json."""
+    if entry.profile == "op":
+        build_op_entry(entry, out_dir)
+        return
+
+    cfg, train_batch, eval_batch = PROFILES[entry.profile]
+    meta: dict = {
+        "name": entry.name,
+        "profile": entry.profile,
+        "stage": entry.stage,
+        "scheme": entry.scheme,
+        "model": {
+            "kind": cfg.kind,
+            "dim": cfg.dim,
+            "depth": cfg.depth,
+            "heads": cfg.heads,
+            "seq_len": cfg.seq_len,
+            "vocab": cfg.vocab,
+            "input_dim": cfg.input_dim,
+        },
+    }
+
+    if entry.stage == "init":
+        spec = SCHEMES["luq"]  # spec is irrelevant for init
+        model = build_model(cfg, spec)
+        fn = make_init(model)
+        args = [jax.ShapeDtypeStruct((), jnp.int32)]
+        lowered = jax.jit(fn).lower(*args)
+        layout = model.param_layout()
+        meta["inputs"] = [{"name": "seed", "shape": [], "dtype": "int32"}]
+        meta["outputs"] = [
+            {"name": n, "shape": list(s), "dtype": "float32"} for n, s in layout
+        ]
+        meta["params"] = meta["outputs"]
+    else:
+        spec = SCHEMES[entry.scheme]
+        model = build_model(cfg, spec)
+        layout = model.param_layout()
+        meta["spec"] = {
+            "fwd": spec.fwd,
+            "bwd": spec.bwd,
+            "bwd_exp_bits": spec.bwd_exp_bits,
+            "smp": spec.smp,
+            "use_kernels": spec.use_kernels,
+        }
+        meta["params"] = [
+            {"name": n, "shape": list(s), "dtype": "float32"} for n, s in layout
+        ]
+        if entry.stage == "train":
+            batch = train_batch
+            fn = make_train_step(model, batch)
+            args = example_args_train(model, batch)
+            names = (
+                [n for n, _ in layout]
+                + [f"m_{n}" for n, _ in layout]
+                + [n for n, _, _ in model.data_spec(batch)]
+                + ["lr"]
+                + [n for n, _ in model.qgrad_shapes(batch)]
+                + [f"est_{i}" for i in range(model.n_qlayers(batch))]
+                + ["use_est"]
+            )
+            out_names = (
+                [n for n, _ in layout]
+                + [f"m_{n}" for n, _ in layout]
+                + ["loss", "correct"]
+                + [f"max_{i}" for i in range(model.n_qlayers(batch))]
+            )
+        else:  # eval
+            batch = eval_batch
+            fn = make_eval_step(model, batch)
+            args = example_args_eval(model, batch)
+            names = [n for n, _ in layout] + [n for n, _, _ in model.data_spec(batch)]
+            out_names = ["loss", "correct"]
+        meta["batch"] = batch
+        meta["n_qlayers"] = model.n_qlayers(batch)
+        meta["qgrads"] = [
+            {"name": n, "shape": list(s)} for n, s in model.qgrad_shapes(batch)
+        ]
+        lowered = jax.jit(fn).lower(*args)
+        meta["inputs"] = _spec_meta(args, names)
+        outs = jax.eval_shape(fn, *args)
+        meta["outputs"] = _spec_meta([_sds(o) for o in outs], out_names)
+
+    _write(entry.name, lowered, meta, out_dir)
+
+
+def build_op_entry(entry: Entry, out_dir: str) -> None:
+    """Standalone Pallas quant-op artifacts (quickstart + micro-benches)."""
+    from .kernels.luq import luq_quantize
+    from .kernels.qmatmul import matmul
+
+    if entry.name == "op__luq_quant":
+        n = 1 << 20  # 1M elements
+
+        def fn(x, u, max_abs):
+            return (luq_quantize(x, u, max_abs, 3),)
+
+        args = [
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        ]
+        names = ["x", "noise", "max_abs"]
+        out_names = ["y"]
+    elif entry.name == "op__qmatmul":
+        m = k = n2 = 256
+
+        def fn(x, w):
+            return (matmul(x, w),)
+
+        args = [
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n2), jnp.float32),
+        ]
+        names = ["x", "w"]
+        out_names = ["y"]
+    else:
+        raise ValueError(entry.name)
+
+    lowered = jax.jit(fn).lower(*args)
+    outs = jax.eval_shape(fn, *args)
+    meta = {
+        "name": entry.name,
+        "profile": "op",
+        "stage": "op",
+        "scheme": None,
+        "inputs": _spec_meta(args, names),
+        "outputs": _spec_meta([_sds(o) for o in outs], out_names),
+    }
+    _write(entry.name, lowered, meta, out_dir)
+
+
+def _write(name: str, lowered, meta: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    meta_path = os.path.join(out_dir, f"{name}.meta.json")
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  wrote {hlo_path} ({len(text) / 1e6:.2f} MB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact-name substrings to build"
+    )
+    ns = ap.parse_args()
+    entries = manifest()
+    if ns.only:
+        keys = ns.only.split(",")
+        entries = [e for e in entries if any(k in e.name for k in keys)]
+    print(f"building {len(entries)} artifacts -> {ns.out}")
+    for i, e in enumerate(entries):
+        print(f"[{i + 1}/{len(entries)}] {e.name}")
+        sys.stdout.flush()
+        build_entry(e, ns.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Kernels lower into the L2 training graphs; ``ref.py`` is the oracle the
+pytest suite checks them against.
+"""
+
+from . import luq, qmatmul, ref, sawb  # noqa: F401

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: the LUQ gradient quantizer (paper §4).
+
+TPU mapping (DESIGN.md §3 Hardware-Adaptation): LUQ is elementwise on the
+gradient tensor plus one scalar (alpha), so the CUDA-style threadblock
+structure of a GPU port collapses into a BlockSpec HBM→VMEM tiling. We
+tile the (flattened-to-2D) tensor into (BLOCK_M, BLOCK_N) f32 tiles; in
+and out tiles plus the noise tile are 3 × 128 KiB — double-buffered well
+under VMEM. All arithmetic is VPU-friendly (abs/log2/floor/select); the
+only cross-element communication is the max reduction, which lives
+*outside* the kernel (or is replaced entirely by the hindsight estimate,
+Eq. 24 — the paper's own answer to that data movement).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same graph runs
+under the rust runtime. Real-TPU performance is estimated in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape: 256×128 f32 = 128 KiB per operand buffer.
+BLOCK_M = 256
+BLOCK_N = 128
+
+
+def _luq_kernel(x_ref, u_ref, scale_ref, o_ref, *, levels: int):
+    """One (BLOCK_M, BLOCK_N) tile of LUQ (Eqs. 17+18).
+
+    ``scale_ref`` is a (1, 1) tile broadcast to every grid cell carrying
+    alpha (precomputed from the measured or hindsight max).
+    """
+    x = x_ref[...]
+    u = u_ref[...]
+    alpha = scale_ref[0, 0]
+
+    a = jnp.abs(x)
+    sign = jnp.sign(x)
+    top = alpha * 2.0 ** (levels - 1)
+
+    # Underflow: snap to alpha w.p. a/alpha else 0 (Eq. 17).
+    under = jnp.where(u < a / alpha, alpha, 0.0)
+
+    # In-range: SR between the bracketing powers of two (Eq. 18).
+    r = jnp.maximum(a / alpha, 1.0)
+    n = jnp.clip(jnp.floor(jnp.log2(r)), 0, levels - 2)
+    lo = alpha * 2.0**n
+    p_up = (a - lo) / lo
+    inr = jnp.where(u < p_up, 2.0 * lo, lo)
+
+    mag = jnp.where(a < alpha, under, jnp.where(a >= top, top, inr))
+    o_ref[...] = sign * mag
+
+
+def _pad2d(x):
+    """Flatten to 2D and pad up to tile multiples; returns (x2d, unpad)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = BLOCK_N
+    rows = -(-n // cols)
+    rows_pad = -(-rows // BLOCK_M) * BLOCK_M
+    padded = jnp.zeros((rows_pad * cols,), x.dtype).at[:n].set(flat)
+    return padded.reshape(rows_pad, cols), n
+
+
+@functools.partial(jax.jit, static_argnames=("exp_bits",))
+def luq_quantize(x, noise, max_abs, exp_bits: int = 3):
+    """Quantize ``x`` (any shape) with LUQ.
+
+    ``noise``: uniforms of the same shape; ``max_abs``: scalar scale
+    source. Returns values on the FP-[1,exp_bits,0] grid.
+    """
+    levels = (1 << exp_bits) - 1
+    alpha = max_abs / 2.0 ** (levels - 1)
+    # Guard the all-zero tensor: alpha=1 makes the math finite; the
+    # result is zeroed by the final `where`.
+    safe_alpha = jnp.where(max_abs > 0, alpha, 1.0)
+
+    x2d, n = _pad2d(x)
+    u2d, _ = _pad2d(noise)
+    scale = jnp.reshape(safe_alpha.astype(x.dtype), (1, 1))
+
+    grid = (x2d.shape[0] // BLOCK_M,)
+    out = pl.pallas_call(
+        functools.partial(_luq_kernel, levels=levels),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i: (i, 0)),
+        interpret=True,
+    )(x2d, u2d, scale)
+
+    y = out.reshape(-1)[:n].reshape(x.shape)
+    return jnp.where(max_abs > 0, y, jnp.zeros_like(y))

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: tiled matmul — the GEMM all three training phases
+(Eqs. 25–27) run through after quantization.
+
+MXU mapping: (128, 128) output tiles with a K-loop of 128-wide panels —
+the canonical systolic-array schedule. On real TPU the quantized operands
+would arrive as packed INT4/FP4 and unpack in the prologue; under
+interpret mode the operands are the dequantized f32 values (bit-identical
+numerics, since quantize-dequantize is exact on the grid).
+
+The kernel accumulates in f32 via a VMEM scratch accumulator across the K
+grid dimension (grid iteration order is row-major, so K is the fastest
+axis and the accumulator carries across K steps of one (i, j) tile).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    # The output tile itself is the accumulator: the out BlockSpec maps
+    # every k step of one (i, j) cell to the same tile, so it persists
+    # across the K loop (revision stays in VMEM on TPU).
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, rows, cols):
+    return jnp.zeros((rows, cols), x.dtype).at[: x.shape[0], : x.shape[1]].set(x)
+
+
+@jax.jit
+def matmul(x, w):
+    """``x @ w`` for 2-D f32 operands via the tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    mp = -(-m // TILE_M) * TILE_M
+    np_ = -(-n // TILE_N) * TILE_N
+    kp = -(-k // TILE_K) * TILE_K
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    k_steps = kp // TILE_K
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // TILE_M, np_ // TILE_N, k_steps),
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

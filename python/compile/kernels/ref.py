@@ -1,0 +1,169 @@
+"""Pure-jnp oracles for every quantizer in the stack.
+
+These are the single source of truth the Pallas kernels (and, through the
+golden-vector tests, the rust substrate in ``rust/src/quant/``) are checked
+against. The semantics mirror the paper exactly — see the module docs in
+``rust/src/quant/luq.rs`` for the notation discussion:
+
+* FP4 ``[1,3,0]``: L = 2**exp_bits - 1 magnitude levels ``alpha * 2**i``
+  (i = 0..L-1), exponent code 0 reserved for zero.
+* LUQ scale: ``alpha = max|x| / 2**(L-1)`` so the top bin is the tensor max.
+* Stochastic underflow (Eq. 17), logarithmic stochastic rounding (Eq. 18),
+  RDNP correction (Eq. 20).
+
+All functions take noise as an explicit argument so they are deterministic
+given the caller's uniforms — the same convention the rust coordinator and
+the AOT graphs use.
+"""
+
+from functools import partial
+
+import jax.numpy as jnp
+
+
+def levels_of(exp_bits: int) -> int:
+    """Magnitude levels of a [1, exp_bits, 0] log format (7 for FP4)."""
+    return (1 << exp_bits) - 1
+
+
+def alpha_for_max(max_abs, exp_bits: int):
+    """The unbiased LUQ scale: top bin == tensor max (paper §4)."""
+    return max_abs / 2.0 ** (levels_of(exp_bits) - 1)
+
+
+def luq_ref(
+    x,
+    noise,
+    max_abs,
+    exp_bits: int = 3,
+    *,
+    stochastic_underflow: bool = True,
+    rounding: str = "sr",  # "sr" | "rdnp" | "floor"
+):
+    """LUQ and its Fig. 3 ablation family, given the scale source.
+
+    ``max_abs`` is the max to derive alpha from (measured or hindsight);
+    values above the implied top are clipped (only possible with a
+    hindsight underestimate). Returns values on the log grid.
+    """
+    lvl = levels_of(exp_bits)
+    alpha = alpha_for_max(max_abs, exp_bits)
+    a = jnp.abs(x)
+    sign = jnp.sign(x)
+    top = alpha * 2.0 ** (lvl - 1)
+
+    # --- underflow region: |x| < alpha (Eq. 17)
+    if stochastic_underflow:
+        under = jnp.where(noise < a / alpha, alpha, 0.0)
+    else:
+        under = jnp.zeros_like(a)
+
+    # --- in-range rounding
+    r = jnp.maximum(a / alpha, 1.0)
+    if rounding == "sr":
+        n = jnp.clip(jnp.floor(jnp.log2(r)), 0, lvl - 2)
+        lo = alpha * 2.0**n
+        p_up = (a - lo) / lo
+        inr = jnp.where(noise < p_up, 2.0 * lo, lo)
+    elif rounding == "rdnp":
+        n = jnp.clip(jnp.floor(jnp.log2(r * (4.0 / 3.0))), 0, lvl - 1)
+        inr = alpha * 2.0**n
+    elif rounding == "floor":
+        n = jnp.clip(jnp.floor(jnp.log2(r)), 0, lvl - 1)
+        inr = alpha * 2.0**n
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+
+    mag = jnp.where(a < alpha, under, jnp.where(a >= top, top, inr))
+    return sign * mag
+
+
+def luq_smp_ref(x, noise_samples, max_abs, exp_bits: int = 3):
+    """SMP (§4.1): mean of N independent LUQ samples.
+
+    ``noise_samples``: [N, *x.shape] uniforms. Returns (mean_quant, first
+    sample) — the dW path uses the mean, the dx path the first sample.
+    """
+    qs = jnp.stack(
+        [luq_ref(x, noise_samples[i], max_abs, exp_bits) for i in range(noise_samples.shape[0])]
+    )
+    return jnp.mean(qs, axis=0), qs[0]
+
+
+def uniform_quant_ref(x, noise, clip, bits: int = 4, *, stochastic: bool = False):
+    """Symmetric uniform INT quantizer (forward-pass format / Fig. 1 arms).
+
+    RDN ties round away from zero (matches rust ``UniformQuantizer``).
+    """
+    lvl = (1 << (bits - 1)) - 1
+    delta = clip / lvl
+    t = x / delta
+    if stochastic:
+        code = jnp.floor(t + noise)
+    else:
+        code = jnp.sign(t) * jnp.floor(jnp.abs(t) + 0.5)
+    return jnp.clip(code, -lvl, lvl) * delta
+
+
+def sawb_clip_ref(x, bits: int = 4):
+    """SAWB clip from the fitted linear rule (coefficients fitted by
+    ``rust/src/quant/sawb.rs::fit_coefficients``, pinned on both sides)."""
+    coeffs = {2: (2.650, -1.772), 3: (6.015, -5.048), 4: (9.833, -9.053), 8: (27.50, -28.52)}
+    c1, c2 = coeffs[bits]
+    rms = jnp.sqrt(jnp.mean(x * x))
+    mean_abs = jnp.mean(jnp.abs(x))
+    clip = c1 * rms + c2 * mean_abs
+    return jnp.where(clip > 0, clip, jnp.max(jnp.abs(x)) + 1e-12)
+
+
+def sawb_quant_ref(x, bits: int = 4, *, stochastic: bool = False, noise=None):
+    """SAWB forward-pass quantization: fitted clip + RDN (or SR for the
+    Fig. 1b ablation arm)."""
+    clip = sawb_clip_ref(x, bits)
+    if noise is None:
+        noise = jnp.zeros_like(x)
+    return uniform_quant_ref(x, noise, clip, bits, stochastic=stochastic)
+
+
+def radix4_ref(x, max_abs, exp_bits: int = 3, *, phase_shift: float = 1.0):
+    """Ultra-low baseline: radix-4 FP4, deterministic nearest-in-log with
+    the geometric midpoint, per phase (TPR) — mirrors
+    ``rust/src/quant/radix4.rs``."""
+    lvl = levels_of(exp_bits)
+    alpha = max_abs / 4.0 ** (lvl - 1)
+    base = alpha * phase_shift
+    a = jnp.abs(x)
+    sign = jnp.sign(x)
+    l4 = jnp.log2(jnp.maximum(a, 1e-38) / base) / 2.0
+    i = jnp.floor(l4 + 0.5)
+    below = jnp.where(a >= base * 0.5, base, 0.0)
+    mag = jnp.where(
+        i < 0,
+        below,
+        base * 4.0 ** jnp.clip(i, 0, lvl - 1),
+    )
+    return jnp.where(a == 0.0, 0.0, sign * mag)
+
+
+def radix4_tpr_ref(x, max_abs, exp_bits: int = 3):
+    """Two-phase rounding: (dW copy, dx copy)."""
+    return (
+        radix4_ref(x, max_abs, exp_bits, phase_shift=1.0),
+        radix4_ref(x, max_abs, exp_bits, phase_shift=2.0),
+    )
+
+
+def matmul_ref(x, w):
+    """Plain f32 GEMM oracle for the Pallas matmul kernel."""
+    return jnp.matmul(x, w)
+
+
+# Convenience: the quantizer family keyed the same way as the rust
+# BwdQuantScheme, used by model.py and by the cross-layer tests.
+BWD_REF = {
+    "luq": partial(luq_ref, stochastic_underflow=True, rounding="sr"),
+    "naive": partial(luq_ref, stochastic_underflow=False, rounding="floor"),
+    "naive_sp": partial(luq_ref, stochastic_underflow=True, rounding="floor"),
+    "naive_rdnp": partial(luq_ref, stochastic_underflow=False, rounding="rdnp"),
+    "sp_rdnp": partial(luq_ref, stochastic_underflow=True, rounding="rdnp"),
+}

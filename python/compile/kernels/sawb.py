@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: symmetric uniform quantize-dequantize (the SAWB
+forward-pass application step).
+
+The SAWB *statistics* (rms, mean|x|, the linear clip rule) are cheap
+reductions left to XLA; the elementwise quantize-dequantize over the full
+tensor is the bandwidth-bound hot loop and lives in the kernel. Same
+BlockSpec tiling story as ``luq.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .luq import BLOCK_M, BLOCK_N, _pad2d
+
+
+def _uniform_kernel(x_ref, scale_ref, o_ref, *, levels: int):
+    """RDN quantize-dequantize onto the symmetric grid {-L..L}·delta."""
+    x = x_ref[...]
+    delta = scale_ref[0, 0]
+    t = x / delta
+    code = jnp.sign(t) * jnp.floor(jnp.abs(t) + 0.5)
+    o_ref[...] = jnp.clip(code, -levels, levels) * delta
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def uniform_quantize(x, clip, bits: int = 4):
+    """Quantize ``x`` onto the symmetric uniform grid with clip scale
+    ``clip`` (scalar), RDN rounding (§3.3: forward pass uses RDN)."""
+    levels = (1 << (bits - 1)) - 1
+    delta = jnp.maximum(clip, 1e-12) / levels
+
+    x2d, n = _pad2d(x)
+    scale = jnp.reshape(delta.astype(x.dtype), (1, 1))
+    grid = (x2d.shape[0] // BLOCK_M,)
+    out = pl.pallas_call(
+        functools.partial(_uniform_kernel, levels=levels),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i: (i, 0)),
+        interpret=True,
+    )(x2d, scale)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def sawb_quantize(x, bits: int = 4):
+    """Full SAWB: fitted-linear clip (XLA reductions) + kernel apply."""
+    from .ref import sawb_clip_ref
+
+    return uniform_quantize(x, sawb_clip_ref(x, bits), bits)

@@ -1,0 +1,133 @@
+"""The artifact manifest: every HLO executable the experiments need.
+
+Each entry is (model profile, stage, scheme) -> a uniquely named artifact.
+``aot.py`` builds them all; the rust coordinator looks them up by name
+(see ``rust/src/runtime/registry.rs``). DESIGN.md §5 maps experiments to
+the schemes used here.
+"""
+
+from dataclasses import dataclass
+
+from .model import ModelCfg
+from .quantizers import QuantSpec
+
+# ---------------------------------------------------------------------------
+# Model profiles — sized for the 1-core CPU-PJRT testbed (DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+PROFILES = {
+    # Stand-ins for the paper's ResNet18-CIFAR ablation substrate.
+    "mlp_s": (ModelCfg(kind="mlp", dim=128, depth=3, vocab=10), 32, 128),
+    "cnn_s": (ModelCfg(kind="cnn", dim=32, depth=3, vocab=10), 32, 128),
+    # Stand-in for Transformer-base/WMT in Table 1.
+    "tfm_s": (
+        ModelCfg(kind="transformer", dim=128, depth=2, heads=4, seq_len=48, vocab=256),
+        8,
+        8,
+    ),
+    # The end-to-end example's LM (examples/train_e2e.rs).
+    "tfm_e2e": (
+        ModelCfg(kind="transformer", dim=256, depth=4, heads=8, seq_len=64, vocab=512),
+        8,
+        8,
+    ),
+}
+# values: (cfg, train_batch, eval_batch)
+
+# ---------------------------------------------------------------------------
+# Quantization schemes, named as the experiments refer to them.
+# ---------------------------------------------------------------------------
+
+SCHEMES = {
+    # Table 1 / Table 2 columns
+    "base": QuantSpec(fwd="none", bwd="fp32"),
+    "luq": QuantSpec(fwd="int4", bwd="luq"),
+    "luq_smp2": QuantSpec(fwd="int4", bwd="luq", smp=2),
+    "ultralow": QuantSpec(fwd="int4", bwd="ultralow"),
+    # FNT (§4.2): everything high precision except the weights.
+    "fnt": QuantSpec(fwd="int4_w_only", bwd="fp32"),
+    # Fig. 3 (left) ablations
+    "naive": QuantSpec(fwd="int4", bwd="naive"),
+    "naive_sp": QuantSpec(fwd="int4", bwd="naive_sp"),
+    "naive_rdnp": QuantSpec(fwd="int4", bwd="naive_rdnp"),
+    "sp_rdnp": QuantSpec(fwd="int4", bwd="sp_rdnp"),
+    # Table 4 rows
+    "fwd_only": QuantSpec(fwd="int4", bwd="fp32"),
+    "bwd_only": QuantSpec(fwd="none", bwd="luq"),
+    # Fig. 1b arms (fwd rounding scheme; bwd fp32). RDN arm == fwd_only.
+    "fwd_sr": QuantSpec(fwd="int4_sr", bwd="fp32"),
+    # Fig. 1c arms (bwd rounding scheme at INT4; fwd fp32)
+    "bwd_int_sr": QuantSpec(fwd="none", bwd="int_sr"),
+    "bwd_int_rdn": QuantSpec(fwd="none", bwd="int_rdn"),
+    # Fig. 3 (right): FP2 gradients, SMP sweep
+    "luq2_smp1": QuantSpec(fwd="int4", bwd="luq", bwd_exp_bits=1, smp=1),
+    "luq2_smp2": QuantSpec(fwd="int4", bwd="luq", bwd_exp_bits=1, smp=2),
+    "luq2_smp4": QuantSpec(fwd="int4", bwd="luq", bwd_exp_bits=1, smp=4),
+    "luq2_smp8": QuantSpec(fwd="int4", bwd="luq", bwd_exp_bits=1, smp=8),
+    "luq2_smp16": QuantSpec(fwd="int4", bwd="luq", bwd_exp_bits=1, smp=16),
+    # Fig. 5: 3-bit (FP3) gradients, SMP-2 vs longer training
+    "luq3_smp1": QuantSpec(fwd="int4", bwd="luq", bwd_exp_bits=2, smp=1),
+    "luq3_smp2": QuantSpec(fwd="int4", bwd="luq", bwd_exp_bits=2, smp=2),
+    # The Pallas-kernel path (composition proof; numerics == "luq")
+    "luq_pallas": QuantSpec(fwd="int4", bwd="luq", use_kernels=True),
+}
+
+
+@dataclass(frozen=True)
+class Entry:
+    name: str  # artifact base name (no extension)
+    profile: str
+    stage: str  # "train" | "eval" | "init"
+    scheme: str | None  # None for init
+
+
+def manifest() -> list[Entry]:
+    out: list[Entry] = []
+
+    def train(profile, scheme):
+        out.append(Entry(f"{profile}__train__{scheme}", profile, "train", scheme))
+
+    def eval_(profile, scheme):
+        out.append(Entry(f"{profile}__eval__{scheme}", profile, "eval", scheme))
+
+    for profile in ("mlp_s", "cnn_s", "tfm_s", "tfm_e2e"):
+        out.append(Entry(f"{profile}__init", profile, "init", None))
+        eval_(profile, "luq")  # quantized-forward eval
+        if profile != "tfm_e2e":
+            eval_(profile, "base")  # fp32 eval
+
+    for s in ("base", "luq", "luq_smp2", "ultralow", "fnt", "luq_pallas"):
+        train("mlp_s", s)
+    for s in (
+        "base",
+        "luq",
+        "luq_smp2",
+        "ultralow",
+        "fnt",
+        "naive",
+        "naive_sp",
+        "naive_rdnp",
+        "sp_rdnp",
+        "fwd_only",
+        "bwd_only",
+        "fwd_sr",
+        "bwd_int_sr",
+        "bwd_int_rdn",
+        "luq2_smp1",
+        "luq2_smp2",
+        "luq2_smp4",
+        "luq2_smp8",
+        "luq2_smp16",
+        "luq3_smp1",
+        "luq3_smp2",
+    ):
+        train("cnn_s", s)
+    for s in ("base", "luq", "luq_smp2", "ultralow", "fnt"):
+        train("tfm_s", s)
+    train("tfm_e2e", "luq")
+
+    # Standalone quant-op artifacts (Pallas kernels) for the runtime
+    # micro-benches and the quickstart example.
+    out.append(Entry("op__luq_quant", "op", "op_luq", None))
+    out.append(Entry("op__qmatmul", "op", "op_qmatmul", None))
+    return out

@@ -1,0 +1,192 @@
+"""L2 quantizer dispatch: builds the forward and backward quantization
+functions for a training configuration.
+
+The scheme names mirror ``rust/src/config/run.rs::BwdQuantScheme`` exactly;
+the rust coordinator selects artifacts by these names.
+
+Two numerically identical execution paths exist for the hot elementwise
+ops:
+
+* ``use_kernels=True`` — the Pallas kernels from ``kernels/`` (lowered in
+  interpret mode so the HLO runs on CPU PJRT). This is the TPU-shaped
+  path and is used for the quant-op artifacts and the MLP train step.
+* ``use_kernels=False`` — the pure-jnp reference. XLA fuses these into
+  tight elementwise loops, which is markedly faster on the CPU-interpret
+  substrate, so the larger train-step artifacts default to it. The pytest
+  suite pins both paths to each other, so the choice is pure wall-clock.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.luq import luq_quantize as luq_kernel
+from .kernels.sawb import uniform_quantize as uniform_kernel
+
+FWD_SCHEMES = ("none", "int4", "int4_w_only", "int4_sr")
+BWD_SCHEMES = (
+    "fp32",
+    "luq",
+    "naive",
+    "naive_sp",
+    "naive_rdnp",
+    "sp_rdnp",
+    "ultralow",
+    "int_sr",
+    "int_rdn",
+)
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Full quantization configuration of one training graph."""
+
+    fwd: str = "int4"
+    fwd_bits: int = 4
+    bwd: str = "luq"
+    bwd_exp_bits: int = 3
+    smp: int = 1
+    use_kernels: bool = False
+
+    def __post_init__(self):
+        assert self.fwd in FWD_SCHEMES, self.fwd
+        assert self.bwd in BWD_SCHEMES, self.bwd
+        assert self.smp >= 1
+
+    def tag(self) -> str:
+        """Canonical artifact-name fragment."""
+        k = "k" if self.use_kernels else "r"
+        return (
+            f"f{self.fwd}{self.fwd_bits}_b{self.bwd}_eb{self.bwd_exp_bits}"
+            f"_smp{self.smp}_{k}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def make_fwd_quant(spec: QuantSpec):
+    """Returns ``(quantize_weight, quantize_activation)``.
+
+    Paper §4.3: weights and activations quantize to INT4 with the SAWB
+    clip and RDN rounding. ``int4_w_only`` is the FNT phase (weights stay
+    low precision, everything else high). ``int4_sr`` is the Fig. 1b
+    ablation arm (SR on the forward pass — deliberately wrong).
+    """
+    if spec.fwd == "none":
+        ident = lambda t: t
+        return ident, ident
+
+    def q_rdn(t):
+        clip = ref.sawb_clip_ref(t, spec.fwd_bits)
+        if spec.use_kernels:
+            return uniform_kernel(t, clip, spec.fwd_bits)
+        return ref.uniform_quant_ref(t, jnp.zeros_like(t), clip, spec.fwd_bits)
+
+    if spec.fwd == "int4":
+        return q_rdn, q_rdn
+    if spec.fwd == "int4_w_only":
+        return q_rdn, (lambda t: t)
+    if spec.fwd == "int4_sr":
+        # The Fig. 1b ablation arm ("SR on the forward pass"). True SR
+        # needs fresh uniforms; to keep the artifact signature identical
+        # across fwd schemes we use a golden-ratio hash of the scaled
+        # value as pseudo-noise. This realizes SR's *variance* (the
+        # mechanism Fig. 1b shows is harmful — per §3.2 SR cannot fix
+        # forward bias anyway, so variance is the operative effect);
+        # pointwise unbiasedness is not claimed and not needed here.
+        def q_sr(t):
+            clip = ref.sawb_clip_ref(t, spec.fwd_bits)
+            lvl = (1 << (spec.fwd_bits - 1)) - 1
+            delta = clip / lvl
+            # pseudo-uniforms: golden-ratio hash of the scaled mantissa
+            u = jnp.mod(jnp.abs(t) / delta * 0.6180339887 + 0.382, 1.0)
+            return ref.uniform_quant_ref(t, u, clip, spec.fwd_bits, stochastic=True)
+
+        return q_sr, q_sr
+    raise AssertionError(spec.fwd)
+
+
+# ---------------------------------------------------------------------------
+# Backward pass (neural gradients)
+# ---------------------------------------------------------------------------
+
+
+def _pow2ceil(m):
+    """Top-of-range for the conventional power-of-two FP scale."""
+    return 2.0 ** jnp.ceil(jnp.log2(jnp.maximum(m, 1e-38)))
+
+
+def make_bwd_quant(spec: QuantSpec):
+    """Returns ``bwd_quant(g, noise, est_max, use_est) ->
+    (g_dx, g_dw, measured_max)``.
+
+    * ``g``: the incoming neural gradient (2-D, [rows, dout]).
+    * ``noise``: [smp, rows, dout] uniforms (ignored by deterministic
+      schemes, but always present so artifact signatures are uniform).
+    * ``est_max``: hindsight estimate m̂ (Eq. 24); ``use_est``: 0/1 f32
+      selector between measured max and m̂ — traced, so one artifact
+      serves both Table-3 arms.
+    * dW path may differ from dx path (SMP averaging §4.1, TPR A.3).
+    """
+    eb = spec.bwd_exp_bits
+
+    def max_src(g, est_max, use_est):
+        measured = jnp.max(jnp.abs(g))
+        safe = jnp.maximum(measured, 1e-38)
+        chosen = use_est * jnp.maximum(est_max, 1e-38) + (1.0 - use_est) * safe
+        return measured, chosen
+
+    if spec.bwd == "fp32":
+
+        def bwd(g, noise, est_max, use_est):
+            measured = jnp.max(jnp.abs(g))
+            return g, g, measured
+
+        return bwd
+
+    if spec.bwd in ("luq", "naive", "naive_sp", "naive_rdnp", "sp_rdnp"):
+        stochastic_underflow = spec.bwd in ("luq", "naive_sp", "sp_rdnp")
+        rounding = {"luq": "sr", "naive": "floor", "naive_sp": "floor"}.get(spec.bwd, "rdnp")
+        exact_max = spec.bwd == "luq"
+
+        def one_sample(g, u, m):
+            if spec.use_kernels and spec.bwd == "luq":
+                return luq_kernel(g, u, m, eb)
+            return ref.luq_ref(
+                g, u, m, eb, stochastic_underflow=stochastic_underflow, rounding=rounding
+            )
+
+        def bwd(g, noise, est_max, use_est):
+            measured, chosen = max_src(g, est_max, use_est)
+            m = chosen if exact_max else _pow2ceil(chosen)
+            samples = [one_sample(g, noise[i], m) for i in range(spec.smp)]
+            g_dx = samples[0]
+            g_dw = samples[0] if spec.smp == 1 else sum(samples) / float(spec.smp)
+            return g_dx, g_dw, measured
+
+        return bwd
+
+    if spec.bwd == "ultralow":
+
+        def bwd(g, noise, est_max, use_est):
+            measured, chosen = max_src(g, est_max, use_est)
+            g_dw, g_dx = ref.radix4_tpr_ref(g, chosen, eb)
+            return g_dx, g_dw, measured
+
+        return bwd
+
+    if spec.bwd in ("int_sr", "int_rdn"):
+        stochastic = spec.bwd == "int_sr"
+
+        def bwd(g, noise, est_max, use_est):
+            measured, chosen = max_src(g, est_max, use_est)
+            q = ref.uniform_quant_ref(g, noise[0], chosen, 4, stochastic=stochastic)
+            return q, q, measured
+
+        return bwd
+
+    raise AssertionError(spec.bwd)

@@ -1,0 +1,77 @@
+"""Cross-layer golden-vector tests: the rust substrate
+(`rust/src/quant/*`) and the jax oracles must produce IDENTICAL outputs
+on shared inputs. Goldens are emitted by `cargo run --bin luq -- golden`
+(checked in; regenerate after any intentional semantics change).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "quantizers.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not os.path.exists(GOLDEN):
+        pytest.skip("golden vectors missing — run `cargo run --bin luq -- golden`")
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def arrays(golden):
+    x = jnp.array(np.array(golden["x"], dtype="f4"))
+    noise = jnp.array(np.array(golden["noise"], dtype="f4"))
+    return x, noise, float(golden["max_abs"])
+
+
+def _pow2ceil(m):
+    return float(2.0 ** np.ceil(np.log2(m)))
+
+
+@pytest.mark.parametrize(
+    "name,kwargs,pow2",
+    [
+        ("luq", dict(stochastic_underflow=True, rounding="sr"), False),
+        ("naive", dict(stochastic_underflow=False, rounding="floor"), True),
+        ("naive_sp", dict(stochastic_underflow=True, rounding="floor"), True),
+        ("naive_rdnp", dict(stochastic_underflow=False, rounding="rdnp"), True),
+        ("sp_rdnp", dict(stochastic_underflow=True, rounding="rdnp"), True),
+    ],
+)
+def test_log_quantizers_match_rust(golden, name, kwargs, pow2):
+    x, noise, max_abs = arrays(golden)
+    m = _pow2ceil(max_abs) if pow2 else max_abs
+    got = np.array(ref.luq_ref(x, noise, m, 3, **kwargs))
+    want = np.array(golden[name], dtype="f4")
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-30)
+
+
+def test_ultralow_tpr_matches_rust(golden):
+    x, _, max_abs = arrays(golden)
+    dw, dx = ref.radix4_tpr_ref(x, max_abs, 3)
+    np.testing.assert_allclose(
+        np.array(dw), np.array(golden["ultralow_dw"], dtype="f4"), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.array(dx), np.array(golden["ultralow_dx"], dtype="f4"), rtol=1e-5
+    )
+
+
+def test_uniform_int4_matches_rust(golden):
+    x, noise, max_abs = arrays(golden)
+    got_sr = np.array(ref.uniform_quant_ref(x, noise, max_abs, 4, stochastic=True))
+    np.testing.assert_allclose(got_sr, np.array(golden["int_sr"], dtype="f4"), rtol=1e-5)
+    got_rdn = np.array(ref.uniform_quant_ref(x, jnp.zeros_like(x), max_abs, 4))
+    np.testing.assert_allclose(got_rdn, np.array(golden["int_rdn"], dtype="f4"), rtol=1e-5)
+
+
+def test_sawb_coefficients_pinned_on_both_sides(golden):
+    coeffs = {4: (9.833, -9.053)}
+    assert golden["sawb_c1"] == pytest.approx(coeffs[4][0], abs=1e-3)
+    assert golden["sawb_c2"] == pytest.approx(coeffs[4][1], abs=1e-3)

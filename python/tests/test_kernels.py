@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes and distribution parameters; every sweep case
+asserts allclose between the interpret-mode kernel and ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.luq import luq_quantize
+from compile.kernels.qmatmul import matmul
+from compile.kernels.sawb import sawb_quantize, uniform_quantize
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def lognormal(rng, shape, sigma=2.0):
+    mag = rng.lognormal(0.0, sigma, shape)
+    sign = np.sign(rng.randn(*shape))
+    return (mag * sign).astype("f4")
+
+
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 70),
+    sigma=st.floats(0.5, 4.0),
+    seed=st.integers(0, 2**16),
+)
+def test_luq_kernel_matches_ref(rows, cols, sigma, seed):
+    rng = np.random.RandomState(seed)
+    x = lognormal(rng, (rows, cols), sigma)
+    u = rng.rand(rows, cols).astype("f4")
+    m = float(np.abs(x).max())
+    if m == 0.0:
+        return
+    want = ref.luq_ref(jnp.array(x), jnp.array(u), m)
+    got = luq_quantize(jnp.array(x), jnp.array(u), jnp.float32(m))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-6, atol=0)
+
+
+@given(exp_bits=st.sampled_from([1, 2, 3, 4]), seed=st.integers(0, 2**16))
+def test_luq_kernel_matches_ref_across_formats(exp_bits, seed):
+    rng = np.random.RandomState(seed)
+    x = lognormal(rng, (64, 32))
+    u = rng.rand(64, 32).astype("f4")
+    m = float(np.abs(x).max())
+    want = ref.luq_ref(jnp.array(x), jnp.array(u), m, exp_bits)
+    got = luq_quantize(jnp.array(x), jnp.array(u), jnp.float32(m), exp_bits)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-6)
+
+
+def test_luq_kernel_zero_tensor():
+    x = jnp.zeros((16, 16))
+    u = jnp.full((16, 16), 0.5)
+    y = luq_quantize(x, u, jnp.float32(0.0))
+    assert np.all(np.array(y) == 0.0)
+
+
+def test_luq_outputs_on_grid():
+    rng = np.random.RandomState(0)
+    x = lognormal(rng, (512,))
+    u = rng.rand(512).astype("f4")
+    m = float(np.abs(x).max())
+    y = np.array(luq_quantize(jnp.array(x), jnp.array(u), jnp.float32(m)))
+    alpha = m / 2.0**6
+    grid = np.array([0.0] + [alpha * 2.0**i for i in range(7)])
+    for v in y:
+        assert np.any(np.abs(np.abs(v) - grid) <= grid * 1e-5 + 1e-12), v
+
+
+@given(
+    rows=st.integers(1, 200),
+    cols=st.integers(1, 90),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**16),
+)
+def test_uniform_kernel_matches_ref(rows, cols, scale, seed):
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(rows, cols) * scale).astype("f4")
+    clip = float(np.abs(x).max()) * 0.7 + 1e-6
+    want = ref.uniform_quant_ref(jnp.array(x), jnp.zeros_like(jnp.array(x)), clip, 4)
+    got = uniform_quantize(jnp.array(x), jnp.float32(clip), 4)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-7)
+
+
+def test_sawb_kernel_matches_ref():
+    rng = np.random.RandomState(1)
+    x = (rng.randn(300, 40) * 0.7).astype("f4")
+    want = ref.sawb_quant_ref(jnp.array(x))
+    got = sawb_quantize(jnp.array(x))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-7)
+
+
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=10, deadline=None)
+def test_matmul_kernel_matches_jnp(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(m, k).astype("f4")
+    w = rng.randn(k, n).astype("f4")
+    got = matmul(jnp.array(x), jnp.array(w))
+    np.testing.assert_allclose(np.array(got), x @ w, rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_kernel_multi_tile():
+    # Exercise the K-loop accumulator across several 128-wide panels.
+    rng = np.random.RandomState(2)
+    x = rng.randn(260, 300).astype("f4")
+    w = rng.randn(300, 140).astype("f4")
+    got = matmul(jnp.array(x), jnp.array(w))
+    np.testing.assert_allclose(np.array(got), x @ w, rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(1,), (7,), (255,), (256,), (257,), (5, 3, 2)])
+def test_luq_kernel_odd_shapes(shape):
+    rng = np.random.RandomState(3)
+    x = lognormal(rng, shape)
+    u = rng.rand(*shape).astype("f4")
+    m = float(np.abs(x).max())
+    want = ref.luq_ref(jnp.array(x), jnp.array(u), m)
+    got = luq_quantize(jnp.array(x), jnp.array(u), jnp.float32(m))
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-6)

@@ -1,0 +1,166 @@
+"""L2 model/train-step semantics: shapes, gradient flow, taps, and the
+fp32 scheme's exact agreement with plain autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelCfg,
+    build_model,
+    example_args_train,
+    make_eval_step,
+    make_init,
+    make_train_step,
+)
+from compile.quantizers import QuantSpec
+
+CFGS = {
+    "mlp": ModelCfg(kind="mlp", dim=24, depth=3, vocab=10),
+    "cnn": ModelCfg(kind="cnn", dim=12, depth=3, vocab=10),
+    "transformer": ModelCfg(kind="transformer", dim=24, depth=2, heads=2, seq_len=12, vocab=50),
+}
+BATCH = 4
+
+
+def make_inputs(model, rng, lr=0.02):
+    cfg = model.cfg
+    params = make_init(model)(0)
+    momenta = tuple(jnp.zeros_like(p) for p in params)
+    if cfg.kind == "transformer":
+        data = (jnp.array(rng.randint(0, cfg.vocab, (BATCH, cfg.seq_len + 1)), dtype=jnp.int32),)
+    else:
+        data = (
+            jnp.array(rng.randn(BATCH, cfg.input_dim), dtype=jnp.float32),
+            jnp.array(rng.randint(0, cfg.vocab, (BATCH,)), dtype=jnp.int32),
+        )
+    Q = model.n_qlayers(BATCH)
+    noises = tuple(
+        jnp.array(rng.rand(model.spec.smp, *s).astype("f4"))
+        for _, s in model.qgrad_shapes(BATCH)
+    )
+    ests = tuple(jnp.ones(()) for _ in range(Q))
+    return params, momenta, data, noises, ests
+
+
+@pytest.mark.parametrize("kind", ["mlp", "cnn", "transformer"])
+def test_train_step_shapes_and_finiteness(kind):
+    model = build_model(CFGS[kind], QuantSpec(fwd="int4", bwd="luq"))
+    step = make_train_step(model, BATCH)
+    rng = np.random.RandomState(0)
+    params, momenta, data, noises, ests = make_inputs(model, rng)
+    out = step(*params, *momenta, *data, jnp.float32(0.02), *noises, *ests, jnp.float32(0.0))
+    P = len(params)
+    Q = model.n_qlayers(BATCH)
+    assert len(out) == 2 * P + 2 + Q
+    for p_new, p_old in zip(out[:P], params):
+        assert p_new.shape == p_old.shape
+        assert bool(jnp.all(jnp.isfinite(p_new)))
+    loss = float(out[2 * P])
+    assert np.isfinite(loss) and loss > 0
+    for m in out[2 * P + 2 :]:
+        assert float(m) >= 0.0
+
+
+@pytest.mark.parametrize("kind", ["mlp", "cnn", "transformer"])
+def test_loss_decreases_on_fixed_batch(kind):
+    model = build_model(CFGS[kind], QuantSpec(fwd="int4", bwd="luq"))
+    step = make_train_step(model, BATCH)
+    rng = np.random.RandomState(1)
+    params, momenta, data, noises, ests = make_inputs(model, rng)
+    state = list(params) + list(momenta)
+    P = len(params)
+    first = None
+    for _ in range(15):
+        noises = tuple(
+            jnp.array(rng.rand(model.spec.smp, *s).astype("f4"))
+            for _, s in model.qgrad_shapes(BATCH)
+        )
+        out = step(*state[:P], *state[P:], *data, jnp.float32(0.05), *noises, *ests, jnp.float32(0.0))
+        if first is None:
+            first = float(out[2 * P])
+        state = list(out[: 2 * P])
+    last = float(out[2 * P])
+    assert last < first, f"{first} -> {last}"
+
+
+def test_fp32_scheme_matches_plain_autodiff():
+    # With fwd="none"/bwd="fp32" the custom_vjp must reproduce jax.grad
+    # of the unquantized model exactly.
+    cfg = CFGS["mlp"]
+    model = build_model(cfg, QuantSpec(fwd="none", bwd="fp32"))
+    rng = np.random.RandomState(2)
+    params, momenta, data, noises, ests = make_inputs(model, rng)
+    Q = model.n_qlayers(BATCH)
+    taps = tuple(jnp.zeros(()) for _ in range(Q))
+
+    def loss_q(params):
+        loss, _ = model.loss_and_metrics(params, data, noises, ests, jnp.float32(0.0), taps)
+        return loss
+
+    def loss_plain(params):
+        p = dict(zip([n for n, _ in model.param_layout()], params))
+        x, y = data
+        h = jax.nn.relu(x @ p["w_in"] + p["b_in"])
+        for i in range(cfg.depth - 1):
+            h = jax.nn.relu(h @ p[f"w{i}"] + p[f"b{i}"])
+        logits = h @ p["w_out"] + p["b_out"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+    g_q = jax.grad(loss_q)(params)
+    g_p = jax.grad(loss_plain)(params)
+    for a, b in zip(g_q, g_p):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-5, atol=1e-7)
+
+
+def test_taps_report_measured_gradient_max():
+    cfg = CFGS["mlp"]
+    model = build_model(cfg, QuantSpec(fwd="none", bwd="fp32"))
+    rng = np.random.RandomState(3)
+    params, momenta, data, noises, ests = make_inputs(model, rng)
+    Q = model.n_qlayers(BATCH)
+
+    def loss_fn(params, taps):
+        loss, _ = model.loss_and_metrics(params, data, noises, ests, jnp.float32(0.0), taps)
+        return loss
+
+    taps = tuple(jnp.zeros(()) for _ in range(Q))
+    g_taps = jax.grad(loss_fn, argnums=1)(params, taps)
+    assert len(g_taps) == Q
+    for m in g_taps:
+        assert float(m) > 0.0
+
+
+def test_eval_step_agrees_with_loss():
+    model = build_model(CFGS["mlp"], QuantSpec(fwd="int4", bwd="luq"))
+    ev = make_eval_step(model, BATCH)
+    rng = np.random.RandomState(4)
+    params, _, data, _, _ = make_inputs(model, rng)
+    loss, correct = ev(*params, *data)
+    assert np.isfinite(float(loss))
+    assert 0 <= float(correct) <= BATCH
+
+
+def test_init_is_seed_dependent():
+    model = build_model(CFGS["mlp"], QuantSpec(fwd="int4", bwd="luq"))
+    init = make_init(model)
+    a = init(0)
+    b = init(0)
+    c = init(1)
+    np.testing.assert_array_equal(np.array(a[0]), np.array(b[0]))
+    assert not np.array_equal(np.array(a[0]), np.array(c[0]))
+
+
+def test_example_args_match_layout():
+    for kind in CFGS:
+        model = build_model(CFGS[kind], QuantSpec(fwd="int4", bwd="luq", smp=2))
+        args = example_args_train(model, BATCH)
+        P = len(model.param_layout())
+        D = len(model.data_spec(BATCH))
+        Q = model.n_qlayers(BATCH)
+        assert len(args) == 2 * P + D + 1 + 2 * Q + 1
+        # noise tensors carry the smp axis
+        noise0 = args[2 * P + D + 1]
+        assert noise0.shape[0] == 2

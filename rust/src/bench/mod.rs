@@ -1,0 +1,166 @@
+//! In-repo micro-benchmark harness (the offline registry has no
+//! criterion). Provides warmup, calibrated iteration counts, and robust
+//! statistics (median + MAD), plus throughput reporting — the API surface
+//! the `benches/*.rs` binaries are written against.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    /// Median absolute deviation — robust spread.
+    pub mad: Duration,
+    pub min: Duration,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_melems(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64() / 1e6)
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput_melems() {
+            Some(t) => format!("  {:>10.2} Melem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12.3?} ±{:>10.3?}  (min {:>10.3?}, n={}){}",
+            self.name, self.median, self.mad, self.min, self.iters, tp
+        )
+    }
+}
+
+/// Benchmark runner with criterion-like calibration.
+pub struct Bencher {
+    /// Target wall time for the measurement phase.
+    pub target: Duration,
+    pub warmup: Duration,
+    /// Number of measured samples.
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            target: Duration::from_millis(600),
+            warmup: Duration::from_millis(150),
+            samples: 15,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast profile for CI-ish runs (set `LUQ_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("LUQ_BENCH_FAST").is_ok() {
+            Bencher {
+                target: Duration::from_millis(120),
+                warmup: Duration::from_millis(30),
+                samples: 7,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform one logical operation and
+    /// return something consumed by `black_box`.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + calibration: find iters-per-sample so one sample is
+        // ~target/samples.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            calls += 1;
+        }
+        let per_call = self.warmup.as_secs_f64() / calls.max(1) as f64;
+        let per_sample = (self.target.as_secs_f64() / self.samples as f64 / per_call)
+            .ceil()
+            .max(1.0) as u64;
+
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..per_sample {
+                black_box(f());
+            }
+            samples.push(t0.elapsed() / per_sample as u32);
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mut devs: Vec<Duration> = samples
+            .iter()
+            .map(|&s| if s > median { s - median } else { median - s })
+            .collect();
+        devs.sort();
+        BenchResult {
+            name: name.to_string(),
+            iters: per_sample * self.samples as u64,
+            median,
+            mad: devs[devs.len() / 2],
+            min: samples[0],
+            elements: None,
+        }
+    }
+
+    /// Like [`bench`] but annotates elements/iter for throughput.
+    pub fn bench_throughput<T>(
+        &self,
+        name: &str,
+        elements: u64,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let mut r = self.bench(name, f);
+        r.elements = Some(elements);
+        r
+    }
+}
+
+/// Print a bench group header like the criterion output.
+pub fn group(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_sane() {
+        let b = Bencher {
+            target: Duration::from_millis(40),
+            warmup: Duration::from_millis(10),
+            samples: 5,
+        };
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i) * i);
+            }
+            acc
+        });
+        assert!(r.median > Duration::from_nanos(50));
+        assert!(r.median < Duration::from_millis(10));
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let b = Bencher {
+            target: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            samples: 3,
+        };
+        let r = b.bench_throughput("tp", 1_000_000, || 1 + 1);
+        assert!(r.throughput_melems().unwrap() > 0.0);
+        assert!(r.report().contains("Melem/s"));
+    }
+}

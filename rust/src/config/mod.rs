@@ -1,0 +1,15 @@
+//! Config substrate: a TOML-subset parser plus the typed run
+//! configuration consumed by the coordinator and the `luq` CLI.
+//!
+//! Supported TOML subset (everything the run configs need): `[table]`
+//! headers, `key = value` with strings, integers, floats, booleans, and
+//! flat arrays; `#` comments. Unknown keys are rejected by the typed
+//! layer so config typos fail loudly.
+
+pub mod run;
+pub mod toml;
+
+pub use run::{
+    BwdQuantScheme, FntConfig, ModelConfig, ModelKind, QuantConfig, RunConfig, TrainConfig,
+};
+pub use toml::{parse_toml, TomlValue};

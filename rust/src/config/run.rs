@@ -1,0 +1,428 @@
+//! Typed run configuration — the schema of the `configs/*.toml` files and
+//! the single source of truth the coordinator trains from.
+
+use super::toml::{parse_toml, TomlValue};
+use std::collections::BTreeMap;
+
+/// Which model family an experiment trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Decoder-only transformer LM on the token corpus.
+    Transformer,
+    /// Small conv net on the Gaussian-mixture images.
+    Cnn,
+    /// Plain MLP (fast CI-scale experiments).
+    Mlp,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "transformer" => Ok(ModelKind::Transformer),
+            "cnn" => Ok(ModelKind::Cnn),
+            "mlp" => Ok(ModelKind::Mlp),
+            _ => Err(format!("unknown model kind `{s}`")),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Transformer => "transformer",
+            ModelKind::Cnn => "cnn",
+            ModelKind::Mlp => "mlp",
+        }
+    }
+}
+
+/// Backward (neural-gradient) quantization scheme — the Table 1 / Fig. 3
+/// axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BwdQuantScheme {
+    /// Full precision (baseline).
+    Fp32,
+    /// LUQ (paper §4).
+    Luq,
+    /// Naive FP4 (Fig. 3 ablation).
+    NaiveFp4,
+    /// Naive + stochastic pruning.
+    NaiveSp,
+    /// Naive + RDNP.
+    NaiveRdnp,
+    /// SP + RDNP without the exact-max scale.
+    SpRdnp,
+    /// Ultra-low radix-4 with two-phase rounding (Sun et al. 2020).
+    UltraLow,
+    /// Uniform INT4 with SR (the Fig. 1c "SR" arm on the backward pass).
+    IntSr,
+    /// Uniform INT4 with RDN (the Fig. 1c "RDN" arm).
+    IntRdn,
+}
+
+impl BwdQuantScheme {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s {
+            "fp32" => Self::Fp32,
+            "luq" => Self::Luq,
+            "naive" => Self::NaiveFp4,
+            "naive_sp" => Self::NaiveSp,
+            "naive_rdnp" => Self::NaiveRdnp,
+            "sp_rdnp" => Self::SpRdnp,
+            "ultralow" => Self::UltraLow,
+            "int_sr" => Self::IntSr,
+            "int_rdn" => Self::IntRdn,
+            _ => return Err(format!("unknown bwd quant scheme `{s}`")),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fp32 => "fp32",
+            Self::Luq => "luq",
+            Self::NaiveFp4 => "naive",
+            Self::NaiveSp => "naive_sp",
+            Self::NaiveRdnp => "naive_rdnp",
+            Self::SpRdnp => "sp_rdnp",
+            Self::UltraLow => "ultralow",
+            Self::IntSr => "int_sr",
+            Self::IntRdn => "int_rdn",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    pub kind: ModelKind,
+    /// Width (transformer d_model / CNN base channels / MLP hidden).
+    pub dim: usize,
+    pub depth: usize,
+    /// Transformer-only: attention heads.
+    pub heads: usize,
+    /// Transformer-only: sequence length.
+    pub seq_len: usize,
+    /// Vocab (transformer) or classes (cnn/mlp).
+    pub vocab: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    /// Forward (weights+activations) bits; 0 disables forward quantization.
+    pub fwd_bits: u32,
+    /// Forward rounding: true = SR (Fig. 1b ablation arm), false = RDN.
+    pub fwd_stochastic: bool,
+    pub bwd: BwdQuantScheme,
+    /// Backward exponent bits (3 for FP4, 1 for FP2, 2 for FP3).
+    pub bwd_exp_bits: u32,
+    /// SMP samples (1 = off).
+    pub smp_samples: usize,
+    /// Use hindsight max estimation (Eq. 24) instead of measured max.
+    pub hindsight: bool,
+    /// Hindsight momentum η.
+    pub hindsight_eta: f32,
+    /// Noise re-use period in iterations (Fig. 4; 1 = fresh noise).
+    pub noise_reuse: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            fwd_bits: 4,
+            fwd_stochastic: false,
+            bwd: BwdQuantScheme::Luq,
+            bwd_exp_bits: 3,
+            smp_samples: 1,
+            hindsight: false,
+            hindsight_eta: 0.1,
+            noise_reuse: 1,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// LR decay factor applied at each milestone (paper: 0.1 @ 30/60/80).
+    pub lr_decay: f32,
+    /// Milestones as fractions of total steps.
+    pub lr_milestones: [f32; 3],
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            batch: 32,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            lr_decay: 0.1,
+            lr_milestones: [0.33, 0.66, 0.89],
+            eval_every: 50,
+            eval_batches: 4,
+            seed: 1,
+        }
+    }
+}
+
+/// FNT fine-tuning phase (paper §4.2, Eq. 23).
+#[derive(Clone, Copy, Debug)]
+pub struct FntConfig {
+    /// Fine-tune steps T (0 = disabled).
+    pub steps: usize,
+    /// Peak LR of the triangular schedule (paper: 1e-3).
+    pub lr_base: f32,
+}
+
+impl Default for FntConfig {
+    fn default() -> Self {
+        FntConfig { steps: 0, lr_base: 1e-3 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub name: String,
+    pub model: ModelConfig,
+    pub quant: QuantConfig,
+    pub train: TrainConfig,
+    pub fnt: FntConfig,
+    /// Output directory for JSONL logs.
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "default".into(),
+            model: ModelConfig {
+                kind: ModelKind::Mlp,
+                dim: 128,
+                depth: 2,
+                heads: 4,
+                seq_len: 64,
+                vocab: 256,
+            },
+            quant: QuantConfig::default(),
+            train: TrainConfig::default(),
+            fnt: FntConfig::default(),
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+fn take<'a>(
+    t: &'a BTreeMap<String, TomlValue>,
+    used: &mut Vec<String>,
+    key: &str,
+) -> Option<&'a TomlValue> {
+    used.push(key.to_string());
+    t.get(key)
+}
+
+macro_rules! set_num {
+    ($cfg:expr, $t:expr, $used:expr, $key:literal, $as:ident, $ty:ty) => {
+        if let Some(v) = take($t, $used, $key) {
+            $cfg = v
+                .$as()
+                .ok_or_else(|| format!("`{}` has wrong type", $key))? as $ty;
+        }
+    };
+}
+
+fn check_unknown(
+    table: &BTreeMap<String, TomlValue>,
+    used: &[String],
+    section: &str,
+) -> Result<(), String> {
+    for k in table.keys() {
+        if !used.iter().any(|u| u == k) {
+            return Err(format!("unknown key `{k}` in section [{section}]"));
+        }
+    }
+    Ok(())
+}
+
+impl RunConfig {
+    /// Parse from TOML text, starting from defaults; rejects unknown keys.
+    pub fn from_toml(src: &str) -> Result<RunConfig, String> {
+        let doc = parse_toml(src)?;
+        let mut cfg = RunConfig::default();
+        let empty = BTreeMap::new();
+
+        let top = doc.get("").unwrap_or(&empty);
+        let mut used = vec![];
+        if let Some(v) = take(top, &mut used, "name") {
+            cfg.name = v.as_str().ok_or("`name` must be a string")?.to_string();
+        }
+        if let Some(v) = take(top, &mut used, "out_dir") {
+            cfg.out_dir = v.as_str().ok_or("`out_dir` must be a string")?.to_string();
+        }
+        check_unknown(top, &used, "")?;
+
+        if let Some(t) = doc.get("model") {
+            let mut used = vec![];
+            if let Some(v) = take(t, &mut used, "kind") {
+                cfg.model.kind = ModelKind::parse(v.as_str().ok_or("`kind` must be a string")?)?;
+            }
+            set_num!(cfg.model.dim, t, &mut used, "dim", as_int, usize);
+            set_num!(cfg.model.depth, t, &mut used, "depth", as_int, usize);
+            set_num!(cfg.model.heads, t, &mut used, "heads", as_int, usize);
+            set_num!(cfg.model.seq_len, t, &mut used, "seq_len", as_int, usize);
+            set_num!(cfg.model.vocab, t, &mut used, "vocab", as_int, usize);
+            check_unknown(t, &used, "model")?;
+        }
+
+        if let Some(t) = doc.get("quant") {
+            let mut used = vec![];
+            set_num!(cfg.quant.fwd_bits, t, &mut used, "fwd_bits", as_int, u32);
+            if let Some(v) = take(t, &mut used, "fwd_stochastic") {
+                cfg.quant.fwd_stochastic = v.as_bool().ok_or("`fwd_stochastic` must be bool")?;
+            }
+            if let Some(v) = take(t, &mut used, "bwd") {
+                cfg.quant.bwd = BwdQuantScheme::parse(v.as_str().ok_or("`bwd` must be a string")?)?;
+            }
+            set_num!(cfg.quant.bwd_exp_bits, t, &mut used, "bwd_exp_bits", as_int, u32);
+            set_num!(cfg.quant.smp_samples, t, &mut used, "smp_samples", as_int, usize);
+            if let Some(v) = take(t, &mut used, "hindsight") {
+                cfg.quant.hindsight = v.as_bool().ok_or("`hindsight` must be bool")?;
+            }
+            set_num!(cfg.quant.hindsight_eta, t, &mut used, "hindsight_eta", as_float, f32);
+            set_num!(cfg.quant.noise_reuse, t, &mut used, "noise_reuse", as_int, usize);
+            check_unknown(t, &used, "quant")?;
+        }
+
+        if let Some(t) = doc.get("train") {
+            let mut used = vec![];
+            set_num!(cfg.train.steps, t, &mut used, "steps", as_int, usize);
+            set_num!(cfg.train.batch, t, &mut used, "batch", as_int, usize);
+            set_num!(cfg.train.lr, t, &mut used, "lr", as_float, f32);
+            set_num!(cfg.train.momentum, t, &mut used, "momentum", as_float, f32);
+            set_num!(cfg.train.weight_decay, t, &mut used, "weight_decay", as_float, f32);
+            set_num!(cfg.train.lr_decay, t, &mut used, "lr_decay", as_float, f32);
+            set_num!(cfg.train.eval_every, t, &mut used, "eval_every", as_int, usize);
+            set_num!(cfg.train.eval_batches, t, &mut used, "eval_batches", as_int, usize);
+            set_num!(cfg.train.seed, t, &mut used, "seed", as_int, u64);
+            if let Some(v) = take(t, &mut used, "lr_milestones") {
+                match v {
+                    TomlValue::Array(items) if items.len() == 3 => {
+                        for (i, it) in items.iter().enumerate() {
+                            cfg.train.lr_milestones[i] =
+                                it.as_float().ok_or("milestone must be number")? as f32;
+                        }
+                    }
+                    _ => return Err("`lr_milestones` must be an array of 3 numbers".into()),
+                }
+            }
+            check_unknown(t, &used, "train")?;
+        }
+
+        if let Some(t) = doc.get("fnt") {
+            let mut used = vec![];
+            set_num!(cfg.fnt.steps, t, &mut used, "steps", as_int, usize);
+            set_num!(cfg.fnt.lr_base, t, &mut used, "lr_base", as_float, f32);
+            check_unknown(t, &used, "fnt")?;
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.model.dim == 0 || self.model.depth == 0 {
+            return Err("model dim/depth must be positive".into());
+        }
+        if self.quant.fwd_bits > 8 {
+            return Err("fwd_bits must be <= 8".into());
+        }
+        if !(1..=6).contains(&self.quant.bwd_exp_bits) {
+            return Err("bwd_exp_bits must be in 1..=6".into());
+        }
+        if self.quant.smp_samples == 0 || self.quant.noise_reuse == 0 {
+            return Err("smp_samples and noise_reuse must be >= 1".into());
+        }
+        if self.train.steps == 0 || self.train.batch == 0 {
+            return Err("train steps/batch must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_roundtrip_parse() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            name = "table1-luq"
+            out_dir = "runs/table1"
+            [model]
+            kind = "transformer"
+            dim = 256
+            depth = 4
+            heads = 8
+            seq_len = 128
+            vocab = 512
+            [quant]
+            fwd_bits = 4
+            bwd = "luq"
+            bwd_exp_bits = 3
+            smp_samples = 2
+            hindsight = true
+            hindsight_eta = 0.1
+            noise_reuse = 1
+            [train]
+            steps = 500
+            batch = 16
+            lr = 0.05
+            lr_milestones = [0.3, 0.6, 0.9]
+            [fnt]
+            steps = 100
+            lr_base = 0.001
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "table1-luq");
+        assert_eq!(cfg.model.kind, ModelKind::Transformer);
+        assert_eq!(cfg.model.dim, 256);
+        assert_eq!(cfg.quant.bwd, BwdQuantScheme::Luq);
+        assert_eq!(cfg.quant.smp_samples, 2);
+        assert!(cfg.quant.hindsight);
+        assert_eq!(cfg.train.steps, 500);
+        assert_eq!(cfg.fnt.steps, 100);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let err = RunConfig::from_toml("[model]\nwidht = 3").unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(RunConfig::from_toml("[quant]\nbwd = \"nope\"").is_err());
+        assert!(RunConfig::from_toml("[quant]\nbwd_exp_bits = 9").is_err());
+        assert!(RunConfig::from_toml("[train]\nsteps = 0").is_err());
+    }
+
+    #[test]
+    fn all_schemes_parse_their_names() {
+        for s in [
+            "fp32", "luq", "naive", "naive_sp", "naive_rdnp", "sp_rdnp", "ultralow", "int_sr",
+            "int_rdn",
+        ] {
+            let parsed = BwdQuantScheme::parse(s).unwrap();
+            assert_eq!(parsed.name(), s);
+        }
+    }
+}

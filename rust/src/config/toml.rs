@@ -1,0 +1,224 @@
+//! A small, strict TOML-subset parser (offline registry has no `toml`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `table name -> key -> value`; top-level keys live under table `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse the TOML subset. Returns an error string with a line number on
+/// malformed input.
+pub fn parse_toml(src: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut current = String::new();
+    doc.entry(current.clone()).or_default();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", ln + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty table name", ln + 1));
+            }
+            current = name.to_string();
+            doc.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", ln + 1))?;
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", ln + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        let table = doc.entry(current.clone()).or_default();
+        if table.insert(key.clone(), value).is_some() {
+            return Err(format!("line {}: duplicate key `{key}`", ln + 1));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("unsupported: embedded quote".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(TomlValue::Array(
+            items
+                .into_iter()
+                .map(|i| parse_value(i.trim()))
+                .collect::<Result<Vec<_>, _>>()?,
+        ));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or("unbalanced brackets")?
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse_toml(
+            r#"
+            # run config
+            name = "demo"
+            [model]
+            kind = "transformer"  # decoder-only
+            dim = 128
+            dropout = 0.1
+            tied = true
+            dims = [64, 128, 256]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("demo".into()));
+        assert_eq!(doc["model"]["dim"], TomlValue::Int(128));
+        assert_eq!(doc["model"]["dropout"], TomlValue::Float(0.1));
+        assert_eq!(doc["model"]["tied"], TomlValue::Bool(true));
+        assert_eq!(
+            doc["model"]["dims"],
+            TomlValue::Array(vec![
+                TomlValue::Int(64),
+                TomlValue::Int(128),
+                TomlValue::Int(256)
+            ])
+        );
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let doc = parse_toml(r##"path = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc[""]["path"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("novalue =").is_err());
+        assert!(parse_toml("= 3").is_err());
+        assert!(parse_toml("x = @").is_err());
+        assert!(parse_toml("x = 1\nx = 2").is_err());
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = parse_toml("a = -7\nb = 1e-3\nc = -2.5").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Int(-7));
+        assert_eq!(doc[""]["b"], TomlValue::Float(1e-3));
+        assert_eq!(doc[""]["c"], TomlValue::Float(-2.5));
+    }
+
+    #[test]
+    fn as_float_promotes_ints() {
+        assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+    }
+}

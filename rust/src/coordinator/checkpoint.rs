@@ -1,0 +1,146 @@
+//! Checkpointing: params (or any HostTensor list) to a simple
+//! self-describing binary: a JSON header (tensor specs) + raw
+//! little-endian payload. Used by Table-2 (FNT continues from the 4-bit
+//! checkpoints) and the e2e example.
+
+use crate::metrics::{parse_json, Json};
+use crate::runtime::HostTensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LUQCKPT1";
+
+pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let header = Json::Arr(
+        tensors
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    (
+                        "shape",
+                        Json::Arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect()),
+                    ),
+                    (
+                        "dtype",
+                        Json::str(match t {
+                            HostTensor::F32 { .. } => "float32",
+                            HostTensor::I32 { .. } => "int32",
+                        }),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+    .render();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in tensors {
+        match t {
+            HostTensor::F32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            HostTensor::I32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path)
+            .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a LUQ checkpoint");
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = parse_json(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+    let specs = header.as_arr().ok_or_else(|| anyhow!("header not an array"))?;
+    let mut out = Vec::with_capacity(specs.len());
+    for s in specs {
+        let shape: Vec<usize> = s
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        let n: usize = shape.iter().product();
+        match s.get("dtype").and_then(Json::as_str) {
+            Some("float32") => {
+                let mut data = vec![0f32; n];
+                let mut buf = vec![0u8; 4 * n];
+                f.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes(c.try_into().unwrap());
+                }
+                out.push(HostTensor::f32(shape, data));
+            }
+            Some("int32") => {
+                let mut data = vec![0i32; n];
+                let mut buf = vec![0u8; 4 * n];
+                f.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    data[i] = i32::from_le_bytes(c.try_into().unwrap());
+                }
+                out.push(HostTensor::i32(shape, data));
+            }
+            other => bail!("bad dtype {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("luq_ckpt_test");
+        let path = dir.join("t.ckpt");
+        let tensors = vec![
+            HostTensor::f32(vec![2, 3], vec![1., -2., 3., 4.5, 5., 6.]),
+            HostTensor::i32(vec![4], vec![7, -8, 9, 10]),
+            HostTensor::scalar_f32(0.25),
+        ];
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].shape(), &[2, 3]);
+        assert_eq!(back[0].as_f32().unwrap(), tensors[0].as_f32().unwrap());
+        assert_eq!(back[1].as_i32().unwrap(), tensors[1].as_i32().unwrap());
+        assert_eq!(back[2].item_f32().unwrap(), 0.25);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("luq_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! Owns everything the paper's experiments need around the AOT-compiled
+//! train/eval steps: data feeding, LR schedules (including the FNT
+//! triangle, Eq. 23), SMP noise streams with Fig.-4 reuse, hindsight max
+//! tracking (Eq. 24), checkpoints, metrics, and the experiment drivers
+//! that regenerate every table and figure (DESIGN.md §5).
+
+pub mod checkpoint;
+pub mod experiments;
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::{FntSchedule, LrSchedule, StepDecay};
+pub use trainer::{DataSource, RunResult, Trainer, TrainerOptions};

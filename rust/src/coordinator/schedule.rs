@@ -1,0 +1,117 @@
+//! Learning-rate schedules.
+//!
+//! * [`StepDecay`] — the paper's main recipe (App. A.1): constant LR with
+//!   multiplicative decay at fractional milestones.
+//! * [`FntSchedule`] — the fine-tuning triangle of §4.2 (Eq. 23): LR
+//!   climbs linearly from the end-of-training LR to `lr_base` over T/2
+//!   steps, then descends linearly with the same slope.
+
+/// A schedule maps a step index to a learning rate.
+pub trait LrSchedule {
+    fn lr(&self, step: usize) -> f32;
+}
+
+/// Step decay at fractional milestones of the total step budget.
+#[derive(Clone, Debug)]
+pub struct StepDecay {
+    pub base_lr: f32,
+    pub decay: f32,
+    pub milestones: Vec<usize>,
+}
+
+impl StepDecay {
+    pub fn new(base_lr: f32, decay: f32, total_steps: usize, fractions: &[f32]) -> Self {
+        let milestones = fractions
+            .iter()
+            .map(|f| ((total_steps as f32) * f) as usize)
+            .collect();
+        StepDecay { base_lr, decay, milestones }
+    }
+
+    /// The LR at the final step — FNT's `LR_T` (Eq. 23).
+    pub fn final_lr(&self) -> f32 {
+        self.base_lr * self.decay.powi(self.milestones.len() as i32)
+    }
+}
+
+impl LrSchedule for StepDecay {
+    fn lr(&self, step: usize) -> f32 {
+        let passed = self.milestones.iter().filter(|&&m| step >= m).count();
+        self.base_lr * self.decay.powi(passed as i32)
+    }
+}
+
+/// Eq. 23: triangular fine-tune schedule.
+///
+/// ```text
+/// LR_t = LR_T + (LR_base − LR_T) · t / (T/2)        t ≤ T/2
+///      = LR_base · (T − t) / (T/2)                  t > T/2
+/// ```
+///
+/// (The paper writes the rise as a per-step increment of
+/// `(LR_base − LR_T)/(T/2)`; the closed form above is the same line.
+/// The descent leg, read literally, starts from `LR_T`; we follow the
+/// stated *intent* — "increased linearly during T/2 iterations and then
+/// reduced linearly with the same slope" — which descends from the peak
+/// `LR_base` and reaches ~0 at `t = T`.)
+#[derive(Clone, Debug)]
+pub struct FntSchedule {
+    /// LR at the end of the 4-bit run (`LR_T`).
+    pub lr_end_of_training: f32,
+    /// Peak fine-tune LR (`LR_base`, paper default 1e-3).
+    pub lr_base: f32,
+    /// Total fine-tune steps `T`.
+    pub total: usize,
+}
+
+impl LrSchedule for FntSchedule {
+    fn lr(&self, step: usize) -> f32 {
+        let t = step.min(self.total) as f32;
+        let half = (self.total as f32 / 2.0).max(1.0);
+        if t <= half {
+            self.lr_end_of_training + (self.lr_base - self.lr_end_of_training) * t / half
+        } else {
+            self.lr_base * (self.total as f32 - t) / half
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_applies_milestones() {
+        let s = StepDecay::new(0.1, 0.1, 100, &[0.3, 0.6, 0.9]);
+        assert_eq!(s.lr(0), 0.1);
+        assert_eq!(s.lr(29), 0.1);
+        assert!((s.lr(30) - 0.01).abs() < 1e-9);
+        assert!((s.lr(60) - 0.001).abs() < 1e-9);
+        assert!((s.lr(95) - 0.0001).abs() < 1e-10);
+        assert!((s.final_lr() - 0.0001).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fnt_triangle_shape() {
+        let f = FntSchedule { lr_end_of_training: 1e-4, lr_base: 1e-3, total: 100 };
+        assert!((f.lr(0) - 1e-4).abs() < 1e-9);
+        // peak at T/2
+        assert!((f.lr(50) - 1e-3).abs() < 1e-9);
+        // monotone rise then fall
+        for t in 0..50 {
+            assert!(f.lr(t) < f.lr(t + 1) + 1e-12);
+        }
+        for t in 50..99 {
+            assert!(f.lr(t) > f.lr(t + 1) - 1e-12);
+        }
+        // ends near zero
+        assert!(f.lr(100).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fnt_degenerate_short() {
+        let f = FntSchedule { lr_end_of_training: 1e-4, lr_base: 1e-3, total: 1 };
+        assert!(f.lr(0).is_finite());
+        assert!(f.lr(1).is_finite());
+    }
+}

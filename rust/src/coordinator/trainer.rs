@@ -1,0 +1,351 @@
+//! The Trainer: drives one AOT train-step executable through a schedule,
+//! owning data, noise, hindsight state, and metrics.
+
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::{CorpusConfig, ImageDataset, ImagesConfig, TokenCorpus};
+use crate::rng::{NoiseBank, Xoshiro256};
+use crate::runtime::{Engine, Executable, HostTensor};
+use crate::stats::HindsightMax;
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+/// Synthetic data source matching a model profile (DESIGN.md §4).
+pub enum DataSource {
+    Images(ImageDataset),
+    Corpus(TokenCorpus),
+}
+
+impl DataSource {
+    /// Build from artifact metadata. Dataset seeds are fixed per profile
+    /// so every scheme trains on the *same* task (the comparisons in
+    /// Table 1 etc. are paired).
+    pub fn for_meta(meta: &crate::runtime::ArtifactMeta) -> Result<DataSource> {
+        match meta.model.kind.as_str() {
+            "mlp" | "cnn" => Ok(DataSource::Images(ImageDataset::new(ImagesConfig {
+                classes: meta.model.vocab,
+                ..Default::default()
+            }))),
+            "transformer" => Ok(DataSource::Corpus(TokenCorpus::new(CorpusConfig {
+                vocab: meta.model.vocab,
+                ..Default::default()
+            }))),
+            other => bail!("unknown model kind `{other}`"),
+        }
+    }
+
+    /// Produce the data tensors for one batch, in artifact input order.
+    /// `stream` must be unique per (train/eval, step) pair.
+    pub fn batch(
+        &self,
+        batch: usize,
+        seq_len: usize,
+        stream: u64,
+    ) -> Vec<HostTensor> {
+        match self {
+            DataSource::Images(ds) => {
+                let (x, y) = ds.batch(batch, stream);
+                vec![
+                    HostTensor::f32(vec![batch, ds.dim()], x),
+                    HostTensor::i32(vec![batch], y.into_iter().map(|v| v as i32).collect()),
+                ]
+            }
+            DataSource::Corpus(c) => {
+                let toks = c.batch(batch, seq_len, stream);
+                vec![HostTensor::i32(
+                    vec![batch, seq_len + 1],
+                    toks.into_iter().map(|v| v as i32).collect(),
+                )]
+            }
+        }
+    }
+}
+
+/// Per-step record for the loss curves.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub lr: f32,
+    pub loss: f32,
+    pub train_acc: f32,
+    /// Mean measured gradient max across quantized layers.
+    pub mean_grad_max: f32,
+}
+
+/// Final result of a run (feeds the experiment tables).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    pub history: Vec<StepRecord>,
+    /// (step, hindsight estimate, measured max) traces per layer
+    /// (Fig. 6 / Table 3 diagnostics), recorded when hindsight is on.
+    pub hindsight_trace: Vec<Vec<(usize, f32, f32)>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    pub seed: u64,
+    /// Use the hindsight estimate (Eq. 24) as the quantizer scale.
+    pub hindsight: bool,
+    pub hindsight_eta: f32,
+    /// Noise re-use period in steps (Fig. 4; 1 = fresh every step).
+    pub noise_reuse: usize,
+    /// Record the hindsight trace (costs memory on long runs).
+    pub record_hindsight: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            seed: 1,
+            hindsight: false,
+            hindsight_eta: 0.1,
+            noise_reuse: 1,
+            record_hindsight: false,
+        }
+    }
+}
+
+/// Drives one train artifact (+ optional eval artifact).
+pub struct Trainer {
+    train: Rc<Executable>,
+    eval: Option<Rc<Executable>>,
+    pub params: Vec<HostTensor>,
+    momenta: Vec<HostTensor>,
+    hindsight: Vec<HindsightMax>,
+    noise: Vec<NoiseBank>,
+    opts: TrainerOptions,
+    data: DataSource,
+    pub step: usize,
+    pub history: Vec<StepRecord>,
+    pub hindsight_trace: Vec<Vec<(usize, f32, f32)>>,
+    smp: usize,
+}
+
+impl Trainer {
+    /// Create a trainer for `train_artifact`; params initialized by the
+    /// profile's init artifact with `opts.seed`.
+    pub fn new(
+        engine: &Engine,
+        train_artifact: &str,
+        eval_artifact: Option<&str>,
+        opts: TrainerOptions,
+    ) -> Result<Trainer> {
+        let train = engine.load(train_artifact)?;
+        let eval = match eval_artifact {
+            Some(n) => Some(engine.load(n)?),
+            None => None,
+        };
+        let profile = train.meta.profile.clone();
+        let init = engine.load(&format!("{profile}__init"))?;
+        let params = init
+            .run(&[HostTensor::scalar_i32(opts.seed as i32)])
+            .context("initializing params")?;
+        Self::from_params(train, eval, params, opts)
+    }
+
+    /// Create from existing params (FNT continuation, checkpoints).
+    pub fn from_params(
+        train: Rc<Executable>,
+        eval: Option<Rc<Executable>>,
+        params: Vec<HostTensor>,
+        opts: TrainerOptions,
+    ) -> Result<Trainer> {
+        let meta = &train.meta;
+        if params.len() != meta.params.len() {
+            bail!(
+                "param count mismatch: artifact wants {}, got {}",
+                meta.params.len(),
+                params.len()
+            );
+        }
+        let momenta = meta
+            .params
+            .iter()
+            .map(|s| HostTensor::zeros_f32(&s.shape))
+            .collect();
+        let data = DataSource::for_meta(meta)?;
+        let smp = meta.spec.smp.max(1);
+        let mut seeder = Xoshiro256::seed_from_u64(opts.seed ^ 0x5EED_BA5E);
+        let noise = meta
+            .qgrads
+            .iter()
+            .map(|g| NoiseBank::new(seeder.next_u64(), smp * g.numel(), opts.noise_reuse))
+            .collect();
+        let hindsight = (0..meta.n_qlayers)
+            .map(|_| HindsightMax::new(opts.hindsight_eta))
+            .collect();
+        let n_qlayers = meta.n_qlayers;
+        Ok(Trainer {
+            train,
+            eval,
+            params,
+            momenta,
+            hindsight,
+            noise,
+            opts,
+            data,
+            step: 0,
+            history: Vec::new(),
+            hindsight_trace: vec![Vec::new(); n_qlayers],
+            smp,
+        })
+    }
+
+    pub fn meta(&self) -> &crate::runtime::ArtifactMeta {
+        &self.train.meta
+    }
+
+    /// Run one optimization step at learning rate `lr`.
+    pub fn train_step(&mut self, lr: f32) -> Result<StepRecord> {
+        let meta = &self.train.meta;
+        let p = meta.params.len();
+        let q = meta.n_qlayers;
+        let batch = meta.batch;
+        let stream = 0x7104_0000_0000 ^ (self.opts.seed << 24) ^ self.step as u64;
+
+        // Owned per-step tensors (data, lr, noise, ests); params and
+        // momenta are passed by reference to avoid a second host copy
+        // per step (§Perf L3).
+        let mut step_inputs: Vec<HostTensor> =
+            Vec::with_capacity(4 + 2 * q + meta.inputs.len() - 2 * p);
+        step_inputs.extend(self.data.batch(batch, meta.model.seq_len, stream));
+        step_inputs.push(HostTensor::scalar_f32(lr));
+        for (bank, g) in self.noise.iter_mut().zip(meta.qgrads.iter()) {
+            let mut shape = vec![self.smp];
+            shape.extend_from_slice(&g.shape);
+            step_inputs.push(HostTensor::f32(shape, bank.take(self.smp * g.numel()).to_vec()));
+        }
+        let mut use_est = 0.0f32;
+        for h in self.hindsight.iter() {
+            let est = if self.opts.hindsight {
+                match h.estimate() {
+                    Some(e) if e > 0.0 => {
+                        use_est = 1.0;
+                        e
+                    }
+                    _ => {
+                        use_est = 0.0; // first step: fall back to measured
+                        1.0
+                    }
+                }
+            } else {
+                1.0
+            };
+            step_inputs.push(HostTensor::scalar_f32(est));
+        }
+        step_inputs.push(HostTensor::scalar_f32(use_est));
+
+        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(2 * p + step_inputs.len());
+        inputs.extend(self.params.iter());
+        inputs.extend(self.momenta.iter());
+        inputs.extend(step_inputs.iter());
+        let out = self.train.run_refs(&inputs)?;
+        // outputs: P params, P momenta, loss, correct, Q maxes
+        let mut it = out.into_iter();
+        self.params = (&mut it).take(p).collect();
+        self.momenta = (&mut it).take(p).collect();
+        let loss = it.next().context("missing loss output")?.item_f32()?;
+        let correct = it.next().context("missing correct output")?.item_f32()?;
+        let maxes: Vec<f32> = it.map(|t| t.item_f32().unwrap_or(0.0)).collect();
+        if maxes.len() != q {
+            bail!("expected {q} max outputs, got {}", maxes.len());
+        }
+        let mut mean_max = 0.0;
+        for (i, (&m, h)) in maxes.iter().zip(self.hindsight.iter_mut()).enumerate() {
+            if self.opts.record_hindsight {
+                self.hindsight_trace[i].push((self.step, h.estimate().unwrap_or(0.0), m));
+            }
+            h.observe(m);
+            mean_max += m / q.max(1) as f32;
+        }
+
+        let denom = match &self.data {
+            DataSource::Images(_) => batch as f32,
+            DataSource::Corpus(_) => (batch * meta.model.seq_len) as f32,
+        };
+        let rec = StepRecord {
+            step: self.step,
+            lr,
+            loss,
+            train_acc: correct / denom,
+            mean_grad_max: mean_max,
+        };
+        self.step += 1;
+        self.history.push(rec);
+        Ok(rec)
+    }
+
+    /// Evaluate on `n_batches` held-out batches; returns (loss, acc).
+    pub fn evaluate(&self, n_batches: usize) -> Result<(f32, f32)> {
+        let eval = self
+            .eval
+            .as_ref()
+            .context("trainer has no eval artifact")?;
+        let meta = &eval.meta;
+        let mut tot_loss = 0.0f64;
+        let mut tot_correct = 0.0f64;
+        let mut tot_items = 0.0f64;
+        for b in 0..n_batches {
+            let stream = 0xEEAA_0000_0000 ^ b as u64; // disjoint from train
+            let data = self.data.batch(meta.batch, meta.model.seq_len, stream);
+            let mut inputs: Vec<&HostTensor> = self.params.iter().collect();
+            inputs.extend(data.iter());
+            let out = eval.run_refs(&inputs)?;
+            tot_loss += out[0].item_f32()? as f64;
+            tot_correct += out[1].item_f32()? as f64;
+            tot_items += match &self.data {
+                DataSource::Images(_) => meta.batch as f64,
+                DataSource::Corpus(_) => (meta.batch * meta.model.seq_len) as f64,
+            };
+        }
+        Ok((
+            (tot_loss / n_batches as f64) as f32,
+            (tot_correct / tot_items) as f32,
+        ))
+    }
+
+    /// Train for `steps` under a schedule, with optional progress logging.
+    pub fn run(
+        &mut self,
+        steps: usize,
+        schedule: &dyn LrSchedule,
+        log_every: usize,
+    ) -> Result<()> {
+        for s in 0..steps {
+            let rec = self.train_step(schedule.lr(s))?;
+            if !rec.loss.is_finite() {
+                // Divergence is a *result* for the naive-FP4 ablations,
+                // not an error; record and stop.
+                eprintln!("  step {}: loss diverged (NaN/inf), stopping run", rec.step);
+                break;
+            }
+            if log_every > 0 && (s + 1) % log_every == 0 {
+                eprintln!(
+                    "  step {:>5}  lr {:.4e}  loss {:.4}  acc {:.3}",
+                    rec.step, rec.lr, rec.loss, rec.train_acc
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Finish a run into a [`RunResult`] (evaluates if possible).
+    pub fn result(&self, name: &str, eval_batches: usize) -> Result<RunResult> {
+        let (eval_loss, eval_acc) = match &self.eval {
+            Some(_) => self.evaluate(eval_batches)?,
+            None => {
+                let last = self.history.last();
+                (last.map_or(f32::NAN, |r| r.loss), last.map_or(0.0, |r| r.train_acc))
+            }
+        };
+        Ok(RunResult {
+            name: name.to_string(),
+            eval_loss,
+            eval_acc,
+            history: self.history.clone(),
+            hindsight_trace: self.hindsight_trace.clone(),
+        })
+    }
+}

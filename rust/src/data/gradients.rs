@@ -1,0 +1,66 @@
+//! Direct samplers of synthetic neural-gradient tensors.
+//!
+//! Chmiel et al. (2021) — reference [9] of the paper — showed neural
+//! gradients are well modelled as lognormal with layer-dependent σ (larger
+//! σ deeper in backprop). Quantizer-only experiments (Fig. 1a, the MSE
+//! sweeps, the throughput benches) sample from this model instead of
+//! running backprop, which isolates the quantizer under the exact
+//! distribution the paper designs for.
+
+use crate::rng::Xoshiro256;
+
+/// Parameters of the lognormal gradient model.
+#[derive(Clone, Copy, Debug)]
+pub struct GradientModel {
+    pub mu: f32,
+    pub sigma: f32,
+    /// Fraction of exact zeros (ReLU backprop kills a large share).
+    pub zero_fraction: f32,
+}
+
+impl Default for GradientModel {
+    fn default() -> Self {
+        // σ≈2 is mid-range for conv layers per [9]; ~50% zeros from ReLU.
+        GradientModel { mu: 0.0, sigma: 2.0, zero_fraction: 0.5 }
+    }
+}
+
+impl GradientModel {
+    pub fn sample(&self, n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.uniform_f32() < self.zero_fraction {
+                    0.0
+                } else {
+                    rng.signed_lognormal_f32(self.mu, self.sigma)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_fraction_respected() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = GradientModel { zero_fraction: 0.5, ..Default::default() };
+        let xs = g.sample(100_000, &mut rng);
+        let zf = xs.iter().filter(|&&v| v == 0.0).count() as f64 / xs.len() as f64;
+        assert!((zf - 0.5).abs() < 0.01, "zero fraction {zf}");
+    }
+
+    #[test]
+    fn log_magnitudes_are_normal() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = GradientModel { mu: 0.0, sigma: 2.0, zero_fraction: 0.0 };
+        let xs = g.sample(100_000, &mut rng);
+        let logs: Vec<f64> = xs.iter().map(|v| (v.abs() as f64).ln()).collect();
+        let mean = logs.iter().sum::<f64>() / logs.len() as f64;
+        let var = logs.iter().map(|l| (l - mean).powi(2)).sum::<f64>() / logs.len() as f64;
+        assert!(mean.abs() < 0.05, "log-mean {mean}");
+        assert!((var.sqrt() - 2.0).abs() < 0.05, "log-std {}", var.sqrt());
+    }
+}

@@ -1,0 +1,19 @@
+//! Synthetic-data substrate (DESIGN.md §4: ImageNet/WMT are hardware-gated,
+//! so every experiment runs on synthetic workloads that exercise the same
+//! code paths).
+//!
+//! * [`corpus`] — a Zipf-weighted Markov-chain token stream for the
+//!   transformer LM experiments: non-trivial (learnable) structure, a
+//!   heavy-tailed unigram distribution, and a held-out split.
+//! * [`images`] — a Gaussian-mixture "mini-ImageNet": class templates in
+//!   pixel space plus noise, linearly separable only in combination, for
+//!   the CNN experiments.
+//! * [`gradients`] — direct samplers of lognormal neural-gradient tensors
+//!   (Chmiel et al. 2021's model) for quantizer-only experiments.
+
+pub mod corpus;
+pub mod gradients;
+pub mod images;
+
+pub use corpus::{CorpusConfig, TokenCorpus};
+pub use images::{ImageDataset, ImagesConfig};

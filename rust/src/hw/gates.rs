@@ -1,0 +1,127 @@
+//! The gate-count area model of Appendix A.4.2 (Tables 5 and 6).
+//!
+//! "In hardware design, the logical area can be a good proxy for power
+//! consumption" [16]. The paper tabulates rough gate counts for (a) the
+//! standard hybrid-datatype GEMM block — cast INT4 and FP4 to a common
+//! FP7, multiply — and (b) the proposed MF-BPROP block, then derives three
+//! headline numbers: **~5× GEMM-block area reduction**, **~8% total** with
+//! an FP32 accumulator, and **~22% total** with an FP16 accumulator.
+//! This module regenerates all of them.
+
+/// One row of a gate table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GateEntry {
+    pub block: &'static str,
+    pub operation: &'static str,
+    pub gates: u32,
+}
+
+/// Accumulator gate estimates (App. A.4.2).
+pub const ACCUM_FP32_GATES: u32 = 2453;
+pub const ACCUM_FP16_GATES: u32 = 731;
+
+/// Table 5: the standard GEMM block — cast both operands to FP7 `[1,4,2]`,
+/// then a full FP7 multiplier.
+pub fn gate_table_standard() -> Vec<GateEntry> {
+    vec![
+        GateEntry { block: "Casting to FP7", operation: "Exponent 3:1 mux", gates: 12 },
+        GateEntry { block: "Casting to FP7", operation: "Mantissa 4:1 mux", gates: 18 },
+        GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Mantissa multiplier", gates: 99 },
+        GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Exponent adder", gates: 37 },
+        GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Sign xor", gates: 1 },
+        GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Mantissa normalization", gates: 48 },
+        GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Rounding adder", gates: 12 },
+        GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Fix exponent", gates: 37 },
+    ]
+}
+
+/// Table 6: the MF-BPROP block — sign XOR + exponent adder + the Fig. 8
+/// mantissa mux. No multiplier, no normalization, no rounding (products
+/// are exact — see `mfbprop::products_are_exact_in_fp7_no_rounding`).
+pub fn gate_table_mfbprop() -> Vec<GateEntry> {
+    vec![
+        GateEntry { block: "MF-BPROP", operation: "Exponent adder", gates: 30 },
+        GateEntry { block: "MF-BPROP", operation: "Mantissa 4:1 mux", gates: 18 },
+        GateEntry { block: "MF-BPROP", operation: "Sign xor", gates: 1 },
+    ]
+}
+
+/// Total gates of a table.
+pub fn total(entries: &[GateEntry]) -> u32 {
+    entries.iter().map(|e| e.gates).sum()
+}
+
+/// The three headline ratios of App. A.4.2.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaSummary {
+    pub standard_gemm: u32,
+    pub mfbprop: u32,
+    /// GEMM-block-only reduction (paper: "~5x").
+    pub gemm_reduction: f64,
+    /// Whole-MAC reduction with an FP32 accumulator (paper: "~8%").
+    pub total_saving_fp32_accum: f64,
+    /// Whole-MAC reduction with an FP16 accumulator (paper: "~22%").
+    pub total_saving_fp16_accum: f64,
+}
+
+pub fn area_summary() -> AreaSummary {
+    let std_g = total(&gate_table_standard());
+    let mf_g = total(&gate_table_mfbprop());
+    let saving = |accum: u32| {
+        let before = (std_g + accum) as f64;
+        let after = (mf_g + accum) as f64;
+        (before - after) / before
+    };
+    AreaSummary {
+        standard_gemm: std_g,
+        mfbprop: mf_g,
+        gemm_reduction: std_g as f64 / mf_g as f64,
+        total_saving_fp32_accum: saving(ACCUM_FP32_GATES),
+        total_saving_fp16_accum: saving(ACCUM_FP16_GATES),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_total_is_264() {
+        assert_eq!(total(&gate_table_standard()), 264);
+    }
+
+    #[test]
+    fn table6_total_is_49() {
+        assert_eq!(total(&gate_table_mfbprop()), 49);
+    }
+
+    #[test]
+    fn headline_ratios_match_paper() {
+        let s = area_summary();
+        // "~5x area reduction" (264/49 = 5.39)
+        assert!(s.gemm_reduction > 5.0 && s.gemm_reduction < 5.5, "{}", s.gemm_reduction);
+        // "we reduce the total area in our experiments by ~8%"
+        assert!(
+            (s.total_saving_fp32_accum - 0.08).abs() < 0.005,
+            "{}",
+            s.total_saving_fp32_accum
+        );
+        // "the suggested MF-BPROP block reduces the total area by ~22%"
+        assert!(
+            (s.total_saving_fp16_accum - 0.22).abs() < 0.01,
+            "{}",
+            s.total_saving_fp16_accum
+        );
+    }
+
+    #[test]
+    fn mfbprop_drops_multiplier_normalization_rounding() {
+        // The blocks MF-BPROP eliminates are exactly the expensive ones.
+        let std_ops: Vec<&str> = gate_table_standard().iter().map(|e| e.operation).collect();
+        let mf_ops: Vec<&str> = gate_table_mfbprop().iter().map(|e| e.operation).collect();
+        for gone in ["Mantissa multiplier", "Mantissa normalization", "Rounding adder"] {
+            assert!(std_ops.contains(&gone));
+            assert!(!mf_ops.contains(&gone));
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! MAC-pipeline simulator: MF-BPROP products accumulated in a configurable
+//! accumulator width — the substrate for the paper's accumulator-width
+//! discussion (§6 "Accumulation width", App. A.4.2) and for validating
+//! that a whole dot product through the multiplier-free path matches the
+//! reference GEMM.
+//!
+//! Accumulation models:
+//! * `Fp32` — exact f32 accumulation (the paper's default).
+//! * `Fp16` — every partial sum rounded to `[1,5,10]` (what a 16-bit
+//!   accumulator would hold), optionally with **chunk-based accumulation**
+//!   (Wang et al. 2018): sum fixed-size chunks locally, then combine —
+//!   the trick that makes narrow accumulators viable.
+
+use super::mfbprop::{decode_fp7, mfbprop_multiply, Fp4Code, Int4Code};
+use crate::quant::minifloat::MiniFloat;
+
+/// Accumulator width policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccumWidth {
+    Fp32,
+    /// FP16 with the given chunk size (1 = round after every add).
+    Fp16Chunked(usize),
+}
+
+/// Simulates one output element of the update/backward GEMM through the
+/// MF-BPROP block.
+#[derive(Clone, Copy, Debug)]
+pub struct MacSimulator {
+    pub accum: AccumWidth,
+}
+
+impl MacSimulator {
+    pub fn new(accum: AccumWidth) -> Self {
+        MacSimulator { accum }
+    }
+
+    /// Dot product of an INT4 code row with an FP4 code row via MF-BPROP
+    /// products, accumulated per the width policy.
+    pub fn dot(&self, a: &[Int4Code], g: &[Fp4Code]) -> f32 {
+        assert_eq!(a.len(), g.len());
+        let products = a
+            .iter()
+            .zip(g.iter())
+            .map(|(&x, &y)| decode_fp7(mfbprop_multiply(x, y)));
+        match self.accum {
+            AccumWidth::Fp32 => products.sum(),
+            AccumWidth::Fp16Chunked(chunk) => {
+                assert!(chunk >= 1);
+                let fp16 = MiniFloat::new(5, 10);
+                let items: Vec<f32> = products.collect();
+                let mut outer = 0.0f32;
+                for c in items.chunks(chunk) {
+                    let mut local = 0.0f32;
+                    for &p in c {
+                        local = fp16.round(local + p);
+                    }
+                    outer = fp16.round(outer + local);
+                }
+                outer
+            }
+        }
+    }
+
+    /// Reference dot product in f64 (ground truth).
+    pub fn reference_dot(a: &[Int4Code], g: &[Fp4Code]) -> f64 {
+        a.iter()
+            .zip(g.iter())
+            .map(|(x, y)| x.value() as f64 * y.value() as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_rows(rng: &mut Xoshiro256, n: usize) -> (Vec<Int4Code>, Vec<Fp4Code>) {
+        let a = (0..n)
+            .map(|_| Int4Code::new(rng.next_u64() & 1 == 0, (rng.next_u64() % 8) as u8))
+            .collect();
+        let g = (0..n)
+            .map(|_| Fp4Code::new(rng.next_u64() & 1 == 0, (rng.next_u64() % 8) as u8))
+            .collect();
+        (a, g)
+    }
+
+    #[test]
+    fn fp32_accumulation_is_exact() {
+        // Products are integers × powers of two up to 7·64 = 448 and rows
+        // are short: f32 accumulation of exact FP7 values is exact here.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..50 {
+            let (a, g) = random_rows(&mut rng, 256);
+            let mac = MacSimulator::new(AccumWidth::Fp32);
+            let got = mac.dot(&a, &g) as f64;
+            let want = MacSimulator::reference_dot(&a, &g);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn fp16_chunked_beats_sequential_fp16() {
+        // Chunk-based accumulation (Wang et al. 2018) reduces the error of
+        // a narrow accumulator on long reductions.
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut err_seq = 0.0f64;
+        let mut err_chunk = 0.0f64;
+        for _ in 0..40 {
+            let (a, g) = random_rows(&mut rng, 4096);
+            let want = MacSimulator::reference_dot(&a, &g);
+            let seq = MacSimulator::new(AccumWidth::Fp16Chunked(1)).dot(&a, &g) as f64;
+            let chk = MacSimulator::new(AccumWidth::Fp16Chunked(64)).dot(&a, &g) as f64;
+            err_seq += (seq - want).abs();
+            err_chunk += (chk - want).abs();
+        }
+        assert!(
+            err_chunk <= err_seq,
+            "chunked err {err_chunk} should not exceed sequential err {err_seq}"
+        );
+    }
+
+    #[test]
+    fn fp16_error_is_small_relative_to_magnitude() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (a, g) = random_rows(&mut rng, 1024);
+        let want = MacSimulator::reference_dot(&a, &g);
+        let got = MacSimulator::new(AccumWidth::Fp16Chunked(32)).dot(&a, &g) as f64;
+        let scale: f64 = a
+            .iter()
+            .zip(g.iter())
+            .map(|(x, y)| (x.value() as f64 * y.value() as f64).abs())
+            .sum();
+        assert!(
+            (got - want).abs() <= scale * 1e-2,
+            "err {} vs scale {scale}",
+            (got - want).abs()
+        );
+    }
+}

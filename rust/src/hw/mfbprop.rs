@@ -1,0 +1,223 @@
+//! MF-BPROP: multiplication-free INT4 × FP4 products (App. A.4.1, Fig. 8).
+//!
+//! The key observation: in LUQ training one GEMM operand has *only
+//! mantissa* (INT4 weights/activations — "FP4 [1,0,3]") and the other has
+//! *only exponent* (FP4 [1,3,0] neural gradients). Their product
+//!
+//! ```text
+//!   (±M) · (±2^e)  =  ±(M · 2^e)
+//! ```
+//!
+//! needs no multiplier: the sign is an XOR, and `M·2^e` is computed by a
+//! tiny transform — `M ∈ {1..7}` written as a normalized binary float
+//! `1.f × 2^(⌊log2 M⌋)` has at most 2 fraction bits, so every product is
+//! **exactly** representable in FP7 `[1,4,2]`. The transform is the Fig. 8
+//! table: concatenate the FP4 exponent field with the INT4 magnitude and
+//! look up `(Exp, Mant)`.
+
+use crate::quant::minifloat::MiniFloat;
+
+/// An INT4 code: sign + 3-bit magnitude `M ∈ 0..=7`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Int4Code {
+    pub negative: bool,
+    pub magnitude: u8,
+}
+
+impl Int4Code {
+    pub fn new(negative: bool, magnitude: u8) -> Self {
+        assert!(magnitude <= 7);
+        Int4Code { negative, magnitude }
+    }
+
+    pub fn value(&self) -> f32 {
+        let v = self.magnitude as f32;
+        if self.negative {
+            -v
+        } else {
+            v
+        }
+    }
+
+    pub fn all() -> impl Iterator<Item = Int4Code> {
+        (0..16u8).map(|c| Int4Code { negative: c & 8 != 0, magnitude: c & 7 })
+    }
+}
+
+/// An FP4 `[1,3,0]` code: sign + 3-bit exponent field. Exponent code 0 is
+/// zero; code `e ≥ 1` is the value `2^(e−1)` in units of the gradient
+/// scale α (the scale multiplies the *accumulated* result, outside the
+/// MAC, so the block itself works in α-units).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fp4Code {
+    pub negative: bool,
+    pub exp_field: u8,
+}
+
+impl Fp4Code {
+    pub fn new(negative: bool, exp_field: u8) -> Self {
+        assert!(exp_field <= 7);
+        Fp4Code { negative, exp_field }
+    }
+
+    pub fn value(&self) -> f32 {
+        if self.exp_field == 0 {
+            return 0.0;
+        }
+        let v = ((self.exp_field - 1) as f32).exp2();
+        if self.negative {
+            -v
+        } else {
+            v
+        }
+    }
+
+    pub fn all() -> impl Iterator<Item = Fp4Code> {
+        (0..16u8).map(|c| Fp4Code { negative: c & 8 != 0, exp_field: c & 7 })
+    }
+}
+
+/// `⌊log2 M⌋` and the 2-bit normalized fraction of `M ∈ 1..=7` — the
+/// content of the Fig. 8 transform table. `M = 1.f × 2^k` with
+/// `f ∈ {00, 01, 10, 11}` (quarters):
+///
+/// | M | k | f (quarters) |
+/// |---|---|---|
+/// | 1 | 0 | 0 |
+/// | 2 | 1 | 0 |
+/// | 3 | 1 | 2 (= .10₂, i.e. 1.5) |
+/// | 4 | 2 | 0 |
+/// | 5 | 2 | 1 (= .01₂, 1.25) |
+/// | 6 | 2 | 2 |
+/// | 7 | 2 | 3 (= .11₂, 1.75) |
+const M_TABLE: [(u8, u8); 8] = [
+    (0, 0), // M=0 unused (zero handled separately)
+    (0, 0),
+    (1, 0),
+    (1, 2),
+    (2, 0),
+    (2, 1),
+    (2, 2),
+    (2, 3),
+];
+
+/// The MF-BPROP block: produce the FP7 `[1,4,2]` code of `int4 × fp4`
+/// using only an XOR, a small adder, and the `M_TABLE` mux — no
+/// multiplier (Fig. 7b / Fig. 8).
+///
+/// Returns the 7-bit FP7 code (bias 7, per [`MiniFloat::FP7`]).
+pub fn mfbprop_multiply(a: Int4Code, g: Fp4Code) -> u32 {
+    // Zero in either operand -> FP7 zero code (sign kept positive;
+    // signed zeros are equivalent downstream).
+    if a.magnitude == 0 || g.exp_field == 0 {
+        return 0;
+    }
+    // (1) sign: a single XOR gate.
+    let sign = (a.negative ^ g.negative) as u32;
+    // (2) transform: M -> (k, frac) via the Fig. 8 mux.
+    let (k, frac) = M_TABLE[a.magnitude as usize];
+    // (3) exponent: e_g + k, re-biased into FP7's bias-7 field.
+    //     value = 2^(g.exp_field - 1 + k), FP7 exp field = value_exp + 7.
+    let exp_field = (g.exp_field as u32 - 1) + k as u32 + 7;
+    debug_assert!(exp_field >= 7 && exp_field <= 15, "fits 4-bit field: {exp_field}");
+    (sign << 6) | (exp_field << 2) | frac as u32
+}
+
+/// Reference product in f32 (what a casting multiplier would compute).
+pub fn reference_product(a: Int4Code, g: Fp4Code) -> f32 {
+    a.value() * g.value()
+}
+
+/// Decode an FP7 code produced by [`mfbprop_multiply`] back to f32.
+pub fn decode_fp7(code: u32) -> f32 {
+    MiniFloat::FP7.decode(code)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline correctness claim of App. A.4.1: the multiplier-free
+    /// block is **bit-exact** against real multiplication on the full
+    /// 16×16 cross product of input codes.
+    #[test]
+    fn exhaustive_bit_exactness() {
+        for a in Int4Code::all() {
+            for g in Fp4Code::all() {
+                let got = decode_fp7(mfbprop_multiply(a, g));
+                let want = reference_product(a, g);
+                assert_eq!(
+                    got, want,
+                    "MF-BPROP({a:?}, {g:?}) = {got}, reference = {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_worked_example() {
+        // Fig. 8's example: INT4 = 3 (bits 011), FP4 = 4 (exp field 011,
+        // i.e. 2^(3-1)). Product 12 = 1.5 × 2^3 -> FP7 exp field
+        // 3+7 = 10 (1010₂), mantissa 10₂ — the paper's "0100 10" row
+        // reads E+1 with its own bias convention; the decoded value is
+        // what matters and must be 12.
+        let a = Int4Code::new(false, 3);
+        let g = Fp4Code::new(false, 3);
+        let code = mfbprop_multiply(a, g);
+        assert_eq!(decode_fp7(code), 12.0);
+        assert_eq!(code & 0b11, 0b10); // mantissa .10 = 1.5
+        assert_eq!((code >> 2) & 0xF, 10); // exponent field 3 + bias 7
+    }
+
+    #[test]
+    fn sign_is_xor() {
+        let m = |an, gn| {
+            decode_fp7(mfbprop_multiply(Int4Code::new(an, 5), Fp4Code::new(gn, 2)))
+        };
+        assert_eq!(m(false, false), 10.0);
+        assert_eq!(m(true, false), -10.0);
+        assert_eq!(m(false, true), -10.0);
+        assert_eq!(m(true, true), 10.0);
+    }
+
+    #[test]
+    fn zeros_propagate() {
+        assert_eq!(
+            decode_fp7(mfbprop_multiply(Int4Code::new(false, 0), Fp4Code::new(false, 7))),
+            0.0
+        );
+        assert_eq!(
+            decode_fp7(mfbprop_multiply(Int4Code::new(true, 7), Fp4Code::new(false, 0))),
+            0.0
+        );
+    }
+
+    #[test]
+    fn products_are_exact_in_fp7_no_rounding() {
+        // Every product M·2^e (M<=7, e<=6) must be exactly representable:
+        // encode(reference) == mfbprop code for nonzero products.
+        for a in Int4Code::all() {
+            for g in Fp4Code::all() {
+                let want = reference_product(a, g);
+                if want == 0.0 {
+                    continue;
+                }
+                let direct = MiniFloat::FP7.encode(want);
+                assert_eq!(
+                    mfbprop_multiply(a, g),
+                    direct,
+                    "code mismatch for {a:?} × {g:?} (product {want})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn m_table_is_normalization_of_m() {
+        for m in 1u8..=7 {
+            let (k, f) = M_TABLE[m as usize];
+            let reconstructed = (1.0 + f as f32 / 4.0) * (k as f32).exp2();
+            assert_eq!(reconstructed, m as f32, "M_TABLE[{m}]");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Hardware-model substrate for MF-BPROP (paper Appendix A.4):
+//! multiplication-free INT4×FP4 products, the FP7 transform table (Fig. 8),
+//! the gate-count area model (Tables 5 and 6), and a MAC/accumulator
+//! simulator for the accumulator-width discussion (§6).
+//!
+//! The paper proposes this as an ASIC block; since no such silicon exists,
+//! we reproduce it as (a) a **bit-exact functional simulator** — every
+//! INT4×FP4 code pair is multiplied without a multiplier and checked
+//! against the reference f32 product — and (b) an **analytic area model**
+//! regenerating the paper's gate tables and the 5×/~8%/~22% headline
+//! ratios.
+
+pub mod gates;
+pub mod mac;
+pub mod mfbprop;
+
+pub use gates::{gate_table_mfbprop, gate_table_standard, GateEntry, ACCUM_FP16_GATES, ACCUM_FP32_GATES};
+pub use mac::MacSimulator;
+pub use mfbprop::{mfbprop_multiply, reference_product, Fp4Code, Int4Code};

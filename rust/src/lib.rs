@@ -1,0 +1,29 @@
+//! **luq** — reproduction of *"Accurate Neural Training with 4-bit Matrix
+//! Multiplications at Standard Formats"* (Chmiel et al., ICLR 2023; arXiv
+//! title *"Logarithmic Unbiased Quantization"*).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! - **L1** (build-time python): Pallas kernels for LUQ / SAWB / quantized
+//!   matmul, verified against pure-jnp oracles.
+//! - **L2** (build-time python): JAX transformer/CNN training step with
+//!   INT4-SAWB forward and FP4-LUQ backward via `custom_vjp`, AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! - **L3** (this crate): training coordinator that loads the artifacts
+//!   through PJRT ([`runtime`]) and owns the experiment loop
+//!   ([`coordinator`]), plus every substrate the paper depends on:
+//!   quantizers ([`quant`]), the MF-BPROP hardware model ([`hw`]),
+//!   statistics ([`stats`]), synthetic data ([`data`]), metrics
+//!   ([`metrics`]), deterministic RNG ([`rng`]), config ([`config`]), and
+//!   an in-repo bench/property-test harness ([`bench`], [`testutil`]).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod metrics;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod testutil;

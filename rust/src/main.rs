@@ -1,0 +1,305 @@
+//! `luq` — the L3 coordinator CLI.
+//!
+//! ```text
+//! luq list                          list available artifacts
+//! luq inspect <artifact>            dump an artifact's IO contract
+//! luq train --config <file.toml>    train per a run config
+//! luq train --profile cnn_s --scheme luq [--steps N] [--seed S] ...
+//! luq exp <id> [--steps N] [--seed S] [--out DIR]
+//!     ids: table1 table2 table3 table4 table56 fig1bc fig2 fig3-left
+//!          fig3-right fig4 fig5 fig6 a3 all
+//! luq hw                            MF-BPROP exhaustive check + gate model
+//! luq golden [--out FILE]           emit cross-layer golden vectors
+//! ```
+//!
+//! Hand-rolled argument parsing: the offline registry has no clap.
+
+use anyhow::{anyhow, bail, Context, Result};
+use luq::config::RunConfig;
+use luq::coordinator::experiments::{self, ExpOptions};
+use luq::coordinator::TrainerOptions;
+use luq::runtime::Engine;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the positionals.
+struct Flags<'a>(&'a [String]);
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.0.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("invalid value `{v}` for {key}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.0.iter().any(|a| a == key)
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = Flags(args);
+    match cmd {
+        "list" => {
+            let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+            for name in engine.available()? {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "inspect" => {
+            let name = args.get(1).context("usage: luq inspect <artifact>")?;
+            let dir = Engine::default_artifacts_dir();
+            let meta = luq::runtime::ArtifactMeta::load(dir.join(format!("{name}.meta.json")))?;
+            println!("artifact : {}", meta.name);
+            println!(
+                "stage    : {} (profile {}, scheme {:?})",
+                meta.stage, meta.profile, meta.scheme
+            );
+            if !meta.model.kind.is_empty() {
+                println!(
+                    "model    : {} dim={} depth={} params={}",
+                    meta.model.kind,
+                    meta.model.dim,
+                    meta.model.depth,
+                    meta.param_count()
+                );
+                println!(
+                    "quant    : fwd={} bwd={} eb={} smp={} kernels={}",
+                    meta.spec.fwd,
+                    meta.spec.bwd,
+                    meta.spec.bwd_exp_bits,
+                    meta.spec.smp,
+                    meta.spec.use_kernels
+                );
+            }
+            println!("inputs   :");
+            for s in &meta.inputs {
+                println!("  {:<12} {:?} {:?}", s.name, s.shape, s.dtype);
+            }
+            println!("outputs  :");
+            for s in &meta.outputs {
+                println!("  {:<12} {:?} {:?}", s.name, s.shape, s.dtype);
+            }
+            Ok(())
+        }
+        "train" => cmd_train(&flags),
+        "exp" => cmd_exp(args, &flags),
+        "hw" => cmd_hw(),
+        "golden" => cmd_golden(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `luq help`)"),
+    }
+}
+
+const HELP: &str = "luq — 4-bit training (LUQ, ICLR 2023) coordinator
+commands: list | inspect <artifact> | train | exp <id> | hw | golden
+see `rust/src/main.rs` docs for flags";
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+    let (profile, scheme, steps, seed, hindsight, noise_reuse, out);
+    if let Some(cfg_path) = flags.get("--config") {
+        let src = std::fs::read_to_string(cfg_path)
+            .with_context(|| format!("reading {cfg_path}"))?;
+        let cfg = RunConfig::from_toml(&src).map_err(|e| anyhow!("config: {e}"))?;
+        profile = match cfg.model.kind {
+            luq::config::ModelKind::Mlp => "mlp_s".to_string(),
+            luq::config::ModelKind::Cnn => "cnn_s".to_string(),
+            luq::config::ModelKind::Transformer => "tfm_s".to_string(),
+        };
+        scheme = cfg.quant.bwd.name().to_string();
+        steps = cfg.train.steps;
+        seed = cfg.train.seed;
+        hindsight = cfg.quant.hindsight;
+        noise_reuse = cfg.quant.noise_reuse;
+        out = cfg.out_dir;
+    } else {
+        profile = flags.get("--profile").unwrap_or("cnn_s").to_string();
+        scheme = flags.get("--scheme").unwrap_or("luq").to_string();
+        steps = flags.get_parse("--steps", 200usize)?;
+        seed = flags.get_parse("--seed", 1u64)?;
+        hindsight = flags.has("--hindsight");
+        noise_reuse = flags.get_parse("--noise-reuse", 1usize)?;
+        out = flags.get("--out").unwrap_or("runs").to_string();
+    }
+    let opts = ExpOptions {
+        steps,
+        seed,
+        out_dir: out,
+        log_every: flags.get_parse("--log-every", 20usize)?,
+        eval_batches: 8,
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let r = experiments::run_scheme(
+        &engine,
+        &profile,
+        &scheme,
+        steps,
+        &opts,
+        TrainerOptions { seed, hindsight, noise_reuse, ..Default::default() },
+    )?;
+    println!(
+        "final: eval_loss {:.4}  eval_acc {:.2}%  ({} steps)",
+        r.eval_loss,
+        r.eval_acc * 100.0,
+        r.history.len()
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &[String], flags: &Flags) -> Result<()> {
+    let id = args.get(1).context("usage: luq exp <id>")?.as_str();
+    let opts = ExpOptions {
+        steps: flags.get_parse("--steps", 200usize)?,
+        seed: flags.get_parse("--seed", 1u64)?,
+        out_dir: flags.get("--out").unwrap_or("runs").to_string(),
+        log_every: flags.get_parse("--log-every", 0usize)?,
+        eval_batches: flags.get_parse("--eval-batches", 8usize)?,
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    // Hardware/analytic experiments need no engine.
+    match id {
+        "fig2" => {
+            experiments::fig2(&opts)?;
+            return Ok(());
+        }
+        "table56" => {
+            experiments::table56(&opts)?;
+            return Ok(());
+        }
+        "a3" => {
+            experiments::a3(&opts)?;
+            return Ok(());
+        }
+        _ => {}
+    }
+    let engine = Engine::cpu(Engine::default_artifacts_dir())?;
+    match id {
+        "table1" => experiments::table1(&engine, &opts)?,
+        "table2" => experiments::table2(&engine, &opts)?,
+        "table3" => experiments::table3(&engine, &opts)?,
+        "table4" => experiments::table4(&engine, &opts)?,
+        "fig1bc" => experiments::fig1bc(&engine, &opts)?,
+        "fig3-left" => experiments::fig3_left(&engine, &opts)?,
+        "fig3-right" => experiments::fig3_right(&engine, &opts)?,
+        "fig4" => experiments::fig4(&engine, &opts)?,
+        "fig5" => experiments::fig5(&engine, &opts)?,
+        "fig6" => experiments::fig6(&engine, &opts)?,
+        "all" => experiments::all(&engine, &opts)?,
+        other => bail!("unknown experiment `{other}`"),
+    };
+    Ok(())
+}
+
+fn cmd_hw() -> Result<()> {
+    use luq::hw::{mfbprop_multiply, reference_product, Fp4Code, Int4Code};
+    let mut checked = 0;
+    for a in Int4Code::all() {
+        for g in Fp4Code::all() {
+            let got = luq::hw::mfbprop::decode_fp7(mfbprop_multiply(a, g));
+            let want = reference_product(a, g);
+            assert_eq!(got, want, "mismatch at {a:?} x {g:?}");
+            checked += 1;
+        }
+    }
+    println!("MF-BPROP: {checked}/256 code pairs bit-exact vs reference multiply");
+    let s = luq::hw::gates::area_summary();
+    println!(
+        "gates: standard {} vs MF-BPROP {} ({:.2}x); total saving {:.1}% (fp32 accum) / {:.1}% (fp16 accum)",
+        s.standard_gemm,
+        s.mfbprop,
+        s.gemm_reduction,
+        s.total_saving_fp32_accum * 100.0,
+        s.total_saving_fp16_accum * 100.0
+    );
+    Ok(())
+}
+
+/// Emit golden vectors: fixed inputs + noise + the rust quantizers'
+/// outputs, as JSON consumed by `python/tests/test_cross_layer.py`.
+/// This pins the rust substrate and the jax graphs to identical
+/// semantics.
+fn cmd_golden(flags: &Flags) -> Result<()> {
+    use ::luq::metrics::Json;
+    use ::luq::quant::{
+        LogFormat, LogQuantConfig, LogQuantizer, Radix4Format, Radix4Quantizer,
+        UniformQuantizer, UniformRounding,
+    };
+    use ::luq::rng::Xoshiro256;
+
+    let out = flags
+        .get("--out")
+        .unwrap_or("python/tests/golden/quantizers.json");
+    let mut rng = Xoshiro256::seed_from_u64(0x601d);
+    let n = 257;
+    let x: Vec<f32> = (0..n).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let noise: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+    let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+
+    let arr = |v: &[f32]| Json::Arr(v.iter().map(|&f| Json::num(f as f64)).collect());
+    let mut cases = vec![
+        ("x".to_string(), arr(&x)),
+        ("noise".to_string(), arr(&noise)),
+        ("max_abs".to_string(), Json::num(max_abs as f64)),
+    ];
+
+    for (name, cfg) in [
+        ("luq", LogQuantConfig::luq(LogFormat::FP4)),
+        ("naive", LogQuantConfig::naive(LogFormat::FP4)),
+        ("naive_sp", LogQuantConfig::naive_sp(LogFormat::FP4)),
+        ("naive_rdnp", LogQuantConfig::naive_rdnp(LogFormat::FP4)),
+        ("sp_rdnp", LogQuantConfig::sp_rdnp(LogFormat::FP4)),
+    ] {
+        let q = LogQuantizer::new(cfg);
+        let mut y = vec![0.0f32; n];
+        q.quantize_into(&x, &noise, &mut y);
+        cases.push((name.to_string(), arr(&y)));
+    }
+    // radix-4 TPR
+    let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+    let (dw, dx) = r4.quantize_tpr(&x);
+    cases.push(("ultralow_dw".into(), arr(&dw)));
+    cases.push(("ultralow_dx".into(), arr(&dx)));
+    // uniform int4 SR / RDN with clip = max
+    let sr = UniformQuantizer::new(4, max_abs, UniformRounding::Stochastic);
+    let mut y = vec![0.0f32; n];
+    sr.quantize_into(&x, &noise, &mut y);
+    cases.push(("int_sr".into(), arr(&y)));
+    let rdn = UniformQuantizer::new(4, max_abs, UniformRounding::Rdn);
+    rdn.quantize_into(&x, &[], &mut y);
+    cases.push(("int_rdn".into(), arr(&y)));
+    // SAWB coefficients for the pinned-constant check
+    let (c1, c2) = luq::quant::sawb::default_coefficients(4);
+    cases.push(("sawb_c1".into(), Json::num(c1 as f64)));
+    cases.push(("sawb_c2".into(), Json::num(c2 as f64)));
+
+    let j = Json::Obj(cases);
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(out, j.render())?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! Metrics substrate: JSONL run logs, aligned-table rendering, CSV dumps.
+//!
+//! Hand-rolled (no serde in the offline registry): [`Json`] is a minimal
+//! value tree with a correct writer (string escaping, non-finite floats as
+//! null), enough for the experiment logs that EXPERIMENTS.md is built
+//! from.
+
+pub mod parse;
+pub use parse::parse_json;
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Minimal JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num(v: impl Into<f64>) -> Json {
+        Json::Num(v.into())
+    }
+
+    pub fn str(v: impl Into<String>) -> Json {
+        Json::Str(v.into())
+    }
+
+    /// Serialize to a compact string.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write_into(&mut s);
+        s
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    // shortest roundtrip-ish: use ryu-style default fmt
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write_into(out);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append-only JSONL run log.
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(JsonlWriter { out: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn write(&mut self, record: &Json) -> std::io::Result<()> {
+        writeln!(self.out, "{}", record.render())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Render rows as an aligned markdown-ish table (the `luq exp …` binaries
+/// print paper tables through this).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), cols, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut s = String::new();
+    let line = |s: &mut String, cells: Vec<String>| {
+        s.push('|');
+        for (i, c) in cells.iter().enumerate() {
+            let _ = write!(s, " {:<w$} |", c, w = widths[i]);
+        }
+        s.push('\n');
+    };
+    line(&mut s, headers.iter().map(|h| h.to_string()).collect());
+    s.push('|');
+    for w in &widths {
+        let _ = write!(s, "{}|", "-".repeat(w + 2));
+    }
+    s.push('\n');
+    for row in rows {
+        line(&mut s, row.clone());
+    }
+    s
+}
+
+/// Write rows to CSV (numbers pre-formatted by the caller).
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = BufWriter::new(File::create(path)?);
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_rendering() {
+        let j = Json::obj(vec![
+            ("step", Json::num(3)),
+            ("loss", Json::num(2.5)),
+            ("tag", Json::str("a\"b\n")),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("xs", Json::Arr(vec![Json::num(1), Json::num(2)])),
+        ]);
+        assert_eq!(
+            j.render(),
+            r#"{"step":3,"loss":2.5,"tag":"a\"b\n","ok":true,"none":null,"xs":[1,2]}"#
+        );
+    }
+
+    #[test]
+    fn non_finite_floats_become_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["name", "acc"],
+            &[
+                vec!["baseline".into(), "76.5".into()],
+                vec!["luq".into(), "75.4".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("| name"));
+        assert!(lines.iter().all(|l| l.starts_with('|')));
+        // all lines same width
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn jsonl_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("luq_metrics_test");
+        let path = dir.join("log.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.write(&Json::obj(vec![("a", Json::num(1))])).unwrap();
+        w.write(&Json::obj(vec![("a", Json::num(2))])).unwrap();
+        w.flush().unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "{\"a\":1}\n{\"a\":2}\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,171 @@
+//! Analytic error characterization of the logarithmic quantizers —
+//! the quantitative backbone behind §3's "bias hurts, variance is
+//! recoverable" story and §4.1's SMP analysis.
+//!
+//! For an unbiased logarithmic SR quantizer the conditional variance of
+//! one element is exactly (Eq. 4, specialized to the bin `[α2^n, α2^(n+1)]`):
+//!
+//! ```text
+//!   Var[Q(x) | x] = (x − lo)(2·lo − x),   lo = α·2^⌊log2(x/α)⌋
+//! ```
+//!
+//! and for `|x| < α` (stochastic pruning, Eq. 17):
+//! `Var[T(x) | x] = |x|·(α − |x|)`.
+//!
+//! [`luq_variance`] evaluates this pointwise; [`expected_relative_mse`]
+//! integrates it over an empirical tensor, giving the exact expected
+//! relative MSE of LUQ on that tensor *without sampling* — used by the
+//! tests to cross-check the Monte-Carlo estimates, and useful for
+//! predicting when SMP-N is worth its power cost (variance ÷ N, §4.1).
+
+use super::logfmt::LogFormat;
+use super::rounding::{floor_log2, pow2i};
+
+/// Pointwise conditional variance of LUQ at input `x` given scale `alpha`
+/// (exact-max policy assumed: no clipping region).
+pub fn luq_variance(x: f32, alpha: f32, fmt: LogFormat) -> f64 {
+    let a = x.abs() as f64;
+    let alpha = alpha as f64;
+    if a == 0.0 {
+        return 0.0;
+    }
+    if a < alpha {
+        // stochastic pruning: Bernoulli(a/alpha) on {0, alpha}
+        return a * (alpha - a);
+    }
+    let top = alpha * pow2i(fmt.levels() as i32 - 1) as f64;
+    if a >= top {
+        return 0.0; // exactly representable top (exact-max policy)
+    }
+    let n = floor_log2((a / alpha) as f32);
+    let lo = alpha * pow2i(n) as f64;
+    (a - lo) * (2.0 * lo - a)
+}
+
+/// Exact expected MSE of LUQ over a tensor, normalized by the tensor's
+/// second moment (`E[(Q(x)−x)²] / E[x²]`). Zero bias ⇒ MSE == variance.
+pub fn expected_relative_mse(xs: &[f32], fmt: LogFormat) -> f64 {
+    let max_abs = xs.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return 0.0;
+    }
+    let alpha = fmt.alpha_for_max(max_abs);
+    let mut var_sum = 0.0f64;
+    let mut energy = 0.0f64;
+    for &x in xs {
+        var_sum += luq_variance(x, alpha, fmt);
+        energy += (x as f64) * (x as f64);
+    }
+    if energy == 0.0 {
+        0.0
+    } else {
+        var_sum / energy
+    }
+}
+
+/// Expected relative MSE under SMP-N averaging (§4.1): variance ÷ N.
+pub fn smp_relative_mse(xs: &[f32], fmt: LogFormat, n_samples: usize) -> f64 {
+    expected_relative_mse(xs, fmt) / n_samples.max(1) as f64
+}
+
+/// The cosine-similarity lower bound implied by a relative MSE `r` for an
+/// unbiased quantizer with error orthogonal in expectation:
+/// `E[cos] ≈ 1/sqrt(1+r)`. Diagnostic used in the experiment logs.
+pub fn expected_cosine(relative_mse: f64) -> f64 {
+    1.0 / (1.0 + relative_mse).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{LogQuantConfig, LogQuantizer};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn variance_zero_on_grid_points() {
+        let fmt = LogFormat::FP4;
+        let alpha = 0.5f32;
+        for i in 0..fmt.levels() {
+            let v = fmt.level_value(alpha, i);
+            assert_eq!(luq_variance(v, alpha, fmt), 0.0, "level {i}");
+        }
+        assert_eq!(luq_variance(0.0, alpha, fmt), 0.0);
+    }
+
+    #[test]
+    fn variance_peaks_mid_bin() {
+        let fmt = LogFormat::FP4;
+        let alpha = 1.0f32;
+        // bin [2,4]: variance (x-2)(4-x)... wait — our formula is
+        // (a-lo)(2lo-a) = (x-2)(4-x) for lo=2. Peak at x=3.
+        let v25 = luq_variance(2.5, alpha, fmt);
+        let v30 = luq_variance(3.0, alpha, fmt);
+        let v35 = luq_variance(3.5, alpha, fmt);
+        assert!(v30 > v25 && v30 > v35);
+        assert!((v30 - 1.0).abs() < 1e-9); // (3-2)(4-3) = 1
+    }
+
+    #[test]
+    fn analytic_matches_monte_carlo() {
+        let fmt = LogFormat::FP4;
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let xs: Vec<f32> = (0..512).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let predicted = expected_relative_mse(&xs, fmt);
+
+        let q = LogQuantizer::new(LogQuantConfig::luq(fmt));
+        let trials = 400;
+        let mut mse_sum = 0.0f64;
+        let mut energy = 0.0f64;
+        for &x in &xs {
+            energy += (x as f64) * (x as f64);
+        }
+        for _ in 0..trials {
+            let (y, _) = q.quantize(&xs, &mut rng);
+            mse_sum += xs
+                .iter()
+                .zip(y.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let empirical = mse_sum / trials as f64 / energy;
+        let rel_err = (empirical - predicted).abs() / predicted;
+        assert!(
+            rel_err < 0.1,
+            "analytic {predicted:.4} vs MC {empirical:.4} ({rel_err:.3} rel)"
+        );
+    }
+
+    #[test]
+    fn smp_divides_variance() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let xs: Vec<f32> = (0..256).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let r1 = smp_relative_mse(&xs, LogFormat::FP4, 1);
+        let r4 = smp_relative_mse(&xs, LogFormat::FP4, 4);
+        assert!((r1 / r4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn narrower_formats_have_higher_error() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let r_fp4 = expected_relative_mse(&xs, LogFormat::FP4);
+        let r_fp3 = expected_relative_mse(&xs, LogFormat::FP3);
+        let r_fp2 = expected_relative_mse(&xs, LogFormat::FP2);
+        assert!(r_fp2 > r_fp3 && r_fp3 > r_fp4, "{r_fp2} > {r_fp3} > {r_fp4}");
+    }
+
+    #[test]
+    fn cosine_bound_matches_measurement() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let xs: Vec<f32> = (0..8192).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let r = expected_relative_mse(&xs, LogFormat::FP4);
+        let predicted = expected_cosine(r);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let (y, _) = q.quantize(&xs, &mut rng);
+        let measured = crate::stats::moments::cosine_similarity(&xs, &y);
+        assert!(
+            (measured - predicted).abs() < 0.05,
+            "predicted {predicted:.4} vs measured {measured:.4}"
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Symmetric uniform integer quantization (INT4/INT2/…) — the forward-pass
+//! format (paper §4.3 "Forward pass quantization").
+//!
+//! Weights and activations are approximately Gaussian/Laplacian, so a
+//! *uniform* grid is the right shape for them (in contrast to the
+//! lognormal neural gradients, which want the logarithmic grid of
+//! [`super::logfmt`]). The quantizer is symmetric around zero with
+//! `2^(bits−1) − 1` positive levels (the INT4 grid is `−7Δ … 7Δ`), RDN
+//! rounding per the paper's §3.3 conclusion for the forward pass, and a
+//! clip scale chosen by SAWB ([`super::sawb`]) or any caller-supplied clip.
+
+use crate::rng::Xoshiro256;
+
+/// Rounding mode for the uniform quantizer (the Fig. 1b/1c experiments
+/// compare both on the forward/backward passes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UniformRounding {
+    Rdn,
+    Stochastic,
+}
+
+/// Symmetric uniform quantizer with `levels = 2^(bits−1) − 1` positive
+/// steps and clip at `levels · Δ`.
+#[derive(Clone, Copy, Debug)]
+pub struct UniformQuantizer {
+    pub bits: u32,
+    pub clip: f32,
+    pub rounding: UniformRounding,
+}
+
+impl UniformQuantizer {
+    pub fn new(bits: u32, clip: f32, rounding: UniformRounding) -> Self {
+        assert!((2..=8).contains(&bits));
+        assert!(clip > 0.0);
+        UniformQuantizer { bits, clip, rounding }
+    }
+
+    /// Number of positive integer levels (7 for INT4).
+    #[inline]
+    pub fn levels(&self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+
+    /// Step size Δ.
+    #[inline]
+    pub fn delta(&self) -> f32 {
+        self.clip / self.levels() as f32
+    }
+
+    /// Quantize one value to its integer code in `[-levels, levels]`.
+    /// `u` is consumed only in stochastic mode.
+    #[inline]
+    pub fn code_of(&self, x: f32, u: f32) -> i32 {
+        let levels = self.levels();
+        let t = x / self.delta();
+        let code = match self.rounding {
+            // round-half-up, symmetric in sign (ties away from zero)
+            UniformRounding::Rdn => (t.abs() + 0.5).floor().copysign(t) as i32,
+            UniformRounding::Stochastic => {
+                // SR: floor(t + u) is unbiased for u ~ U[0,1).
+                (t + u).floor() as i32
+            }
+        };
+        code.clamp(-levels, levels)
+    }
+
+    /// Quantize-dequantize a slice; returns values on the grid.
+    pub fn quantize_into(&self, x: &[f32], noise: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len());
+        if self.rounding == UniformRounding::Stochastic {
+            assert!(noise.len() >= x.len());
+        }
+        let d = self.delta();
+        for i in 0..x.len() {
+            let u = if self.rounding == UniformRounding::Stochastic {
+                noise[i]
+            } else {
+                0.0
+            };
+            out[i] = self.code_of(x[i], u) as f32 * d;
+        }
+    }
+
+    /// Allocating wrapper; draws noise internally for stochastic mode.
+    pub fn quantize(&self, x: &[f32], rng: &mut Xoshiro256) -> Vec<f32> {
+        let mut noise = vec![0.0f32; x.len()];
+        if self.rounding == UniformRounding::Stochastic {
+            rng.fill_uniform(&mut noise);
+        }
+        let mut out = vec![0.0f32; x.len()];
+        self.quantize_into(x, &noise, &mut out);
+        out
+    }
+
+    /// Integer codes (for packing/bandwidth accounting).
+    pub fn encode(&self, x: &[f32], rng: &mut Xoshiro256) -> Vec<i8> {
+        x.iter()
+            .map(|&v| self.code_of(v, rng.uniform_f32()) as i8)
+            .collect()
+    }
+
+    /// Decode integer codes back to grid values.
+    pub fn decode(&self, codes: &[i8]) -> Vec<f32> {
+        let d = self.delta();
+        codes.iter().map(|&c| c as f32 * d).collect()
+    }
+
+    /// Mean-squared quantization error over a slice (deterministic only
+    /// for RDN; for SR this is a single stochastic realization).
+    pub fn mse(&self, x: &[f32], rng: &mut Xoshiro256) -> f64 {
+        let y = self.quantize(x, rng);
+        x.iter()
+            .zip(y.iter())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / x.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::testutil::{assert_mean_within, prop_check};
+
+    #[test]
+    fn int4_grid_has_15_values() {
+        let q = UniformQuantizer::new(4, 7.0, UniformRounding::Rdn);
+        assert_eq!(q.levels(), 7);
+        assert_eq!(q.delta(), 1.0);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let xs: Vec<f32> = (-80..=80).map(|i| i as f32 / 10.0).collect();
+        let y = q.quantize(&xs, &mut rng);
+        for v in &y {
+            assert!(v.fract() == 0.0 && v.abs() <= 7.0, "off-grid {v}");
+        }
+    }
+
+    #[test]
+    fn rdn_rounds_to_nearest_code() {
+        let q = UniformQuantizer::new(4, 7.0, UniformRounding::Rdn);
+        assert_eq!(q.code_of(1.4, 0.0), 1);
+        assert_eq!(q.code_of(1.6, 0.0), 2);
+        assert_eq!(q.code_of(-1.6, 0.0), -2);
+        assert_eq!(q.code_of(9.0, 0.0), 7); // clipped
+        assert_eq!(q.code_of(-9.0, 0.0), -7);
+    }
+
+    #[test]
+    fn sr_is_unbiased_inside_range() {
+        let q = UniformQuantizer::new(4, 7.0, UniformRounding::Stochastic);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &x in &[0.3f32, 1.5, -2.7, 4.25, -6.9] {
+            let devs: Vec<f64> = (0..100_000)
+                .map(|_| (q.code_of(x, rng.uniform_f32()) as f32 - x) as f64)
+                .collect();
+            assert_mean_within(&devs, 0.0, 4.5, &format!("uniform SR at {x}"));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        prop_check(
+            "uniform_codec_roundtrip",
+            2,
+            100,
+            |rng| {
+                let n = 16 + rng.uniform_usize(64);
+                (0..n).map(|_| rng.normal_ms_f32(0.0, 2.0)).collect::<Vec<f32>>()
+            },
+            |x| {
+                let q = UniformQuantizer::new(4, 6.0, UniformRounding::Rdn);
+                let mut rng = Xoshiro256::seed_from_u64(7);
+                let codes = q.encode(x, &mut rng);
+                let decoded = q.decode(&codes);
+                let direct = q.quantize(x, &mut rng);
+                if decoded
+                    .iter()
+                    .zip(direct.iter())
+                    .all(|(a, b)| (a - b).abs() < 1e-6)
+                {
+                    Ok(())
+                } else {
+                    Err("decode != quantize".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn quantization_is_idempotent() {
+        let q = UniformQuantizer::new(4, 7.0, UniformRounding::Rdn);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal_ms_f32(0.0, 3.0)).collect();
+        let y = q.quantize(&x, &mut rng);
+        let z = q.quantize(&y, &mut rng);
+        assert_eq!(y, z);
+    }
+
+    #[test]
+    fn narrower_bits_higher_mse() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let x: Vec<f32> = (0..8192).map(|_| rng.normal_f32()).collect();
+        let mse4 = UniformQuantizer::new(4, 3.0, UniformRounding::Rdn).mse(&x, &mut rng);
+        let mse2 = UniformQuantizer::new(2, 3.0, UniformRounding::Rdn).mse(&x, &mut rng);
+        assert!(mse2 > mse4 * 2.0, "mse2={mse2} mse4={mse4}");
+    }
+}

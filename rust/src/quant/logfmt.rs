@@ -1,0 +1,231 @@
+//! Radix-2 logarithmic (mantissa-free) minifloat formats — FP4 `[1,3,0]`,
+//! FP2 `[1,1,0]`, … (paper §4).
+//!
+//! A `[1, e, 0]` format has one sign bit, `e` exponent bits, and no
+//! mantissa. We use the standard FP convention that the all-zero exponent
+//! code encodes **zero** (with no mantissa there are no other subnormals),
+//! so the format represents
+//!
+//! ```text
+//!   { 0 } ∪ { ± α·2^i : i = 0 .. L−1 },   L = 2^e − 1 magnitude levels
+//! ```
+//!
+//! where `α` is the per-tensor scale ("underflow threshold"). For FP4
+//! (`e = 3`) that is 7 magnitude levels `α … 64α`; the paper's unbiased
+//! scale choice pins the top bin to the tensor max: `α = max|x| / 2^(L−1)`
+//! (§4 "Above FP maximum"), so no value is ever clipped.
+//!
+//! Note on the paper's notation: the arXiv text writes the bins as
+//! `{α, 2α, …, 2^(b−1)α}` and `α = max|x|/2^(2^(b−1))`, which is not
+//! self-consistent for `b = 3`. We adopt the only reading that (a) fits in
+//! the stated 4-bit `[1,3,0]` budget including zero and (b) makes the top
+//! bin exactly the tensor max — which is what unbiasedness requires.
+
+use super::rounding::floor_log2;
+
+/// A logarithmic minifloat format `[1, exp_bits, 0]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LogFormat {
+    /// Number of exponent bits (3 for FP4, 1 for FP2).
+    pub exp_bits: u32,
+}
+
+impl LogFormat {
+    pub const FP4: LogFormat = LogFormat { exp_bits: 3 };
+    pub const FP2: LogFormat = LogFormat { exp_bits: 1 };
+    /// FP3 `[1,2,0]` — used by the Fig. 5 (3-bit training) experiment.
+    pub const FP3: LogFormat = LogFormat { exp_bits: 2 };
+
+    pub fn new(exp_bits: u32) -> Self {
+        assert!((1..=6).contains(&exp_bits), "exp_bits out of range");
+        LogFormat { exp_bits }
+    }
+
+    /// Number of representable magnitude levels (excluding zero).
+    #[inline]
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.exp_bits) - 1
+    }
+
+    /// Total bit width including the sign bit.
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        1 + self.exp_bits
+    }
+
+    /// The unbiased scale: `α` such that `α·2^(L−1) = max_abs` exactly.
+    /// A tensor quantized with this `α` can represent its own maximum, so
+    /// the "above range" region is empty and contributes no bias.
+    #[inline]
+    pub fn alpha_for_max(&self, max_abs: f32) -> f32 {
+        debug_assert!(max_abs > 0.0);
+        max_abs / ((self.levels() - 1) as f32).exp2()
+    }
+
+    /// Largest representable magnitude for a given `α`.
+    #[inline]
+    pub fn top(&self, alpha: f32) -> f32 {
+        alpha * ((self.levels() - 1) as f32).exp2()
+    }
+
+    /// The representable magnitude `α·2^i` (i < levels).
+    #[inline]
+    pub fn level_value(&self, alpha: f32, i: u32) -> f32 {
+        debug_assert!(i < self.levels());
+        alpha * (i as f32).exp2()
+    }
+
+    /// All representable non-negative values, `[0, α, 2α, …, top]`.
+    pub fn grid(&self, alpha: f32) -> Vec<f32> {
+        let mut g = vec![0.0];
+        g.extend((0..self.levels()).map(|i| self.level_value(alpha, i)));
+        g
+    }
+
+    /// Encode an exactly-representable value into the `bits()`-wide code:
+    /// `[sign | exponent]`, exponent code `0` = zero, code `i ≥ 1` =
+    /// `α·2^(i−1)`. Returns `None` if `v` is not on the grid for this `α`.
+    pub fn encode(&self, v: f32, alpha: f32) -> Option<u8> {
+        if v == 0.0 {
+            return Some(0);
+        }
+        let sign = if v < 0.0 { 1u8 << self.exp_bits } else { 0 };
+        let r = v.abs() / alpha;
+        let i = floor_log2(r);
+        if i < 0 || i as u32 >= self.levels() {
+            return None;
+        }
+        // Exactness check: the value must equal α·2^i up to f32 rounding.
+        let expect = self.level_value(alpha, i as u32);
+        if (v.abs() - expect).abs() > expect * 1e-6 {
+            return None;
+        }
+        Some(sign | (i as u8 + 1))
+    }
+
+    /// Decode a code produced by [`encode`].
+    pub fn decode(&self, code: u8, alpha: f32) -> f32 {
+        let exp_mask = (1u8 << self.exp_bits) - 1;
+        let e = code & exp_mask;
+        if e == 0 {
+            return 0.0;
+        }
+        let v = self.level_value(alpha, (e - 1) as u32);
+        if code & (1 << self.exp_bits) != 0 {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Pack a slice of codes 2-per-byte when `bits() == 4` (FP4). Utility
+    /// for the bandwidth accounting in the benchmarks.
+    pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+        for pair in codes.chunks(2) {
+            let lo = pair[0] & 0x0F;
+            let hi = if pair.len() > 1 { pair[1] & 0x0F } else { 0 };
+            out.push(lo | (hi << 4));
+        }
+        out
+    }
+
+    /// Inverse of [`pack_nibbles`] (`n` = original code count).
+    pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        for (i, &b) in bytes.iter().enumerate() {
+            out.push(b & 0x0F);
+            if 2 * i + 1 < n {
+                out.push(b >> 4);
+            }
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::testutil::prop_check;
+
+    #[test]
+    fn fp4_has_seven_levels_four_bits() {
+        let f = LogFormat::FP4;
+        assert_eq!(f.levels(), 7);
+        assert_eq!(f.bits(), 4);
+        assert_eq!(f.grid(1.0), vec![0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]);
+    }
+
+    #[test]
+    fn fp2_is_ternary() {
+        let f = LogFormat::FP2;
+        assert_eq!(f.levels(), 1);
+        assert_eq!(f.grid(0.5), vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn alpha_pins_top_to_max() {
+        let f = LogFormat::FP4;
+        let max = 13.7f32;
+        let a = f.alpha_for_max(max);
+        assert!((f.top(a) - max).abs() < max * 1e-6);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_codes() {
+        let f = LogFormat::FP4;
+        let alpha = 0.03125;
+        for code in 0u8..16 {
+            let v = f.decode(code, alpha);
+            let re = f.encode(v, alpha);
+            // +0 and -0 both decode to 0.0 which encodes canonically to 0.
+            if code == 1 << f.exp_bits {
+                assert_eq!(re, Some(0));
+            } else {
+                assert_eq!(re, Some(code), "code {code} -> {v} -> {re:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_rejects_off_grid() {
+        let f = LogFormat::FP4;
+        assert_eq!(f.encode(3.0, 1.0), None); // 3 is not a power of two
+        assert_eq!(f.encode(128.0, 1.0), None); // above top (64)
+        assert_eq!(f.encode(0.5, 1.0), None); // below alpha
+    }
+
+    #[test]
+    fn nibble_pack_roundtrip() {
+        prop_check(
+            "nibble_roundtrip",
+            11,
+            200,
+            |rng| {
+                let n = 1 + rng.uniform_usize(33);
+                (0..n).map(|_| (rng.next_u64() & 0xF) as u8).collect::<Vec<u8>>()
+            },
+            |codes| {
+                let packed = LogFormat::pack_nibbles(codes);
+                let back = LogFormat::unpack_nibbles(&packed, codes.len());
+                if &back == codes {
+                    Ok(())
+                } else {
+                    Err(format!("{back:?} != {codes:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn grid_is_geometric() {
+        let f = LogFormat::new(4); // [1,4,0]: 15 levels
+        let g = f.grid(2.0);
+        assert_eq!(g.len(), 16);
+        for w in g[1..].windows(2) {
+            assert_eq!(w[1] / w[0], 2.0);
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Generic radix-2 minifloat `[1, E, M]` codec — the substrate behind the
+//! FP7 `[1,4,2]` product format of MF-BPROP (App. A.4) and the FP16-style
+//! accumulator models.
+//!
+//! Encoding follows IEEE-754 conventions restricted to what the paper
+//! needs: biased exponent, implicit leading one for normal numbers,
+//! exponent code 0 reserved for zero/subnormals, no infinities/NaNs (the
+//! top exponent code is an ordinary value — saturating formats, as is
+//! universal in ML accelerators).
+
+/// A `[1, exp_bits, man_bits]` minifloat with a configurable bias.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MiniFloat {
+    pub exp_bits: u32,
+    pub man_bits: u32,
+    /// Exponent bias (IEEE default would be `2^(E−1) − 1`).
+    pub bias: i32,
+}
+
+impl MiniFloat {
+    /// FP7 `[1,4,2]` — the common product format of MF-BPROP (App. A.4.1).
+    pub const FP7: MiniFloat = MiniFloat { exp_bits: 4, man_bits: 2, bias: 7 };
+
+    pub fn new(exp_bits: u32, man_bits: u32) -> Self {
+        assert!(exp_bits >= 1 && exp_bits <= 8 && man_bits <= 10);
+        MiniFloat { exp_bits, man_bits, bias: (1 << (exp_bits - 1)) - 1 }
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Largest representable finite magnitude.
+    pub fn max_value(&self) -> f32 {
+        let emax = ((1 << self.exp_bits) - 1) as i32 - self.bias;
+        let man = 2.0 - (-(self.man_bits as f32)).exp2();
+        man * (emax as f32).exp2()
+    }
+
+    /// Smallest positive normal magnitude.
+    pub fn min_normal(&self) -> f32 {
+        ((1 - self.bias) as f32).exp2()
+    }
+
+    /// Decode a code (low `bits()` bits used): `[sign | exp | man]`.
+    pub fn decode(&self, code: u32) -> f32 {
+        let man_mask = (1u32 << self.man_bits) - 1;
+        let exp_mask = (1u32 << self.exp_bits) - 1;
+        let man = code & man_mask;
+        let exp = (code >> self.man_bits) & exp_mask;
+        let sign = (code >> (self.man_bits + self.exp_bits)) & 1;
+        let mag = if exp == 0 {
+            // subnormal: no implicit one, exponent = 1 − bias
+            (man as f32) * (-(self.man_bits as f32)).exp2() * ((1 - self.bias) as f32).exp2()
+        } else {
+            (1.0 + (man as f32) * (-(self.man_bits as f32)).exp2())
+                * ((exp as i32 - self.bias) as f32).exp2()
+        };
+        if sign == 1 {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Encode with round-to-nearest (ties to even), saturating at
+    /// `max_value`. Exact inverse of [`decode`] on representable values.
+    pub fn encode(&self, v: f32) -> u32 {
+        let sign = if v.is_sign_negative() { 1u32 } else { 0 };
+        let sign_shifted = sign << (self.man_bits + self.exp_bits);
+        let a = v.abs();
+        if a == 0.0 {
+            return sign_shifted;
+        }
+        let max = self.max_value();
+        if a >= max {
+            // saturate to the largest finite code
+            let exp_mask = (1u32 << self.exp_bits) - 1;
+            let man_mask = (1u32 << self.man_bits) - 1;
+            return sign_shifted | (exp_mask << self.man_bits) | man_mask;
+        }
+        if a < self.min_normal() {
+            // subnormal rounding
+            let scale = ((self.man_bits as i32) - (1 - self.bias)) as f32;
+            let t = a * scale.exp2();
+            let man = round_ties_even(t).min(((1u32 << self.man_bits) - 1) as f32) as u32;
+            if man == (1 << self.man_bits) {
+                // rounded up into the smallest normal
+                return sign_shifted | (1 << self.man_bits);
+            }
+            return sign_shifted | man;
+        }
+        // normal: exponent via bit extraction of f32
+        let e = super::rounding::floor_log2(a);
+        let frac = a / (e as f32).exp2() - 1.0; // in [0, 1)
+        let mut man = round_ties_even(frac * (self.man_bits as f32).exp2()) as u32;
+        let mut exp = e + self.bias;
+        if man == (1 << self.man_bits) {
+            man = 0;
+            exp += 1;
+        }
+        let exp_max = (1i32 << self.exp_bits) - 1;
+        if exp > exp_max {
+            let man_mask = (1u32 << self.man_bits) - 1;
+            return sign_shifted | ((exp_max as u32) << self.man_bits) | man_mask;
+        }
+        debug_assert!(exp >= 1);
+        sign_shifted | ((exp as u32) << self.man_bits) | man
+    }
+
+    /// Quantize-dequantize: nearest representable value.
+    pub fn round(&self, v: f32) -> f32 {
+        self.decode(self.encode(v))
+    }
+
+    /// Enumerate all codes (2^bits of them).
+    pub fn all_codes(&self) -> impl Iterator<Item = u32> {
+        0..(1u32 << self.bits())
+    }
+}
+
+#[inline]
+fn round_ties_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::testutil::prop_check;
+
+    #[test]
+    fn fp7_constants() {
+        let f = MiniFloat::FP7;
+        assert_eq!(f.bits(), 7);
+        assert_eq!(f.bias, 7);
+        assert_eq!(f.min_normal(), (1.0f32 / 64.0));
+        // max: exp code 15 -> e = 8, man = 1.75 -> 448
+        assert_eq!(f.max_value(), 448.0);
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_all_fp7_codes() {
+        let f = MiniFloat::FP7;
+        for code in f.all_codes() {
+            let v = f.decode(code);
+            let re = f.encode(v);
+            // -0 canonicalizes to +0 magnitude-wise; compare decoded values.
+            assert_eq!(
+                f.decode(re),
+                v,
+                "code {code:#x} -> {v} -> {re:#x} -> {}",
+                f.decode(re)
+            );
+        }
+    }
+
+    #[test]
+    fn round_is_nearest() {
+        let f = MiniFloat::FP7;
+        // Between 1.0 (code) and 1.25: midpoint 1.125 ties-to-even -> 1.0
+        assert_eq!(f.round(1.12), 1.0);
+        assert_eq!(f.round(1.13), 1.25);
+        assert_eq!(f.round(1.125), 1.0);
+        // saturation
+        assert_eq!(f.round(1e6), 448.0);
+        assert_eq!(f.round(-1e6), -448.0);
+    }
+
+    #[test]
+    fn subnormals_cover_below_min_normal() {
+        let f = MiniFloat::FP7;
+        let tiny = f.min_normal() / 2.0; // exactly a subnormal step
+        assert_eq!(f.round(tiny), tiny);
+        assert_eq!(f.round(f.min_normal() / 128.0), 0.0); // rounds to zero
+    }
+
+    #[test]
+    fn monotone_rounding() {
+        prop_check(
+            "minifloat_monotone",
+            3,
+            5_000,
+            |rng: &mut Xoshiro256| {
+                let a = rng.uniform_range_f32(-500.0, 500.0);
+                let b = a + rng.uniform_range_f32(0.0, 10.0);
+                (a, b)
+            },
+            |&(a, b)| {
+                let f = MiniFloat::FP7;
+                if f.round(a) <= f.round(b) {
+                    Ok(())
+                } else {
+                    Err(format!("round({a})={} > round({b})={}", f.round(a), f.round(b)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn exactness_of_representables() {
+        prop_check(
+            "minifloat_exact_on_grid",
+            4,
+            2_000,
+            |rng: &mut Xoshiro256| (rng.next_u64() & 0x7F) as u32,
+            |&code| {
+                let f = MiniFloat::FP7;
+                let v = f.decode(code);
+                if f.round(v) == v {
+                    Ok(())
+                } else {
+                    Err(format!("code {code}: round({v}) = {}", f.round(v)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn fp16_like_format_sane() {
+        let h = MiniFloat::new(5, 10);
+        assert_eq!(h.bits(), 16);
+        assert_eq!(h.round(1.5), 1.5);
+        assert_eq!(h.round(65504.0), 65504.0); // fp16 max
+        assert!((h.round(0.1) - 0.1).abs() < 1e-4);
+    }
+}

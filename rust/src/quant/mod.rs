@@ -1,0 +1,33 @@
+//! Numeric-format substrate: every quantizer the paper uses, compares
+//! against, or ablates — bit-exact, dependency-free, heavily tested.
+//!
+//! | module | paper section | what |
+//! |---|---|---|
+//! | [`rounding`] | §3 | SR / RDN primitives + analytic MSE/bias/variance (Fig. 1a) |
+//! | [`logfmt`] | §4 | radix-2 log formats FP4 `[1,3,0]`, FP2, FP3 + codecs |
+//! | [`luq`] | §4, §4.1 | LUQ, its ablation family (Fig. 3 left), SMP |
+//! | [`int_uniform`] | §4.3 | symmetric uniform INT quantizer (forward pass) |
+//! | [`sawb`] | §4.3 | SAWB clip rule incl. the coefficient fit |
+//! | [`radix4`] | §2, A.3 | Ultra-low radix-4 FP4 + two-phase rounding baseline |
+//! | [`minifloat`] | A.4 | generic `[1,E,M]` codec (FP7 product format) |
+//! | [`analysis`] | §3/§4.1 | closed-form LUQ variance / expected MSE / SMP predictor |
+//!
+//! The same algorithms exist as Pallas kernels under `python/compile/
+//! kernels/`; `python/tests/test_cross_layer.py` pins both sides to shared
+//! test vectors so the rust substrate and the jax graph cannot drift apart.
+
+pub mod analysis;
+pub mod int_uniform;
+pub mod logfmt;
+pub mod luq;
+pub mod minifloat;
+pub mod radix4;
+pub mod rounding;
+pub mod sawb;
+
+pub use int_uniform::{UniformQuantizer, UniformRounding};
+pub use logfmt::LogFormat;
+pub use luq::{AlphaPolicy, LogQuantConfig, LogQuantizer, LogRounding, QuantStats, Underflow};
+pub use minifloat::MiniFloat;
+pub use radix4::{Radix4Format, Radix4Quantizer, TprPhase};
+pub use sawb::SawbQuantizer;

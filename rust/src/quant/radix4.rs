@@ -1,0 +1,224 @@
+//! The Ultra-low baseline (Sun et al., NeurIPS 2020): **radix-4 FP4** with
+//! **two-phase rounding (TPR)** — the method the paper compares against in
+//! Table 1 and Appendix A.3.
+//!
+//! A radix-4 `[1,3,0]` format represents magnitudes `α·4^i`, covering a
+//! much wider dynamic range than radix-2 at the same bit budget (which is
+//! why Sun et al. chose it for the heavy-tailed neural gradients) — at the
+//! cost of non-standard hardware: converting radix-2 ↔ radix-4 needs an
+//! explicit multiply (App. A.3), unlike the pure exponent arithmetic of
+//! radix-2 LUQ.
+//!
+//! **TPR**: the neural gradient is quantized *twice*, once on the base
+//! grid `α·4^i` and once on a grid shifted by ×2 (`2α·4^i`). The dx GEMM
+//! (Eq. 26) uses one phase and the dW GEMM (Eq. 27) the other; the union
+//! of the two grids is the radix-2 grid, so the *pair* loses less
+//! information than either alone, without widening the format.
+//!
+//! Rounding is deterministic nearest-in-log (geometric midpoint), matching
+//! Sun et al.'s deterministic scheme — the contrast with LUQ's unbiased
+//! stochastic rounding is the point of the comparison.
+
+use super::rounding::floor_log2;
+
+/// Radix-4 logarithmic format `[1, exp_bits, 0]` with radix-4 spacing.
+#[derive(Clone, Copy, Debug)]
+pub struct Radix4Format {
+    pub exp_bits: u32,
+}
+
+impl Radix4Format {
+    pub const FP4: Radix4Format = Radix4Format { exp_bits: 3 };
+
+    /// Magnitude levels (7 for `[1,3,0]`, exponent code 0 = zero).
+    #[inline]
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.exp_bits) - 1
+    }
+
+    /// Scale so the top level `α·4^(L−1)` equals `max_abs`.
+    #[inline]
+    pub fn alpha_for_max(&self, max_abs: f32) -> f32 {
+        max_abs / 4.0f32.powi(self.levels() as i32 - 1)
+    }
+
+    /// Representable magnitudes `α·4^i`, plus zero.
+    pub fn grid(&self, alpha: f32, phase_shift: f32) -> Vec<f32> {
+        let mut g = vec![0.0];
+        g.extend((0..self.levels()).map(|i| alpha * phase_shift * 4.0f32.powi(i as i32)));
+        g
+    }
+}
+
+/// Which TPR phase a quantization uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TprPhase {
+    /// Base grid `α·4^i` — used for the update (dW) GEMM.
+    Base,
+    /// Shifted grid `2α·4^i` — used for the backward (dx) GEMM.
+    Shifted,
+}
+
+/// The Ultra-low radix-4 quantizer.
+#[derive(Clone, Copy, Debug)]
+pub struct Radix4Quantizer {
+    pub format: Radix4Format,
+}
+
+impl Radix4Quantizer {
+    pub fn new(format: Radix4Format) -> Self {
+        Radix4Quantizer { format }
+    }
+
+    /// Deterministic nearest-in-log quantization of `x` onto the phase
+    /// grid. Underflow (below half the smallest level, geometrically)
+    /// flushes to zero; overflow clips to the top level.
+    pub fn quantize_value(&self, x: f32, alpha: f32, phase: TprPhase) -> f32 {
+        if x == 0.0 {
+            return 0.0;
+        }
+        let shift = match phase {
+            TprPhase::Base => 1.0,
+            TprPhase::Shifted => 2.0,
+        };
+        let a = x.abs();
+        let base = alpha * shift;
+        let levels = self.format.levels() as i32;
+        // log4 of a/base; nearest level by geometric midpoint: the bin
+        // [4^i, 4^(i+1)] splits at 2·4^i (the geometric mean), i.e. at
+        // log4 = i + 0.5.
+        let l4 = ((a / base) as f64).log2() / 2.0;
+        let i = (l4 + 0.5).floor() as i32;
+        if i < 0 {
+            // below the bottom level: geometric-nearest against zero —
+            // standard FP flush-to-zero below half the min magnitude.
+            if a >= base * 0.5 {
+                base.copysign(x)
+            } else {
+                0.0
+            }
+        } else {
+            let i = i.min(levels - 1);
+            (base * 4.0f32.powi(i)).copysign(x)
+        }
+    }
+
+    /// Quantize a tensor in one phase, scale from the tensor max.
+    pub fn quantize(&self, x: &[f32], phase: TprPhase) -> Vec<f32> {
+        let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if max_abs == 0.0 {
+            return vec![0.0; x.len()];
+        }
+        let alpha = self.format.alpha_for_max(max_abs);
+        x.iter()
+            .map(|&v| self.quantize_value(v, alpha, phase))
+            .collect()
+    }
+
+    /// Two-phase rounding: returns `(base_phase, shifted_phase)` — the dW
+    /// and dx copies respectively.
+    pub fn quantize_tpr(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.quantize(x, TprPhase::Base),
+            self.quantize(x, TprPhase::Shifted),
+        )
+    }
+}
+
+/// The Appendix A.3 demonstration: radix conversion cannot be emulated by
+/// quantize-then-shift. Returns `(radix2_then_shift, true_radix4)` for a
+/// value quantized on radix-2 bins `{1,2,4,8,…}` then doubled, vs directly
+/// on radix-4 bins `{1,4,16,64}`. For `x = 4.5` this yields `(8, 4)`.
+pub fn a3_counterexample(x: f32) -> (f32, f32) {
+    // Radix-2 RDN in log domain (geometric midpoint), bins 2^i.
+    let n = floor_log2(x);
+    let lo = (n as f32).exp2();
+    let r2 = if x / lo >= 1.5 { lo * 2.0 } else { lo };
+    let shifted = r2 * 2.0;
+    // Radix-4 nearest (geometric midpoint at 2·4^i), bins 4^i.
+    let l4 = (x as f64).log2() / 2.0;
+    let i4 = (l4 + 0.5).floor() as i32;
+    let r4 = 4.0f32.powi(i4);
+    (shifted, r4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn radix4_grid_spacing() {
+        let f = Radix4Format::FP4;
+        let g = f.grid(1.0, 1.0);
+        assert_eq!(g, vec![0.0, 1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0]);
+        let gs = f.grid(1.0, 2.0);
+        assert_eq!(gs[1], 2.0);
+        assert_eq!(gs[2], 8.0);
+    }
+
+    #[test]
+    fn radix4_covers_wider_range_than_radix2() {
+        // Dynamic range of radix-4 [1,3,0]: 4^6 = 4096 vs radix-2's 2^6.
+        let f = Radix4Format::FP4;
+        let g = f.grid(1.0, 1.0);
+        let dr = g.last().unwrap() / g[1];
+        assert_eq!(dr, 4096.0);
+    }
+
+    #[test]
+    fn quantize_outputs_on_grid_and_clips() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let x: Vec<f32> = (0..2048).map(|_| rng.signed_lognormal_f32(0.0, 3.0)).collect();
+        let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let alpha = Radix4Format::FP4.alpha_for_max(max_abs);
+        let y = q.quantize(&x, TprPhase::Base);
+        let grid = Radix4Format::FP4.grid(alpha, 1.0);
+        for (i, v) in y.iter().enumerate() {
+            assert!(
+                grid.iter().any(|g| (v.abs() - g).abs() <= g.max(1e-20) * 1e-5),
+                "y[{i}]={v} off grid"
+            );
+        }
+    }
+
+    #[test]
+    fn tpr_phases_interleave_to_radix2() {
+        let f = Radix4Format::FP4;
+        let base = f.grid(1.0, 1.0);
+        let shifted = f.grid(1.0, 2.0);
+        let mut union: Vec<f32> = base[1..].iter().chain(&shifted[1..]).cloned().collect();
+        union.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in union.windows(2) {
+            assert_eq!(w[1] / w[0], 2.0, "union must be the radix-2 grid");
+        }
+    }
+
+    #[test]
+    fn a3_counterexample_matches_paper() {
+        // Paper A.3: for 4.5, radix-2-then-shift gives 8 but radix-4 gives 4.
+        let (shifted, r4) = a3_counterexample(4.5);
+        assert_eq!(shifted, 8.0);
+        assert_eq!(r4, 4.0);
+    }
+
+    #[test]
+    fn deterministic_nearest_is_biased() {
+        // The contrast with LUQ: radix-4 RDN has nonzero mean error on a
+        // mid-bin value.
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        // alpha=1: value 2.0 lies in bin [1,4], geometric mid at 2 -> ties up to 4.
+        let y = q.quantize_value(2.0, 1.0, TprPhase::Base);
+        assert_eq!(y, 4.0);
+        let y = q.quantize_value(1.9, 1.0, TprPhase::Base);
+        assert_eq!(y, 1.0);
+    }
+
+    #[test]
+    fn zero_and_sign_preserved() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        assert_eq!(q.quantize_value(0.0, 1.0, TprPhase::Base), 0.0);
+        assert!(q.quantize_value(-5.0, 1.0, TprPhase::Base) < 0.0);
+    }
+}

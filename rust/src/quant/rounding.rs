@@ -1,0 +1,253 @@
+//! Rounding primitives and their analytic error decomposition (paper §3).
+//!
+//! Two schemes are compared throughout the paper:
+//!
+//! * **RDN** — round-to-nearest. Deterministic, zero variance, biased
+//!   (Eq. 5), minimal MSE (Eq. 9).
+//! * **SR** — stochastic rounding (Eq. 1). Unbiased (Eq. 3), with variance
+//!   `(x−l)(u−x)` (Eq. 4), hence larger MSE.
+//!
+//! The paper's conclusion (§3.3): RDN for the forward pass, SR for the
+//! backward pass. These primitives are the shared foundation of every
+//! quantizer in this crate; Fig. 1a is regenerated directly from the
+//! analytic expressions below (`benches/fig1a_mse_rounding.rs`).
+
+/// Stochastic rounding of `x` to one edge of the bin `[lo, hi]`, driven by
+/// an externally supplied uniform `u ∈ [0,1)` (Eq. 1). Rounds up with
+/// probability `(x−lo)/(hi−lo)`, so `E[SR(x)] = x` (Eq. 2).
+#[inline]
+pub fn sr(x: f32, lo: f32, hi: f32, u: f32) -> f32 {
+    debug_assert!(lo <= x && x <= hi, "x={x} outside [{lo},{hi}]");
+    debug_assert!((0.0..1.0).contains(&u));
+    let p_up = (x - lo) / (hi - lo);
+    if u < p_up {
+        hi
+    } else {
+        lo
+    }
+}
+
+/// Round-to-nearest within the bin `[lo, hi]`; ties round up (away from
+/// `lo`), matching the usual "round half up" hardware convention.
+#[inline]
+pub fn rdn(x: f32, lo: f32, hi: f32) -> f32 {
+    debug_assert!(lo <= x && x <= hi);
+    if x - lo < hi - x {
+        lo
+    } else {
+        hi
+    }
+}
+
+/// The equivalent "noise-add" implementation of SR used by hardware and by
+/// the Fig. 4 amortization experiment: add `u − 1/2` bins of uniform noise,
+/// then RDN. Identical in distribution to [`sr`]:
+/// `floor((x−lo)/w + u)` rounds up iff `u ≥ 1 − frac` iff `u' < frac` for
+/// `u' = 1 − u`, so the two formulations coincide for a uniform `u`.
+#[inline]
+pub fn sr_noise_add(x: f32, lo: f32, hi: f32, u: f32) -> f32 {
+    let w = hi - lo;
+    let shifted = (x - lo) / w + u; // in [0, 2)
+    if shifted >= 1.0 {
+        hi
+    } else {
+        lo
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic error decomposition (Eqs. 4–8), used to regenerate Fig. 1a.
+// ---------------------------------------------------------------------------
+
+/// `Var[SR(x)] = (x − l)(u − x)` (Eq. 4).
+#[inline]
+pub fn sr_variance(x: f64, lo: f64, hi: f64) -> f64 {
+    (x - lo) * (hi - x)
+}
+
+/// `Bias[SR(x)] = 0` (Eq. 3).
+#[inline]
+pub fn sr_bias(_x: f64, _lo: f64, _hi: f64) -> f64 {
+    0.0
+}
+
+/// `MSE[SR(x)] = (x − l)(u − x)` (Eq. 8, stochastic branch).
+#[inline]
+pub fn sr_mse(x: f64, lo: f64, hi: f64) -> f64 {
+    sr_variance(x, lo, hi)
+}
+
+/// `Bias[RDN(x)] = min(x − l, u − x)` (Eq. 5).
+#[inline]
+pub fn rdn_bias(x: f64, lo: f64, hi: f64) -> f64 {
+    (x - lo).min(hi - x)
+}
+
+/// `MSE[RDN(x)] = min(x − l, u − x)²` (Eq. 8, deterministic branch).
+#[inline]
+pub fn rdn_mse(x: f64, lo: f64, hi: f64) -> f64 {
+    rdn_bias(x, lo, hi).powi(2)
+}
+
+/// Round-to-nearest-power (Eq. 20): round `r > 0` to the nearest power of
+/// two *geometrically correctly*. The naive `2^⌊log2 r⌋` truncates; the
+/// midpoint of the bin `[2^(n−1), 2^n]` is `3·2^(n−1)/2` (Eq. 19), so the
+/// corrected rule is `2^⌊log2(4r/3)⌋ = 2^RDN(log2 r − 0.0849625)`.
+/// Returns the *integer exponent* `n` such that the rounded value is `2^n`.
+#[inline]
+pub fn rdnp_exponent(r: f32) -> i32 {
+    debug_assert!(r > 0.0);
+    ((r as f64 * 4.0 / 3.0).log2().floor()) as i32
+}
+
+/// Exact power of two `2^n` for `n ∈ [-126, 127]`, by constructing the
+/// f32 exponent field directly — ~1 cycle vs an `exp2f` libcall, the
+/// difference between hitting and missing the quantizer's bandwidth
+/// target (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn pow2i(n: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&n));
+    f32::from_bits(((n + 127) as u32) << 23)
+}
+
+/// Exact floor of log2 for a positive normal f32, via exponent-field
+/// extraction — immune to `log2f` rounding near bin edges.
+#[inline]
+pub fn floor_log2(r: f32) -> i32 {
+    debug_assert!(r > 0.0 && r.is_finite());
+    let bits = r.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    if exp == 0 {
+        // subnormal: fall back to log2 (never hit on our normalized inputs)
+        r.log2().floor() as i32
+    } else {
+        exp - 127
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::testutil::{assert_mean_within, prop_check};
+
+    #[test]
+    fn sr_hits_edges_only() {
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        for _ in 0..1000 {
+            let x = rng.uniform_range_f32(2.0, 3.0);
+            let q = sr(x, 2.0, 3.0, rng.uniform_f32());
+            assert!(q == 2.0 || q == 3.0);
+        }
+    }
+
+    #[test]
+    fn sr_is_unbiased_statistically() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let x = 2.3f32;
+        let devs: Vec<f64> = (0..200_000)
+            .map(|_| (sr(x, 2.0, 3.0, rng.uniform_f32()) - x) as f64)
+            .collect();
+        assert_mean_within(&devs, 0.0, 4.0, "SR unbiasedness at x=2.3");
+    }
+
+    #[test]
+    fn sr_noise_add_matches_sr_distribution() {
+        // Same uniform stream drives both; up-probabilities must agree.
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x = 0.7f32;
+        let n = 100_000;
+        let mut ups_sr = 0usize;
+        let mut ups_na = 0usize;
+        for _ in 0..n {
+            if sr(x, 0.0, 1.0, rng.uniform_f32()) == 1.0 {
+                ups_sr += 1;
+            }
+            if sr_noise_add(x, 0.0, 1.0, rng.uniform_f32()) == 1.0 {
+                ups_na += 1;
+            }
+        }
+        let (a, b) = (ups_sr as f64 / n as f64, ups_na as f64 / n as f64);
+        assert!((a - 0.7).abs() < 0.01, "sr p_up={a}");
+        assert!((b - 0.7).abs() < 0.01, "noise-add p_up={b}");
+    }
+
+    #[test]
+    fn rdn_picks_nearest() {
+        assert_eq!(rdn(0.2, 0.0, 1.0), 0.0);
+        assert_eq!(rdn(0.8, 0.0, 1.0), 1.0);
+        assert_eq!(rdn(0.5, 0.0, 1.0), 1.0); // tie rounds up
+    }
+
+    #[test]
+    fn mse_inequality_eq9_everywhere() {
+        // Eq. 9: MSE[SR] >= MSE[RDN] for all x.
+        prop_check(
+            "mse_sr_ge_rdn",
+            3,
+            10_000,
+            |rng| rng.uniform_f64(),
+            |&x| {
+                if sr_mse(x, 0.0, 1.0) >= rdn_mse(x, 0.0, 1.0) - 1e-15 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "SR mse {} < RDN mse {}",
+                        sr_mse(x, 0.0, 1.0),
+                        rdn_mse(x, 0.0, 1.0)
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn empirical_sr_mse_matches_analytic() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let x = 0.3f32;
+        let n = 200_000;
+        let emp: f64 = (0..n)
+            .map(|_| ((sr(x, 0.0, 1.0, rng.uniform_f32()) - x) as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        let ana = sr_mse(x as f64, 0.0, 1.0);
+        assert!((emp - ana).abs() / ana < 0.02, "emp={emp} ana={ana}");
+    }
+
+    #[test]
+    fn rdnp_rounds_to_nearest_power_geometrically() {
+        // Bin [2, 4]: midpoint per Eq. 19 is 3. Below 3 -> 2, above -> 4.
+        assert_eq!(rdnp_exponent(2.9), 1);
+        assert_eq!(rdnp_exponent(3.1), 2);
+        // Exact powers stay put.
+        assert_eq!(rdnp_exponent(1.0), 0);
+        assert_eq!(rdnp_exponent(2.0), 1);
+        assert_eq!(rdnp_exponent(64.0), 6);
+        // Truncation (naive floor) would send 3.9 to 2; RDNP sends it to 4.
+        assert_eq!(rdnp_exponent(3.9), 2);
+    }
+
+    #[test]
+    fn floor_log2_exact_on_powers_and_neighbors() {
+        for n in -10..10i32 {
+            let p = (n as f32).exp2();
+            assert_eq!(floor_log2(p), n, "at 2^{n}");
+            assert_eq!(floor_log2(p * 1.999), n, "just below 2^{}", n + 1);
+        }
+        prop_check(
+            "floor_log2_matches_log2f",
+            5,
+            10_000,
+            |rng| rng.uniform_range_f32(1e-20, 1e20),
+            |&r| {
+                let a = floor_log2(r);
+                let b = (r as f64).log2().floor() as i32;
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!("bit {a} vs libm {b}"))
+                }
+            },
+        );
+    }
+}

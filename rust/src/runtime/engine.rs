@@ -1,0 +1,163 @@
+//! The PJRT engine: artifact loading, compile caching, validated
+//! execution.
+//!
+//! Pattern from `/opt/xla-example/load_hlo/`: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compilation happens once per artifact
+//! per process (the cache below); the training loop only pays
+//! literal-copy + execute per step.
+
+use super::meta::ArtifactMeta;
+use super::tensor::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// A compiled artifact: executable + its meta contract.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with validated inputs; returns the decomposed output
+    /// tensors in meta order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Borrowing variant of [`run`]: callers with persistent state
+    /// (params/momenta held across steps) avoid cloning every tensor
+    /// into the input vector each step (§Perf L3: one host copy per
+    /// tensor per step instead of two).
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.validate(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{}`", self.meta.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.decompose_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact `{}`: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    fn validate(&self, inputs: &[&HostTensor]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact `{}`: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(self.meta.inputs.iter()).enumerate() {
+            if t.shape() != spec.shape.as_slice() || t.dtype() != spec.dtype {
+                bail!(
+                    "artifact `{}` input[{i}] `{}`: expected {:?} {:?}, got {:?} {:?}",
+                    self.meta.name,
+                    spec.name,
+                    spec.shape,
+                    spec.dtype,
+                    t.shape(),
+                    t.dtype()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The engine: one PJRT client + a per-process compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.into(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Locate the artifacts dir: `$LUQ_ARTIFACTS`, `./artifacts`, or
+    /// walking up from the executable (so examples work from any cwd).
+    pub fn default_artifacts_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("LUQ_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.is_dir() {
+                return cand;
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let hlo = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let meta_path = self.artifacts_dir.join(format!("{name}.meta.json"));
+        let meta = ArtifactMeta::load(&meta_path)?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .with_context(|| format!("parsing HLO text {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling `{name}`"))?;
+        let e = Rc::new(Executable { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// List available artifact names.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let mut names = vec![];
+        for entry in std::fs::read_dir(&self.artifacts_dir)
+            .with_context(|| format!("reading {}", self.artifacts_dir.display()))?
+        {
+            let p = entry?.path();
+            if let Some(n) = p.file_name().and_then(|n| n.to_str()) {
+                if let Some(base) = n.strip_suffix(".hlo.txt") {
+                    names.push(base.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}

@@ -1,0 +1,197 @@
+//! Artifact metadata sidecars (`artifacts/*.meta.json`), emitted by
+//! `python/compile/aot.py` next to each HLO text file. The meta is the
+//! contract between the layers: exact input/output order, shapes, dtypes,
+//! model geometry, and the quantization scheme the graph was built with.
+
+use crate::metrics::{parse_json, Json};
+use crate::runtime::tensor::DType;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec `{name}` missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim in `{name}`")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match j.get("dtype").and_then(Json::as_str) {
+            Some(s) => DType::parse(s)?,
+            None => DType::F32, // qgrads sidecar entries omit dtype
+        };
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Model geometry as recorded by the python side.
+#[derive(Clone, Debug, Default)]
+pub struct ModelMeta {
+    pub kind: String,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub input_dim: usize,
+}
+
+/// Quantization scheme the graph was compiled with.
+#[derive(Clone, Debug, Default)]
+pub struct SpecMeta {
+    pub fwd: String,
+    pub bwd: String,
+    pub bwd_exp_bits: u32,
+    pub smp: usize,
+    pub use_kernels: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub profile: String,
+    pub stage: String,
+    pub scheme: Option<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Parameter layout (present for model artifacts).
+    pub params: Vec<TensorSpec>,
+    /// Neural-gradient shapes, one per quantized layer (train artifacts).
+    pub qgrads: Vec<TensorSpec>,
+    pub batch: usize,
+    pub n_qlayers: usize,
+    pub model: ModelMeta,
+    pub spec: SpecMeta,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: impl AsRef<Path>) -> Result<ArtifactMeta> {
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let j = parse_json(&src).map_err(|e| anyhow!("parsing meta json: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            match j.get(key) {
+                None => Ok(vec![]),
+                Some(arr) => arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("`{key}` not an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect(),
+            }
+        };
+        let model = match j.get("model") {
+            None => ModelMeta::default(),
+            Some(m) => ModelMeta {
+                kind: m.get("kind").and_then(Json::as_str).unwrap_or("").into(),
+                dim: m.get("dim").and_then(Json::as_usize).unwrap_or(0),
+                depth: m.get("depth").and_then(Json::as_usize).unwrap_or(0),
+                heads: m.get("heads").and_then(Json::as_usize).unwrap_or(0),
+                seq_len: m.get("seq_len").and_then(Json::as_usize).unwrap_or(0),
+                vocab: m.get("vocab").and_then(Json::as_usize).unwrap_or(0),
+                input_dim: m.get("input_dim").and_then(Json::as_usize).unwrap_or(0),
+            },
+        };
+        let spec = match j.get("spec") {
+            None => SpecMeta::default(),
+            Some(s) => SpecMeta {
+                fwd: s.get("fwd").and_then(Json::as_str).unwrap_or("").into(),
+                bwd: s.get("bwd").and_then(Json::as_str).unwrap_or("").into(),
+                bwd_exp_bits: s.get("bwd_exp_bits").and_then(Json::as_usize).unwrap_or(3) as u32,
+                smp: s.get("smp").and_then(Json::as_usize).unwrap_or(1),
+                use_kernels: matches!(s.get("use_kernels"), Some(Json::Bool(true))),
+            },
+        };
+        let meta = ArtifactMeta {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("meta missing name"))?
+                .to_string(),
+            profile: j.get("profile").and_then(Json::as_str).unwrap_or("").into(),
+            stage: j.get("stage").and_then(Json::as_str).unwrap_or("").into(),
+            scheme: j.get("scheme").and_then(Json::as_str).map(String::from),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            params: specs("params")?,
+            qgrads: specs("qgrads")?,
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            n_qlayers: j.get("n_qlayers").and_then(Json::as_usize).unwrap_or(0),
+            model,
+            spec,
+        };
+        if meta.inputs.is_empty() {
+            bail!("artifact `{}` has no inputs", meta.name);
+        }
+        Ok(meta)
+    }
+
+    /// Total parameter count (for logging).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(TensorSpec::numel).sum()
+    }
+
+    /// Index of the named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact `{}` has no input `{name}`", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "mlp_s__train__luq", "profile": "mlp_s", "stage": "train",
+        "scheme": "luq",
+        "model": {"kind": "mlp", "dim": 128, "depth": 3, "heads": 4,
+                  "seq_len": 64, "vocab": 10, "input_dim": 768},
+        "spec": {"fwd": "int4", "bwd": "luq", "bwd_exp_bits": 3, "smp": 1,
+                 "use_kernels": false},
+        "params": [{"name": "w_in", "shape": [768, 128], "dtype": "float32"}],
+        "batch": 32, "n_qlayers": 2,
+        "qgrads": [{"name": "g0", "shape": [32, 128]},
+                   {"name": "g1", "shape": [32, 128]}],
+        "inputs": [{"name": "w_in", "shape": [768, 128], "dtype": "float32"},
+                   {"name": "y", "shape": [32], "dtype": "int32"}],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "float32"}]
+    }"#;
+
+    #[test]
+    fn parses_sample_meta() {
+        let j = parse_json(SAMPLE).unwrap();
+        let m = ArtifactMeta::from_json(&j).unwrap();
+        assert_eq!(m.name, "mlp_s__train__luq");
+        assert_eq!(m.model.kind, "mlp");
+        assert_eq!(m.spec.bwd, "luq");
+        assert_eq!(m.inputs[1].dtype, DType::I32);
+        assert_eq!(m.qgrads.len(), 2);
+        assert_eq!(m.param_count(), 768 * 128);
+        assert_eq!(m.input_index("y").unwrap(), 1);
+        assert!(m.input_index("nope").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `.meta.json`) produced by `python/compile/aot.py` and executes them on
+//! the CPU PJRT client. Python never runs here — this is the request
+//! path.
+//!
+//! * [`tensor`] — [`HostTensor`]: shaped f32/i32 host buffers ↔ XLA
+//!   literals.
+//! * [`meta`] — the artifact manifest sidecar (input/output specs, model
+//!   geometry, quantization scheme).
+//! * [`engine`] — the PJRT client wrapper with a compile cache; one
+//!   compiled executable per artifact, reused across every step.
+
+pub mod engine;
+pub mod meta;
+pub mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use meta::{ArtifactMeta, TensorSpec};
+pub use tensor::{DType, HostTensor};

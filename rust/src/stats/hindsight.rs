@@ -1,0 +1,101 @@
+//! In-hindsight range estimation (Fournarakis & Nagel 2021), as adopted by
+//! the paper (§4.3 "Reducing the data movement", Eq. 24):
+//!
+//! ```text
+//!   m̂_t = (1 − η) · max|x_{t−1}| + η · m̂_{t−1}
+//! ```
+//!
+//! The quantizer at step *t* uses `m̂_t` — computed entirely from *previous*
+//! iterations — so the max-reduction of the current tensor happens in
+//! parallel with (not before) quantization, removing a full read of the
+//! tensor from the critical path. Table 3 / Fig. 6 show the accuracy cost
+//! is negligible.
+
+/// EMA max tracker for one tensor (one per layer-gradient in training).
+#[derive(Clone, Debug)]
+pub struct HindsightMax {
+    /// Momentum η (the paper uses η = 0.1).
+    pub eta: f32,
+    est: Option<f32>,
+}
+
+impl HindsightMax {
+    pub fn new(eta: f32) -> Self {
+        assert!((0.0..1.0).contains(&eta));
+        HindsightMax { eta, est: None }
+    }
+
+    /// The estimate to use for the *current* step. `None` until the first
+    /// observation (callers fall back to a measured max on step 0).
+    pub fn estimate(&self) -> Option<f32> {
+        self.est
+    }
+
+    /// Feed the measured max of the step that just completed (Eq. 24).
+    pub fn observe(&mut self, measured_max: f32) {
+        self.est = Some(match self.est {
+            None => measured_max,
+            Some(prev) => (1.0 - self.eta) * measured_max + self.eta * prev,
+        });
+    }
+
+    /// Relative error of the current estimate vs a measured max
+    /// (positive = overestimate). Used by the Fig. 6 trace.
+    pub fn relative_error(&self, measured_max: f32) -> Option<f32> {
+        self.est.map(|e| (e - measured_max) / measured_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn first_observation_seeds_estimate() {
+        let mut h = HindsightMax::new(0.1);
+        assert!(h.estimate().is_none());
+        h.observe(5.0);
+        assert_eq!(h.estimate(), Some(5.0));
+    }
+
+    #[test]
+    fn ema_recurrence_matches_eq24() {
+        let mut h = HindsightMax::new(0.1);
+        h.observe(10.0);
+        h.observe(20.0);
+        // m̂ = 0.9 * 20 + 0.1 * 10 = 19
+        assert!((h.estimate().unwrap() - 19.0).abs() < 1e-6);
+        h.observe(5.0);
+        assert!((h.estimate().unwrap() - (0.9 * 5.0 + 0.1 * 19.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_to_stationary_max() {
+        let mut h = HindsightMax::new(0.1);
+        for _ in 0..100 {
+            h.observe(3.0);
+        }
+        assert!((h.estimate().unwrap() - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn tracks_slowly_varying_max_closely() {
+        // Fig. 6's claim: on real gradient traces the estimate hugs the
+        // measured max. Simulate a noisy, slowly decaying max trace.
+        let mut h = HindsightMax::new(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut worst = 0.0f32;
+        for t in 0..500 {
+            let base = 10.0 * (-(t as f32) / 300.0).exp();
+            let measured = base * rng.uniform_range_f32(0.8, 1.2);
+            if let Some(err) = h.relative_error(measured) {
+                if t > 10 {
+                    worst = worst.max(err.abs());
+                }
+            }
+            h.observe(measured);
+        }
+        assert!(worst < 0.5, "worst relative error {worst}");
+    }
+}

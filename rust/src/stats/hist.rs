@@ -1,0 +1,133 @@
+//! Log-domain magnitude histograms — the Fig. 2 visualization substrate
+//! (neural-gradient distribution before/after each LUQ stage) and the
+//! lognormality diagnostics.
+
+/// Histogram over `log2|x|` with fixed-width bins; zeros counted aside.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub zeros: u64,
+    pub total: u64,
+}
+
+impl LogHistogram {
+    /// `lo`, `hi`: log2-magnitude range; values outside clamp to the edge
+    /// bins (keeps tails visible without unbounded storage).
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(hi > lo && bins >= 2);
+        LogHistogram { lo, hi, counts: vec![0; bins], zeros: 0, total: 0 }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        self.total += 1;
+        if x == 0.0 {
+            self.zeros += 1;
+            return;
+        }
+        let l = x.abs().log2();
+        let n = self.counts.len();
+        let t = ((l - self.lo) / (self.hi - self.lo) * n as f32).floor();
+        let idx = (t.max(0.0) as usize).min(n - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn add_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Bin centers in log2 space.
+    pub fn centers(&self) -> Vec<f32> {
+        let n = self.counts.len() as f32;
+        (0..self.counts.len())
+            .map(|i| self.lo + (i as f32 + 0.5) / n * (self.hi - self.lo))
+            .collect()
+    }
+
+    /// Fraction of non-zero mass in each bin.
+    pub fn density(&self) -> Vec<f64> {
+        let nz = (self.total - self.zeros).max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / nz).collect()
+    }
+
+    /// Fraction of exact zeros (LUQ's stochastic pruning creates these).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.zeros as f64 / self.total as f64
+        }
+    }
+
+    /// Number of distinct non-empty bins — after LUQ this collapses to at
+    /// most the number of format levels (the Fig. 2 "comb").
+    pub fn support_size(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Render as rows `(log2_center, density)` for the experiment logs.
+    pub fn rows(&self) -> Vec<(f32, f64)> {
+        self.centers().into_iter().zip(self.density()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn counts_and_zeros() {
+        let mut h = LogHistogram::new(-4.0, 4.0, 8);
+        h.add_slice(&[0.0, 1.0, -1.0, 2.0, 0.0625]);
+        assert_eq!(h.total, 5);
+        assert_eq!(h.zeros, 1);
+        assert_eq!(h.counts.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn out_of_range_clamps_to_edges() {
+        let mut h = LogHistogram::new(-1.0, 1.0, 4);
+        h.add(1e-10); // log2 ~ -33 -> bin 0
+        h.add(1e10); // log2 ~ 33  -> bin 3
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[3], 1);
+    }
+
+    #[test]
+    fn gaussian_in_log_domain_is_unimodal() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut h = LogHistogram::new(-12.0, 6.0, 36);
+        for _ in 0..100_000 {
+            h.add(rng.signed_lognormal_f32(0.0, 2.0));
+        }
+        // lognormal magnitudes -> normal in log2 domain: peak near 0.
+        let d = h.density();
+        let peak = d
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let c = h.centers()[peak];
+        assert!(c.abs() < 1.5, "peak at log2={c}");
+    }
+
+    #[test]
+    fn luq_collapses_support_to_format_levels() {
+        // The Fig. 2 effect: after LUQ the histogram support is exactly
+        // the format's levels (7 for FP4).
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x: Vec<f32> = (0..50_000).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let (y, _) = q.quantize(&x, &mut rng);
+        let mut h = LogHistogram::new(-20.0, 16.0, 720);
+        h.add_slice(&y);
+        assert_eq!(h.support_size(), 7, "FP4 has 7 magnitude levels");
+        assert!(h.zero_fraction() > 0.0, "stochastic pruning must create zeros");
+    }
+}

@@ -1,0 +1,11 @@
+//! Tensor-statistics substrate: the hindsight range estimator (Eq. 24,
+//! Fig. 6, Table 3), histograms (Fig. 2), and the bias/variance/MSE
+//! estimators used across the experiments.
+
+pub mod hindsight;
+pub mod hist;
+pub mod moments;
+
+pub use hindsight::HindsightMax;
+pub use hist::LogHistogram;
+pub use moments::{bias_variance_mse, cosine_similarity, Moments};

@@ -1,0 +1,149 @@
+//! Moment accumulators and the bias/variance/MSE decomposition (Eq. 7)
+//! used to characterize quantizers empirically.
+
+/// Streaming mean/variance/min/max accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Moments { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn add_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x as f64);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Unbiased sample variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            f64::INFINITY
+        } else {
+            (self.variance() / self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Empirical decomposition `MSE = Var + Bias²` (Eq. 7) of a stochastic
+/// quantizer at a fixed input: feed repeated samples `q_i = Q(x)`.
+/// Returns `(bias, variance, mse)`; the identity is exact up to the
+/// estimators' own noise and is asserted in tests.
+pub fn bias_variance_mse(x: f64, samples: &[f64]) -> (f64, f64, f64) {
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let bias = mean - x;
+    let var = samples.iter().map(|q| (q - mean).powi(2)).sum::<f64>() / n;
+    let mse = samples.iter().map(|q| (q - x).powi(2)).sum::<f64>() / n;
+    (bias, var, mse)
+}
+
+/// Cosine similarity between two vectors — the standard "gradient
+/// direction preserved?" diagnostic for quantized training.
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        dot += x as f64 * y as f64;
+        na += (x as f64).powi(2);
+        nb += (y as f64).powi(2);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.normal_ms_f32(3.0, 2.0)).collect();
+        let mut m = Moments::new();
+        m.add_slice(&xs);
+        let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((m.mean() - mean).abs() < 1e-9);
+        assert!((m.variance() - var).abs() / var < 1e-9);
+    }
+
+    #[test]
+    fn decomposition_identity_eq7() {
+        // MSE == Var + Bias² exactly when all three use the same samples.
+        let samples = [1.0, 2.0, 2.0, 3.0, 1.5];
+        let x = 1.8;
+        let (b, v, mse) = bias_variance_mse(x, &samples);
+        assert!((mse - (v + b * b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn luq_decomposition_bias_near_zero_variance_positive() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let x = vec![64.0f32, 2.9];
+        let samples: Vec<f64> = (0..50_000)
+            .map(|_| q.quantize(&x, &mut rng).0[1] as f64)
+            .collect();
+        let (bias, var, mse) = bias_variance_mse(2.9, &samples);
+        assert!(bias.abs() < 0.02, "bias {bias}");
+        assert!(var > 0.1, "var {var}");
+        assert!((mse - (var + bias * bias)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine_similarity(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine_similarity(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine_similarity(&[1.0, 2.0], &[-1.0, -2.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine_similarity(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn luq_preserves_gradient_direction() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x: Vec<f32> = (0..8192).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let (y, _) = q.quantize(&x, &mut rng);
+        let cs = cosine_similarity(&x, &y);
+        assert!(cs > 0.95, "cosine {cs}");
+    }
+}

@@ -1,0 +1,122 @@
+//! In-repo property-testing and statistical-assertion harness.
+//!
+//! The offline crate registry has no `proptest`/`quickcheck`, so this module
+//! provides the small core we need: run a property over many seeded random
+//! inputs, and on failure report the case index and seed so the exact case
+//! can be replayed. Statistical assertions (`assert_mean_within`) wrap the
+//! standard-error machinery used by the unbiasedness tests.
+
+use crate::rng::Xoshiro256;
+
+/// Run `prop` over `cases` random inputs drawn by `gen` from a seeded RNG.
+/// On failure, panics with the case index, seed, and a debug rendering of
+/// the failing input. This is the crate's property-test entry point.
+pub fn prop_check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Xoshiro256) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {i}/{cases} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Relative-or-absolute closeness, mirroring numpy's `allclose` semantics.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            close(x as f64, y as f64, rtol as f64, atol as f64),
+            "mismatch at [{i}]: {x} vs {y} (rtol={rtol}, atol={atol})"
+        );
+    }
+}
+
+/// Sample mean and the standard error of the mean.
+pub fn mean_sem(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, (var / n).sqrt())
+}
+
+/// Assert a sample mean is within `k_sigma` standard errors of `target`.
+/// Used by the unbiasedness property tests: for an unbiased quantizer the
+/// empirical mean of `Q(x) - x` must be statistically indistinguishable
+/// from zero.
+pub fn assert_mean_within(xs: &[f64], target: f64, k_sigma: f64, context: &str) {
+    let (mean, sem) = mean_sem(xs);
+    let dev = (mean - target).abs();
+    assert!(
+        dev <= k_sigma * sem.max(1e-12),
+        "{context}: mean {mean:.6e} deviates from {target:.6e} by {dev:.3e} > {k_sigma}*SEM ({sem:.3e}, n={})",
+        xs.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivial_property() {
+        prop_check(
+            "abs_nonneg",
+            1,
+            256,
+            |rng| rng.normal_f32(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails`")]
+    fn prop_check_reports_failures() {
+        prop_check(
+            "always_fails",
+            1,
+            4,
+            |rng| rng.uniform_f32(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn mean_sem_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let (m, s) = mean_sem(&xs);
+        assert!((m - 2.5).abs() < 1e-12);
+        // var = 5/3, sem = sqrt(5/3/4)
+        assert!((s - (5.0f64 / 3.0 / 4.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-6, 2.0 - 1e-6], 1e-5, 1e-8);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at [1]")]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.1], 1e-5, 1e-8);
+    }
+}

@@ -1,0 +1,225 @@
+//! Integration tests: runtime + coordinator against the real AOT
+//! artifacts. These exercise the full L3→PJRT→HLO path, including the
+//! quantized train steps the experiments run on.
+//!
+//! The artifacts are built by `make artifacts`; if they are missing the
+//! tests fail with a clear message (they are part of `make test`).
+
+use luq::coordinator::schedule::LrSchedule;
+use luq::coordinator::{checkpoint, StepDecay, Trainer, TrainerOptions};
+use luq::runtime::{Engine, HostTensor};
+
+fn engine() -> Engine {
+    let dir = Engine::default_artifacts_dir();
+    assert!(
+        dir.join("op__qmatmul.hlo.txt").exists(),
+        "artifacts missing — run `make artifacts` first (looked in {})",
+        dir.display()
+    );
+    Engine::cpu(dir).expect("PJRT CPU client")
+}
+
+#[test]
+fn qmatmul_artifact_is_numerically_correct() {
+    let e = engine();
+    let mm = e.load("op__qmatmul").unwrap();
+    let m = mm.meta.inputs[0].shape[0];
+    let k = mm.meta.inputs[0].shape[1];
+    let n = mm.meta.inputs[1].shape[1];
+    // x = identity-ish pattern so the expected product is easy to check.
+    let mut x = vec![0.0f32; m * k];
+    for i in 0..m.min(k) {
+        x[i * k + i] = 2.0;
+    }
+    let w: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32).collect();
+    let out = mm
+        .run(&[
+            HostTensor::f32(vec![m, k], x),
+            HostTensor::f32(vec![k, n], w.clone()),
+        ])
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+    // row i of result = 2 * row i of w (for i < min(m,k))
+    for i in 0..8 {
+        for j in 0..8 {
+            assert_eq!(y[i * n + j], 2.0 * w[i * n + j], "at ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn luq_quant_artifact_matches_rust_substrate() {
+    use luq::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+    use luq::rng::Xoshiro256;
+    let e = engine();
+    let op = e.load("op__luq_quant").unwrap();
+    let n = op.meta.inputs[0].numel();
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let x: Vec<f32> = (0..n).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let noise: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+    let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let out = op
+        .run(&[
+            HostTensor::f32(vec![n], x.clone()),
+            HostTensor::f32(vec![n], noise.clone()),
+            HostTensor::scalar_f32(max_abs),
+        ])
+        .unwrap();
+    let y_kernel = out[0].as_f32().unwrap();
+    let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+    let mut y_rust = vec![0.0f32; n];
+    q.quantize_into(&x, &noise, &mut y_rust);
+    let mismatches = y_kernel
+        .iter()
+        .zip(y_rust.iter())
+        .filter(|(a, b)| (**a - **b).abs() > a.abs().max(1e-30) * 1e-5)
+        .count();
+    // Identical semantics; tolerate a whisker of f32 boundary cases.
+    assert!(
+        (mismatches as f64) < n as f64 * 1e-3,
+        "{mismatches}/{n} mismatches between Pallas kernel and rust substrate"
+    );
+}
+
+#[test]
+fn init_is_seed_deterministic_and_seed_sensitive() {
+    let e = engine();
+    let init = e.load("mlp_s__init").unwrap();
+    let a = init.run(&[HostTensor::scalar_i32(5)]).unwrap();
+    let b = init.run(&[HostTensor::scalar_i32(5)]).unwrap();
+    let c = init.run(&[HostTensor::scalar_i32(6)]).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    assert_ne!(a[0].as_f32().unwrap(), c[0].as_f32().unwrap());
+}
+
+#[test]
+fn mlp_luq_training_reduces_loss() {
+    let e = engine();
+    let mut t = Trainer::new(
+        &e,
+        "mlp_s__train__luq",
+        Some("mlp_s__eval__luq"),
+        TrainerOptions { seed: 2, ..Default::default() },
+    )
+    .unwrap();
+    let sched = StepDecay::new(0.02, 0.1, 60, &[0.5, 0.75, 0.9]);
+    let first = t.train_step(sched.lr(0)).unwrap().loss;
+    for s in 1..60 {
+        t.train_step(sched.lr(s)).unwrap();
+    }
+    let last = t.history.last().unwrap().loss;
+    assert!(last.is_finite() && last < first, "loss {first} -> {last}");
+    let (eval_loss, eval_acc) = t.evaluate(4).unwrap();
+    assert!(eval_loss.is_finite());
+    assert!(eval_acc > 0.15, "should beat chance: {eval_acc}");
+}
+
+#[test]
+fn hindsight_mode_trains_and_records_trace() {
+    let e = engine();
+    let mut t = Trainer::new(
+        &e,
+        "mlp_s__train__luq",
+        None,
+        TrainerOptions {
+            seed: 3,
+            hindsight: true,
+            record_hindsight: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for s in 0..10 {
+        t.train_step(0.02 * (1.0 - s as f32 / 10.0)).unwrap();
+    }
+    // Trace exists and the estimate converges to the measured ballpark.
+    let trace = &t.hindsight_trace[0];
+    assert_eq!(trace.len(), 10);
+    let (_, est, measured) = trace[9];
+    assert!(est > 0.0 && measured > 0.0);
+    assert!(
+        (est / measured).ln().abs() < 2.0,
+        "estimate {est} far from measured {measured}"
+    );
+}
+
+#[test]
+fn smp2_artifact_runs_and_matches_signature() {
+    let e = engine();
+    let t = Trainer::new(
+        &e,
+        "mlp_s__train__luq_smp2",
+        None,
+        TrainerOptions { seed: 4, ..Default::default() },
+    );
+    let mut t = t.unwrap();
+    let rec = t.train_step(0.02).unwrap();
+    assert!(rec.loss.is_finite());
+    assert_eq!(t.meta().spec.smp, 2);
+}
+
+#[test]
+fn pallas_train_step_composes() {
+    // The use_kernels=True artifact: Pallas kernels inside the full
+    // train step, lowered through the same path.
+    let e = engine();
+    let mut t = Trainer::new(
+        &e,
+        "mlp_s__train__luq_pallas",
+        None,
+        TrainerOptions { seed: 5, ..Default::default() },
+    )
+    .unwrap();
+    let r0 = t.train_step(0.02).unwrap();
+    let r1 = t.train_step(0.02).unwrap();
+    assert!(r0.loss.is_finite() && r1.loss.is_finite());
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training_state() {
+    let e = engine();
+    let mut t = Trainer::new(
+        &e,
+        "mlp_s__train__luq",
+        Some("mlp_s__eval__luq"),
+        TrainerOptions { seed: 6, ..Default::default() },
+    )
+    .unwrap();
+    for _ in 0..5 {
+        t.train_step(0.02).unwrap();
+    }
+    let dir = std::env::temp_dir().join("luq_integration_ckpt");
+    let path = dir.join("t.ckpt");
+    checkpoint::save(&path, &t.params).unwrap();
+    let loaded = checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.len(), t.params.len());
+    for (a, b) in loaded.iter().zip(t.params.iter()) {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+    // FNT continuation boots from the checkpoint.
+    let fnt = e.load("mlp_s__train__fnt").unwrap();
+    let mut ft = Trainer::from_params(fnt, None, loaded, TrainerOptions::default()).unwrap();
+    assert!(ft.train_step(1e-3).unwrap().loss.is_finite());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let e = engine();
+    let op = e.load("op__qmatmul").unwrap();
+    let bad = vec![HostTensor::f32(vec![2, 2], vec![0.0; 4])];
+    let err = op.run(&bad).unwrap_err().to_string();
+    assert!(err.contains("expected"), "{err}");
+}
+
+#[test]
+fn fp32_and_quantized_schemes_share_signature() {
+    // The keep-alive anchor guarantees uniform signatures (the fp32
+    // scheme would otherwise lose its unused noise inputs in lowering).
+    let e = engine();
+    let base = e.load("mlp_s__train__base").unwrap();
+    let luq = e.load("mlp_s__train__luq").unwrap();
+    assert_eq!(base.meta.inputs.len(), luq.meta.inputs.len());
+    let mut t = Trainer::new(&e, "mlp_s__train__base", None, TrainerOptions::default()).unwrap();
+    assert!(t.train_step(0.02).unwrap().loss.is_finite());
+}
