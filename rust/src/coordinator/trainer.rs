@@ -115,12 +115,15 @@ pub struct Trainer {
     momenta: Vec<HostTensor>,
     hindsight: Vec<HindsightMax>,
     noise: Vec<NoiseBank>,
+    /// Persistent per-layer noise tensors, refilled in place each step
+    /// (`NoiseBank::take_into`) — the zero-allocation pool that replaced
+    /// the seed's per-step `take(..).to_vec()` copies (§Perf).
+    noise_inputs: Vec<HostTensor>,
     opts: TrainerOptions,
     data: DataSource,
     pub step: usize,
     pub history: Vec<StepRecord>,
     pub hindsight_trace: Vec<Vec<(usize, f32, f32)>>,
-    smp: usize,
 }
 
 impl Trainer {
@@ -173,6 +176,15 @@ impl Trainer {
             .iter()
             .map(|g| NoiseBank::new(seeder.next_u64(), smp * g.numel(), opts.noise_reuse))
             .collect();
+        let noise_inputs = meta
+            .qgrads
+            .iter()
+            .map(|g| {
+                let mut shape = vec![smp];
+                shape.extend_from_slice(&g.shape);
+                HostTensor::zeros_f32(&shape)
+            })
+            .collect();
         let hindsight = (0..meta.n_qlayers)
             .map(|_| HindsightMax::new(opts.hindsight_eta))
             .collect();
@@ -184,12 +196,12 @@ impl Trainer {
             momenta,
             hindsight,
             noise,
+            noise_inputs,
             opts,
             data,
             step: 0,
             history: Vec::new(),
             hindsight_trace: vec![Vec::new(); n_qlayers],
-            smp,
         })
     }
 
@@ -205,19 +217,22 @@ impl Trainer {
         let batch = meta.batch;
         let stream = 0x7104_0000_0000 ^ (self.opts.seed << 24) ^ self.step as u64;
 
-        // Owned per-step tensors (data, lr, noise, ests); params and
+        // Per-step tensors: data/lr/ests are small owned scalars-or-batch;
+        // the large noise tensors are *persistent* and refilled in place
+        // (§Perf: no per-step allocation on the noise path); params and
         // momenta are passed by reference to avoid a second host copy
         // per step (§Perf L3).
-        let mut step_inputs: Vec<HostTensor> =
-            Vec::with_capacity(4 + 2 * q + meta.inputs.len() - 2 * p);
-        step_inputs.extend(self.data.batch(batch, meta.model.seq_len, stream));
-        step_inputs.push(HostTensor::scalar_f32(lr));
-        for (bank, g) in self.noise.iter_mut().zip(meta.qgrads.iter()) {
-            let mut shape = vec![self.smp];
-            shape.extend_from_slice(&g.shape);
-            step_inputs.push(HostTensor::f32(shape, bank.take(self.smp * g.numel()).to_vec()));
+        let data_inputs = self.data.batch(batch, meta.model.seq_len, stream);
+        let lr_input = HostTensor::scalar_f32(lr);
+        for (tensor, bank) in self.noise_inputs.iter_mut().zip(self.noise.iter_mut()) {
+            bank.take_into(
+                tensor
+                    .as_f32_mut()
+                    .expect("noise tensors are f32 by construction"),
+            );
         }
         let mut use_est = 0.0f32;
+        let mut est_inputs: Vec<HostTensor> = Vec::with_capacity(q + 1);
         for h in self.hindsight.iter() {
             let est = if self.opts.hindsight {
                 match h.estimate() {
@@ -233,14 +248,19 @@ impl Trainer {
             } else {
                 1.0
             };
-            step_inputs.push(HostTensor::scalar_f32(est));
+            est_inputs.push(HostTensor::scalar_f32(est));
         }
-        step_inputs.push(HostTensor::scalar_f32(use_est));
+        let use_est_input = HostTensor::scalar_f32(use_est);
 
-        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(2 * p + step_inputs.len());
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(2 * p + data_inputs.len() + 2 * q + 2);
         inputs.extend(self.params.iter());
         inputs.extend(self.momenta.iter());
-        inputs.extend(step_inputs.iter());
+        inputs.extend(data_inputs.iter());
+        inputs.push(&lr_input);
+        inputs.extend(self.noise_inputs.iter());
+        inputs.extend(est_inputs.iter());
+        inputs.push(&use_est_input);
         let out = self.train.run_refs(&inputs)?;
         // outputs: P params, P momenta, loss, correct, Q maxes
         let mut it = out.into_iter();

@@ -75,6 +75,15 @@ impl Fp4Code {
     pub fn all() -> impl Iterator<Item = Fp4Code> {
         (0..16u8).map(|c| Fp4Code { negative: c & 8 != 0, exp_field: c & 7 })
     }
+
+    /// Decode a 4-bit FP4 `[1,3,0]` code nibble in the canonical
+    /// `[sign | exponent]` layout — exactly what
+    /// `LogQuantizer::quantize_to_codes_into` emits and
+    /// `LogFormat::encode` produces.
+    #[inline]
+    pub fn from_nibble(nib: u8) -> Fp4Code {
+        Fp4Code { negative: nib & 8 != 0, exp_field: nib & 7 }
+    }
 }
 
 /// `⌊log2 M⌋` and the 2-bit normalized fraction of `M ∈ 1..=7` — the
@@ -126,6 +135,28 @@ pub fn mfbprop_multiply(a: Int4Code, g: Fp4Code) -> u32 {
 /// Reference product in f32 (what a casting multiplier would compute).
 pub fn reference_product(a: Int4Code, g: Fp4Code) -> f32 {
     a.value() * g.value()
+}
+
+/// MF-BPROP dot product straight off a **packed-nibble FP4 stream**: the
+/// gradient operand arrives as the 2-codes-per-byte buffer produced by
+/// the fused quantize→code kernel (`LogQuantizer::quantize_to_codes_into`
+/// / `LogFormat::pack_nibbles` layout, low nibble first) and is consumed
+/// without unpacking into a byte-per-code staging buffer. Each product is
+/// the multiplier-free block of Fig. 7b; accumulation is f32 in α-units
+/// (multiply the result by the gradient scale α outside).
+///
+/// `n` is the element count; `int4.len() >= n` and
+/// `packed_fp4.len() >= n.div_ceil(2)`.
+pub fn mfbprop_dot_packed(int4: &[Int4Code], packed_fp4: &[u8], n: usize) -> f32 {
+    assert!(int4.len() >= n, "int4 operand too short");
+    assert!(packed_fp4.len() >= n.div_ceil(2), "packed fp4 operand too short");
+    let mut acc = 0.0f32;
+    for i in 0..n {
+        let byte = packed_fp4[i >> 1];
+        let nib = if i & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+        acc += decode_fp7(mfbprop_multiply(int4[i], Fp4Code::from_nibble(nib)));
+    }
+    acc
 }
 
 /// Decode an FP7 code produced by [`mfbprop_multiply`] back to f32.
@@ -209,6 +240,47 @@ mod tests {
                     "code mismatch for {a:?} × {g:?} (product {want})"
                 );
             }
+        }
+    }
+
+    /// End-to-end check of the fused feed path: packed codes from the
+    /// quantizer drive the multiplier-free MAC and agree with the f32
+    /// reference dot product (in α-units).
+    #[test]
+    fn packed_dot_matches_reference_dot() {
+        use crate::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let n = 513; // odd: exercises the half-filled last byte
+        let x: Vec<f32> = (0..n).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let (packed, st) = q.quantize_to_codes(&x, &mut rng);
+        let int4: Vec<Int4Code> = (0..n)
+            .map(|_| {
+                let c = (rng.next_u64() & 0xF) as u8;
+                Int4Code { negative: c & 8 != 0, magnitude: c & 7 }
+            })
+            .collect();
+        // Reference: decode the packed codes to f32 and dot in α-units.
+        let codes = LogFormat::unpack_nibbles(&packed, n);
+        let mut want = 0.0f32;
+        for i in 0..n {
+            // decode with alpha=1 gives the α-unit grid value
+            want += int4[i].value() * LogFormat::FP4.decode(codes[i], 1.0);
+        }
+        let got = mfbprop_dot_packed(&int4, &packed, n);
+        // Every per-element product is exact in FP7; the f32 accumulation
+        // order is identical, so the sums match exactly.
+        assert_eq!(got.to_bits(), want.to_bits(), "got {got}, want {want}");
+        assert!(st.alpha > 0.0);
+    }
+
+    #[test]
+    fn from_nibble_roundtrips_all_codes() {
+        for c in 0..16u8 {
+            let f = Fp4Code::from_nibble(c);
+            let back = ((f.negative as u8) << 3) | f.exp_field;
+            assert_eq!(back, c);
         }
     }
 

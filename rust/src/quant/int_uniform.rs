@@ -65,19 +65,33 @@ impl UniformQuantizer {
     }
 
     /// Quantize-dequantize a slice; returns values on the grid.
+    ///
+    /// The rounding-mode dispatch is hoisted out of the loop (§Perf: same
+    /// monomorphization treatment as `quant::kernel`): each inner loop is
+    /// pure arithmetic — `floor`/`copysign`/integer clamp all compile to
+    /// branch-free selects — and replicates [`Self::code_of`]'s exact
+    /// expressions, so results are bit-identical to the per-element path.
     pub fn quantize_into(&self, x: &[f32], noise: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), out.len());
-        if self.rounding == UniformRounding::Stochastic {
-            assert!(noise.len() >= x.len());
-        }
         let d = self.delta();
-        for i in 0..x.len() {
-            let u = if self.rounding == UniformRounding::Stochastic {
-                noise[i]
-            } else {
-                0.0
-            };
-            out[i] = self.code_of(x[i], u) as f32 * d;
+        let levels = self.levels();
+        match self.rounding {
+            UniformRounding::Rdn => {
+                for i in 0..x.len() {
+                    let t = x[i] / d;
+                    let code = ((t.abs() + 0.5).floor().copysign(t) as i32)
+                        .clamp(-levels, levels);
+                    out[i] = code as f32 * d;
+                }
+            }
+            UniformRounding::Stochastic => {
+                assert!(noise.len() >= x.len());
+                for i in 0..x.len() {
+                    let t = x[i] / d;
+                    let code = ((t + noise[i]).floor() as i32).clamp(-levels, levels);
+                    out[i] = code as f32 * d;
+                }
+            }
         }
     }
 
@@ -185,6 +199,36 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// The hoisted loops must reproduce the per-element `code_of` path
+    /// bit-for-bit in both rounding modes.
+    #[test]
+    fn hoisted_loops_match_code_of_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let x: Vec<f32> = (0..4096).map(|_| rng.normal_ms_f32(0.0, 3.0)).collect();
+        let mut noise = vec![0.0f32; x.len()];
+        rng.fill_uniform(&mut noise);
+        for rounding in [UniformRounding::Rdn, UniformRounding::Stochastic] {
+            let q = UniformQuantizer::new(4, 5.5, rounding);
+            let d = q.delta();
+            let mut got = vec![0.0f32; x.len()];
+            q.quantize_into(&x, &noise, &mut got);
+            for i in 0..x.len() {
+                let u = if rounding == UniformRounding::Stochastic {
+                    noise[i]
+                } else {
+                    0.0
+                };
+                let want = q.code_of(x[i], u) as f32 * d;
+                assert_eq!(
+                    got[i].to_bits(),
+                    want.to_bits(),
+                    "{rounding:?} i={i}: {} vs {want}",
+                    got[i]
+                );
+            }
+        }
     }
 
     #[test]

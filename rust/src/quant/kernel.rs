@@ -1,0 +1,732 @@
+//! Branch-free, monomorphized quantization kernels — the L3 hot path.
+//!
+//! The seed implementation (`LogQuantizer::quantize_into`, kept verbatim
+//! as [`LogQuantizer::quantize_into_reference`]) walked every element
+//! through a data-dependent `if`/`match` ladder: underflow vs mid vs top
+//! region, then a `match` on the rounding mode *per element*. That shape
+//! defeats autovectorization — the compiler cannot turn a loop with
+//! per-element control flow into SIMD selects.
+//!
+//! This module restructures the loop so that:
+//!
+//! * the `Underflow` × `LogRounding` configuration is **monomorphized**
+//!   (const generics) — the mode `match` is hoisted out of the loop
+//!   entirely, once per dispatch instead of once per element;
+//! * every element computes **all three region candidates** (underflow /
+//!   mid / top) with pure arithmetic and picks between them with data
+//!   *selects*, not branches;
+//! * exponent and mantissa come straight from `f32::to_bits` — no float
+//!   `log2`, no `exp2` libcalls (powers of two are built by constructing
+//!   the exponent field, [`pow2i`]);
+//! * logarithmic stochastic rounding reduces to a single compare of the
+//!   normalized fraction `r·2⁻ⁿ − 1` (the mantissa fraction, exact — a
+//!   power-of-two scaling loses no bits) against the noise word;
+//! * a **fused quantize→code path** emits packed 4-bit codes directly,
+//!   skipping the dequantized f32 tensor that `LogFormat::encode` +
+//!   `pack_nibbles` would need.
+//!
+//! **Bit-exactness contract:** for the deterministic configurations
+//! (`ExpFloor` / `Rdnp` rounding, `HardZero` underflow) the kernel output
+//! is bit-identical to the seed scalar loop — same `a·(1/α)` scaling,
+//! same exponent clamps, same `α·2ⁿ` reconstruction. The stochastic
+//! paths keep the same *decision* for underflow snapping (identical
+//! `u < a/α` compare) and an equivalent-but-not-bitwise up-probability
+//! for log-SR (the mantissa fraction instead of `(a−lo)/lo`; both are
+//! unbiased, verified statistically).
+//!
+//! On top of the element kernels sit [`QuantScratch`] (a zero-allocation
+//! buffer pool for SMP / chunked execution) and the chunked
+//! multi-threaded drivers [`par_max_abs`] / [`par_quantize`], whose
+//! results are **bit-identical for every thread count**: work is split
+//! into fixed [`CHUNK`]-element blocks and chunk `i` always consumes RNG
+//! stream `i` ([`Xoshiro256::fork`]), no matter which thread runs it.
+
+use super::luq::{LogRounding, Underflow};
+use super::rounding::pow2i;
+use crate::rng::Xoshiro256;
+
+/// Fixed block size for chunked execution. Small enough that a chunk of
+/// input + noise + output stays in L1/L2, large enough that per-chunk
+/// dispatch and RNG-stream setup are noise.
+pub const CHUNK: usize = 4096;
+
+/// Per-tensor constants the inner loops need, precomputed once.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelParams {
+    pub alpha: f32,
+    pub inv_alpha: f32,
+    /// Largest representable magnitude `α·2^(L−1)`.
+    pub top: f32,
+    /// Clip-statistics threshold `top·(1+1e−6)` (seed semantics).
+    pub clip_thresh: f32,
+    /// Number of magnitude levels `L`.
+    pub levels: i32,
+    /// Exponent-field width of the format (for signed code emission).
+    pub exp_bits: u32,
+}
+
+impl KernelParams {
+    pub fn new(fmt: super::logfmt::LogFormat, alpha: f32) -> KernelParams {
+        let top = fmt.top(alpha);
+        KernelParams {
+            alpha,
+            inv_alpha: 1.0 / alpha,
+            top,
+            clip_thresh: top * (1.0 + 1e-6),
+            levels: fmt.levels() as i32,
+            exp_bits: fmt.exp_bits,
+        }
+    }
+}
+
+/// Underflow/clip counts for one slice of work; summed across chunks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChunkStats {
+    pub n_under: usize,
+    pub n_clip: usize,
+}
+
+impl ChunkStats {
+    pub fn merge(&mut self, other: ChunkStats) {
+        self.n_under += other.n_under;
+        self.n_clip += other.n_clip;
+    }
+}
+
+// Rounding-mode tags for const-generic monomorphization.
+const RND_FLOOR: u8 = 0;
+const RND_RDNP: u8 = 1;
+const RND_SR: u8 = 2;
+// Underflow-mode tags.
+const UF_HARD: u8 = 0;
+const UF_STOCH: u8 = 1;
+
+const MANT_MASK: u32 = 0x007F_FFFF;
+/// Mantissa value of 1.5 — the geometric RDNP midpoint (Eq. 19/20) in
+/// bit form: `m ≥ 1.5 ⇔ mantissa ≥ 2^22`.
+const MANT_HALF: u32 = 0x0040_0000;
+
+/// One element's fully-selected outcome.
+#[derive(Clone, Copy)]
+struct Decision {
+    /// Dequantized value, sign applied.
+    value: f32,
+    /// Format code `[sign | exponent]` (0 = zero), sign applied.
+    code: u8,
+    under: u32,
+    clip: u32,
+}
+
+/// Select helpers. `if` on a precomputed condition with both arms already
+/// evaluated compiles to a select/blend, not a branch, in the vectorized
+/// loop — the point is that no *control flow* depends on the data.
+#[inline(always)]
+fn sel_f32(c: bool, t: f32, f: f32) -> f32 {
+    if c {
+        t
+    } else {
+        f
+    }
+}
+
+#[inline(always)]
+fn sel_u32(c: bool, t: u32, f: u32) -> u32 {
+    if c {
+        t
+    } else {
+        f
+    }
+}
+
+/// The branch-free element kernel, monomorphized per configuration.
+///
+/// All three region candidates are computed unconditionally from exponent
+/// and mantissa bits; region membership (`a < α`, `a ≥ top`) only drives
+/// selects. Exponent clamps use `max`/`min` (never `i32::clamp`, whose
+/// `min > max` panic would fire for the empty mid-region of FP2).
+#[inline(always)]
+fn element<const UF: u8, const RND: u8>(v: f32, u: f32, p: &KernelParams) -> Decision {
+    let neg = (v < 0.0) as u32;
+    let a = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+    let r = a * p.inv_alpha;
+    let rbits = r.to_bits();
+    let e = ((rbits >> 23) & 0xFF) as i32 - 127;
+
+    // --- mid-region candidate: α·2^n for a bit-derived exponent n ------
+    let n_mid: i32 = match RND {
+        // Exponent truncation: n = ⌊log2 r⌋, clamped to the grid — the
+        // seed's `floor_log2(r).clamp(0, L−1)`, from bits.
+        RND_FLOOR => e.max(0).min(p.levels - 1),
+        // RDNP (Eq. 20): round up iff the normalized fraction m ≥ 1.5,
+        // i.e. iff the mantissa's top bit is set — equivalent to the
+        // seed's `⌊log2(4r/3)⌋` f64 round-trip (see
+        // `rounding::rdnp_exponent_bits`), then the same clamp.
+        RND_RDNP => {
+            let up = ((rbits & MANT_MASK) >= MANT_HALF) as i32;
+            (e + up).max(0).min(p.levels - 1)
+        }
+        // Log-SR (Eq. 18): round up with probability equal to the
+        // normalized fraction r·2⁻ⁿ − 1 — for an unclamped n that is
+        // exactly the mantissa fraction, and the 2⁻ⁿ scaling is exact,
+        // so the compare against the noise word is the whole decision.
+        RND_SR => {
+            // `(levels − 2).max(0)` guards the empty-mid-region formats
+            // (FP2: levels = 1), where the seed clamp never executed; the
+            // candidate is select-discarded there anyway.
+            let n = e.max(0).min((p.levels - 2).max(0));
+            let frac = r * pow2i(-n) - 1.0;
+            let up = (u < frac) as i32;
+            n + up
+        }
+        _ => unreachable!(),
+    };
+    // n_mid ∈ [0, levels−1] for every mode (SR adds at most 1 to a
+    // levels−2 clamp), so the exponent-field construction cannot leave
+    // pow2i's domain.
+    let q_mid = p.alpha * pow2i(n_mid);
+    let code_mid = (n_mid + 1) as u32;
+
+    // --- underflow candidate (Eq. 17) ----------------------------------
+    let (q_under, code_under) = match UF {
+        UF_HARD => (0.0, 0u32),
+        UF_STOCH => {
+            // Same compare as the seed: snap to α iff `u < a/α`.
+            let snap = (u < r) as u32;
+            (sel_f32(snap != 0, p.alpha, 0.0), snap)
+        }
+        _ => unreachable!(),
+    };
+
+    // --- region select --------------------------------------------------
+    let under = a < p.alpha;
+    let over = a >= p.top;
+    let q = sel_f32(under, q_under, sel_f32(over, p.top, q_mid));
+    let code = sel_u32(under, code_under, sel_u32(over, p.levels as u32, code_mid));
+
+    // Sign: OR the sign bit in (q ≥ 0 always, so this is exactly the
+    // seed's `-q` on the negative branch, including the −0.0 cases).
+    let value = f32::from_bits(q.to_bits() | (neg << 31));
+    // Codes: zero stays canonical code 0 regardless of sign
+    // (LogFormat::encode semantics).
+    let nonzero = (code != 0) as u32;
+    let code = code | ((neg & nonzero) << p.exp_bits);
+
+    Decision {
+        value,
+        code: code as u8,
+        under: under as u32,
+        clip: (a > p.clip_thresh) as u32,
+    }
+}
+
+/// Monomorphized dequantizing loop over one slice.
+fn quantize_slice<const UF: u8, const RND: u8>(
+    p: &KernelParams,
+    x: &[f32],
+    noise: &[f32],
+    out: &mut [f32],
+) -> ChunkStats {
+    let n = x.len();
+    let (x, noise, out) = (&x[..n], &noise[..n], &mut out[..n]);
+    let mut n_under = 0usize;
+    let mut n_clip = 0usize;
+    for i in 0..n {
+        let d = element::<UF, RND>(x[i], noise[i], p);
+        out[i] = d.value;
+        n_under += d.under as usize;
+        n_clip += d.clip as usize;
+    }
+    ChunkStats { n_under, n_clip }
+}
+
+/// Monomorphized fused quantize→packed-code loop over one slice: emits
+/// 2 codes per byte (low nibble first, `LogFormat::pack_nibbles` layout)
+/// without materializing the dequantized tensor.
+fn codes_slice<const UF: u8, const RND: u8>(
+    p: &KernelParams,
+    x: &[f32],
+    noise: &[f32],
+    packed: &mut [u8],
+) -> ChunkStats {
+    let n = x.len();
+    assert!(packed.len() >= n.div_ceil(2), "packed buffer too small");
+    let mut n_under = 0usize;
+    let mut n_clip = 0usize;
+    let pairs = n / 2;
+    for i in 0..pairs {
+        let d0 = element::<UF, RND>(x[2 * i], noise[2 * i], p);
+        let d1 = element::<UF, RND>(x[2 * i + 1], noise[2 * i + 1], p);
+        packed[i] = (d0.code & 0x0F) | ((d1.code & 0x0F) << 4);
+        n_under += (d0.under + d1.under) as usize;
+        n_clip += (d0.clip + d1.clip) as usize;
+    }
+    if n % 2 == 1 {
+        let d = element::<UF, RND>(x[n - 1], noise[n - 1], p);
+        packed[pairs] = d.code & 0x0F;
+        n_under += d.under as usize;
+        n_clip += d.clip as usize;
+    }
+    ChunkStats { n_under, n_clip }
+}
+
+/// Hoisted-config dispatch: resolve the `Underflow × LogRounding` pair to
+/// a monomorphized loop once per slice (the seed resolved it per element).
+pub fn quantize_dispatch(
+    uf: Underflow,
+    rnd: LogRounding,
+    p: &KernelParams,
+    x: &[f32],
+    noise: &[f32],
+    out: &mut [f32],
+) -> ChunkStats {
+    match (uf, rnd) {
+        (Underflow::HardZero, LogRounding::ExpFloor) => {
+            quantize_slice::<UF_HARD, RND_FLOOR>(p, x, noise, out)
+        }
+        (Underflow::HardZero, LogRounding::Rdnp) => {
+            quantize_slice::<UF_HARD, RND_RDNP>(p, x, noise, out)
+        }
+        (Underflow::HardZero, LogRounding::Stochastic) => {
+            quantize_slice::<UF_HARD, RND_SR>(p, x, noise, out)
+        }
+        (Underflow::Stochastic, LogRounding::ExpFloor) => {
+            quantize_slice::<UF_STOCH, RND_FLOOR>(p, x, noise, out)
+        }
+        (Underflow::Stochastic, LogRounding::Rdnp) => {
+            quantize_slice::<UF_STOCH, RND_RDNP>(p, x, noise, out)
+        }
+        (Underflow::Stochastic, LogRounding::Stochastic) => {
+            quantize_slice::<UF_STOCH, RND_SR>(p, x, noise, out)
+        }
+    }
+}
+
+/// Fused-code variant of [`quantize_dispatch`]. Requires a ≤4-bit format
+/// (nibble packing); the caller asserts `fmt.bits() <= 4`.
+pub fn codes_dispatch(
+    uf: Underflow,
+    rnd: LogRounding,
+    p: &KernelParams,
+    x: &[f32],
+    noise: &[f32],
+    packed: &mut [u8],
+) -> ChunkStats {
+    match (uf, rnd) {
+        (Underflow::HardZero, LogRounding::ExpFloor) => {
+            codes_slice::<UF_HARD, RND_FLOOR>(p, x, noise, packed)
+        }
+        (Underflow::HardZero, LogRounding::Rdnp) => {
+            codes_slice::<UF_HARD, RND_RDNP>(p, x, noise, packed)
+        }
+        (Underflow::HardZero, LogRounding::Stochastic) => {
+            codes_slice::<UF_HARD, RND_SR>(p, x, noise, packed)
+        }
+        (Underflow::Stochastic, LogRounding::ExpFloor) => {
+            codes_slice::<UF_STOCH, RND_FLOOR>(p, x, noise, packed)
+        }
+        (Underflow::Stochastic, LogRounding::Rdnp) => {
+            codes_slice::<UF_STOCH, RND_RDNP>(p, x, noise, packed)
+        }
+        (Underflow::Stochastic, LogRounding::Stochastic) => {
+            codes_slice::<UF_STOCH, RND_SR>(p, x, noise, packed)
+        }
+    }
+}
+
+/// Reusable buffer pool for the quantization hot paths. One instance per
+/// long-lived consumer (trainer, bench loop, SMP estimator) makes every
+/// `*_into` call allocation-free after warmup.
+#[derive(Default)]
+pub struct QuantScratch {
+    /// Chunk-sized uniform-noise staging buffer.
+    pub(crate) noise: Vec<f32>,
+    /// Chunk-sized per-sample staging buffer (SMP accumulation).
+    pub(crate) sample: Vec<f32>,
+    /// Per-thread chunk-sized noise buffers for [`par_quantize`].
+    pub(crate) mt_noise: Vec<f32>,
+    /// Per-chunk statistics slots (disjoint writes across threads).
+    pub(crate) chunk_stats: Vec<ChunkStats>,
+    /// Per-chunk |x| maxima for [`par_max_abs`].
+    pub(crate) chunk_maxes: Vec<f32>,
+    /// Per-sample RNG streams (SMP), split via `Xoshiro256::jump`.
+    pub(crate) streams: Vec<Xoshiro256>,
+}
+
+impl QuantScratch {
+    pub fn new() -> QuantScratch {
+        QuantScratch::default()
+    }
+}
+
+/// Parallel `max|x|` over fixed chunks. Chunk maxima are reduced **in
+/// chunk order**, so the result is bit-identical for every thread count.
+pub fn par_max_abs(x: &[f32], n_threads: usize, scratch: &mut QuantScratch) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let n_chunks = x.len().div_ceil(CHUNK);
+    let t = n_threads.max(1).min(n_chunks);
+    let maxes = &mut scratch.chunk_maxes;
+    maxes.clear();
+    maxes.resize(n_chunks, 0.0);
+    if t == 1 {
+        for (m, xc) in maxes.iter_mut().zip(x.chunks(CHUNK)) {
+            *m = xc.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        }
+    } else {
+        std::thread::scope(|s| {
+            // Round-robin chunk → thread assignment; each slot is written
+            // by exactly one thread.
+            let mut work: Vec<Vec<(&[f32], &mut f32)>> = (0..t).map(|_| Vec::new()).collect();
+            for (i, (xc, m)) in x.chunks(CHUNK).zip(maxes.iter_mut()).enumerate() {
+                work[i % t].push((xc, m));
+            }
+            for items in work {
+                s.spawn(move || {
+                    for (xc, m) in items {
+                        *m = xc.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    }
+                });
+            }
+        });
+    }
+    maxes.iter().fold(0.0f32, |m, &v| m.max(v))
+}
+
+/// Multi-threaded chunked quantization with internally generated noise.
+///
+/// The tensor is split into fixed [`CHUNK`]-element blocks; chunk `i`
+/// draws its uniforms from `base.fork(i)` regardless of which thread
+/// processes it, so output and statistics are **bit-identical for every
+/// `n_threads`** (including 1). Per-thread noise staging lives in
+/// `scratch` — steady-state, the call performs no allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn par_quantize(
+    uf: Underflow,
+    rnd: LogRounding,
+    p: &KernelParams,
+    x: &[f32],
+    out: &mut [f32],
+    base: &Xoshiro256,
+    n_threads: usize,
+    scratch: &mut QuantScratch,
+) -> ChunkStats {
+    assert_eq!(x.len(), out.len());
+    if x.is_empty() {
+        return ChunkStats::default();
+    }
+    let n_chunks = x.len().div_ceil(CHUNK);
+    let t = n_threads.max(1).min(n_chunks);
+    let QuantScratch { mt_noise, chunk_stats, .. } = scratch;
+    chunk_stats.clear();
+    chunk_stats.resize(n_chunks, ChunkStats::default());
+    if mt_noise.len() < t * CHUNK {
+        mt_noise.resize(t * CHUNK, 0.0);
+    }
+
+    if t == 1 {
+        let noise = &mut mt_noise[..CHUNK];
+        for (i, ((xc, oc), st)) in x
+            .chunks(CHUNK)
+            .zip(out.chunks_mut(CHUNK))
+            .zip(chunk_stats.iter_mut())
+            .enumerate()
+        {
+            let mut rng = base.fork(i as u64);
+            let nb = &mut noise[..xc.len()];
+            rng.fill_uniform(nb);
+            *st = quantize_dispatch(uf, rnd, p, xc, nb, oc);
+        }
+    } else {
+        std::thread::scope(|s| {
+            let mut work: Vec<Vec<(usize, &[f32], &mut [f32], &mut ChunkStats)>> =
+                (0..t).map(|_| Vec::new()).collect();
+            for (i, ((xc, oc), st)) in x
+                .chunks(CHUNK)
+                .zip(out.chunks_mut(CHUNK))
+                .zip(chunk_stats.iter_mut())
+                .enumerate()
+            {
+                work[i % t].push((i, xc, oc, st));
+            }
+            for (noise, items) in mt_noise.chunks_mut(CHUNK).zip(work) {
+                s.spawn(move || {
+                    for (i, xc, oc, st) in items {
+                        let mut rng = base.fork(i as u64);
+                        let nb = &mut noise[..xc.len()];
+                        rng.fill_uniform(nb);
+                        *st = quantize_dispatch(uf, rnd, p, xc, nb, oc);
+                    }
+                });
+            }
+        });
+    }
+
+    let mut total = ChunkStats::default();
+    for st in chunk_stats.iter() {
+        total.merge(*st);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::logfmt::LogFormat;
+    use crate::quant::luq::{LogQuantConfig, LogQuantizer};
+    use crate::rng::Xoshiro256;
+
+    fn lognormal(rng: &mut Xoshiro256, n: usize, sigma: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.signed_lognormal_f32(0.0, sigma)).collect()
+    }
+
+    fn all_configs(fmt: LogFormat) -> Vec<LogQuantConfig> {
+        vec![
+            LogQuantConfig::luq(fmt),
+            LogQuantConfig::naive(fmt),
+            LogQuantConfig::naive_sp(fmt),
+            LogQuantConfig::naive_rdnp(fmt),
+            LogQuantConfig::sp_rdnp(fmt),
+        ]
+    }
+
+    /// The acceptance-gate test: deterministic configurations must be
+    /// bit-identical to the seed scalar loop; the stochastic-underflow
+    /// deterministic-rounding configs share every RNG decision with the
+    /// seed, so they must match bit-for-bit too.
+    #[test]
+    fn kernel_matches_reference_bitwise_on_seed_shared_paths() {
+        let mut rng = Xoshiro256::seed_from_u64(0xBEEF);
+        for fmt in [LogFormat::FP4, LogFormat::FP3, LogFormat::FP2] {
+            for cfg in all_configs(fmt) {
+                if cfg.rounding == crate::quant::LogRounding::Stochastic {
+                    continue; // log-SR is equivalence-in-distribution, not bitwise
+                }
+                let q = LogQuantizer::new(cfg);
+                for n in [1usize, 2, 63, 256, 4096, 5000] {
+                    let x = lognormal(&mut rng, n, 2.5);
+                    let mut noise = vec![0.0f32; n];
+                    rng.fill_uniform(&mut noise);
+                    let mut want = vec![0.0f32; n];
+                    let st_want = q.quantize_into_reference(&x, &noise, &mut want);
+                    let mut got = vec![0.0f32; n];
+                    let st_got = q.quantize_into(&x, &noise, &mut got);
+                    for i in 0..n {
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want[i].to_bits(),
+                            "{cfg:?} n={n} idx={i}: {} vs {}",
+                            got[i],
+                            want[i]
+                        );
+                    }
+                    assert_eq!(st_got.frac_underflow, st_want.frac_underflow, "{cfg:?}");
+                    assert_eq!(st_got.frac_clipped, st_want.frac_clipped, "{cfg:?}");
+                    assert_eq!(st_got.alpha, st_want.alpha, "{cfg:?}");
+                }
+            }
+        }
+    }
+
+    /// Exact-boundary inputs (grid points, α, top, just-below-top) where
+    /// the clamps actually bind — the cases the f64-log seed path was
+    /// fragile on.
+    #[test]
+    fn kernel_matches_reference_on_boundary_inputs() {
+        for cfg in [
+            LogQuantConfig::naive(LogFormat::FP4),
+            LogQuantConfig::naive_rdnp(LogFormat::FP4),
+        ] {
+            let q = LogQuantizer::new(cfg);
+            let mut x = vec![64.0f32];
+            for i in 0..7 {
+                let g = (i as f32).exp2();
+                x.extend_from_slice(&[g, -g, g * 1.0000001, g * 0.9999999, g * 1.5]);
+            }
+            x.extend_from_slice(&[0.0, 1e-30, -1e-30, 63.999996, 0.5, 0.25]);
+            let noise = vec![0.3f32; x.len()];
+            let mut want = vec![0.0f32; x.len()];
+            q.quantize_into_reference(&x, &noise, &mut want);
+            let mut got = vec![0.0f32; x.len()];
+            q.quantize_into(&x, &noise, &mut got);
+            for i in 0..x.len() {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "{cfg:?} x={}: {} vs {}",
+                    x[i],
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    /// Branch-free log-SR stays unbiased (Eq. 18/22) — the equivalence
+    /// class the bitwise contract deliberately excludes.
+    #[test]
+    fn branch_free_sr_is_unbiased() {
+        use crate::testutil::assert_mean_within;
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for &p in &[0.4f32, 1.3, 2.7, 5.0, 23.0, 60.0] {
+            let x = vec![64.0f32, p];
+            let mut noise = vec![0.0f32; 2];
+            let mut out = vec![0.0f32; 2];
+            let trials = 60_000;
+            let mut devs = Vec::with_capacity(trials);
+            for _ in 0..trials {
+                rng.fill_uniform(&mut noise);
+                q.quantize_into(&x, &noise, &mut out);
+                devs.push((out[1] - p) as f64);
+            }
+            assert_mean_within(&devs, 0.0, 4.5, &format!("branch-free SR at {p}"));
+        }
+    }
+
+    /// The fused code path must agree with the dequantizing path decision
+    /// for decision: decoding the packed nibbles reproduces the f32
+    /// output bit-for-bit (they share the same `element` kernel and the
+    /// same noise).
+    #[test]
+    fn fused_codes_decode_to_quantize_output() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for fmt in [LogFormat::FP4, LogFormat::FP3, LogFormat::FP2] {
+            for cfg in all_configs(fmt) {
+                let q = LogQuantizer::new(cfg);
+                for n in [1usize, 7, 512, 4099] {
+                    let x = lognormal(&mut rng, n, 2.0);
+                    let mut noise = vec![0.0f32; n];
+                    rng.fill_uniform(&mut noise);
+                    let mut y = vec![0.0f32; n];
+                    let st = q.quantize_into(&x, &noise, &mut y);
+                    let mut packed = vec![0u8; n.div_ceil(2)];
+                    let st2 = q.quantize_to_codes_into(&x, &noise, &mut packed);
+                    assert_eq!(st.alpha, st2.alpha);
+                    assert_eq!(st.frac_underflow, st2.frac_underflow, "{cfg:?}");
+                    let codes = LogFormat::unpack_nibbles(&packed, n);
+                    for i in 0..n {
+                        let dec = fmt.decode(codes[i], st.alpha);
+                        // −0.0 from the value path decodes as +0.0.
+                        let want = if y[i] == 0.0 { 0.0 } else { y[i] };
+                        assert_eq!(
+                            dec.to_bits(),
+                            want.to_bits(),
+                            "{cfg:?} fmt={fmt:?} i={i}: code {} -> {dec} vs {}",
+                            codes[i],
+                            y[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Codes also roundtrip through `LogFormat::encode` — the fused path
+    /// emits exactly the canonical code for each emitted value.
+    #[test]
+    fn fused_codes_are_canonical() {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let fmt = LogFormat::FP4;
+        let q = LogQuantizer::new(LogQuantConfig::luq(fmt));
+        let n = 2048;
+        let x = lognormal(&mut rng, n, 2.0);
+        let mut noise = vec![0.0f32; n];
+        rng.fill_uniform(&mut noise);
+        let mut y = vec![0.0f32; n];
+        let st = q.quantize_into(&x, &noise, &mut y);
+        let mut packed = vec![0u8; n.div_ceil(2)];
+        q.quantize_to_codes_into(&x, &noise, &mut packed);
+        let codes = LogFormat::unpack_nibbles(&packed, n);
+        for i in 0..n {
+            let want = fmt.encode(y[i], st.alpha).expect("output on grid");
+            assert_eq!(codes[i], want, "i={i} y={}", y[i]);
+        }
+    }
+
+    /// Chunked multi-threaded execution is bit-identical across thread
+    /// counts — and stats agree too.
+    #[test]
+    fn par_quantize_is_thread_count_invariant() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        // Odd length: exercises the ragged final chunk.
+        let n = 3 * CHUNK + 1234;
+        let x = lognormal(&mut rng, n, 2.5);
+        let base = Xoshiro256::seed_from_u64(77);
+        let mut scratch = QuantScratch::new();
+        let mut reference: Option<(Vec<f32>, crate::quant::QuantStats)> = None;
+        for threads in [1usize, 2, 3, 8] {
+            let mut out = vec![0.0f32; n];
+            let mut b = base.clone();
+            let st = q.quantize_chunked(&x, &mut out, &mut b, threads, &mut scratch);
+            match &reference {
+                None => reference = Some((out, st)),
+                Some((want, st_want)) => {
+                    for i in 0..n {
+                        assert_eq!(
+                            out[i].to_bits(),
+                            want[i].to_bits(),
+                            "threads={threads} idx={i}"
+                        );
+                    }
+                    assert_eq!(st.frac_underflow, st_want.frac_underflow);
+                    assert_eq!(st.frac_clipped, st_want.frac_clipped);
+                    assert_eq!(st.alpha, st_want.alpha);
+                    assert_eq!(st.max_abs, st_want.max_abs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_max_abs_matches_sequential_fold() {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let mut scratch = QuantScratch::new();
+        for n in [0usize, 1, CHUNK - 1, CHUNK, 2 * CHUNK + 17] {
+            let x = lognormal(&mut rng, n, 3.0);
+            let want = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            for t in [1usize, 2, 5] {
+                assert_eq!(par_max_abs(&x, t, &mut scratch).to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    /// Chunked outputs stay on the format grid and preserve the tensor
+    /// max (ExactMax policy), like the single-shot path.
+    #[test]
+    fn par_quantize_outputs_on_grid() {
+        let mut rng = Xoshiro256::seed_from_u64(51);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let n = CHUNK + 333;
+        let x = lognormal(&mut rng, n, 2.0);
+        let mut out = vec![0.0f32; n];
+        let mut base = Xoshiro256::seed_from_u64(5);
+        let mut scratch = QuantScratch::new();
+        let st = q.quantize_chunked(&x, &mut out, &mut base, 4, &mut scratch);
+        let grid = LogFormat::FP4.grid(st.alpha);
+        for (i, v) in out.iter().enumerate() {
+            let on_grid = grid
+                .iter()
+                .any(|g| (v.abs() - g).abs() <= g.max(1e-30) * 1e-6);
+            assert!(on_grid, "out[{i}]={v} off-grid (alpha={})", st.alpha);
+        }
+    }
+
+    /// FP2 has an *empty* mid region (top == α). The branch-free kernel
+    /// evaluates the mid candidate anyway; this pins that the selects
+    /// keep it out of the result and nothing panics.
+    #[test]
+    fn fp2_empty_mid_region_is_safe() {
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP2));
+        let x = vec![4.0f32, 3.9, 0.5, -2.0, 0.0];
+        let noise = vec![0.25f32; 5];
+        let mut out = vec![0.0f32; 5];
+        let st = q.quantize_into(&x, &noise, &mut out);
+        assert_eq!(st.alpha, 4.0);
+        for v in &out {
+            assert!(*v == 0.0 || v.abs() == 4.0, "FP2 value {v}");
+        }
+        assert_eq!(out[0], 4.0);
+    }
+}

@@ -118,28 +118,43 @@ impl LogFormat {
         }
     }
 
-    /// Pack a slice of codes 2-per-byte when `bits() == 4` (FP4). Utility
-    /// for the bandwidth accounting in the benchmarks.
-    pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
-        let mut out = Vec::with_capacity(codes.len().div_ceil(2));
-        for pair in codes.chunks(2) {
+    /// Zero-allocation nibble packing: write `codes` 2-per-byte into
+    /// `out` (low nibble first). Returns the number of bytes written,
+    /// `codes.len().div_ceil(2)`; `out` must be at least that long.
+    pub fn pack_nibbles_into(codes: &[u8], out: &mut [u8]) -> usize {
+        let n_bytes = codes.len().div_ceil(2);
+        assert!(out.len() >= n_bytes, "packed buffer too small");
+        for (o, pair) in out.iter_mut().zip(codes.chunks(2)) {
             let lo = pair[0] & 0x0F;
             let hi = if pair.len() > 1 { pair[1] & 0x0F } else { 0 };
-            out.push(lo | (hi << 4));
+            *o = lo | (hi << 4);
         }
+        n_bytes
+    }
+
+    /// Zero-allocation inverse of [`LogFormat::pack_nibbles_into`]:
+    /// unpack `n` codes into `out` (`out.len() >= n`).
+    pub fn unpack_nibbles_into(bytes: &[u8], n: usize, out: &mut [u8]) {
+        assert!(out.len() >= n, "code buffer too small");
+        for i in 0..n {
+            let b = bytes[i >> 1];
+            out[i] = if i & 1 == 0 { b & 0x0F } else { b >> 4 };
+        }
+    }
+
+    /// Pack a slice of codes 2-per-byte when `bits() <= 4` (FP4). Utility
+    /// for the bandwidth accounting in the benchmarks. Allocating wrapper
+    /// around [`LogFormat::pack_nibbles_into`].
+    pub fn pack_nibbles(codes: &[u8]) -> Vec<u8> {
+        let mut out = vec![0u8; codes.len().div_ceil(2)];
+        Self::pack_nibbles_into(codes, &mut out);
         out
     }
 
     /// Inverse of [`pack_nibbles`] (`n` = original code count).
     pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<u8> {
-        let mut out = Vec::with_capacity(n);
-        for (i, &b) in bytes.iter().enumerate() {
-            out.push(b & 0x0F);
-            if 2 * i + 1 < n {
-                out.push(b >> 4);
-            }
-        }
-        out.truncate(n);
+        let mut out = vec![0u8; n];
+        Self::unpack_nibbles_into(bytes, n, &mut out);
         out
     }
 }
@@ -217,6 +232,18 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn nibble_into_variants_match_allocating_ones() {
+        let codes: Vec<u8> = (0..33u8).map(|i| i & 0xF).collect();
+        let mut packed = vec![0u8; codes.len().div_ceil(2)];
+        let written = LogFormat::pack_nibbles_into(&codes, &mut packed);
+        assert_eq!(written, packed.len());
+        assert_eq!(packed, LogFormat::pack_nibbles(&codes));
+        let mut back = vec![0u8; codes.len()];
+        LogFormat::unpack_nibbles_into(&packed, codes.len(), &mut back);
+        assert_eq!(back, codes);
     }
 
     #[test]

@@ -16,9 +16,20 @@
 //! The ablation variants share the same skeleton with degraded pieces:
 //! hard underflow (prune-to-zero), deterministic rounding (exponent
 //! truncation or RDNP, Eq. 20), and a power-of-two ceiling scale.
+//!
+//! Execution is delegated to the branch-free monomorphized kernels in
+//! [`super::kernel`] (§Perf): [`LogQuantizer::quantize_into`] for the
+//! single-shot path, [`LogQuantizer::quantize_to_codes_into`] for the
+//! fused quantize→packed-4-bit-code path,
+//! [`LogQuantizer::quantize_smp_into`] for the fused zero-allocation SMP
+//! estimator, and [`LogQuantizer::quantize_chunked`] for multi-threaded
+//! chunked execution (bit-identical across thread counts). The seed
+//! scalar loop survives as [`LogQuantizer::quantize_into_reference`], the
+//! bit-exactness oracle for the deterministic configurations.
 
+use super::kernel::{self, KernelParams, QuantScratch, CHUNK};
 use super::logfmt::LogFormat;
-use super::rounding::{floor_log2, pow2i, rdnp_exponent};
+use super::rounding::{floor_log2, pow2_ceil_f32, pow2i, rdnp_exponent};
 use crate::rng::Xoshiro256;
 
 /// How values below `α` are handled.
@@ -131,11 +142,24 @@ pub struct QuantStats {
     pub max_abs: f32,
     /// The scale actually used.
     pub alpha: f32,
-    /// Fraction of elements with `|x| < α` (the underflow region).
+    /// Fraction of elements with `|x| < α` (the underflow region). For
+    /// SMP this is the mean across samples.
     pub frac_underflow: f32,
     /// Fraction of elements clipped at the top (only nonzero for
-    /// `FixedMax` scales that underestimate the true max).
+    /// `FixedMax` scales that underestimate the true max). For SMP this
+    /// is the mean across samples.
     pub frac_clipped: f32,
+}
+
+impl QuantStats {
+    fn from_counts(max_abs: f32, alpha: f32, cs: kernel::ChunkStats, denom: usize) -> QuantStats {
+        QuantStats {
+            max_abs,
+            alpha,
+            frac_underflow: cs.n_under as f32 / denom.max(1) as f32,
+            frac_clipped: cs.n_clip as f32 / denom.max(1) as f32,
+        }
+    }
 }
 
 /// The logarithmic gradient quantizer. Stateless; owns only its config.
@@ -149,27 +173,249 @@ impl LogQuantizer {
         LogQuantizer { cfg }
     }
 
-    /// Resolve `α` for a tensor with measured max `max_abs`.
+    /// Resolve `α` for a tensor with measured max `max_abs` (> 0).
     pub fn alpha_for(&self, max_abs: f32) -> f32 {
         let fmt = self.cfg.format;
         match self.cfg.alpha {
             AlphaPolicy::ExactMax => fmt.alpha_for_max(max_abs),
-            AlphaPolicy::Pow2Ceil => {
-                let top = (max_abs as f64).log2().ceil().exp2() as f32;
-                fmt.alpha_for_max(top)
-            }
+            // Exact exponent-bit power-of-two ceiling — the f64
+            // `log2().ceil().exp2()` round-trip could mis-bin exact
+            // powers of two when libm's log2 is not correctly rounded.
+            AlphaPolicy::Pow2Ceil => fmt.alpha_for_max(pow2_ceil_f32(max_abs)),
             AlphaPolicy::FixedMax(m) => fmt.alpha_for_max(m),
         }
+    }
+
+    fn max_abs(x: &[f32]) -> f32 {
+        x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
     }
 
     /// Quantize `x` into `out` (dequantized f32 values on the grid), using
     /// one uniform from `noise` per element (only consumed on stochastic
     /// paths, but `noise.len() >= x.len()` is required so the layout is
     /// static). Returns per-tensor stats.
+    ///
+    /// Runs on the branch-free kernels; deterministic configurations are
+    /// bit-identical to [`quantize_into_reference`](Self::quantize_into_reference).
     pub fn quantize_into(&self, x: &[f32], noise: &[f32], out: &mut [f32]) -> QuantStats {
         assert_eq!(x.len(), out.len());
         assert!(noise.len() >= x.len(), "need one uniform per element");
-        let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let max_abs = Self::max_abs(x);
+        if max_abs == 0.0 {
+            out.fill(0.0);
+            return QuantStats::default();
+        }
+        let alpha = self.alpha_for(max_abs);
+        let p = KernelParams::new(self.cfg.format, alpha);
+        let cs = kernel::quantize_dispatch(
+            self.cfg.underflow,
+            self.cfg.rounding,
+            &p,
+            x,
+            &noise[..x.len()],
+            out,
+        );
+        QuantStats::from_counts(max_abs, alpha, cs, x.len())
+    }
+
+    /// Fused quantize→code path: emits the packed 4-bit codes (two per
+    /// byte, `LogFormat::pack_nibbles` layout) directly — no intermediate
+    /// dequantized f32 tensor. This is the stream `hw::mfbprop` consumes
+    /// ([`crate::hw::mfbprop::mfbprop_dot_packed`]). Requires a ≤4-bit
+    /// format; `packed.len() >= x.len().div_ceil(2)`.
+    pub fn quantize_to_codes_into(
+        &self,
+        x: &[f32],
+        noise: &[f32],
+        packed: &mut [u8],
+    ) -> QuantStats {
+        assert!(
+            self.cfg.format.bits() <= 4,
+            "packed-code path needs a <= 4-bit format"
+        );
+        assert!(noise.len() >= x.len(), "need one uniform per element");
+        let max_abs = Self::max_abs(x);
+        if max_abs == 0.0 {
+            packed[..x.len().div_ceil(2)].fill(0);
+            return QuantStats::default();
+        }
+        let alpha = self.alpha_for(max_abs);
+        let p = KernelParams::new(self.cfg.format, alpha);
+        let cs = kernel::codes_dispatch(
+            self.cfg.underflow,
+            self.cfg.rounding,
+            &p,
+            x,
+            &noise[..x.len()],
+            packed,
+        );
+        QuantStats::from_counts(max_abs, alpha, cs, x.len())
+    }
+
+    /// Allocating wrapper around [`quantize_to_codes_into`](Self::quantize_to_codes_into).
+    pub fn quantize_to_codes(&self, x: &[f32], rng: &mut Xoshiro256) -> (Vec<u8>, QuantStats) {
+        let mut noise = vec![0.0f32; x.len()];
+        rng.fill_uniform(&mut noise);
+        let mut packed = vec![0u8; x.len().div_ceil(2)];
+        let stats = self.quantize_to_codes_into(x, &noise, &mut packed);
+        (packed, stats)
+    }
+
+    /// Convenience allocating wrapper around [`quantize_into`](Self::quantize_into).
+    pub fn quantize(&self, x: &[f32], rng: &mut Xoshiro256) -> (Vec<f32>, QuantStats) {
+        let mut noise = vec![0.0f32; x.len()];
+        rng.fill_uniform(&mut noise);
+        let mut out = vec![0.0f32; x.len()];
+        let stats = self.quantize_into(x, &noise, &mut out);
+        (out, stats)
+    }
+
+    /// Fused single-pass SMP (§4.1): accumulate `n_samples` independent
+    /// stochastic quantizations inline, chunk by chunk, without
+    /// materializing per-sample tensors. Bias stays zero; variance drops
+    /// by `1/N` (the paper averages the resulting *weight gradients*;
+    /// averaging the quantized neural gradients before the GEMM is
+    /// algebraically identical because the GEMM is linear in the neural
+    /// gradient — Eq. 27).
+    ///
+    /// Sample `s` draws from the `(s+1)`-th [`Xoshiro256::jump`] stream
+    /// of `rng` (streams provably 2^128 apart); the caller's generator is
+    /// left one jump past the last stream. All staging lives in
+    /// `scratch` — steady-state the call allocates nothing.
+    ///
+    /// Returned stats aggregate across samples: `frac_underflow` /
+    /// `frac_clipped` are means over the `n_samples` passes (the seed
+    /// implementation silently kept only the last sample's stats).
+    pub fn quantize_smp_into(
+        &self,
+        x: &[f32],
+        n_samples: usize,
+        rng: &mut Xoshiro256,
+        out: &mut [f32],
+        scratch: &mut QuantScratch,
+    ) -> QuantStats {
+        assert!(n_samples >= 1);
+        assert_eq!(x.len(), out.len());
+        let max_abs = Self::max_abs(x);
+        if max_abs == 0.0 {
+            // Advance the generator exactly as the quantizing path would
+            // (n_samples streams + 1), so stream alignment across calls
+            // does not depend on whether a zero tensor appeared.
+            for _ in 0..=n_samples {
+                rng.jump();
+            }
+            out.fill(0.0);
+            return QuantStats::default();
+        }
+        let alpha = self.alpha_for(max_abs);
+        let p = KernelParams::new(self.cfg.format, alpha);
+
+        let QuantScratch { noise, sample, streams, .. } = scratch;
+        streams.clear();
+        for _ in 0..n_samples {
+            rng.jump();
+            streams.push(rng.clone());
+        }
+        rng.jump(); // leave the caller past every sample stream
+
+        if noise.len() < CHUNK {
+            noise.resize(CHUNK, 0.0);
+        }
+        if sample.len() < CHUNK {
+            sample.resize(CHUNK, 0.0);
+        }
+
+        let mut total = kernel::ChunkStats::default();
+        for (xc, oc) in x.chunks(CHUNK).zip(out.chunks_mut(CHUNK)) {
+            oc.fill(0.0);
+            for stream in streams.iter_mut() {
+                let nb = &mut noise[..xc.len()];
+                stream.fill_uniform(nb);
+                let sb = &mut sample[..xc.len()];
+                total.merge(kernel::quantize_dispatch(
+                    self.cfg.underflow,
+                    self.cfg.rounding,
+                    &p,
+                    xc,
+                    nb,
+                    sb,
+                ));
+                for (o, v) in oc.iter_mut().zip(sb.iter()) {
+                    *o += *v;
+                }
+            }
+        }
+        let inv = 1.0 / n_samples as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+        QuantStats::from_counts(max_abs, alpha, total, x.len() * n_samples)
+    }
+
+    /// Allocating wrapper around [`quantize_smp_into`](Self::quantize_smp_into).
+    pub fn quantize_smp(
+        &self,
+        x: &[f32],
+        n_samples: usize,
+        rng: &mut Xoshiro256,
+    ) -> (Vec<f32>, QuantStats) {
+        let mut out = vec![0.0f32; x.len()];
+        let mut scratch = QuantScratch::new();
+        let stats = self.quantize_smp_into(x, n_samples, rng, &mut out, &mut scratch);
+        (out, stats)
+    }
+
+    /// Multi-threaded chunked quantization with internally generated
+    /// noise: the tensor is split into fixed [`CHUNK`]-element blocks and
+    /// chunk `i` always draws from stream `i` of the caller's generator
+    /// ([`Xoshiro256::fork`]), so the output is **bit-identical for every
+    /// `n_threads`**. The caller's generator is advanced by one
+    /// [`Xoshiro256::jump`] per call.
+    pub fn quantize_chunked(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        rng: &mut Xoshiro256,
+        n_threads: usize,
+        scratch: &mut QuantScratch,
+    ) -> QuantStats {
+        assert_eq!(x.len(), out.len());
+        let base = rng.clone();
+        rng.jump();
+        let max_abs = kernel::par_max_abs(x, n_threads, scratch);
+        if max_abs == 0.0 {
+            out.fill(0.0);
+            return QuantStats::default();
+        }
+        let alpha = self.alpha_for(max_abs);
+        let p = KernelParams::new(self.cfg.format, alpha);
+        let cs = kernel::par_quantize(
+            self.cfg.underflow,
+            self.cfg.rounding,
+            &p,
+            x,
+            out,
+            &base,
+            n_threads,
+            scratch,
+        );
+        QuantStats::from_counts(max_abs, alpha, cs, x.len())
+    }
+
+    /// The seed scalar implementation, kept verbatim: a per-element
+    /// `if`/`match` ladder with the mode decision inside the loop. It is
+    /// the **bit-exactness oracle** for the branch-free kernels on the
+    /// deterministic paths, and the baseline the `quant_throughput` bench
+    /// measures the kernels against.
+    pub fn quantize_into_reference(
+        &self,
+        x: &[f32],
+        noise: &[f32],
+        out: &mut [f32],
+    ) -> QuantStats {
+        assert_eq!(x.len(), out.len());
+        assert!(noise.len() >= x.len(), "need one uniform per element");
+        let max_abs = Self::max_abs(x);
         if max_abs == 0.0 {
             out.fill(0.0);
             return QuantStats::default();
@@ -182,10 +428,6 @@ impl LogQuantizer {
         let mut n_under = 0usize;
         let mut n_clip = 0usize;
 
-        // Hot loop notes (§Perf L3): `pow2i` builds powers of two from
-        // bits instead of calling `exp2f`, and the division by alpha is
-        // a single precomputed multiply — together ~1.8x on the
-        // `quant_throughput` bench.
         for i in 0..x.len() {
             let v = x[i];
             let a = v.abs();
@@ -232,9 +474,6 @@ impl LogQuantizer {
                     }
                 }
             };
-            // branch, not `copysign`: measured ~10% faster here (the
-            // branch is perfectly predicted on sign-symmetric data and
-            // avoids the bit-ops dependency chain on q).
             out[i] = if v < 0.0 { -q } else { q };
         }
 
@@ -244,46 +483,6 @@ impl LogQuantizer {
             frac_underflow: n_under as f32 / x.len() as f32,
             frac_clipped: n_clip as f32 / x.len() as f32,
         }
-    }
-
-    /// Convenience allocating wrapper around [`quantize_into`].
-    pub fn quantize(&self, x: &[f32], rng: &mut Xoshiro256) -> (Vec<f32>, QuantStats) {
-        let mut noise = vec![0.0f32; x.len()];
-        rng.fill_uniform(&mut noise);
-        let mut out = vec![0.0f32; x.len()];
-        let stats = self.quantize_into(x, &noise, &mut out);
-        (out, stats)
-    }
-
-    /// SMP (§4.1): average `n_samples` independent stochastic quantizations.
-    /// Bias stays zero; variance drops by `1/N`. Each sample draws fresh
-    /// noise from `rng`. (The paper computes the samples in parallel and
-    /// averages the resulting *weight gradients*; averaging the quantized
-    /// neural gradients before the GEMM is algebraically identical because
-    /// the GEMM is linear in the neural gradient — Eq. 27.)
-    pub fn quantize_smp(
-        &self,
-        x: &[f32],
-        n_samples: usize,
-        rng: &mut Xoshiro256,
-    ) -> (Vec<f32>, QuantStats) {
-        assert!(n_samples >= 1);
-        let mut acc = vec![0.0f32; x.len()];
-        let mut sample = vec![0.0f32; x.len()];
-        let mut noise = vec![0.0f32; x.len()];
-        let mut stats = QuantStats::default();
-        for _ in 0..n_samples {
-            rng.fill_uniform(&mut noise);
-            stats = self.quantize_into(x, &noise, &mut sample);
-            for (a, s) in acc.iter_mut().zip(sample.iter()) {
-                *a += s;
-            }
-        }
-        let inv = 1.0 / n_samples as f32;
-        for a in acc.iter_mut() {
-            *a *= inv;
-        }
-        (acc, stats)
     }
 }
 
@@ -417,6 +616,78 @@ mod tests {
         assert!((ratio - 4.0).abs() < 0.6, "variance ratio {ratio}, want ~4");
     }
 
+    /// The fused chunk-wise SMP must equal the naive
+    /// materialize-N-buffers implementation bit-for-bit when both consume
+    /// the same per-sample jump streams (accumulation order per element
+    /// is sample-major in both).
+    #[test]
+    fn fused_smp_equals_naive_smp_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        // Cross a chunk boundary to exercise the chunked accumulation.
+        let n = CHUNK + 257;
+        let x = lognormal_tensor(&mut rng, n, 2.0);
+        for n_samples in [1usize, 2, 4] {
+            // Naive: full-length per-sample noise from the same streams.
+            let mut naive_rng = rng.clone();
+            let mut streams = Vec::new();
+            for _ in 0..n_samples {
+                naive_rng.jump();
+                streams.push(naive_rng.clone());
+            }
+            let mut acc = vec![0.0f32; n];
+            let mut noise = vec![0.0f32; n];
+            let mut sample = vec![0.0f32; n];
+            for s in 0..n_samples {
+                streams[s].fill_uniform(&mut noise);
+                q.quantize_into(&x, &noise, &mut sample);
+                for (a, v) in acc.iter_mut().zip(sample.iter()) {
+                    *a += *v;
+                }
+            }
+            let inv = 1.0 / n_samples as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+            // Fused path from the same starting generator state.
+            let mut fused_rng = rng.clone();
+            let mut out = vec![0.0f32; n];
+            let mut scratch = QuantScratch::new();
+            q.quantize_smp_into(&x, n_samples, &mut fused_rng, &mut out, &mut scratch);
+            for i in 0..n {
+                assert_eq!(
+                    out[i].to_bits(),
+                    acc[i].to_bits(),
+                    "n_samples={n_samples} idx={i}: fused {} vs naive {}",
+                    out[i],
+                    acc[i]
+                );
+            }
+        }
+    }
+
+    /// Satellite: SMP stats aggregate across samples instead of keeping
+    /// only the last sample's counters.
+    #[test]
+    fn smp_stats_are_aggregated_across_samples() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        // Half the tensor sits in the underflow region (alpha = 1).
+        let mut x = vec![64.0f32; 64];
+        x.extend(std::iter::repeat(0.5f32).take(64));
+        let (_, st) = q.quantize_smp(&x, 8, &mut rng);
+        // Underflow membership is deterministic (|x| < alpha), so the
+        // mean across samples equals the per-sample fraction exactly.
+        assert!((st.frac_underflow - 0.5).abs() < 1e-6, "{}", st.frac_underflow);
+        assert_eq!(st.frac_clipped, 0.0);
+        assert!((st.alpha - 1.0).abs() < 1e-6);
+        // Clipping aggregation: a fixed underestimated max clips the top
+        // element in every sample.
+        let qh = LogQuantizer::new(LogQuantConfig::luq_hindsight(LogFormat::FP4, 32.0));
+        let (_, sth) = qh.quantize_smp(&[64.0f32, 1.0], 4, &mut rng);
+        assert!((sth.frac_clipped - 0.5).abs() < 1e-6, "{}", sth.frac_clipped);
+    }
+
     #[test]
     fn fixed_max_clips_and_reports() {
         let mut rng = Xoshiro256::seed_from_u64(8);
@@ -498,5 +769,22 @@ mod tests {
             m_luq >= m_rdnp * 0.99,
             "LUQ mse {m_luq} should exceed RDNP mse {m_rdnp} (Eq. 9)"
         );
+    }
+
+    /// The Pow2Ceil alpha policy must treat exact powers of two as their
+    /// own ceiling (the f64 log round-trip could push 2^k to 2^(k+1)).
+    #[test]
+    fn pow2ceil_alpha_exact_on_powers_of_two() {
+        let q = LogQuantizer::new(LogQuantConfig::naive(LogFormat::FP4));
+        for k in -8..9i32 {
+            let m = (k as f32).exp2();
+            let alpha = q.alpha_for(m);
+            // top = 2^k exactly: alpha = 2^k / 2^6.
+            let want = m / 64.0;
+            assert_eq!(alpha.to_bits(), want.to_bits(), "max=2^{k}");
+        }
+        // Non-powers still round up.
+        let alpha = q.alpha_for(3.0);
+        assert_eq!(alpha, 4.0 / 64.0);
     }
 }

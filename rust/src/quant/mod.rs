@@ -3,6 +3,7 @@
 //!
 //! | module | paper section | what |
 //! |---|---|---|
+//! | [`kernel`] | §Perf | branch-free monomorphized quantize kernels, fused code emission, scratch pool, chunked MT |
 //! | [`rounding`] | §3 | SR / RDN primitives + analytic MSE/bias/variance (Fig. 1a) |
 //! | [`logfmt`] | §4 | radix-2 log formats FP4 `[1,3,0]`, FP2, FP3 + codecs |
 //! | [`luq`] | §4, §4.1 | LUQ, its ablation family (Fig. 3 left), SMP |
@@ -18,6 +19,7 @@
 
 pub mod analysis;
 pub mod int_uniform;
+pub mod kernel;
 pub mod logfmt;
 pub mod luq;
 pub mod minifloat;
@@ -26,6 +28,7 @@ pub mod rounding;
 pub mod sawb;
 
 pub use int_uniform::{UniformQuantizer, UniformRounding};
+pub use kernel::{QuantScratch, CHUNK};
 pub use logfmt::LogFormat;
 pub use luq::{AlphaPolicy, LogQuantConfig, LogQuantizer, LogRounding, QuantStats, Underflow};
 pub use minifloat::MiniFloat;

@@ -100,6 +100,60 @@ pub fn rdnp_exponent(r: f32) -> i32 {
     ((r as f64 * 4.0 / 3.0).log2().floor()) as i32
 }
 
+/// Bit-exact equivalent of [`rdnp_exponent`] with no float transcendental:
+/// `r = m·2^e` with `m ∈ [1, 2)` gives `⌊log2(4r/3)⌋ = e + [m ≥ 1.5]`,
+/// and `m ≥ 1.5` is just the mantissa's top bit. The geometric midpoint
+/// `m = 1.5` lands exactly on the bin edge in both formulations (the f64
+/// path computes `6·2^e / 3 = 2^(e+1)` exactly), and the nearest
+/// representable f32 neighbors of the midpoint sit ~2^−23 away — far
+/// beyond the f64 round-trip's ~2^−52 error — so the two functions agree
+/// on every normal positive f32 (property-tested below).
+#[inline]
+pub fn rdnp_exponent_bits(r: f32) -> i32 {
+    debug_assert!(r > 0.0);
+    let bits = r.to_bits();
+    let exp = (bits >> 23) & 0xFF;
+    if exp == 0 {
+        // subnormal: fall back (never hit on our normalized inputs)
+        return rdnp_exponent(r);
+    }
+    exp as i32 - 127 + ((bits & 0x007F_FFFF) >= 0x0040_0000) as i32
+}
+
+/// Exact power-of-two ceiling of a positive finite f32 via exponent-field
+/// manipulation: an exact power of two maps to itself; anything else maps
+/// to the next power up. Replaces the `f64` `log2().ceil().exp2()`
+/// round-trip, which relies on the libm `log2` being correctly rounded at
+/// exact powers of two — a property not guaranteed on every platform, and
+/// the `Pow2Ceil` scale policy mis-bins a whole tensor when it fails.
+#[inline]
+pub fn pow2_ceil_f32(x: f32) -> f32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    if bits & 0x7FFF_FFFF == 0 {
+        // ±0: degrade like the old f64 path (exp2(ceil(log2 0)) = 0)
+        // instead of recursing on the subnormal branch forever.
+        return 0.0;
+    }
+    let exp = (bits >> 23) & 0xFF;
+    let mant = bits & 0x007F_FFFF;
+    if exp == 0 {
+        // Subnormal: renormalize with an exact 2^64 scaling and recurse
+        // once (the scaled value is normal, and the result ≥ 2^−85 so the
+        // 2^−64 descale stays normal too).
+        let up = f32::from_bits((64 + 127) << 23);
+        let down = f32::from_bits((127 - 64) << 23);
+        return pow2_ceil_f32(x * up) * down;
+    }
+    if mant == 0 {
+        x
+    } else {
+        // exp + 1 == 0xFF yields +inf for x > 2^127, matching the f64
+        // path's overflow-to-inf behavior.
+        f32::from_bits((exp + 1) << 23)
+    }
+}
+
 /// Exact power of two `2^n` for `n ∈ [-126, 127]`, by constructing the
 /// f32 exponent field directly — ~1 cycle vs an `exp2f` libcall, the
 /// difference between hitting and missing the quantizer's bandwidth
@@ -225,6 +279,88 @@ mod tests {
         assert_eq!(rdnp_exponent(64.0), 6);
         // Truncation (naive floor) would send 3.9 to 2; RDNP sends it to 4.
         assert_eq!(rdnp_exponent(3.9), 2);
+    }
+
+    #[test]
+    fn rdnp_exponent_bits_matches_f64_path_everywhere() {
+        // Pinned midpoint/edge cases first.
+        for &(r, want) in &[
+            (1.0f32, 0),
+            (1.5, 1), // exact geometric midpoint rounds up in both forms
+            (2.0, 1),
+            (2.9, 1),
+            (3.0, 2), // midpoint of [2, 4]
+            (3.1, 2),
+            (64.0, 6),
+            (0.75, 0), // midpoint of [0.5, 1]
+            (0.7499999, -1),
+        ] {
+            assert_eq!(rdnp_exponent_bits(r), want, "bits at {r}");
+            assert_eq!(rdnp_exponent(r), want, "f64 at {r}");
+        }
+        prop_check(
+            "rdnp_bits_matches_libm",
+            6,
+            20_000,
+            |rng| rng.uniform_range_f32(1e-30, 1e30),
+            |&r| {
+                let a = rdnp_exponent_bits(r);
+                let b = rdnp_exponent(r);
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!("bits {a} vs f64 {b}"))
+                }
+            },
+        );
+        // Dense sweep around every power-of-two and midpoint boundary.
+        for n in -20..20i32 {
+            let p = (n as f32).exp2();
+            for &m in &[1.0f32, 1.4999999, 1.5, 1.5000001, 1.9999999] {
+                let r = p * m;
+                assert_eq!(
+                    rdnp_exponent_bits(r),
+                    rdnp_exponent(r),
+                    "disagreement at 2^{n} * {m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pow2_ceil_fixes_exact_powers_and_rounds_up_everything_else() {
+        // Exact powers are fixed points — the f64 log2 round-trip could
+        // mis-bin these if log2 is not correctly rounded.
+        for n in -130..=127i32 {
+            let p = (n as f64).exp2() as f32; // covers subnormals too
+            assert_eq!(pow2_ceil_f32(p), p, "2^{n} must be a fixed point");
+        }
+        assert_eq!(pow2_ceil_f32(1.0000001), 2.0);
+        assert_eq!(pow2_ceil_f32(3.0), 4.0);
+        assert_eq!(pow2_ceil_f32(4.0), 4.0);
+        assert_eq!(pow2_ceil_f32(13.7), 16.0);
+        assert_eq!(pow2_ceil_f32(0.3), 0.5);
+        // Overflow matches the f64 path: above 2^127 -> +inf.
+        assert_eq!(pow2_ceil_f32(2.5e38), f32::INFINITY);
+        prop_check(
+            "pow2_ceil_bounds",
+            7,
+            20_000,
+            |rng| rng.uniform_range_f32(1e-38, 1e38),
+            |&x| {
+                let c = pow2_ceil_f32(x);
+                if c < x {
+                    return Err(format!("ceil {c} below {x}"));
+                }
+                if c > x * 2.0 {
+                    return Err(format!("ceil {c} above 2x {x}"));
+                }
+                if c.to_bits() & 0x007F_FFFF != 0 {
+                    return Err(format!("{c} not a power of two"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

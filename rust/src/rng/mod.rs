@@ -96,6 +96,32 @@ impl Xoshiro256 {
         g
     }
 
+    /// O(1) keyed stream derivation: re-seed a child generator from the
+    /// full 256-bit state hashed with `index` through SplitMix64.
+    ///
+    /// Contract (ROADMAP §Performance architecture): `fork` is for
+    /// *chunk-indexed* streams — thousands of cheap, statistically
+    /// independent streams whose identity depends only on `(state,
+    /// index)`, which is what makes chunked multi-threaded quantization
+    /// bit-identical across thread counts. Streams are independent
+    /// statistically but not provably non-overlapping; where a proof
+    /// matters (SMP per-sample streams), use [`Self::jump`]/[`Self::split`],
+    /// which guarantee 2^128-output separation.
+    pub fn fork(&self, index: u64) -> Self {
+        let mut sm = self.s[0]
+            .wrapping_add(self.s[1].rotate_left(13))
+            .wrapping_add(self.s[2].rotate_left(29))
+            .wrapping_add(self.s[3].rotate_left(43))
+            ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256 { s }
+    }
+
     /// Uniform f32 in [0, 1). Uses the top 24 bits (f32 mantissa width).
     #[inline]
     pub fn uniform_f32(&mut self) -> f32 {
@@ -207,6 +233,15 @@ impl NoiseBank {
         &self.buf[..n]
     }
 
+    /// Copy `dst.len()` uniforms into a caller-owned buffer under the
+    /// same reuse-period semantics as [`take`](Self::take) — the
+    /// zero-allocation path the trainer uses to refresh its persistent
+    /// noise tensors in place (§Perf: no per-step `to_vec`).
+    pub fn take_into(&mut self, dst: &mut [f32]) {
+        let n = dst.len();
+        dst.copy_from_slice(self.take(n));
+    }
+
     /// Number of fills performed so far is implied by use count; expose the
     /// reuse period for logging.
     pub fn reuse_period(&self) -> usize {
@@ -272,6 +307,65 @@ mod tests {
         let mut b = base.split(1);
         let matches = (0..256).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(matches, 0);
+    }
+
+    #[test]
+    fn fork_streams_are_deterministic_and_distinct() {
+        let base = Xoshiro256::seed_from_u64(42);
+        // Determinism: same (state, index) -> same stream.
+        let mut a = base.fork(7);
+        let mut b = base.fork(7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Distinctness: different indices (and the base itself) disagree.
+        let mut c = base.fork(8);
+        let mut d = base.clone();
+        let mut a2 = base.fork(7);
+        let mut same_c = 0;
+        let mut same_d = 0;
+        for _ in 0..256 {
+            let v = a2.next_u64();
+            if v == c.next_u64() {
+                same_c += 1;
+            }
+            if v == d.next_u64() {
+                same_d += 1;
+            }
+        }
+        assert!(same_c < 2 && same_d < 2, "fork streams overlap");
+        // Forking is a pure function of the base state: the base is not
+        // advanced.
+        let mut e = base.clone();
+        let mut f = Xoshiro256::seed_from_u64(42);
+        for _ in 0..16 {
+            assert_eq!(e.next_u64(), f.next_u64());
+        }
+    }
+
+    #[test]
+    fn fork_uniforms_look_uniform() {
+        let base = Xoshiro256::seed_from_u64(3);
+        let mut sum = 0.0f64;
+        let n = 50_000;
+        for i in 0..n {
+            let mut g = base.fork(i);
+            sum += g.uniform_f32() as f64;
+        }
+        let mean = sum / n as f64;
+        // First draw across forked streams must still be uniform-ish.
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn take_into_matches_take() {
+        let mut bank_a = NoiseBank::new(9, 32, 2);
+        let mut bank_b = NoiseBank::new(9, 32, 2);
+        let mut dst = vec![0.0f32; 32];
+        for _ in 0..5 {
+            bank_a.take_into(&mut dst);
+            assert_eq!(dst, bank_b.take(32));
+        }
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Offline shim for the `anyhow` crate, covering exactly the subset this
+//! repository uses: [`Error`], [`Result`], the [`Context`] extension trait
+//! on `Result` and `Option`, and the `anyhow!` / `bail!` macros.
+//!
+//! The container's crate registry is offline, so the real crates.io
+//! `anyhow` cannot be fetched; this shim keeps the crate buildable with
+//! identical call sites. Error values carry a message plus a context
+//! chain, rendered innermost-last like real anyhow's `{:#}`/`Debug`.
+
+use std::fmt;
+
+/// A string-backed error with a chain of context frames.
+pub struct Error {
+    /// Context frames, outermost first; the root cause is last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost message (what `Display` prints).
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// Real anyhow's `root_cause` analogue: the innermost message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, colon-separated, like real anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: any std error converts into `Error` (this is what `?`
+// uses). `Error` itself deliberately does NOT implement `std::error::Error`
+// so this blanket impl cannot overlap `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context frames.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert a condition, returning an [`Error`] on failure.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+// Sealed conversion powering `Context` for both std errors and `Error`
+// itself — the same coherence trick real anyhow uses (valid because
+// `Error` is a local type that does not implement `std::error::Error`).
+mod private {
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+}
+
+/// Attach context to errors, as in real anyhow.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(ctx))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading artifact").unwrap_err();
+        assert_eq!(e.to_string(), "loading artifact");
+        assert_eq!(e.root_cause(), "missing file");
+        assert!(format!("{e:#}").contains("loading artifact: missing file"));
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("bad value {}", 3));
+        let e = r.with_context(|| format!("step {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "step 7");
+        assert_eq!(e.root_cause(), "bad value 3");
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing output").unwrap_err().to_string(), "missing output");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_early() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("missing file"));
+    }
+}

@@ -1,0 +1,278 @@
+//! Offline stub of the `xla` (xla-rs) API surface the luq runtime uses.
+//!
+//! Two tiers:
+//!
+//! * **[`Literal`] is fully functional** — an in-memory shaped buffer with
+//!   `vec1`/`reshape`/`array_shape`/`to_vec`/`decompose_tuple`, so host
+//!   tensor round-trips (and their tests) work without any XLA install.
+//! * **PJRT entry points are gated** — [`PjRtClient::cpu`] succeeds (the
+//!   engine can be constructed and probed), but compiling or executing an
+//!   HLO module returns [`Error::RuntimeUnavailable`]. On machines with
+//!   the real PJRT plugin, point the `xla` dependency in `Cargo.toml` back
+//!   at the real crate; no call sites change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type. Implements `std::error::Error` so call sites can wrap
+/// it with `anyhow::Context` exactly like the real crate's error.
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs the real XLA/PJRT runtime, which this offline
+    /// stub does not provide.
+    RuntimeUnavailable(&'static str),
+    /// Literal-level usage error (shape/type mismatch).
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::RuntimeUnavailable(what) => write!(
+                f,
+                "XLA runtime unavailable in this offline build (needed for: {what}); \
+                 link the real `xla` crate to enable PJRT execution"
+            ),
+            Error::Literal(msg) => write!(f, "literal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the luq runtime exchanges with XLA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    /// Present so downstream matches keep a reachable wildcard arm (the
+    /// real crate has many more element types).
+    Pred,
+}
+
+/// Sealed-ish conversion trait backing the generic `Literal` accessors.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn extract(data: &LiteralData) -> Option<Vec<Self>>;
+    fn wrap(v: Vec<Self>) -> LiteralData;
+}
+
+#[derive(Clone, Debug)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn extract(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn wrap(v: Vec<f32>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn extract(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn wrap(v: Vec<i32>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+}
+
+/// Row-major shape + element type of an array literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// An in-memory XLA literal: flat data + dims, or a tuple of literals.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Tuple literal (what a multi-output computation returns).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: LiteralData::Tuple(parts), dims: vec![] }
+    }
+
+    fn numel(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => 0,
+        }
+    }
+
+    /// Reshape to new dims (must preserve element count).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error::Literal("cannot reshape a tuple literal".into()));
+        }
+        let want: i64 = dims.iter().product();
+        if want as usize != self.numel() {
+            return Err(Error::Literal(format!(
+                "reshape {:?} -> {:?} changes element count",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+            LiteralData::Tuple(_) => {
+                return Err(Error::Literal("tuple literal has no array shape".into()))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data)
+            .ok_or_else(|| Error::Literal(format!("literal is not {:?}", T::TY)))
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.data, LiteralData::Tuple(vec![])) {
+            LiteralData::Tuple(parts) => Ok(parts),
+            other => {
+                self.data = other;
+                Err(Error::Literal("literal is not a tuple".into()))
+            }
+        }
+    }
+}
+
+/// Parsed HLO module (stub: never constructible offline).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::RuntimeUnavailable("parsing HLO text"))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-side buffer handle (stub: never materialized offline).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::RuntimeUnavailable("fetching device buffer"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructible offline).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::RuntimeUnavailable("executing a compiled module"))
+    }
+}
+
+/// PJRT client. Construction succeeds so the coordinator can be built and
+/// report a helpful error only when an artifact is actually compiled.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::RuntimeUnavailable("XLA compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn tuple_decompose() {
+        let mut t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn pjrt_paths_are_gated_with_clear_error() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        let err = HloModuleProto::from_text_file("nope.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("XLA runtime unavailable"));
+    }
+}

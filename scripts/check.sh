@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Pre-PR gate (see ROADMAP.md): build, test, lint. Run from anywhere.
+#
+#   scripts/check.sh          # full gate
+#   scripts/check.sh --fast   # skip clippy (e.g. mid-iteration)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "check.sh: cargo not found — install a Rust toolchain (rustup.rs) to run the gate" >&2
+    exit 127
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--fast" ]]; then
+    echo "== clippy skipped (--fast) =="
+    exit 0
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== clippy not installed; skipped (install with: rustup component add clippy) =="
+fi
+
+echo "== check.sh: all gates passed =="
