@@ -1,0 +1,155 @@
+//! Host-side packed 4-bit GEMM gate: scalar MF-BPROP loop vs flat LUT vs
+//! cache-tiled LUT vs multithreaded tiles, plus the end-to-end
+//! quantize→pack→multiply pipeline (`coordinator::QgemmPath`).
+//!
+//! Emits a machine-readable `BENCH_qgemm.json` (override with
+//! `LUQ_BENCH_JSON=<path>`) and **asserts** the acceptance gates:
+//!
+//! * every kernel variant is bit-identical to the decode-then-f32-matmul
+//!   oracle (same sequential-K accumulation order), and
+//! * the tiled LUT kernel is ≥4× faster than the scalar
+//!   `mfbprop_multiply` + `decode_fp7` loop.
+
+use luq::bench::{group, BenchResult, Bencher};
+use luq::coordinator::QgemmPath;
+use luq::hw::mfbprop::Int4Code;
+use luq::hw::qgemm::{
+    qgemm_decode_oracle, qgemm_packed_flat, qgemm_packed_mt, qgemm_packed_mt_with,
+    qgemm_packed_with, qgemm_scalar_reference, QgemmScratch,
+};
+use luq::metrics::Json;
+use luq::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+use luq::rng::Xoshiro256;
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    // Odd K exercises the half-filled trailing byte on every row.
+    let (m, k, n) = (160usize, 161, 160);
+    let products = (m * k * n) as u64;
+    let mut rng = Xoshiro256::seed_from_u64(42);
+
+    let a: Vec<Int4Code> = (0..m * k)
+        .map(|_| Int4Code::from_nibble((rng.next_u64() & 0xF) as u8))
+        .collect();
+    let g_t: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let quantizer = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+    let (packed, st) = quantizer.quantize_to_codes_matrix(&g_t, n, k, &mut rng);
+    assert!(st.alpha > 0.0);
+
+    // --- correctness gate before any timing -----------------------------
+    let want = qgemm_decode_oracle(&a, &packed, m, k, n);
+    let mut out = vec![0.0f32; m * n];
+    let mut scratch = QgemmScratch::new();
+    qgemm_packed_with(&a, &packed, m, k, n, &mut out, &mut scratch);
+    let tiled_exact = bits_equal(&out, &want);
+    qgemm_scalar_reference(&a, &packed, m, k, n, &mut out);
+    let scalar_exact = bits_equal(&out, &want);
+    qgemm_packed_flat(&a, &packed, m, k, n, &mut out);
+    let flat_exact = bits_equal(&out, &want);
+    let hw_threads = std::thread::available_parallelism().map_or(2, |p| p.get());
+    let mut mt_exact = true;
+    for t in [2usize, hw_threads] {
+        qgemm_packed_mt(&a, &packed, m, k, n, &mut out, t);
+        mt_exact &= bits_equal(&out, &want);
+    }
+    println!(
+        "bit-exact vs decode-then-f32-matmul oracle: scalar={scalar_exact} flat={flat_exact} \
+         tiled={tiled_exact} mt={mt_exact}"
+    );
+
+    group(&format!("packed 4-bit GEMM, {m}x{k}x{n} ({products} products)"));
+    let scalar = b.bench_throughput("scalar mfbprop_multiply+decode_fp7", products, || {
+        qgemm_scalar_reference(&a, &packed, m, k, n, &mut out);
+        out[0]
+    });
+    println!("{}", scalar.report());
+    let flat = b.bench_throughput("LUT flat (256-entry product table)", products, || {
+        qgemm_packed_flat(&a, &packed, m, k, n, &mut out);
+        out[0]
+    });
+    println!("{}", flat.report());
+    let tiled = b.bench_throughput("LUT tiled (nibble precompute)", products, || {
+        qgemm_packed_with(&a, &packed, m, k, n, &mut out, &mut scratch);
+        out[0]
+    });
+    println!("{}", tiled.report());
+    let mut mt_results: Vec<(usize, BenchResult)> = Vec::new();
+    let mut thread_counts = vec![2usize, hw_threads];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    for t in thread_counts {
+        let r = b.bench_throughput(&format!("LUT tiled {t}T"), products, || {
+            qgemm_packed_mt_with(&a, &packed, m, k, n, &mut out, t, &mut scratch);
+            out[0]
+        });
+        println!("{}", r.report());
+        mt_results.push((t, r));
+    }
+
+    group("end-to-end quantize -> pack -> multiply (QgemmPath)");
+    let mut path = QgemmPath::new(LogQuantConfig::luq(LogFormat::FP4));
+    let mut path_rng = Xoshiro256::seed_from_u64(7);
+    let e2e = b.bench_throughput("QgemmPath::backward_matmul", products, || {
+        let (res, _) = path.backward_matmul(&a, &g_t, m, k, n, &mut path_rng, 1);
+        res[0]
+    });
+    println!("{}", e2e.report());
+
+    // --- report + JSON ---------------------------------------------------
+    let ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / products as f64;
+    let scalar_ns = ns(&scalar);
+    let speedup = |r: &BenchResult| scalar_ns / ns(r);
+    let kernel_json = |r: &BenchResult| {
+        Json::obj(vec![
+            ("ns_per_product", Json::num(ns(r))),
+            ("speedup_vs_scalar", Json::num(speedup(r))),
+            ("mproducts_per_s", Json::num(r.throughput_melems().unwrap_or(0.0))),
+        ])
+    };
+    let mut kernels: Vec<(String, Json)> = vec![
+        ("scalar mfbprop".to_string(), kernel_json(&scalar)),
+        ("lut flat".to_string(), kernel_json(&flat)),
+        ("lut tiled".to_string(), kernel_json(&tiled)),
+    ];
+    for (t, r) in &mt_results {
+        kernels.push((format!("lut tiled {t}T"), kernel_json(r)));
+    }
+    kernels.push(("e2e qgemm_path".to_string(), kernel_json(&e2e)));
+    let bit_exact = scalar_exact && flat_exact && tiled_exact && mt_exact;
+    let tiled_speedup = speedup(&tiled);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("qgemm")),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("n", Json::num(n as f64)),
+        ("products", Json::num(products as f64)),
+        ("kernels", Json::Obj(kernels)),
+        (
+            "gate",
+            Json::obj(vec![
+                ("lut_tiled_speedup_vs_scalar", Json::num(tiled_speedup)),
+                ("required_speedup", Json::num(4.0)),
+                ("bit_exact_vs_oracle", Json::Bool(bit_exact)),
+            ]),
+        ),
+    ]);
+    let json_path =
+        std::env::var("LUQ_BENCH_JSON").unwrap_or_else(|_| "BENCH_qgemm.json".to_string());
+    match std::fs::write(&json_path, doc.render()) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
+
+    println!(
+        "LUT tiled speedup over scalar MF-BPROP loop: {tiled_speedup:.2}x (gate: >= 4x)"
+    );
+    assert!(bit_exact, "a kernel variant diverged from the f32 oracle");
+    assert!(
+        tiled_speedup >= 4.0,
+        "LUT tiled kernel only {tiled_speedup:.2}x over the scalar loop (gate: >= 4x)"
+    );
+}

@@ -8,8 +8,10 @@
 
 pub mod checkpoint;
 pub mod experiments;
+pub mod qgemm_path;
 pub mod schedule;
 pub mod trainer;
 
+pub use qgemm_path::QgemmPath;
 pub use schedule::{FntSchedule, LrSchedule, StepDecay};
 pub use trainer::{DataSource, RunResult, Trainer, TrainerOptions};

@@ -1,0 +1,196 @@
+//! The trainer-level host-side packed-GEMM reference path: the complete
+//! backward-phase pipeline `quantize → pack → LUT-multiply` for one layer
+//! GEMM, owning all staging so steady-state calls are allocation-free.
+//!
+//! This is the end-to-end consumer the ROADMAP's "host-side GEMM
+//! consumer" item asked for: the fused packed-code emission
+//! (`LogQuantizer::quantize_to_codes_matrix_scratch`) feeds
+//! [`crate::hw::qgemm`] directly, with the per-tensor gradient scale α
+//! applied once to the accumulated α-unit result — exactly the paper's
+//! MAC contract (the scale multiplies outside the accumulator). The AOT
+//! train artifacts keep their own in-graph GEMMs; this path is the
+//! bit-auditable host reference those artifacts (and the `benches/
+//! qgemm.rs` gate) are compared against.
+
+use crate::hw::mfbprop::Int4Code;
+use crate::hw::qgemm::{self, QgemmScratch};
+use crate::quant::{LogQuantConfig, LogQuantizer, QuantScratch, QuantStats};
+use crate::rng::Xoshiro256;
+
+/// Convert the forward quantizer's signed INT4 levels (e.g.
+/// [`crate::quant::UniformQuantizer::encode`] with `bits = 4`, range
+/// `-7..=7`) into MF-BPROP wire codes.
+pub fn int4_codes_from_levels(codes: &[i8]) -> Vec<Int4Code> {
+    codes.iter().map(|&c| Int4Code::from_int(c as i32)).collect()
+}
+
+/// One layer's packed backward-GEMM pipeline with persistent staging.
+pub struct QgemmPath {
+    pub quantizer: LogQuantizer,
+    scratch: QuantScratch,
+    gemm_scratch: QgemmScratch,
+    packed: Vec<u8>,
+    out: Vec<f32>,
+}
+
+impl QgemmPath {
+    pub fn new(cfg: LogQuantConfig) -> QgemmPath {
+        QgemmPath {
+            quantizer: LogQuantizer::new(cfg),
+            scratch: QuantScratch::new(),
+            gemm_scratch: QgemmScratch::new(),
+            packed: Vec::new(),
+            out: Vec::new(),
+        }
+    }
+
+    /// Run one backward GEMM `C[m][n] = α · Σ_x A[m][x] · Q(G)[n][x]`.
+    ///
+    /// * `a_int4`: the INT4 operand (weights/activations), `m × k`
+    ///   row-major.
+    /// * `g_t`: the f32 neural gradient, **transposed** (`n × k`
+    ///   row-major) so each packed row is a contiguous K-stream.
+    /// * `rng` drives the stochastic quantization (`rows · cols`
+    ///   uniforms are always consumed — data-independent stream
+    ///   alignment).
+    ///
+    /// Returns the `m × n` result in real units (α applied) plus the
+    /// quantization stats — `stats.max_abs` is what feeds the hindsight
+    /// tracker (Eq. 24).
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_matmul(
+        &mut self,
+        a_int4: &[Int4Code],
+        g_t: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        rng: &mut Xoshiro256,
+        n_threads: usize,
+    ) -> (&[f32], QuantStats) {
+        assert!(a_int4.len() >= m * k, "int4 operand too short");
+        assert!(g_t.len() >= n * k, "gradient operand too short");
+        let kb = k.div_ceil(2);
+        if self.packed.len() < n * kb {
+            self.packed.resize(n * kb, 0);
+        }
+        if self.out.len() < m * n {
+            self.out.resize(m * n, 0.0);
+        }
+        let stats = self.quantizer.quantize_to_codes_matrix_scratch(
+            g_t,
+            n,
+            k,
+            rng,
+            &mut self.packed,
+            kb,
+            &mut self.scratch,
+        );
+        qgemm::qgemm_packed_mt_with(
+            a_int4,
+            &self.packed,
+            m,
+            k,
+            n,
+            &mut self.out,
+            n_threads,
+            &mut self.gemm_scratch,
+        );
+        // Scale once, outside the accumulation (the MAC works in α-units).
+        for v in self.out[..m * n].iter_mut() {
+            *v *= stats.alpha;
+        }
+        (&self.out[..m * n], stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::qgemm::qgemm_decode_oracle;
+    use crate::quant::{LogFormat, LogQuantConfig, UniformQuantizer, UniformRounding};
+
+    fn random_codes(rng: &mut Xoshiro256, len: usize) -> Vec<Int4Code> {
+        (0..len)
+            .map(|_| Int4Code::from_nibble((rng.next_u64() & 0xF) as u8))
+            .collect()
+    }
+
+    /// End-to-end: the pipeline's real-unit output equals quantizing with
+    /// the same RNG stream, decoding in α-units, f32-matmul in the same
+    /// k-order, then one final α scale — bit for bit.
+    #[test]
+    fn pipeline_matches_decode_oracle_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(71);
+        let (m, k, n) = (10usize, 23, 12); // odd k
+        let a = random_codes(&mut rng, m * k);
+        let g_t: Vec<f32> =
+            (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let mut path = QgemmPath::new(cfg);
+        let mut path_rng = Xoshiro256::seed_from_u64(99);
+        let mut oracle_rng = path_rng.clone();
+        let (got, st) = path.backward_matmul(&a, &g_t, m, k, n, &mut path_rng, 2);
+        // Oracle: same quantization (same stream), decode, naive matmul.
+        let q = LogQuantizer::new(cfg);
+        let (packed, st2) = q.quantize_to_codes_matrix(&g_t, n, k, &mut oracle_rng);
+        assert_eq!(st.alpha, st2.alpha);
+        let alpha_units = qgemm_decode_oracle(&a, &packed, m, k, n);
+        for (idx, (g, acc)) in got.iter().zip(alpha_units.iter()).enumerate() {
+            let want = acc * st.alpha;
+            assert_eq!(g.to_bits(), want.to_bits(), "[{idx}]: {g} vs {want}");
+        }
+        assert!(st.max_abs > 0.0);
+    }
+
+    /// Thread-count invariance carries through the full pipeline.
+    #[test]
+    fn pipeline_is_thread_count_invariant() {
+        let mut rng = Xoshiro256::seed_from_u64(72);
+        let (m, k, n) = (33usize, 40, 17);
+        let a = random_codes(&mut rng, m * k);
+        let g_t: Vec<f32> =
+            (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let mut want: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 8] {
+            let mut path = QgemmPath::new(LogQuantConfig::luq(LogFormat::FP4));
+            let mut r = Xoshiro256::seed_from_u64(5);
+            let (got, _) = path.backward_matmul(&a, &g_t, m, k, n, &mut r, threads);
+            match &want {
+                None => want = Some(got.to_vec()),
+                Some(w) => {
+                    for (i, (g, w)) in got.iter().zip(w.iter()).enumerate() {
+                        assert_eq!(g.to_bits(), w.to_bits(), "threads={threads} idx={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Degenerate gradients (all zero) flow through as zeros, not NaN.
+    #[test]
+    fn zero_gradient_yields_zero_weight_grad() {
+        let mut rng = Xoshiro256::seed_from_u64(73);
+        let (m, k, n) = (4usize, 9, 3);
+        let a = random_codes(&mut rng, m * k);
+        let g_t = vec![0.0f32; n * k];
+        let mut path = QgemmPath::new(LogQuantConfig::luq(LogFormat::FP4));
+        let (got, st) = path.backward_matmul(&a, &g_t, m, k, n, &mut rng, 1);
+        assert!(got.iter().all(|v| *v == 0.0));
+        assert_eq!(st.max_abs, 0.0);
+        assert_eq!(st.alpha, 0.0);
+    }
+
+    /// The forward-quantizer bridge maps INT4 levels onto wire codes.
+    #[test]
+    fn int4_bridge_roundtrips_levels() {
+        let uq = UniformQuantizer::new(4, 3.0, UniformRounding::Rdn);
+        let mut rng = Xoshiro256::seed_from_u64(74);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let levels = uq.encode(&x, &mut rng);
+        let codes = int4_codes_from_levels(&levels);
+        for (l, c) in levels.iter().zip(codes.iter()) {
+            assert_eq!(c.value(), *l as f32, "level {l}");
+        }
+    }
+}

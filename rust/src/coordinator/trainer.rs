@@ -1,13 +1,67 @@
 //! The Trainer: drives one AOT train-step executable through a schedule,
 //! owning data, noise, hindsight state, and metrics.
 
+use crate::coordinator::qgemm_path::QgemmPath;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{CorpusConfig, ImageDataset, ImagesConfig, TokenCorpus};
+use crate::quant::{LogFormat, LogQuantConfig};
 use crate::rng::{NoiseBank, Xoshiro256};
 use crate::runtime::{Engine, Executable, HostTensor};
 use crate::stats::HindsightMax;
 use anyhow::{bail, Context, Result};
 use std::rc::Rc;
+
+/// Resolve the per-layer hindsight estimates into the artifact's scale
+/// inputs plus the single `use_est` flag.
+///
+/// The train artifact's signature is fixed at AOT time with **one**
+/// shared `use_est` scalar for every quantized layer, so the flag can
+/// only be raised once *all* layers have a positive estimate. The seed
+/// overwrote one flag inside the per-layer loop, so whichever layer came
+/// *last* decided for everyone: a single still-warming layer could force
+/// every other layer onto `est = 1.0` garbage scales (or, ordered the
+/// other way, push measured-max layers onto estimates they never made).
+///
+/// Layers without a usable estimate contribute `est = 1.0` (ignored
+/// while the flag is 0 — the artifact falls back to the measured max).
+fn resolve_hindsight_inputs(hindsight: bool, ests: &[Option<f32>]) -> (Vec<f32>, f32) {
+    if !hindsight {
+        return (vec![1.0; ests.len()], 0.0);
+    }
+    let mut vals = Vec::with_capacity(ests.len());
+    let mut all_ready = true;
+    for e in ests {
+        match e {
+            Some(v) if *v > 0.0 => vals.push(*v),
+            _ => {
+                vals.push(1.0);
+                all_ready = false;
+            }
+        }
+    }
+    (vals, if all_ready { 1.0 } else { 0.0 })
+}
+
+/// Final reduction of the eval accumulators. Split out of
+/// [`Trainer::evaluate`] so the zero-batch regression (NaN from `0/0`)
+/// stays unit-testable without compiled artifacts.
+fn eval_reduce(
+    tot_loss: f64,
+    tot_correct: f64,
+    tot_items: f64,
+    n_batches: usize,
+) -> Result<(f32, f32)> {
+    if n_batches == 0 || tot_items <= 0.0 {
+        bail!(
+            "evaluate over an empty sample (n_batches={n_batches}, items={tot_items}) \
+             has no defined loss/accuracy — the seed silently returned NaN here"
+        );
+    }
+    Ok((
+        (tot_loss / n_batches as f64) as f32,
+        (tot_correct / tot_items) as f32,
+    ))
+}
 
 /// Synthetic data source matching a model profile (DESIGN.md §4).
 pub enum DataSource {
@@ -231,25 +285,10 @@ impl Trainer {
                     .expect("noise tensors are f32 by construction"),
             );
         }
-        let mut use_est = 0.0f32;
-        let mut est_inputs: Vec<HostTensor> = Vec::with_capacity(q + 1);
-        for h in self.hindsight.iter() {
-            let est = if self.opts.hindsight {
-                match h.estimate() {
-                    Some(e) if e > 0.0 => {
-                        use_est = 1.0;
-                        e
-                    }
-                    _ => {
-                        use_est = 0.0; // first step: fall back to measured
-                        1.0
-                    }
-                }
-            } else {
-                1.0
-            };
-            est_inputs.push(HostTensor::scalar_f32(est));
-        }
+        let ests: Vec<Option<f32>> = self.hindsight.iter().map(|h| h.estimate()).collect();
+        let (est_vals, use_est) = resolve_hindsight_inputs(self.opts.hindsight, &ests);
+        let est_inputs: Vec<HostTensor> =
+            est_vals.iter().map(|&e| HostTensor::scalar_f32(e)).collect();
         let use_est_input = HostTensor::scalar_f32(use_est);
 
         let mut inputs: Vec<&HostTensor> =
@@ -298,11 +337,16 @@ impl Trainer {
     }
 
     /// Evaluate on `n_batches` held-out batches; returns (loss, acc).
+    /// `n_batches == 0` is an error (the mean over zero batches is
+    /// undefined; the seed returned NaN loss here).
     pub fn evaluate(&self, n_batches: usize) -> Result<(f32, f32)> {
         let eval = self
             .eval
             .as_ref()
             .context("trainer has no eval artifact")?;
+        if n_batches == 0 {
+            bail!("evaluate called with n_batches == 0; pass at least one batch");
+        }
         let meta = &eval.meta;
         let mut tot_loss = 0.0f64;
         let mut tot_correct = 0.0f64;
@@ -320,10 +364,31 @@ impl Trainer {
                 DataSource::Corpus(_) => (meta.batch * meta.model.seq_len) as f64,
             };
         }
-        Ok((
-            (tot_loss / n_batches as f64) as f32,
-            (tot_correct / tot_items) as f32,
-        ))
+        eval_reduce(tot_loss, tot_correct, tot_items, n_batches)
+    }
+
+    /// Build the host-side packed-GEMM reference path ([`QgemmPath`]) for
+    /// quantized layer `layer`, mirroring the scale the artifact
+    /// *actually* applies this step: the single `use_est` flag is only
+    /// raised when **every** layer has a positive estimate (see
+    /// [`resolve_hindsight_inputs`]), so this path quantizes against
+    /// `FixedMax(est)` (Eq. 24) only under that same condition — during
+    /// the warm-up window it falls back to the measured max exactly like
+    /// the artifact does.
+    pub fn qgemm_path(&self, layer: usize) -> QgemmPath {
+        assert!(
+            layer < self.hindsight.len(),
+            "qgemm_path: layer {layer} out of range (artifact has {} quantized layers)",
+            self.hindsight.len()
+        );
+        let fmt = LogFormat::FP4;
+        let ests: Vec<Option<f32>> = self.hindsight.iter().map(|h| h.estimate()).collect();
+        let (est_vals, use_est) = resolve_hindsight_inputs(self.opts.hindsight, &ests);
+        let cfg = match est_vals.get(layer) {
+            Some(&e) if use_est == 1.0 => LogQuantConfig::luq_hindsight(fmt, e),
+            _ => LogQuantConfig::luq(fmt),
+        };
+        QgemmPath::new(cfg)
     }
 
     /// Train for `steps` under a schedule, with optional progress logging.
@@ -351,11 +416,13 @@ impl Trainer {
         Ok(())
     }
 
-    /// Finish a run into a [`RunResult`] (evaluates if possible).
+    /// Finish a run into a [`RunResult`] (evaluates if possible;
+    /// `eval_batches == 0` falls back to the training history like a
+    /// missing eval artifact, rather than erroring out of `evaluate`).
     pub fn result(&self, name: &str, eval_batches: usize) -> Result<RunResult> {
         let (eval_loss, eval_acc) = match &self.eval {
-            Some(_) => self.evaluate(eval_batches)?,
-            None => {
+            Some(_) if eval_batches > 0 => self.evaluate(eval_batches)?,
+            _ => {
                 let last = self.history.last();
                 (last.map_or(f32::NAN, |r| r.loss), last.map_or(0.0, |r| r.train_acc))
             }
@@ -367,5 +434,54 @@ impl Trainer {
             history: self.history.clone(),
             hindsight_trace: self.hindsight_trace.clone(),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite regression: the seed let the *last* layer's warm-up
+    /// state decide `use_est` for every layer. The flag must only be
+    /// raised when all layers have a positive estimate.
+    #[test]
+    fn use_est_requires_every_layer_ready() {
+        // Hindsight off: flag down, neutral scales.
+        let (vals, flag) = resolve_hindsight_inputs(false, &[Some(3.0), Some(2.0)]);
+        assert_eq!(vals, vec![1.0, 1.0]);
+        assert_eq!(flag, 0.0);
+        // All layers warmed up: estimates pass through, flag up.
+        let (vals, flag) = resolve_hindsight_inputs(true, &[Some(3.0), Some(0.5)]);
+        assert_eq!(vals, vec![3.0, 0.5]);
+        assert_eq!(flag, 1.0);
+        // The seed-bug ordering: layer 0 not ready, layer 1 (last) ready.
+        // Seed computed use_est = 1.0 here, forcing layer 0 onto its
+        // placeholder est = 1.0; the fix keeps the flag down.
+        let (vals, flag) = resolve_hindsight_inputs(true, &[None, Some(2.0)]);
+        assert_eq!(vals, vec![1.0, 2.0]);
+        assert_eq!(flag, 0.0);
+        // Mirror ordering (ready layer last-but-one) behaves the same.
+        let (_, flag) = resolve_hindsight_inputs(true, &[Some(2.0), None]);
+        assert_eq!(flag, 0.0);
+        // A non-positive estimate is not "ready".
+        let (_, flag) = resolve_hindsight_inputs(true, &[Some(0.0), Some(2.0)]);
+        assert_eq!(flag, 0.0);
+        // No quantized layers: vacuously ready.
+        let (vals, flag) = resolve_hindsight_inputs(true, &[]);
+        assert!(vals.is_empty());
+        assert_eq!(flag, 1.0);
+    }
+
+    /// Satellite regression: a 0-batch eval must error, not return NaN.
+    #[test]
+    fn eval_reduce_rejects_empty_sample() {
+        let err = eval_reduce(0.0, 0.0, 0.0, 0).unwrap_err().to_string();
+        assert!(err.contains("n_batches=0"), "{err}");
+        // tot_items == 0 with batches > 0 (degenerate dataset) also errors.
+        assert!(eval_reduce(1.0, 0.0, 0.0, 2).is_err());
+        // The healthy path divides as before.
+        let (loss, acc) = eval_reduce(6.0, 30.0, 40.0, 3).unwrap();
+        assert_eq!(loss, 2.0);
+        assert_eq!(acc, 0.75);
     }
 }

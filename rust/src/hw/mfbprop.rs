@@ -42,6 +42,27 @@ impl Int4Code {
     pub fn all() -> impl Iterator<Item = Int4Code> {
         (0..16u8).map(|c| Int4Code { negative: c & 8 != 0, magnitude: c & 7 })
     }
+
+    /// The 4-bit wire code `[sign | magnitude]` — the index layout the
+    /// qgemm product LUT uses for this operand.
+    #[inline]
+    pub fn nibble(&self) -> u8 {
+        ((self.negative as u8) << 3) | self.magnitude
+    }
+
+    /// Decode a wire nibble (inverse of [`Self::nibble`]).
+    #[inline]
+    pub fn from_nibble(nib: u8) -> Int4Code {
+        Int4Code { negative: nib & 8 != 0, magnitude: nib & 7 }
+    }
+
+    /// From a signed integer level in `-7..=7` — the code range the
+    /// forward-pass [`crate::quant::UniformQuantizer::encode`] emits for
+    /// `bits = 4`.
+    pub fn from_int(v: i32) -> Int4Code {
+        assert!((-7..=7).contains(&v), "INT4 level out of range: {v}");
+        Int4Code { negative: v < 0, magnitude: v.unsigned_abs() as u8 }
+    }
 }
 
 /// An FP4 `[1,3,0]` code: sign + 3-bit exponent field. Exponent code 0 is
@@ -83,6 +104,12 @@ impl Fp4Code {
     #[inline]
     pub fn from_nibble(nib: u8) -> Fp4Code {
         Fp4Code { negative: nib & 8 != 0, exp_field: nib & 7 }
+    }
+
+    /// The wire nibble `[sign | exponent]` (inverse of [`Self::from_nibble`]).
+    #[inline]
+    pub fn nibble(&self) -> u8 {
+        ((self.negative as u8) << 3) | self.exp_field
     }
 }
 
@@ -141,22 +168,20 @@ pub fn reference_product(a: Int4Code, g: Fp4Code) -> f32 {
 /// gradient operand arrives as the 2-codes-per-byte buffer produced by
 /// the fused quantize→code kernel (`LogQuantizer::quantize_to_codes_into`
 /// / `LogFormat::pack_nibbles` layout, low nibble first) and is consumed
-/// without unpacking into a byte-per-code staging buffer. Each product is
-/// the multiplier-free block of Fig. 7b; accumulation is f32 in α-units
-/// (multiply the result by the gradient scale α outside).
+/// without unpacking into a byte-per-code staging buffer. Accumulation is
+/// f32 in α-units (multiply the result by the gradient scale α outside).
+///
+/// This is the `1 × n` special case of the tiled packed GEMM
+/// ([`crate::hw::qgemm`]): each product comes from the 256-entry LUT
+/// whose entries *are* the FP7 decodes of the Fig. 7b multiplier-free
+/// block (`products_are_exact_in_fp7_no_rounding` proves them equal to
+/// the reference f32 products), so the result is bit-identical to the
+/// per-element `mfbprop_multiply` + `decode_fp7` loop it replaced.
 ///
 /// `n` is the element count; `int4.len() >= n` and
 /// `packed_fp4.len() >= n.div_ceil(2)`.
 pub fn mfbprop_dot_packed(int4: &[Int4Code], packed_fp4: &[u8], n: usize) -> f32 {
-    assert!(int4.len() >= n, "int4 operand too short");
-    assert!(packed_fp4.len() >= n.div_ceil(2), "packed fp4 operand too short");
-    let mut acc = 0.0f32;
-    for i in 0..n {
-        let byte = packed_fp4[i >> 1];
-        let nib = if i & 1 == 0 { byte & 0x0F } else { byte >> 4 };
-        acc += decode_fp7(mfbprop_multiply(int4[i], Fp4Code::from_nibble(nib)));
-    }
-    acc
+    crate::hw::qgemm::dot_packed_lut(int4, packed_fp4, n)
 }
 
 /// Decode an FP7 code produced by [`mfbprop_multiply`] back to f32.

@@ -10,10 +10,19 @@
 //! regenerating the paper's gate tables and the 5×/~8%/~22% headline
 //! ratios.
 
+//! On top of the bit-exact element block sits the **host-side packed
+//! 4-bit GEMM** ([`qgemm`]): a tiled, multithreaded matmul that consumes
+//! the fused packed-code stream through a 256-entry product LUT — the
+//! matrix consumer that completes the quantize→pack→multiply pipeline.
+
 pub mod gates;
 pub mod mac;
 pub mod mfbprop;
+pub mod qgemm;
 
 pub use gates::{gate_table_mfbprop, gate_table_standard, GateEntry, ACCUM_FP16_GATES, ACCUM_FP32_GATES};
 pub use mac::MacSimulator;
 pub use mfbprop::{mfbprop_multiply, reference_product, Fp4Code, Int4Code};
+pub use qgemm::{
+    product_lut, qgemm_packed, qgemm_packed_into, qgemm_packed_mt, ProductLut, QgemmScratch,
+};

@@ -1,0 +1,552 @@
+//! Host-side packed 4-bit GEMM: the tiled MF-BPROP LUT matmul.
+//!
+//! This is the matrix consumer that turns the fused packed-code emission
+//! (`LogQuantizer::quantize_to_codes_matrix_into`) into a complete
+//! quantize → pack → multiply pipeline. The backward-phase product
+//! `INT4 × FP4 [1,3,0]` needs no multiplier (App. A.4.1); on a host CPU
+//! the same observation collapses the whole `mfbprop_multiply` +
+//! `decode_fp7` per-element pipeline into **one load from a 256-entry
+//! `(INT4 code, FP4 nibble) → f32` product LUT** — every entry is the
+//! FP7 decode of the multiplier-free block, and
+//! `products_are_exact_in_fp7_no_rounding` proves those decodes equal the
+//! reference f32 products bit-for-bit, so the LUT kernel is *exact*, not
+//! approximate.
+//!
+//! Operand layout (`qgemm_packed(a, b_t_packed, m, k, n)`):
+//!
+//! * `A`: `m × k` row-major [`Int4Code`]s (weights/activations — the
+//!   mantissa-only operand).
+//! * `B`: the FP4 neural-gradient operand, **transposed and packed**:
+//!   `n` rows of `k` codes at 2 codes/byte (low nibble first), row stride
+//!   `k.div_ceil(2)` bytes — exactly what
+//!   `LogQuantizer::quantize_to_codes_matrix_into` emits for Bᵀ. Both
+//!   dot operands are then contiguous in the reduction dimension.
+//! * `out[i·n + j] = Σ_x A[i·k + x] · B[j·k + x]` in α-units (the
+//!   per-tensor gradient scale multiplies the *accumulated* result
+//!   outside, as in the paper's MAC).
+//!
+//! **Bit-exactness contract** (mirrors the chunked-execution contract of
+//! `quant::kernel`): every variant in this module — scalar MF-BPROP loop,
+//! flat LUT loop, cache-tiled kernel, and the multithreaded row-band
+//! driver at any thread count — accumulates each output element in
+//! strictly increasing `k` order into a single f32 accumulator, so all of
+//! them are **bit-identical** to the decode-then-f32-matmul oracle. Tiling
+//! and threading only reorder *which outputs* are computed when, never the
+//! accumulation inside an output.
+//!
+//! [`mfbprop_dot_packed`](super::mfbprop::mfbprop_dot_packed) is the
+//! `1 × k` special case of this kernel.
+
+use super::mfbprop::{decode_fp7, mfbprop_multiply, Fp4Code, Int4Code};
+use std::sync::OnceLock;
+
+/// Row-tile height (A rows per tile). With `TILE_N` this bounds the hot
+/// working set: one B row is reused `TILE_M` times out of L1/L2 before
+/// being evicted, cutting B traffic by `TILE_M` versus the flat loop.
+pub const TILE_M: usize = 16;
+/// Column-tile width (B rows per tile).
+pub const TILE_N: usize = 16;
+
+/// The 256-entry product table: index `(int4_nibble << 4) | fp4_nibble`,
+/// value `decode_fp7(mfbprop_multiply(int4, fp4))`. 1 KiB of f32 — lives
+/// in L1 for the whole GEMM.
+pub struct ProductLut {
+    table: [f32; 256],
+}
+
+impl ProductLut {
+    /// Build the table from the multiplier-free block itself, so the LUT
+    /// can never drift from the Fig. 8 transform it caches.
+    pub fn build() -> ProductLut {
+        let mut table = [0.0f32; 256];
+        for a in Int4Code::all() {
+            for g in Fp4Code::all() {
+                let idx = ((a.nibble() as usize) << 4) | g.nibble() as usize;
+                table[idx] = decode_fp7(mfbprop_multiply(a, g));
+            }
+        }
+        ProductLut { table }
+    }
+
+    /// The exact f32 product of the two 4-bit codes. Masking keeps the
+    /// index provably in-bounds, which also elides the bounds check.
+    #[inline(always)]
+    pub fn product(&self, int4_nibble: u8, fp4_nibble: u8) -> f32 {
+        self.table[((int4_nibble as usize & 0xF) << 4) | (fp4_nibble as usize & 0xF)]
+    }
+}
+
+static LUT: OnceLock<ProductLut> = OnceLock::new();
+
+/// The process-wide product LUT (built once, on first use).
+pub fn product_lut() -> &'static ProductLut {
+    LUT.get_or_init(ProductLut::build)
+}
+
+/// Reusable staging for the tiled kernel: the A operand converted to raw
+/// wire nibbles once per call (1 byte/element instead of re-deriving
+/// `[sign | magnitude]` from the struct `m·n` times). One instance per
+/// long-lived consumer makes repeated GEMMs allocation-free.
+#[derive(Default)]
+pub struct QgemmScratch {
+    a_nib: Vec<u8>,
+}
+
+impl QgemmScratch {
+    pub fn new() -> QgemmScratch {
+        QgemmScratch::default()
+    }
+}
+
+fn check_shapes(int4: &[Int4Code], packed_fp4: &[u8], m: usize, k: usize, n: usize, out: &[f32]) {
+    assert!(
+        int4.len() >= m * k,
+        "int4 operand too short: {} < {}",
+        int4.len(),
+        m * k
+    );
+    if n > 0 && k > 0 {
+        let kb = k.div_ceil(2);
+        assert!(
+            packed_fp4.len() >= n * kb,
+            "packed fp4 operand too short: {} < {}",
+            packed_fp4.len(),
+            n * kb
+        );
+    }
+    assert!(out.len() >= m * n, "output too short: {} < {}", out.len(), m * n);
+}
+
+fn fill_nibbles(int4: &[Int4Code], out: &mut Vec<u8>) {
+    out.clear();
+    out.extend(int4.iter().map(Int4Code::nibble));
+}
+
+/// The single copy of the packed-dot inner loop: `k` products off one
+/// packed B row (`brow`, low nibble first, half-filled trailing byte for
+/// odd `k`), the A-side nibble supplied by index through `nib` (a
+/// pre-extracted byte or an `Int4Code::nibble()` call — monomorphized
+/// and inlined either way). One f32 accumulator in increasing element
+/// order — the accumulation contract every variant and the oracle share.
+#[inline(always)]
+fn dot_lut(lut: &ProductLut, k: usize, brow: &[u8], nib: impl Fn(usize) -> u8) -> f32 {
+    let mut acc = 0.0f32;
+    let pairs = k / 2;
+    for (p, &byte) in brow[..pairs].iter().enumerate() {
+        acc += lut.product(nib(2 * p), byte & 0x0F);
+        acc += lut.product(nib(2 * p + 1), byte >> 4);
+    }
+    if k % 2 == 1 {
+        acc += lut.product(nib(k - 1), brow[k / 2] & 0x0F);
+    }
+    acc
+}
+
+/// One packed dot product through the LUT — the `1 × k` kernel that
+/// [`super::mfbprop::mfbprop_dot_packed`] delegates to.
+pub fn dot_packed_lut(int4: &[Int4Code], packed_fp4: &[u8], k: usize) -> f32 {
+    assert!(int4.len() >= k, "int4 operand too short");
+    assert!(packed_fp4.len() >= k.div_ceil(2), "packed fp4 operand too short");
+    dot_lut(product_lut(), k, &packed_fp4[..k.div_ceil(2)], |x| int4[x].nibble())
+}
+
+/// The cache-tiled inner kernel over a band of `rows` A-rows (given as
+/// pre-extracted nibbles). `out` is the matching `rows × n` band.
+fn gemm_tiles(
+    a_nib: &[u8],
+    packed_fp4: &[u8],
+    rows: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    lut: &ProductLut,
+) {
+    let kb = k.div_ceil(2);
+    for i0 in (0..rows).step_by(TILE_M) {
+        let mi = (rows - i0).min(TILE_M);
+        for j0 in (0..n).step_by(TILE_N) {
+            let nj = (n - j0).min(TILE_N);
+            // j inner: the nj B rows of this tile stay hot across the mi
+            // A rows; the A row is a single contiguous nibble stream.
+            for i in i0..i0 + mi {
+                let arow = &a_nib[i * k..i * k + k];
+                let orow = &mut out[i * n..i * n + n];
+                for j in j0..j0 + nj {
+                    let brow = &packed_fp4[j * kb..j * kb + kb];
+                    orow[j] = dot_lut(lut, k, brow, |x| arow[x]);
+                }
+            }
+        }
+    }
+}
+
+/// The full-control entry point: tiled packed GEMM over `n_threads`
+/// contiguous row bands (one scoped thread per band), reusing `scratch`
+/// for the A-nibble staging — **allocation-free at steady state** for
+/// any thread count. Each output element is computed by exactly one
+/// thread with the same sequential-`k` accumulation as the
+/// single-threaded kernel, so the result is **bit-identical for every
+/// `n_threads`** (the qgemm instance of the chunked-execution contract).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_packed_mt_with(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+) {
+    if m == 0 || n == 0 {
+        return; // nothing to compute or write
+    }
+    check_shapes(int4, packed_fp4, m, k, n, out);
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let lut = product_lut();
+    fill_nibbles(&int4[..m * k], &mut scratch.a_nib);
+    let a_nib = &scratch.a_nib;
+    let t = n_threads.max(1).min(m);
+    if t == 1 {
+        gemm_tiles(a_nib, packed_fp4, m, k, n, &mut out[..m * n], lut);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (b, out_band) in out[..m * n].chunks_mut(rows_per * n).enumerate() {
+            let rows = out_band.len() / n;
+            let nib_band = &a_nib[b * rows_per * k..(b * rows_per + rows) * k];
+            s.spawn(move || gemm_tiles(nib_band, packed_fp4, rows, k, n, out_band, lut));
+        }
+    });
+}
+
+/// Single-threaded tiled packed GEMM reusing `scratch` for the A-nibble
+/// staging (allocation-free at steady state).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_packed_with(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    scratch: &mut QgemmScratch,
+) {
+    qgemm_packed_mt_with(int4, packed_fp4, m, k, n, out, 1, scratch);
+}
+
+/// Tiled packed GEMM into a caller buffer (owns its scratch).
+pub fn qgemm_packed_into(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let mut scratch = QgemmScratch::new();
+    qgemm_packed_with(int4, packed_fp4, m, k, n, out, &mut scratch);
+}
+
+/// Allocating wrapper: `m × n` result in α-units.
+pub fn qgemm_packed(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    qgemm_packed_into(int4, packed_fp4, m, k, n, &mut out);
+    out
+}
+
+/// Multithreaded tiled packed GEMM (owns its scratch); see
+/// [`qgemm_packed_mt_with`] for the allocation-free variant and the
+/// thread-count-invariance contract.
+pub fn qgemm_packed_mt(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+) {
+    let mut scratch = QgemmScratch::new();
+    qgemm_packed_mt_with(int4, packed_fp4, m, k, n, out, n_threads, &mut scratch);
+}
+
+/// Flat (untiled) LUT loop — the middle rung of the bench ladder between
+/// the scalar MF-BPROP loop and the tiled kernel. Same bit-exact result.
+pub fn qgemm_packed_flat(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    check_shapes(int4, packed_fp4, m, k, n, out);
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    let lut = product_lut();
+    for i in 0..m {
+        let arow = &int4[i * k..i * k + k];
+        let orow = &mut out[i * n..i * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &packed_fp4[j * kb..j * kb + kb];
+            *o = dot_lut(lut, k, brow, |x| arow[x].nibble());
+        }
+    }
+}
+
+/// The decode-then-f32-matmul **oracle**: decode every FP4 nibble to its
+/// α-unit f32 value ([`Fp4Code::value`]) and matmul with [`Int4Code::value`]
+/// in plain f32, accumulating in the same increasing-`k` order as every
+/// kernel variant. This is the independent reference the bit-exactness
+/// gates (unit tests, property test, `benches/qgemm.rs`) compare against —
+/// it shares no code with the LUT/MF-BPROP kernels, only the accumulation
+/// contract. Not a performance path.
+pub fn qgemm_decode_oracle(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let kb = k.div_ceil(2);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for x in 0..k {
+                let byte = packed_fp4[j * kb + (x >> 1)];
+                let nib = if x & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+                acc += int4[i * k + x].value() * Fp4Code::from_nibble(nib).value();
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// The scalar baseline: per-element `mfbprop_multiply` + `decode_fp7`,
+/// exactly what consuming the packed stream cost before the LUT kernel
+/// (the per-element body of the pre-qgemm `mfbprop_dot_packed`, looped
+/// over the output matrix). Kept as the bench baseline the ≥4× gate in
+/// `benches/qgemm.rs` measures against — and as a second oracle, since
+/// its accumulation order matches the LUT kernels.
+pub fn qgemm_scalar_reference(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    check_shapes(int4, packed_fp4, m, k, n, out);
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    for i in 0..m {
+        let arow = &int4[i * k..i * k + k];
+        let orow = &mut out[i * n..i * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &packed_fp4[j * kb..j * kb + kb];
+            let mut acc = 0.0f32;
+            for (x, &a) in arow.iter().enumerate() {
+                let byte = brow[x >> 1];
+                let nib = if x & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+                acc += decode_fp7(mfbprop_multiply(a, Fp4Code::from_nibble(nib)));
+            }
+            *o = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+    use crate::rng::Xoshiro256;
+    use crate::testutil::prop_check;
+
+    // The shared decode-then-f32-matmul oracle lives in the parent module
+    // (`qgemm_decode_oracle`) so tests, `coordinator::qgemm_path` tests,
+    // and `benches/qgemm.rs` all gate against the same reference.
+    use super::qgemm_decode_oracle as oracle;
+
+    fn random_codes(rng: &mut Xoshiro256, len: usize) -> Vec<Int4Code> {
+        (0..len)
+            .map(|_| Int4Code::from_nibble((rng.next_u64() & 0xF) as u8))
+            .collect()
+    }
+
+    fn random_packed(rng: &mut Xoshiro256, rows: usize, k: usize) -> Vec<u8> {
+        (0..rows * k.div_ceil(2))
+            .map(|_| (rng.next_u64() & 0xFF) as u8)
+            .collect()
+    }
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+        }
+    }
+
+    /// The LUT is exactly the multiplier-free block: every one of the
+    /// 256 entries equals both the FP7 decode and the reference product.
+    #[test]
+    fn lut_matches_mfbprop_and_reference_exactly() {
+        let lut = product_lut();
+        for a in Int4Code::all() {
+            for g in Fp4Code::all() {
+                let got = lut.product(a.nibble(), g.nibble());
+                let via_block = decode_fp7(mfbprop_multiply(a, g));
+                let reference = super::super::mfbprop::reference_product(a, g);
+                assert_eq!(got.to_bits(), via_block.to_bits(), "{a:?} × {g:?}");
+                assert_eq!(got.to_bits(), reference.to_bits(), "{a:?} × {g:?}");
+            }
+        }
+    }
+
+    /// Satellite: the property test. All kernel variants match the
+    /// decode-then-f32-matmul oracle bit-exactly across shapes including
+    /// odd K (half-filled trailing byte), M/N off the tile grid, and
+    /// 1/2/8 threads (bit-identical per the chunked-MT contract).
+    #[test]
+    fn qgemm_matches_oracle_across_shapes_and_threads() {
+        prop_check(
+            "qgemm_oracle",
+            0xA4,
+            25,
+            |rng| {
+                let m = 1 + rng.uniform_usize(2 * TILE_M + 3);
+                let k = 1 + rng.uniform_usize(67);
+                let n = 1 + rng.uniform_usize(2 * TILE_N + 3);
+                let a = random_codes(rng, m * k);
+                let b = random_packed(rng, n, k);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let want = oracle(a, b, m, k, n);
+                let tiled = qgemm_packed(a, b, m, k, n);
+                if tiled.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
+                    return Err(format!("tiled != oracle at m={m} k={k} n={n}"));
+                }
+                let mut flat = vec![0.0f32; m * n];
+                qgemm_packed_flat(a, b, m, k, n, &mut flat);
+                let mut scalar = vec![0.0f32; m * n];
+                qgemm_scalar_reference(a, b, m, k, n, &mut scalar);
+                for threads in [1usize, 2, 8] {
+                    let mut mt = vec![0.0f32; m * n];
+                    qgemm_packed_mt(a, b, m, k, n, &mut mt, threads);
+                    if mt.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
+                        return Err(format!("{threads}T != oracle at m={m} k={k} n={n}"));
+                    }
+                }
+                if flat != tiled || scalar != tiled {
+                    return Err(format!("variant disagreement at m={m} k={k} n={n}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Deliberate boundary shapes: exact tile multiples, one-off-tile,
+    /// single row/col, odd and even K crossing the trailing-byte path.
+    #[test]
+    fn qgemm_exact_on_tile_boundaries() {
+        let mut rng = Xoshiro256::seed_from_u64(0xB0);
+        for (m, n) in [
+            (TILE_M, TILE_N),
+            (TILE_M + 1, TILE_N - 1),
+            (2 * TILE_M, 2 * TILE_N + 1),
+            (1, 1),
+            (1, 2 * TILE_N),
+            (2 * TILE_M, 1),
+        ] {
+            for k in [1usize, 2, 15, 16, 33] {
+                let a = random_codes(&mut rng, m * k);
+                let b = random_packed(&mut rng, n, k);
+                let want = oracle(&a, &b, m, k, n);
+                let got = qgemm_packed(&a, &b, m, k, n);
+                assert_bits_eq(&got, &want, &format!("m={m} k={k} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_empty_shapes_are_safe() {
+        let mut out = vec![1.0f32; 8];
+        qgemm_packed_into(&[], &[], 0, 5, 3, &mut out);
+        qgemm_packed_into(&[], &[], 4, 5, 0, &mut out);
+        assert_eq!(out, vec![1.0f32; 8]); // m==0 / n==0: untouched
+        qgemm_packed_mt(&random_codes(&mut Xoshiro256::seed_from_u64(1), 6), &[], 2, 0, 3, &mut out, 4);
+        assert_eq!(&out[..6], &[0.0; 6]); // k==0: zero dot products
+    }
+
+    /// `mfbprop_dot_packed` is the 1×K special case of the GEMM kernel.
+    #[test]
+    fn dot_is_the_1xk_special_case() {
+        use super::super::mfbprop::mfbprop_dot_packed;
+        let mut rng = Xoshiro256::seed_from_u64(0xD1);
+        for k in [1usize, 2, 7, 64, 513] {
+            let a = random_codes(&mut rng, k);
+            let b = random_packed(&mut rng, 1, k);
+            let via_gemm = qgemm_packed(&a, &b, 1, k, 1)[0];
+            let via_dot = mfbprop_dot_packed(&a, &b, k);
+            let want = oracle(&a, &b, 1, k, 1)[0];
+            assert_eq!(via_gemm.to_bits(), want.to_bits(), "k={k}");
+            assert_eq!(via_dot.to_bits(), want.to_bits(), "k={k}");
+        }
+    }
+
+    /// End-to-end: quantizer-emitted packed matrix codes feed the GEMM and
+    /// agree with decoding those codes and matmul-ing in f32 (α-units).
+    #[test]
+    fn quantizer_matrix_codes_feed_qgemm() {
+        let mut rng = Xoshiro256::seed_from_u64(0xE2);
+        let (m, k, n) = (9usize, 37, 11); // odd k: half-filled row tails
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let g: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let (packed, st) = q.quantize_to_codes_matrix(&g, n, k, &mut rng);
+        assert!(st.alpha > 0.0);
+        let a = random_codes(&mut rng, m * k);
+        let want = oracle(&a, &packed, m, k, n);
+        let got = qgemm_packed(&a, &packed, m, k, n);
+        assert_bits_eq(&got, &want, "e2e");
+    }
+
+    /// Reusing one scratch across differently-shaped calls stays correct.
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(0xF3);
+        let mut scratch = QgemmScratch::new();
+        for (m, k, n) in [(5usize, 12usize, 7usize), (20, 3, 2), (1, 33, 40)] {
+            let a = random_codes(&mut rng, m * k);
+            let b = random_packed(&mut rng, n, k);
+            let mut out = vec![0.0f32; m * n];
+            qgemm_packed_with(&a, &b, m, k, n, &mut out, &mut scratch);
+            assert_bits_eq(&out, &oracle(&a, &b, m, k, n), &format!("m={m} k={k} n={n}"));
+        }
+    }
+}

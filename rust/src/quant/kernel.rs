@@ -338,7 +338,9 @@ pub fn codes_dispatch(
 /// `*_into` call allocation-free after warmup.
 #[derive(Default)]
 pub struct QuantScratch {
-    /// Chunk-sized uniform-noise staging buffer.
+    /// Uniform-noise staging buffer: chunk-sized for SMP, row-sized for
+    /// the matrix code emitter (`quantize_to_codes_matrix_scratch`);
+    /// grows to the larger consumer and is reused by both.
     pub(crate) noise: Vec<f32>,
     /// Chunk-sized per-sample staging buffer (SMP accumulation).
     pub(crate) sample: Vec<f32>,

@@ -56,9 +56,18 @@ impl LogFormat {
     /// The unbiased scale: `α` such that `α·2^(L−1) = max_abs` exactly.
     /// A tensor quantized with this `α` can represent its own maximum, so
     /// the "above range" region is empty and contributes no bias.
+    ///
+    /// Degenerate inputs are hardened here instead of debug-asserted: a
+    /// non-positive or NaN `max_abs` — an all-zero tensor, or a hindsight
+    /// estimate before any observation — returns `α = 0`, which the
+    /// quantizer paths treat as "emit all zeros". The seed only
+    /// `debug_assert`ed, so release builds flowed `1/α = ∞` (then
+    /// NaN/Inf) straight into the kernels.
     #[inline]
     pub fn alpha_for_max(&self, max_abs: f32) -> f32 {
-        debug_assert!(max_abs > 0.0);
+        if max_abs.is_nan() || max_abs <= 0.0 {
+            return 0.0;
+        }
         max_abs / ((self.levels() - 1) as f32).exp2()
     }
 
@@ -186,6 +195,20 @@ mod tests {
         let max = 13.7f32;
         let a = f.alpha_for_max(max);
         assert!((f.top(a) - max).abs() < max * 1e-6);
+    }
+
+    /// Satellite: degenerate maxima yield α = 0 (not ∞/NaN downstream)
+    /// in release builds too — the quantizers turn α = 0 into all-zero
+    /// output.
+    #[test]
+    fn alpha_for_max_degenerate_inputs_yield_zero() {
+        let f = LogFormat::FP4;
+        assert_eq!(f.alpha_for_max(0.0), 0.0);
+        assert_eq!(f.alpha_for_max(-3.0), 0.0);
+        assert_eq!(f.alpha_for_max(f32::NAN), 0.0);
+        // Positive infinity propagates (caught by the quantizers' finite
+        // check); the important part is it is not silently NaN.
+        assert!(f.alpha_for_max(f32::INFINITY).is_infinite());
     }
 
     #[test]

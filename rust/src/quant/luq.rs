@@ -190,6 +190,26 @@ impl LogQuantizer {
         x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
     }
 
+    /// Resolve α for a tensor, or `None` when quantization is degenerate
+    /// and must emit all zeros: an all-zero tensor, a non-finite max, or
+    /// a scale policy that resolves to a non-positive/non-finite α (e.g.
+    /// `FixedMax(0)` — a hindsight estimate before any observation). The
+    /// hardened [`LogFormat::alpha_for_max`] maps non-positive maxima to
+    /// `α = 0`; this is the single chokepoint that keeps `1/α = ∞` out
+    /// of the kernels in release builds.
+    #[inline]
+    fn alpha_checked(&self, max_abs: f32) -> Option<f32> {
+        if max_abs == 0.0 {
+            return None;
+        }
+        let alpha = self.alpha_for(max_abs);
+        if alpha.is_finite() && alpha > 0.0 {
+            Some(alpha)
+        } else {
+            None
+        }
+    }
+
     /// Quantize `x` into `out` (dequantized f32 values on the grid), using
     /// one uniform from `noise` per element (only consumed on stochastic
     /// paths, but `noise.len() >= x.len()` is required so the layout is
@@ -201,11 +221,13 @@ impl LogQuantizer {
         assert_eq!(x.len(), out.len());
         assert!(noise.len() >= x.len(), "need one uniform per element");
         let max_abs = Self::max_abs(x);
-        if max_abs == 0.0 {
-            out.fill(0.0);
-            return QuantStats::default();
-        }
-        let alpha = self.alpha_for(max_abs);
+        let alpha = match self.alpha_checked(max_abs) {
+            Some(a) => a,
+            None => {
+                out.fill(0.0);
+                return QuantStats { max_abs, ..QuantStats::default() };
+            }
+        };
         let p = KernelParams::new(self.cfg.format, alpha);
         let cs = kernel::quantize_dispatch(
             self.cfg.underflow,
@@ -235,11 +257,14 @@ impl LogQuantizer {
         );
         assert!(noise.len() >= x.len(), "need one uniform per element");
         let max_abs = Self::max_abs(x);
-        if max_abs == 0.0 {
-            packed[..x.len().div_ceil(2)].fill(0);
-            return QuantStats::default();
-        }
-        let alpha = self.alpha_for(max_abs);
+        let alpha = match self.alpha_checked(max_abs) {
+            Some(a) => a,
+            None => {
+                // All-zero in -> all-zero codes out (degenerate scale).
+                packed[..x.len().div_ceil(2)].fill(0);
+                return QuantStats { max_abs, ..QuantStats::default() };
+            }
+        };
         let p = KernelParams::new(self.cfg.format, alpha);
         let cs = kernel::codes_dispatch(
             self.cfg.underflow,
@@ -259,6 +284,151 @@ impl LogQuantizer {
         let mut packed = vec![0u8; x.len().div_ceil(2)];
         let stats = self.quantize_to_codes_into(x, &noise, &mut packed);
         (packed, stats)
+    }
+
+    /// Row-major **matrix** variant of
+    /// [`quantize_to_codes_into`](Self::quantize_to_codes_into): one
+    /// per-tensor α over the whole `rows × cols` matrix, each row packed
+    /// independently so it starts at a byte boundary — for odd `cols` the
+    /// trailing half-byte is zero-padded per row instead of bleeding into
+    /// the next row. Rows are written `row_stride_bytes` apart
+    /// (`>= cols.div_ceil(2)`), so callers can emit into padded/tiled
+    /// layouts. This is exactly the packed-Bᵀ operand layout
+    /// [`crate::hw::qgemm::qgemm_packed`] consumes.
+    ///
+    /// `noise` supplies one uniform per element, row-major like `x`.
+    /// Degenerate tensors/scales (all-zero input, `FixedMax(0)`) emit
+    /// all-zero codes, mirroring the flat path.
+    pub fn quantize_to_codes_matrix_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        noise: &[f32],
+        packed: &mut [u8],
+        row_stride_bytes: usize,
+    ) -> QuantStats {
+        assert!(
+            self.cfg.format.bits() <= 4,
+            "packed-code path needs a <= 4-bit format"
+        );
+        let n = rows * cols;
+        assert!(x.len() >= n, "matrix input too short");
+        assert!(noise.len() >= n, "need one uniform per element");
+        let rb = cols.div_ceil(2);
+        assert!(row_stride_bytes >= rb, "row stride smaller than a packed row");
+        if rows > 0 {
+            assert!(
+                packed.len() >= (rows - 1) * row_stride_bytes + rb,
+                "packed buffer too small"
+            );
+        }
+        let max_abs = Self::max_abs(&x[..n]);
+        let alpha = match self.alpha_checked(max_abs) {
+            Some(a) => a,
+            None => {
+                for r in 0..rows {
+                    packed[r * row_stride_bytes..r * row_stride_bytes + rb].fill(0);
+                }
+                return QuantStats { max_abs, ..QuantStats::default() };
+            }
+        };
+        let p = KernelParams::new(self.cfg.format, alpha);
+        let mut total = kernel::ChunkStats::default();
+        for r in 0..rows {
+            total.merge(kernel::codes_dispatch(
+                self.cfg.underflow,
+                self.cfg.rounding,
+                &p,
+                &x[r * cols..r * cols + cols],
+                &noise[r * cols..r * cols + cols],
+                &mut packed[r * row_stride_bytes..r * row_stride_bytes + rb],
+            ));
+        }
+        QuantStats::from_counts(max_abs, alpha, total, n)
+    }
+
+    /// Allocating wrapper around
+    /// [`quantize_to_codes_matrix_into`](Self::quantize_to_codes_matrix_into)
+    /// with the dense stride (`cols.div_ceil(2)` bytes per row).
+    pub fn quantize_to_codes_matrix(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Xoshiro256,
+    ) -> (Vec<u8>, QuantStats) {
+        let mut noise = vec![0.0f32; rows * cols];
+        rng.fill_uniform(&mut noise);
+        let rb = cols.div_ceil(2);
+        let mut packed = vec![0u8; rows * rb];
+        let stats =
+            self.quantize_to_codes_matrix_into(x, rows, cols, &noise, &mut packed, rb);
+        (packed, stats)
+    }
+
+    /// Zero-steady-state-allocation matrix code emission: noise is staged
+    /// row-by-row in `scratch` (one `fill_uniform` per row). The uniform
+    /// consumption order equals one flat fill over `rows × cols`, so the
+    /// packed output and stats are bit-identical to
+    /// [`quantize_to_codes_matrix`](Self::quantize_to_codes_matrix) from
+    /// the same generator state — this call always consumes exactly
+    /// `rows · cols` uniforms, degenerate tensors included, so stream
+    /// alignment never depends on the data.
+    #[allow(clippy::too_many_arguments)]
+    pub fn quantize_to_codes_matrix_scratch(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Xoshiro256,
+        packed: &mut [u8],
+        row_stride_bytes: usize,
+        scratch: &mut QuantScratch,
+    ) -> QuantStats {
+        assert!(
+            self.cfg.format.bits() <= 4,
+            "packed-code path needs a <= 4-bit format"
+        );
+        let n = rows * cols;
+        assert!(x.len() >= n, "matrix input too short");
+        let rb = cols.div_ceil(2);
+        assert!(row_stride_bytes >= rb, "row stride smaller than a packed row");
+        if rows > 0 {
+            assert!(
+                packed.len() >= (rows - 1) * row_stride_bytes + rb,
+                "packed buffer too small"
+            );
+        }
+        if scratch.noise.len() < cols {
+            scratch.noise.resize(cols, 0.0);
+        }
+        let max_abs = Self::max_abs(&x[..n]);
+        let alpha = match self.alpha_checked(max_abs) {
+            Some(a) => a,
+            None => {
+                for r in 0..rows {
+                    rng.fill_uniform(&mut scratch.noise[..cols]);
+                    packed[r * row_stride_bytes..r * row_stride_bytes + rb].fill(0);
+                }
+                return QuantStats { max_abs, ..QuantStats::default() };
+            }
+        };
+        let p = KernelParams::new(self.cfg.format, alpha);
+        let mut total = kernel::ChunkStats::default();
+        for r in 0..rows {
+            let nb = &mut scratch.noise[..cols];
+            rng.fill_uniform(nb);
+            total.merge(kernel::codes_dispatch(
+                self.cfg.underflow,
+                self.cfg.rounding,
+                &p,
+                &x[r * cols..r * cols + cols],
+                nb,
+                &mut packed[r * row_stride_bytes..r * row_stride_bytes + rb],
+            ));
+        }
+        QuantStats::from_counts(max_abs, alpha, total, n)
     }
 
     /// Convenience allocating wrapper around [`quantize_into`](Self::quantize_into).
@@ -297,17 +467,20 @@ impl LogQuantizer {
         assert!(n_samples >= 1);
         assert_eq!(x.len(), out.len());
         let max_abs = Self::max_abs(x);
-        if max_abs == 0.0 {
-            // Advance the generator exactly as the quantizing path would
-            // (n_samples streams + 1), so stream alignment across calls
-            // does not depend on whether a zero tensor appeared.
-            for _ in 0..=n_samples {
-                rng.jump();
+        let alpha = match self.alpha_checked(max_abs) {
+            Some(a) => a,
+            None => {
+                // Advance the generator exactly as the quantizing path
+                // would (n_samples streams + 1), so stream alignment
+                // across calls does not depend on whether a degenerate
+                // tensor appeared.
+                for _ in 0..=n_samples {
+                    rng.jump();
+                }
+                out.fill(0.0);
+                return QuantStats { max_abs, ..QuantStats::default() };
             }
-            out.fill(0.0);
-            return QuantStats::default();
-        }
-        let alpha = self.alpha_for(max_abs);
+        };
         let p = KernelParams::new(self.cfg.format, alpha);
 
         let QuantScratch { noise, sample, streams, .. } = scratch;
@@ -383,11 +556,13 @@ impl LogQuantizer {
         let base = rng.clone();
         rng.jump();
         let max_abs = kernel::par_max_abs(x, n_threads, scratch);
-        if max_abs == 0.0 {
-            out.fill(0.0);
-            return QuantStats::default();
-        }
-        let alpha = self.alpha_for(max_abs);
+        let alpha = match self.alpha_checked(max_abs) {
+            Some(a) => a,
+            None => {
+                out.fill(0.0);
+                return QuantStats { max_abs, ..QuantStats::default() };
+            }
+        };
         let p = KernelParams::new(self.cfg.format, alpha);
         let cs = kernel::par_quantize(
             self.cfg.underflow,
@@ -416,11 +591,13 @@ impl LogQuantizer {
         assert_eq!(x.len(), out.len());
         assert!(noise.len() >= x.len(), "need one uniform per element");
         let max_abs = Self::max_abs(x);
-        if max_abs == 0.0 {
-            out.fill(0.0);
-            return QuantStats::default();
-        }
-        let alpha = self.alpha_for(max_abs);
+        let alpha = match self.alpha_checked(max_abs) {
+            Some(a) => a,
+            None => {
+                out.fill(0.0);
+                return QuantStats { max_abs, ..QuantStats::default() };
+            }
+        };
         let fmt = self.cfg.format;
         let levels = fmt.levels() as i32;
         let top = fmt.top(alpha);
@@ -769,6 +946,175 @@ mod tests {
             m_luq >= m_rdnp * 0.99,
             "LUQ mse {m_luq} should exceed RDNP mse {m_rdnp} (Eq. 9)"
         );
+    }
+
+    /// Satellite: the degenerate-tensor path is hardened end to end —
+    /// all-zero input produces all-zero codes/values (not NaN/Inf) on
+    /// every path, and a degenerate `FixedMax(0)` scale (hindsight before
+    /// any observation) zeroes the output instead of poisoning it, in
+    /// release builds too.
+    #[test]
+    fn degenerate_alpha_emits_zeros_not_nan() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let n = 129; // odd: half-filled trailing packed byte
+        let zeros = vec![0.0f32; n];
+        let noise: Vec<f32> = {
+            let mut v = vec![0.0f32; n];
+            rng.fill_uniform(&mut v);
+            v
+        };
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let mut packed = vec![0xFFu8; n.div_ceil(2)];
+        let st = q.quantize_to_codes_into(&zeros, &noise, &mut packed);
+        assert!(packed.iter().all(|&b| b == 0), "all-zero in -> all-zero codes out");
+        assert_eq!(st.alpha, 0.0);
+        assert_eq!(st.max_abs, 0.0);
+
+        // FixedMax(0): nonzero input, degenerate scale.
+        let qh = LogQuantizer::new(LogQuantConfig::luq_hindsight(LogFormat::FP4, 0.0));
+        let x: Vec<f32> = (0..n).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let mut out = vec![1.0f32; n];
+        let st = qh.quantize_into(&x, &noise, &mut out);
+        assert!(out.iter().all(|v| *v == 0.0), "degenerate scale -> zeros");
+        assert!(st.max_abs > 0.0, "measured max is still reported");
+        assert_eq!(st.alpha, 0.0);
+        let mut out_ref = vec![1.0f32; n];
+        let st_ref = qh.quantize_into_reference(&x, &noise, &mut out_ref);
+        assert_eq!(out, out_ref);
+        assert_eq!(st.alpha, st_ref.alpha);
+        packed.fill(0xFF);
+        qh.quantize_to_codes_into(&x, &noise, &mut packed);
+        assert!(packed.iter().all(|&b| b == 0));
+        let mut scratch = QuantScratch::new();
+        let mut chunked = vec![1.0f32; n];
+        qh.quantize_chunked(&x, &mut chunked, &mut rng, 2, &mut scratch);
+        assert!(chunked.iter().all(|v| *v == 0.0));
+        let (smp, _) = qh.quantize_smp(&x, 2, &mut rng);
+        assert!(smp.iter().all(|v| *v == 0.0));
+    }
+
+    /// The matrix code emitter packs each row to a byte boundary; for
+    /// even `cols` (no per-row padding) it is bitwise the flat emitter.
+    #[test]
+    fn matrix_codes_match_flat_path_for_even_cols() {
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let (rows, cols) = (7usize, 24usize);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let x = lognormal_tensor(&mut rng, rows * cols, 2.0);
+        let mut noise = vec![0.0f32; rows * cols];
+        rng.fill_uniform(&mut noise);
+        let rb = cols / 2;
+        let mut mat = vec![0u8; rows * rb];
+        let st_m = q.quantize_to_codes_matrix_into(&x, rows, cols, &noise, &mut mat, rb);
+        let mut flat = vec![0u8; rows * rb];
+        let st_f = q.quantize_to_codes_into(&x, &noise, &mut flat);
+        assert_eq!(mat, flat);
+        assert_eq!(st_m.alpha, st_f.alpha);
+        assert_eq!(st_m.frac_underflow, st_f.frac_underflow);
+    }
+
+    /// Odd `cols`: each packed row ends in a zero-padded half byte, and
+    /// decoding row by row reproduces the dequantized values exactly.
+    #[test]
+    fn matrix_codes_rows_are_byte_aligned_for_odd_cols() {
+        let mut rng = Xoshiro256::seed_from_u64(34);
+        let (rows, cols) = (5usize, 13usize);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let x = lognormal_tensor(&mut rng, rows * cols, 2.0);
+        let mut noise = vec![0.0f32; rows * cols];
+        rng.fill_uniform(&mut noise);
+        let rb = cols.div_ceil(2);
+        let mut mat = vec![0u8; rows * rb];
+        let st = q.quantize_to_codes_matrix_into(&x, rows, cols, &noise, &mut mat, rb);
+        let mut want = vec![0.0f32; rows * cols];
+        q.quantize_into(&x, &noise, &mut want);
+        for r in 0..rows {
+            let row = &mat[r * rb..(r + 1) * rb];
+            assert_eq!(row[rb - 1] >> 4, 0, "row {r}: padding nibble is zero");
+            let codes = LogFormat::unpack_nibbles(row, cols);
+            for c in 0..cols {
+                let dec = LogFormat::FP4.decode(codes[c], st.alpha);
+                let w = want[r * cols + c];
+                let w = if w == 0.0 { 0.0 } else { w }; // -0 decodes as +0
+                assert_eq!(dec.to_bits(), w.to_bits(), "({r},{c})");
+            }
+        }
+    }
+
+    /// Stride-aware emission: rows land `row_stride_bytes` apart and the
+    /// gap bytes are never written.
+    #[test]
+    fn matrix_codes_respect_row_stride() {
+        let mut rng = Xoshiro256::seed_from_u64(35);
+        let (rows, cols, stride) = (4usize, 6usize, 8usize);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let x = lognormal_tensor(&mut rng, rows * cols, 2.0);
+        let mut noise = vec![0.0f32; rows * cols];
+        rng.fill_uniform(&mut noise);
+        let rb = cols / 2;
+        let mut dense = vec![0u8; rows * rb];
+        q.quantize_to_codes_matrix_into(&x, rows, cols, &noise, &mut dense, rb);
+        let mut strided = vec![0xEEu8; (rows - 1) * stride + rb];
+        q.quantize_to_codes_matrix_into(&x, rows, cols, &noise, &mut strided, stride);
+        for r in 0..rows {
+            assert_eq!(
+                &strided[r * stride..r * stride + rb],
+                &dense[r * rb..(r + 1) * rb],
+                "row {r}"
+            );
+            if r + 1 < rows {
+                assert!(
+                    strided[r * stride + rb..(r + 1) * stride].iter().all(|&b| b == 0xEE),
+                    "gap after row {r} untouched"
+                );
+            }
+        }
+    }
+
+    /// The scratch-staged matrix emitter consumes uniforms in the same
+    /// order as one flat fill, so it is bitwise the allocating wrapper.
+    #[test]
+    fn matrix_scratch_variant_matches_allocating_wrapper() {
+        let mut rng = Xoshiro256::seed_from_u64(36);
+        for (rows, cols) in [(6usize, 17usize), (3, 8), (1, 1), (4, 0)] {
+            let x = lognormal_tensor(&mut rng, rows * cols, 2.0);
+            let mut a_rng = Xoshiro256::seed_from_u64(1234);
+            let mut s_rng = a_rng.clone();
+            let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+            let (want, st_a) = q.quantize_to_codes_matrix(&x, rows, cols, &mut a_rng);
+            let rb = cols.div_ceil(2);
+            let mut got = vec![0u8; rows * rb];
+            let mut scratch = QuantScratch::new();
+            let st_s = q.quantize_to_codes_matrix_scratch(
+                &x, rows, cols, &mut s_rng, &mut got, rb, &mut scratch,
+            );
+            assert_eq!(got, want, "rows={rows} cols={cols}");
+            assert_eq!(st_a.alpha, st_s.alpha);
+            assert_eq!(st_a.frac_underflow, st_s.frac_underflow);
+            // Both consumed rows*cols uniforms: generators line up.
+            assert_eq!(a_rng.next_u64(), s_rng.next_u64());
+        }
+    }
+
+    /// All-zero matrix: zero codes on both matrix paths (satellite).
+    #[test]
+    fn all_zero_matrix_emits_zero_codes() {
+        let (rows, cols) = (3usize, 7usize);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let zeros = vec![0.0f32; rows * cols];
+        let noise = vec![0.5f32; rows * cols];
+        let rb = cols.div_ceil(2);
+        let mut packed = vec![0xABu8; rows * rb];
+        let st = q.quantize_to_codes_matrix_into(&zeros, rows, cols, &noise, &mut packed, rb);
+        assert!(packed.iter().all(|&b| b == 0));
+        assert_eq!(st.max_abs, 0.0);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut scratch = QuantScratch::new();
+        packed.fill(0xAB);
+        q.quantize_to_codes_matrix_scratch(
+            &zeros, rows, cols, &mut rng, &mut packed, rb, &mut scratch,
+        );
+        assert!(packed.iter().all(|&b| b == 0));
     }
 
     /// The Pow2Ceil alpha policy must treat exact powers of two as their

@@ -29,4 +29,20 @@ else
     echo "== clippy not installed; skipped (install with: rustup component add clippy) =="
 fi
 
+# Per-PR bench snapshots (ROADMAP: "track BENCH_quant.json across PRs").
+# Every PR appends one "PR <k>:" line to CHANGES.md before this gate
+# runs, so the entry count IS the current PR number; pin explicitly with
+# LUQ_PR=<k> when running mid-PR. The qgemm bench also *asserts* its
+# >=4x LUT-vs-scalar gate, so a perf regression fails the check. Commit
+# the snapshots with the PR.
+pr_count=$(grep -cE '^PR [0-9]+:' CHANGES.md || true)
+PR_NUM="${LUQ_PR:-${pr_count:-0}}"
+mkdir -p bench_history
+echo "== bench snapshots -> bench_history/ (PR ${PR_NUM}) =="
+LUQ_BENCH_FAST=1 LUQ_BENCH_JSON="bench_history/PR${PR_NUM}_BENCH_quant.json" \
+    cargo bench --bench quant_throughput
+LUQ_BENCH_FAST=1 LUQ_BENCH_JSON="bench_history/PR${PR_NUM}_BENCH_qgemm.json" \
+    cargo bench --bench qgemm
+echo "snapshots written: bench_history/PR${PR_NUM}_BENCH_{quant,qgemm}.json"
+
 echo "== check.sh: all gates passed =="
