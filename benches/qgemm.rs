@@ -1,24 +1,32 @@
-//! Host-side packed 4-bit GEMM gate: scalar MF-BPROP loop vs flat LUT vs
-//! cache-tiled LUT vs multithreaded tiles, plus the end-to-end
-//! quantize→pack→multiply pipeline (`coordinator::QgemmPath`).
+//! Host-side packed 4-bit GEMM gate, both engine instantiations:
+//!
+//! * **backward INT4×FP4**: scalar MF-BPROP loop vs flat LUT vs
+//!   cache-tiled LUT vs multithreaded tiles, plus the end-to-end
+//!   quantize→pack→multiply pipeline (`coordinator::QgemmPath`);
+//! * **forward INT4×INT4**: scalar decode-and-multiply loop vs flat LUT
+//!   vs cache-tiled LUT vs multithreaded tiles, operands emitted by the
+//!   `UniformQuantizer` fused packed matrix emitter.
 //!
 //! Emits a machine-readable `BENCH_qgemm.json` (override with
 //! `LUQ_BENCH_JSON=<path>`) and **asserts** the acceptance gates:
 //!
-//! * every kernel variant is bit-identical to the decode-then-f32-matmul
-//!   oracle (same sequential-K accumulation order), and
-//! * the tiled LUT kernel is ≥4× faster than the scalar
-//!   `mfbprop_multiply` + `decode_fp7` loop.
+//! * every kernel variant of both instantiations is bit-identical to its
+//!   decode-then-f32-matmul oracle (same sequential-K accumulation
+//!   order), and
+//! * each tiled LUT kernel is ≥4× faster than its scalar reference loop.
 
 use luq::bench::{group, BenchResult, Bencher};
 use luq::coordinator::QgemmPath;
 use luq::hw::mfbprop::Int4Code;
 use luq::hw::qgemm::{
-    qgemm_decode_oracle, qgemm_packed_flat, qgemm_packed_mt, qgemm_packed_mt_with,
-    qgemm_packed_with, qgemm_scalar_reference, QgemmScratch,
+    qgemm_decode_oracle, qgemm_int4_decode_oracle, qgemm_int4_flat, qgemm_int4_mt_with,
+    qgemm_int4_scalar_reference, qgemm_int4_with, qgemm_packed_flat, qgemm_packed_mt,
+    qgemm_packed_mt_with, qgemm_packed_with, qgemm_scalar_reference, QgemmScratch,
 };
 use luq::metrics::Json;
-use luq::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+use luq::quant::{
+    LogFormat, LogQuantConfig, LogQuantizer, UniformQuantizer, UniformRounding,
+};
 use luq::rng::Xoshiro256;
 
 fn bits_equal(a: &[f32], b: &[f32]) -> bool {
@@ -57,11 +65,11 @@ fn main() {
         mt_exact &= bits_equal(&out, &want);
     }
     println!(
-        "bit-exact vs decode-then-f32-matmul oracle: scalar={scalar_exact} flat={flat_exact} \
-         tiled={tiled_exact} mt={mt_exact}"
+        "backward bit-exact vs decode-then-f32-matmul oracle: scalar={scalar_exact} \
+         flat={flat_exact} tiled={tiled_exact} mt={mt_exact}"
     );
 
-    group(&format!("packed 4-bit GEMM, {m}x{k}x{n} ({products} products)"));
+    group(&format!("backward packed INT4xFP4 GEMM, {m}x{k}x{n} ({products} products)"));
     let scalar = b.bench_throughput("scalar mfbprop_multiply+decode_fp7", products, || {
         qgemm_scalar_reference(&a, &packed, m, k, n, &mut out);
         out[0]
@@ -81,7 +89,8 @@ fn main() {
     let mut thread_counts = vec![2usize, hw_threads];
     thread_counts.sort_unstable();
     thread_counts.dedup();
-    for t in thread_counts {
+    for t in &thread_counts {
+        let t = *t;
         let r = b.bench_throughput(&format!("LUT tiled {t}T"), products, || {
             qgemm_packed_mt_with(&a, &packed, m, k, n, &mut out, t, &mut scratch);
             out[0]
@@ -99,28 +108,94 @@ fn main() {
     });
     println!("{}", e2e.report());
 
+    // --- forward INT4×INT4: operands from the fused uniform emitter -----
+    let acts: Vec<f32> = (0..m * k).map(|_| rng.normal_ms_f32(0.0, 1.2)).collect();
+    let wts: Vec<f32> = (0..n * k).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+    let aq = UniformQuantizer::new(4, 3.0, UniformRounding::Rdn);
+    let wq = UniformQuantizer::new(4, 1.0, UniformRounding::Rdn);
+    let a_packed = aq.encode_packed_matrix(&acts, m, k, &mut rng);
+    let w_packed = wq.encode_packed_matrix(&wts, n, k, &mut rng);
+
+    let fwd_want = qgemm_int4_decode_oracle(&a_packed, &w_packed, m, k, n);
+    qgemm_int4_with(&a_packed, &w_packed, m, k, n, &mut out, &mut scratch);
+    let fwd_tiled_exact = bits_equal(&out, &fwd_want);
+    qgemm_int4_scalar_reference(&a_packed, &w_packed, m, k, n, &mut out);
+    let fwd_scalar_exact = bits_equal(&out, &fwd_want);
+    qgemm_int4_flat(&a_packed, &w_packed, m, k, n, &mut out);
+    let fwd_flat_exact = bits_equal(&out, &fwd_want);
+    let mut fwd_mt_exact = true;
+    for t in [2usize, hw_threads] {
+        qgemm_int4_mt_with(&a_packed, &w_packed, m, k, n, &mut out, t, &mut scratch);
+        fwd_mt_exact &= bits_equal(&out, &fwd_want);
+    }
+    println!(
+        "forward bit-exact vs decode-then-f32-matmul oracle: scalar={fwd_scalar_exact} \
+         flat={fwd_flat_exact} tiled={fwd_tiled_exact} mt={fwd_mt_exact}"
+    );
+
+    group(&format!("forward packed INT4xINT4 GEMM, {m}x{k}x{n} ({products} products)"));
+    let fwd_scalar = b.bench_throughput("scalar nibble-decode+f32-multiply", products, || {
+        qgemm_int4_scalar_reference(&a_packed, &w_packed, m, k, n, &mut out);
+        out[0]
+    });
+    println!("{}", fwd_scalar.report());
+    let fwd_flat = b.bench_throughput("INT4 LUT flat", products, || {
+        qgemm_int4_flat(&a_packed, &w_packed, m, k, n, &mut out);
+        out[0]
+    });
+    println!("{}", fwd_flat.report());
+    let fwd_tiled = b.bench_throughput("INT4 LUT tiled (nibble precompute)", products, || {
+        qgemm_int4_with(&a_packed, &w_packed, m, k, n, &mut out, &mut scratch);
+        out[0]
+    });
+    println!("{}", fwd_tiled.report());
+    let mut fwd_mt_results: Vec<(usize, BenchResult)> = Vec::new();
+    for t in &thread_counts {
+        let t = *t;
+        let r = b.bench_throughput(&format!("INT4 LUT tiled {t}T"), products, || {
+            qgemm_int4_mt_with(&a_packed, &w_packed, m, k, n, &mut out, t, &mut scratch);
+            out[0]
+        });
+        println!("{}", r.report());
+        fwd_mt_results.push((t, r));
+    }
+
     // --- report + JSON ---------------------------------------------------
     let ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / products as f64;
     let scalar_ns = ns(&scalar);
     let speedup = |r: &BenchResult| scalar_ns / ns(r);
-    let kernel_json = |r: &BenchResult| {
+    let kernel_json = |r: &BenchResult, base_ns: f64| {
         Json::obj(vec![
             ("ns_per_product", Json::num(ns(r))),
-            ("speedup_vs_scalar", Json::num(speedup(r))),
+            ("speedup_vs_scalar", Json::num(base_ns / ns(r))),
             ("mproducts_per_s", Json::num(r.throughput_melems().unwrap_or(0.0))),
         ])
     };
     let mut kernels: Vec<(String, Json)> = vec![
-        ("scalar mfbprop".to_string(), kernel_json(&scalar)),
-        ("lut flat".to_string(), kernel_json(&flat)),
-        ("lut tiled".to_string(), kernel_json(&tiled)),
+        ("scalar mfbprop".to_string(), kernel_json(&scalar, scalar_ns)),
+        ("lut flat".to_string(), kernel_json(&flat, scalar_ns)),
+        ("lut tiled".to_string(), kernel_json(&tiled, scalar_ns)),
     ];
     for (t, r) in &mt_results {
-        kernels.push((format!("lut tiled {t}T"), kernel_json(r)));
+        kernels.push((format!("lut tiled {t}T"), kernel_json(r, scalar_ns)));
     }
-    kernels.push(("e2e qgemm_path".to_string(), kernel_json(&e2e)));
+    kernels.push(("e2e qgemm_path".to_string(), kernel_json(&e2e, scalar_ns)));
+
+    let fwd_scalar_ns = ns(&fwd_scalar);
+    let mut fwd_kernels: Vec<(String, Json)> = vec![
+        ("scalar int4 decode".to_string(), kernel_json(&fwd_scalar, fwd_scalar_ns)),
+        ("int4 lut flat".to_string(), kernel_json(&fwd_flat, fwd_scalar_ns)),
+        ("int4 lut tiled".to_string(), kernel_json(&fwd_tiled, fwd_scalar_ns)),
+    ];
+    for (t, r) in &fwd_mt_results {
+        fwd_kernels.push((format!("int4 lut tiled {t}T"), kernel_json(r, fwd_scalar_ns)));
+    }
+
     let bit_exact = scalar_exact && flat_exact && tiled_exact && mt_exact;
+    let fwd_bit_exact =
+        fwd_scalar_exact && fwd_flat_exact && fwd_tiled_exact && fwd_mt_exact;
     let tiled_speedup = speedup(&tiled);
+    let fwd_tiled_speedup = fwd_scalar_ns / ns(&fwd_tiled);
     let doc = Json::obj(vec![
         ("bench", Json::str("qgemm")),
         ("m", Json::num(m as f64)),
@@ -128,12 +203,15 @@ fn main() {
         ("n", Json::num(n as f64)),
         ("products", Json::num(products as f64)),
         ("kernels", Json::Obj(kernels)),
+        ("forward_kernels", Json::Obj(fwd_kernels)),
         (
             "gate",
             Json::obj(vec![
                 ("lut_tiled_speedup_vs_scalar", Json::num(tiled_speedup)),
+                ("int4_tiled_speedup_vs_scalar", Json::num(fwd_tiled_speedup)),
                 ("required_speedup", Json::num(4.0)),
                 ("bit_exact_vs_oracle", Json::Bool(bit_exact)),
+                ("forward_bit_exact_vs_oracle", Json::Bool(fwd_bit_exact)),
             ]),
         ),
     ]);
@@ -145,11 +223,21 @@ fn main() {
     }
 
     println!(
-        "LUT tiled speedup over scalar MF-BPROP loop: {tiled_speedup:.2}x (gate: >= 4x)"
+        "backward LUT tiled speedup over scalar MF-BPROP loop: {tiled_speedup:.2}x (gate: >= 4x)"
     );
-    assert!(bit_exact, "a kernel variant diverged from the f32 oracle");
+    println!(
+        "forward INT4 LUT tiled speedup over scalar decode loop: {fwd_tiled_speedup:.2}x \
+         (gate: >= 4x)"
+    );
+    assert!(bit_exact, "a backward kernel variant diverged from the f32 oracle");
+    assert!(fwd_bit_exact, "a forward kernel variant diverged from the f32 oracle");
     assert!(
         tiled_speedup >= 4.0,
-        "LUT tiled kernel only {tiled_speedup:.2}x over the scalar loop (gate: >= 4x)"
+        "backward LUT tiled kernel only {tiled_speedup:.2}x over the scalar loop (gate: >= 4x)"
+    );
+    assert!(
+        fwd_tiled_speedup >= 4.0,
+        "forward INT4 LUT tiled kernel only {fwd_tiled_speedup:.2}x over the scalar loop \
+         (gate: >= 4x)"
     );
 }

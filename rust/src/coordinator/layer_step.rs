@@ -1,0 +1,586 @@
+//! The full three-GEMM 4-bit layer step: the host-side pipeline that
+//! quantizes **the entire training step of one layer** — the paper's
+//! headline claim — through the generic tiled-LUT engine of
+//! [`crate::hw::qgemm`].
+//!
+//! For a layer `Y = A·Wᵀ` (activations `A: batch × d_in`, weights
+//! `W: d_out × d_in`, output gradient `G: batch × d_out`) the step runs:
+//!
+//! 1. **Forward** `Y[b,o] = Σ_j A[b,j]·W[o,j]` — SAWB-clipped INT4 RDN
+//!    activations and weights (§4.3), fused packed emission
+//!    (`UniformQuantizer::encode_packed_matrix_scratch`), multiplied
+//!    through the signed INT4×INT4 product LUT. Real units: one
+//!    `Δ_a·Δ_w` scale applied to the accumulated result.
+//! 2. **dx** `dX[b,j] = Σ_o G[b,o]·W[o,j]` — LUQ FP4 gradients through
+//!    the backward INT4×FP4 (MF-BPROP) engine, computed as
+//!    `dXᵀ = Wᵀ·Gᵀ` so both reduction streams are contiguous: the A-side
+//!    is the Wᵀ nibble staging, the B-side is `G` row-major packed —
+//!    **exactly the operands `QgemmPath::backward_matmul` consumes**, so
+//!    the dx GEMM is bit-for-bit that path (test
+//!    `dx_gemm_reproduces_backward_matmul_bitwise`). Real units:
+//!    `α_g · Δ_w`.
+//! 3. **dW** `dW[o,j] = Σ_b G[b,o]·A[b,j]` — a second, independent LUQ
+//!    quantization of `Gᵀ` (Eq. 26/27 quantize the neural gradient per
+//!    consuming GEMM), computed as `dWᵀ = Aᵀ·Gᵀ` against the Aᵀ nibble
+//!    staging. Real units: `α_g' · Δ_a`.
+//!
+//! All staging (packed operands, transposed nibble/f32 buffers, outputs,
+//! quant + GEMM scratch) is owned by the step and grows monotonically, so
+//! **steady-state calls are allocation-free** (pinned by
+//! `steady_state_is_allocation_free`). RNG stream contract: one `step`
+//! call consumes exactly `2 · batch · d_out` uniforms — `batch·d_out` for
+//! the dx quantization, then `batch·d_out` for the dW quantization; the
+//! RDN forward emitters consume none — so stream alignment never depends
+//! on the data.
+//!
+//! Per-GEMM [`QuantStats`] come back in [`LayerStepStats`];
+//! [`LayerStepStats::grad_max`] is what feeds the hindsight tracker
+//! (Eq. 24) via `Trainer::observe_layer_step`.
+
+use crate::hw::qgemm::{self, row_nibble, QgemmScratch};
+use crate::quant::{
+    LogQuantConfig, LogQuantizer, QuantScratch, QuantStats, SawbQuantizer, UniformQuantizer,
+    UniformRounding,
+};
+use crate::rng::Xoshiro256;
+
+/// Per-GEMM statistics of one [`QuantizedLayerStep::step`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerStepStats {
+    /// SAWB clip chosen for the activation tensor.
+    pub act_clip: f32,
+    /// Activation quantizer step size `Δ_a`.
+    pub act_delta: f32,
+    /// SAWB clip chosen for the weight tensor.
+    pub weight_clip: f32,
+    /// Weight quantizer step size `Δ_w`.
+    pub weight_delta: f32,
+    /// The forward output scale `Δ_a · Δ_w`.
+    pub forward_scale: f32,
+    /// Gradient quantization feeding the dx GEMM (`G` row-major).
+    pub dx: QuantStats,
+    /// Gradient quantization feeding the dW GEMM (`Gᵀ`).
+    pub dw: QuantStats,
+}
+
+impl LayerStepStats {
+    /// The measured gradient max to feed the hindsight tracker (Eq. 24).
+    /// Both gradient quantizations saw the same tensor values, so their
+    /// maxima coincide; take the max defensively.
+    pub fn grad_max(&self) -> f32 {
+        self.dx.max_abs.max(self.dw.max_abs)
+    }
+}
+
+/// One layer's complete quantized training step (forward + dx + dW) with
+/// persistent staging. One instance per long-lived layer makes repeated
+/// `step` calls allocation-free.
+pub struct QuantizedLayerStep {
+    /// LUQ configuration for the neural-gradient quantizations.
+    pub grad_cfg: LogQuantConfig,
+    grad_quantizer: LogQuantizer,
+    /// SAWB clip rule for activations (forward pass, §4.3).
+    pub act_sawb: SawbQuantizer,
+    /// SAWB clip rule for weights.
+    pub weight_sawb: SawbQuantizer,
+    bits: u32,
+    shape: (usize, usize, usize),
+    quant_scratch: QuantScratch,
+    gemm_scratch: QgemmScratch,
+    // Forward operands (packed byte-aligned rows).
+    a_packed: Vec<u8>,
+    w_packed: Vec<u8>,
+    // Transposed INT4 wire-nibble staging (A-side of dx / dW).
+    wt_nib: Vec<u8>,
+    at_nib: Vec<u8>,
+    // Gradient operands.
+    g_packed: Vec<u8>,
+    gt_f32: Vec<f32>,
+    gt_packed: Vec<u8>,
+    // Outputs.
+    y: Vec<f32>,
+    dx_t: Vec<f32>,
+    dw_t: Vec<f32>,
+}
+
+fn ensure_f32(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+}
+
+fn ensure_u8(buf: &mut Vec<u8>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0);
+    }
+}
+
+impl QuantizedLayerStep {
+    /// `grad_cfg` drives both gradient quantizations (LUQ FP4 in the
+    /// paper's configuration, hindsight-scaled via
+    /// `LogQuantConfig::luq_hindsight`); `bits` is the forward INT width
+    /// (4 in the paper; ≤ 4 required by the packed-nibble layout).
+    pub fn new(grad_cfg: LogQuantConfig, bits: u32) -> QuantizedLayerStep {
+        assert!((2..=4).contains(&bits), "forward packed emission needs 2..=4 bits");
+        QuantizedLayerStep {
+            grad_cfg,
+            grad_quantizer: LogQuantizer::new(grad_cfg),
+            act_sawb: SawbQuantizer::new(bits),
+            weight_sawb: SawbQuantizer::new(bits),
+            bits,
+            shape: (0, 0, 0),
+            quant_scratch: QuantScratch::new(),
+            gemm_scratch: QgemmScratch::new(),
+            a_packed: Vec::new(),
+            w_packed: Vec::new(),
+            wt_nib: Vec::new(),
+            at_nib: Vec::new(),
+            g_packed: Vec::new(),
+            gt_f32: Vec::new(),
+            gt_packed: Vec::new(),
+            y: Vec::new(),
+            dx_t: Vec::new(),
+            dw_t: Vec::new(),
+        }
+    }
+
+    /// Run one full quantized layer step.
+    ///
+    /// * `acts`: `batch × d_in` row-major activations.
+    /// * `weights`: `d_out × d_in` row-major weights.
+    /// * `grads`: `batch × d_out` row-major output gradient `dY`.
+    /// * `rng` drives the two stochastic gradient quantizations (exactly
+    ///   `2·batch·d_out` uniforms; the RDN forward consumes none).
+    ///
+    /// Results land in [`Self::y`] (`batch × d_out`), [`Self::dx_t`]
+    /// (`d_in × batch`, i.e. `dXᵀ`) and [`Self::dw_t`] (`d_in × d_out`,
+    /// i.e. `dWᵀ`), all in real units.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        acts: &[f32],
+        weights: &[f32],
+        grads: &[f32],
+        batch: usize,
+        d_in: usize,
+        d_out: usize,
+        rng: &mut Xoshiro256,
+        n_threads: usize,
+    ) -> LayerStepStats {
+        assert!(acts.len() >= batch * d_in, "activation tensor too short");
+        assert!(weights.len() >= d_out * d_in, "weight tensor too short");
+        assert!(grads.len() >= batch * d_out, "gradient tensor too short");
+        self.shape = (batch, d_in, d_out);
+        let ib = d_in.div_ceil(2);
+        let ob = d_out.div_ceil(2);
+        let bb = batch.div_ceil(2);
+
+        // --- forward quantization: SAWB clip + RDN INT4, fused packing --
+        let act_clip = self.act_sawb.clip_for(&acts[..batch * d_in]);
+        let aq = UniformQuantizer::new(self.bits, act_clip, UniformRounding::Rdn);
+        let weight_clip = self.weight_sawb.clip_for(&weights[..d_out * d_in]);
+        let wq = UniformQuantizer::new(self.bits, weight_clip, UniformRounding::Rdn);
+        ensure_u8(&mut self.a_packed, batch * ib);
+        aq.encode_packed_matrix_scratch(
+            acts,
+            batch,
+            d_in,
+            rng,
+            &mut self.a_packed,
+            ib,
+            &mut self.quant_scratch,
+        );
+        ensure_u8(&mut self.w_packed, d_out * ib);
+        wq.encode_packed_matrix_scratch(
+            weights,
+            d_out,
+            d_in,
+            rng,
+            &mut self.w_packed,
+            ib,
+            &mut self.quant_scratch,
+        );
+
+        // --- forward GEMM: Y = A·Wᵀ through the INT4×INT4 LUT ----------
+        ensure_f32(&mut self.y, batch * d_out);
+        qgemm::qgemm_int4_mt_with(
+            &self.a_packed,
+            &self.w_packed,
+            batch,
+            d_in,
+            d_out,
+            &mut self.y,
+            n_threads,
+            &mut self.gemm_scratch,
+        );
+        let forward_scale = aq.delta() * wq.delta();
+        for v in self.y[..batch * d_out].iter_mut() {
+            *v *= forward_scale;
+        }
+
+        // --- transposed nibble staging for the backward A-sides --------
+        ensure_u8(&mut self.wt_nib, d_in * d_out);
+        for j in 0..d_in {
+            let row = &mut self.wt_nib[j * d_out..j * d_out + d_out];
+            for (o, nib) in row.iter_mut().enumerate() {
+                *nib = row_nibble(&self.w_packed[o * ib..o * ib + ib], j);
+            }
+        }
+        ensure_u8(&mut self.at_nib, d_in * batch);
+        for j in 0..d_in {
+            let row = &mut self.at_nib[j * batch..j * batch + batch];
+            for (b, nib) in row.iter_mut().enumerate() {
+                *nib = row_nibble(&self.a_packed[b * ib..b * ib + ib], j);
+            }
+        }
+
+        // --- dx GEMM: dXᵀ = Wᵀ·Gᵀ through the MF-BPROP LUT -------------
+        // Quantize G row-major (batch rows of d_out) — the same operand,
+        // RNG order, and engine path as QgemmPath::backward_matmul.
+        ensure_u8(&mut self.g_packed, batch * ob);
+        let dx_stats = self.grad_quantizer.quantize_to_codes_matrix_scratch(
+            grads,
+            batch,
+            d_out,
+            rng,
+            &mut self.g_packed,
+            ob,
+            &mut self.quant_scratch,
+        );
+        ensure_f32(&mut self.dx_t, d_in * batch);
+        qgemm::qgemm_lut_mt(
+            qgemm::product_lut(),
+            &self.wt_nib,
+            &self.g_packed,
+            d_in,
+            d_out,
+            batch,
+            &mut self.dx_t,
+            n_threads,
+        );
+        // Scale sequence matches backward_matmul (α first), then Δ_w.
+        for v in self.dx_t[..d_in * batch].iter_mut() {
+            *v *= dx_stats.alpha;
+            *v *= wq.delta();
+        }
+
+        // --- dW GEMM: dWᵀ = Aᵀ·Gᵀ through the MF-BPROP LUT -------------
+        ensure_f32(&mut self.gt_f32, d_out * batch);
+        for o in 0..d_out {
+            let row = &mut self.gt_f32[o * batch..o * batch + batch];
+            for (b, g) in row.iter_mut().enumerate() {
+                *g = grads[b * d_out + o];
+            }
+        }
+        ensure_u8(&mut self.gt_packed, d_out * bb);
+        let dw_stats = self.grad_quantizer.quantize_to_codes_matrix_scratch(
+            &self.gt_f32,
+            d_out,
+            batch,
+            rng,
+            &mut self.gt_packed,
+            bb,
+            &mut self.quant_scratch,
+        );
+        ensure_f32(&mut self.dw_t, d_in * d_out);
+        qgemm::qgemm_lut_mt(
+            qgemm::product_lut(),
+            &self.at_nib,
+            &self.gt_packed,
+            d_in,
+            batch,
+            d_out,
+            &mut self.dw_t,
+            n_threads,
+        );
+        for v in self.dw_t[..d_in * d_out].iter_mut() {
+            *v *= dw_stats.alpha;
+            *v *= aq.delta();
+        }
+
+        LayerStepStats {
+            act_clip,
+            act_delta: aq.delta(),
+            weight_clip,
+            weight_delta: wq.delta(),
+            forward_scale,
+            dx: dx_stats,
+            dw: dw_stats,
+        }
+    }
+
+    /// Forward output `Y = A·Wᵀ` of the last step, `batch × d_out`, real
+    /// units.
+    pub fn y(&self) -> &[f32] {
+        &self.y[..self.shape.0 * self.shape.2]
+    }
+
+    /// Input gradient of the last step, **transposed**: `d_in × batch`
+    /// (`dXᵀ[j,b] = dX[b,j]`), real units.
+    pub fn dx_t(&self) -> &[f32] {
+        &self.dx_t[..self.shape.1 * self.shape.0]
+    }
+
+    /// Weight gradient of the last step, **transposed**: `d_in × d_out`
+    /// (`dWᵀ[j,o] = dW[o,j]`), real units.
+    pub fn dw_t(&self) -> &[f32] {
+        &self.dw_t[..self.shape.1 * self.shape.2]
+    }
+
+    /// Capacities of every owned buffer — diagnostics for the
+    /// allocation-free steady-state contract: after a warm-up call with
+    /// given shapes, repeated same-shape `step` calls leave this vector
+    /// unchanged.
+    pub fn scratch_capacities(&self) -> Vec<usize> {
+        vec![
+            self.a_packed.capacity(),
+            self.w_packed.capacity(),
+            self.wt_nib.capacity(),
+            self.at_nib.capacity(),
+            self.g_packed.capacity(),
+            self.gt_f32.capacity(),
+            self.gt_packed.capacity(),
+            self.y.capacity(),
+            self.dx_t.capacity(),
+            self.dw_t.capacity(),
+            self.gemm_scratch.capacity_bytes(),
+            self.quant_scratch.noise.capacity(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::qgemm_path::QgemmPath;
+    use crate::hw::mfbprop::Int4Code;
+    use crate::hw::qgemm::{qgemm_decode_oracle, qgemm_int4_decode_oracle};
+    use crate::quant::{LogFormat, LogQuantizer};
+
+    const BITS: u32 = 4;
+
+    fn random_layer(
+        rng: &mut Xoshiro256,
+        batch: usize,
+        d_in: usize,
+        d_out: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let acts = (0..batch * d_in).map(|_| rng.normal_ms_f32(0.0, 1.2)).collect();
+        let wts = (0..d_out * d_in).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+        let grads = (0..batch * d_out)
+            .map(|_| rng.signed_lognormal_f32(0.0, 2.0))
+            .collect();
+        (acts, wts, grads)
+    }
+
+    /// Reconstruct the step's forward INT4 quantizers (deterministic:
+    /// SAWB clip + RDN).
+    fn forward_quantizers(acts: &[f32], wts: &[f32]) -> (UniformQuantizer, UniformQuantizer) {
+        let sawb = SawbQuantizer::new(BITS);
+        (
+            UniformQuantizer::new(BITS, sawb.clip_for(acts), UniformRounding::Rdn),
+            UniformQuantizer::new(BITS, sawb.clip_for(wts), UniformRounding::Rdn),
+        )
+    }
+
+    /// Acceptance gate: the step's dx GEMM is bit-for-bit
+    /// `QgemmPath::backward_matmul` on the same RNG stream — same
+    /// quantized-W operand (as Wᵀ codes), same gradient quantization,
+    /// same engine, same α scale (the step applies its extra Δ_w as one
+    /// further multiply, mirrored here).
+    #[test]
+    fn dx_gemm_reproduces_backward_matmul_bitwise() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x51);
+        let (batch, d_in, d_out) = (6usize, 10, 9); // odd d_out: row tails
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+
+        let mut step = QuantizedLayerStep::new(cfg, BITS);
+        let mut step_rng = Xoshiro256::seed_from_u64(0x77);
+        let stats = step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut step_rng, 2);
+
+        // Reference: quantize W the same way, hand Wᵀ codes + G to the
+        // PR 2 backward path with an identically seeded generator (the
+        // RDN forward emitters consume no uniforms, so the streams align).
+        let (_, wq) = forward_quantizers(&acts, &wts);
+        let wt_codes: Vec<Int4Code> = (0..d_in * d_out)
+            .map(|idx| {
+                let (j, o) = (idx / d_out, idx % d_out);
+                Int4Code::from_int(wq.code_of(wts[o * d_in + j], 0.0))
+            })
+            .collect();
+        let mut path = QgemmPath::new(cfg);
+        let mut path_rng = Xoshiro256::seed_from_u64(0x77);
+        let (dx_alpha, path_stats) =
+            path.backward_matmul(&wt_codes, &grads, d_in, d_out, batch, &mut path_rng, 1);
+        assert_eq!(stats.dx.alpha.to_bits(), path_stats.alpha.to_bits());
+        assert_eq!(stats.dx.max_abs.to_bits(), path_stats.max_abs.to_bits());
+        let dw_delta = wq.delta();
+        for (i, (got, base)) in step.dx_t().iter().zip(dx_alpha.iter()).enumerate() {
+            let want = base * dw_delta;
+            assert_eq!(got.to_bits(), want.to_bits(), "dx[{i}]: {got} vs {want}");
+        }
+    }
+
+    /// The forward GEMM matches the INT4 decode oracle (code units) with
+    /// the `Δ_a·Δ_w` scale applied exactly once.
+    #[test]
+    fn forward_matches_decode_oracle() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x52);
+        let (batch, d_in, d_out) = (7usize, 13, 5); // odd d_in: packed tails
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let mut step = QuantizedLayerStep::new(LogQuantConfig::luq(LogFormat::FP4), BITS);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let stats = step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1);
+        let (aq, wq) = forward_quantizers(&acts, &wts);
+        assert_eq!(stats.act_delta.to_bits(), aq.delta().to_bits());
+        assert_eq!(stats.weight_delta.to_bits(), wq.delta().to_bits());
+        let mut oracle_rng = Xoshiro256::seed_from_u64(99); // RDN: unused
+        let a_packed = aq.encode_packed_matrix(&acts, batch, d_in, &mut oracle_rng);
+        let w_packed = wq.encode_packed_matrix(&wts, d_out, d_in, &mut oracle_rng);
+        let code_units = qgemm_int4_decode_oracle(&a_packed, &w_packed, batch, d_in, d_out);
+        let scale = aq.delta() * wq.delta();
+        assert_eq!(stats.forward_scale.to_bits(), scale.to_bits());
+        for (i, (got, acc)) in step.y().iter().zip(code_units.iter()).enumerate() {
+            let want = acc * scale;
+            assert_eq!(got.to_bits(), want.to_bits(), "y[{i}]: {got} vs {want}");
+        }
+    }
+
+    /// The dW GEMM matches quantizing Gᵀ on the post-dx RNG stream,
+    /// decoding, f32-matmul against Aᵀ codes, and the `α` then `Δ_a`
+    /// scale sequence — bit for bit.
+    #[test]
+    fn dw_gemm_matches_decode_oracle() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x53);
+        let (batch, d_in, d_out) = (5usize, 8, 11);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let mut step = QuantizedLayerStep::new(cfg, BITS);
+        let mut step_rng = Xoshiro256::seed_from_u64(0x91);
+        let stats = step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut step_rng, 2);
+
+        // Advance a clone past the dx quantization (batch·d_out uniforms).
+        let mut oracle_rng = Xoshiro256::seed_from_u64(0x91);
+        let mut skip = vec![0.0f32; batch * d_out];
+        oracle_rng.fill_uniform(&mut skip);
+        // Quantize Gᵀ with the aligned stream.
+        let mut gt = vec![0.0f32; d_out * batch];
+        for o in 0..d_out {
+            for b in 0..batch {
+                gt[o * batch + b] = grads[b * d_out + o];
+            }
+        }
+        let q = LogQuantizer::new(cfg);
+        let (gt_packed, gt_stats) =
+            q.quantize_to_codes_matrix(&gt, d_out, batch, &mut oracle_rng);
+        assert_eq!(stats.dw.alpha.to_bits(), gt_stats.alpha.to_bits());
+        let (aq, _) = forward_quantizers(&acts, &wts);
+        let at_codes: Vec<Int4Code> = (0..d_in * batch)
+            .map(|idx| {
+                let (j, b) = (idx / batch, idx % batch);
+                Int4Code::from_int(aq.code_of(acts[b * d_in + j], 0.0))
+            })
+            .collect();
+        let alpha_units = qgemm_decode_oracle(&at_codes, &gt_packed, d_in, batch, d_out);
+        for (i, (got, acc)) in step.dw_t().iter().zip(alpha_units.iter()).enumerate() {
+            let want = (acc * gt_stats.alpha) * aq.delta();
+            assert_eq!(got.to_bits(), want.to_bits(), "dw[{i}]: {got} vs {want}");
+        }
+    }
+
+    /// Thread-count invariance carries through all three GEMMs.
+    #[test]
+    fn layer_step_is_thread_count_invariant() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x54);
+        let (batch, d_in, d_out) = (18usize, 21, 17);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let mut want: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        for threads in [1usize, 2, 8] {
+            let mut step = QuantizedLayerStep::new(LogQuantConfig::luq(LogFormat::FP4), BITS);
+            let mut rng = Xoshiro256::seed_from_u64(5);
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, threads);
+            match &want {
+                None => {
+                    want = Some((step.y().to_vec(), step.dx_t().to_vec(), step.dw_t().to_vec()))
+                }
+                Some((y, dx, dw)) => {
+                    for (g, w) in step.y().iter().zip(y.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "y threads={threads}");
+                    }
+                    for (g, w) in step.dx_t().iter().zip(dx.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "dx threads={threads}");
+                    }
+                    for (g, w) in step.dw_t().iter().zip(dw.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "dw threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Acceptance gate: after one warm-up call, repeated same-shape steps
+    /// reuse every buffer — no capacity changes anywhere (the
+    /// allocation-free steady state).
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x55);
+        let (batch, d_in, d_out) = (9usize, 15, 11);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let mut step = QuantizedLayerStep::new(LogQuantConfig::luq(LogFormat::FP4), BITS);
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 4);
+        let warmed = step.scratch_capacities();
+        for _ in 0..3 {
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 4);
+            assert_eq!(step.scratch_capacities(), warmed, "buffer grew after warm-up");
+        }
+        // Smaller shapes must also reuse the warmed buffers.
+        step.step(&acts, &wts, &grads, batch - 2, d_in - 3, d_out - 1, &mut rng, 2);
+        assert_eq!(step.scratch_capacities(), warmed, "smaller shape reallocated");
+    }
+
+    /// Degenerate inputs flow through as zeros, never NaN: an all-zero
+    /// gradient zeroes dx/dW (α = 0), an all-zero activation tensor
+    /// zeroes y and dW.
+    #[test]
+    fn degenerate_tensors_are_safe() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x56);
+        let (batch, d_in, d_out) = (4usize, 6, 3);
+        let (acts, wts, _) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let zeros_g = vec![0.0f32; batch * d_out];
+        let mut step = QuantizedLayerStep::new(LogQuantConfig::luq(LogFormat::FP4), BITS);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let stats = step.step(&acts, &wts, &zeros_g, batch, d_in, d_out, &mut rng, 1);
+        assert_eq!(stats.dx.alpha, 0.0);
+        assert!(step.dx_t().iter().all(|v| *v == 0.0));
+        assert!(step.dw_t().iter().all(|v| *v == 0.0));
+        assert!(step.y().iter().all(|v| v.is_finite()));
+
+        let zeros_a = vec![0.0f32; batch * d_in];
+        let grads: Vec<f32> = (0..batch * d_out)
+            .map(|_| data_rng.signed_lognormal_f32(0.0, 2.0))
+            .collect();
+        let stats = step.step(&zeros_a, &wts, &grads, batch, d_in, d_out, &mut rng, 1);
+        assert!(step.y().iter().all(|v| *v == 0.0));
+        assert!(step.dw_t().iter().all(|v| *v == 0.0));
+        assert!(step.dx_t().iter().all(|v| v.is_finite()));
+        assert!(stats.grad_max() > 0.0);
+    }
+
+    /// `grad_max` is the defensive max of the two per-GEMM maxima.
+    #[test]
+    fn grad_max_takes_the_larger_gemm_max() {
+        let mk = |max_abs| QuantStats { max_abs, ..QuantStats::default() };
+        let stats = LayerStepStats {
+            act_clip: 1.0,
+            act_delta: 0.1,
+            weight_clip: 1.0,
+            weight_delta: 0.1,
+            forward_scale: 0.01,
+            dx: mk(3.0),
+            dw: mk(2.5),
+        };
+        assert_eq!(stats.grad_max(), 3.0);
+    }
+}

@@ -8,10 +8,12 @@
 
 pub mod checkpoint;
 pub mod experiments;
+pub mod layer_step;
 pub mod qgemm_path;
 pub mod schedule;
 pub mod trainer;
 
+pub use layer_step::{LayerStepStats, QuantizedLayerStep};
 pub use qgemm_path::QgemmPath;
 pub use schedule::{FntSchedule, LrSchedule, StepDecay};
 pub use trainer::{DataSource, RunResult, Trainer, TrainerOptions};

@@ -1,6 +1,9 @@
 //! The trainer-level host-side packed-GEMM reference path: the complete
 //! backward-phase pipeline `quantize → pack → LUT-multiply` for one layer
 //! GEMM, owning all staging so steady-state calls are allocation-free.
+//! (The **full** three-GEMM step — forward, dx, dW — lives in
+//! [`crate::coordinator::layer_step::QuantizedLayerStep`]; its dx GEMM
+//! reproduces this path bit-for-bit.)
 //!
 //! This is the end-to-end consumer the ROADMAP's "host-side GEMM
 //! consumer" item asked for: the fused packed-code emission

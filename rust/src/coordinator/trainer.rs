@@ -1,6 +1,7 @@
 //! The Trainer: drives one AOT train-step executable through a schedule,
 //! owning data, noise, hindsight state, and metrics.
 
+use crate::coordinator::layer_step::{LayerStepStats, QuantizedLayerStep};
 use crate::coordinator::qgemm_path::QgemmPath;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{CorpusConfig, ImageDataset, ImagesConfig, TokenCorpus};
@@ -367,28 +368,55 @@ impl Trainer {
         eval_reduce(tot_loss, tot_correct, tot_items, n_batches)
     }
 
-    /// Build the host-side packed-GEMM reference path ([`QgemmPath`]) for
-    /// quantized layer `layer`, mirroring the scale the artifact
-    /// *actually* applies this step: the single `use_est` flag is only
-    /// raised when **every** layer has a positive estimate (see
-    /// [`resolve_hindsight_inputs`]), so this path quantizes against
-    /// `FixedMax(est)` (Eq. 24) only under that same condition — during
-    /// the warm-up window it falls back to the measured max exactly like
-    /// the artifact does.
-    pub fn qgemm_path(&self, layer: usize) -> QgemmPath {
+    /// The LUQ configuration for quantized layer `layer`, mirroring the
+    /// scale the artifact *actually* applies this step: the single
+    /// `use_est` flag is only raised when **every** layer has a positive
+    /// estimate (see [`resolve_hindsight_inputs`]), so the host paths
+    /// quantize against `FixedMax(est)` (Eq. 24) only under that same
+    /// condition — during the warm-up window they fall back to the
+    /// measured max exactly like the artifact does.
+    fn grad_cfg_for_layer(&self, layer: usize) -> LogQuantConfig {
         assert!(
             layer < self.hindsight.len(),
-            "qgemm_path: layer {layer} out of range (artifact has {} quantized layers)",
+            "layer {layer} out of range (artifact has {} quantized layers)",
             self.hindsight.len()
         );
         let fmt = LogFormat::FP4;
         let ests: Vec<Option<f32>> = self.hindsight.iter().map(|h| h.estimate()).collect();
         let (est_vals, use_est) = resolve_hindsight_inputs(self.opts.hindsight, &ests);
-        let cfg = match est_vals.get(layer) {
+        match est_vals.get(layer) {
             Some(&e) if use_est == 1.0 => LogQuantConfig::luq_hindsight(fmt, e),
             _ => LogQuantConfig::luq(fmt),
-        };
-        QgemmPath::new(cfg)
+        }
+    }
+
+    /// Build the host-side packed backward-GEMM reference path
+    /// ([`QgemmPath`]) for quantized layer `layer`, hindsight-aware via
+    /// [`Self::grad_cfg_for_layer`].
+    pub fn qgemm_path(&self, layer: usize) -> QgemmPath {
+        QgemmPath::new(self.grad_cfg_for_layer(layer))
+    }
+
+    /// Build the host-side **full three-GEMM layer step**
+    /// ([`QuantizedLayerStep`]: forward INT4×INT4, dx and dW INT4×FP4)
+    /// for quantized layer `layer`, with the same hindsight-aware
+    /// gradient scale as [`Self::qgemm_path`]. Feed the returned step's
+    /// per-GEMM stats back through [`Self::observe_layer_step`] to keep
+    /// the Eq. 24 tracker warm.
+    pub fn quantized_layer_step(&self, layer: usize) -> QuantizedLayerStep {
+        QuantizedLayerStep::new(self.grad_cfg_for_layer(layer), 4)
+    }
+
+    /// Feed one host layer step's measured gradient max into layer
+    /// `layer`'s hindsight tracker (Eq. 24) — the host-path mirror of the
+    /// per-step `maxes` outputs the train artifact reports.
+    pub fn observe_layer_step(&mut self, layer: usize, stats: &LayerStepStats) {
+        assert!(
+            layer < self.hindsight.len(),
+            "layer {layer} out of range (artifact has {} quantized layers)",
+            self.hindsight.len()
+        );
+        self.hindsight[layer].observe(stats.grad_max());
     }
 
     /// Train for `steps` under a schedule, with optional progress logging.

@@ -11,18 +11,23 @@
 //! ratios.
 
 //! On top of the bit-exact element block sits the **host-side packed
-//! 4-bit GEMM** ([`qgemm`]): a tiled, multithreaded matmul that consumes
-//! the fused packed-code stream through a 256-entry product LUT — the
-//! matrix consumer that completes the quantize→pack→multiply pipeline.
+//! 4-bit GEMM** ([`qgemm`]): a generic tiled, multithreaded LUT engine
+//! that consumes fused packed-code streams through 256-entry product
+//! LUTs — instantiated for the backward INT4×FP4 (MF-BPROP) and forward
+//! signed INT4×INT4 GEMMs, completing the quantize→pack→multiply pipeline
+//! for the whole training step.
 
 pub mod gates;
 pub mod mac;
 pub mod mfbprop;
 pub mod qgemm;
 
-pub use gates::{gate_table_mfbprop, gate_table_standard, GateEntry, ACCUM_FP16_GATES, ACCUM_FP32_GATES};
+pub use gates::{
+    gate_table_mfbprop, gate_table_standard, GateEntry, ACCUM_FP16_GATES, ACCUM_FP32_GATES,
+};
 pub use mac::MacSimulator;
 pub use mfbprop::{mfbprop_multiply, reference_product, Fp4Code, Int4Code};
 pub use qgemm::{
-    product_lut, qgemm_packed, qgemm_packed_into, qgemm_packed_mt, ProductLut, QgemmScratch,
+    int4_product_lut, product_lut, qgemm_int4, qgemm_int4_into, qgemm_int4_mt_with,
+    qgemm_lut_mt, qgemm_packed, qgemm_packed_into, qgemm_packed_mt, ProductLut, QgemmScratch,
 };

@@ -1,41 +1,55 @@
-//! Host-side packed 4-bit GEMM: the tiled MF-BPROP LUT matmul.
+//! Host-side packed 4-bit GEMM: a **generic tiled-LUT engine** plus its
+//! two instantiations — the backward INT4×FP4 MF-BPROP kernel and the
+//! forward signed INT4×INT4 kernel.
 //!
-//! This is the matrix consumer that turns the fused packed-code emission
-//! (`LogQuantizer::quantize_to_codes_matrix_into`) into a complete
-//! quantize → pack → multiply pipeline. The backward-phase product
-//! `INT4 × FP4 [1,3,0]` needs no multiplier (App. A.4.1); on a host CPU
-//! the same observation collapses the whole `mfbprop_multiply` +
-//! `decode_fp7` per-element pipeline into **one load from a 256-entry
-//! `(INT4 code, FP4 nibble) → f32` product LUT** — every entry is the
-//! FP7 decode of the multiplier-free block, and
-//! `products_are_exact_in_fp7_no_rounding` proves those decodes equal the
-//! reference f32 products bit-for-bit, so the LUT kernel is *exact*, not
-//! approximate.
+//! Every 4-bit × 4-bit product is one of at most 16 × 16 = 256 values, so
+//! on a host CPU *any* pair of 4-bit formats multiplies through **one load
+//! from a 256-entry `(a nibble, b nibble) → f32` product LUT** — 1 KiB of
+//! f32 that lives in L1 for the whole GEMM. The cache tiling, row-band
+//! multithreading, and scratch staging are therefore format-agnostic:
+//! [`qgemm_lut_mt`] is parameterized by a [`ProductLut`] and an operand
+//! layout (A as raw wire nibbles, B as packed 2-codes-per-byte rows), and
+//! each format supplies only its table:
 //!
-//! Operand layout (`qgemm_packed(a, b_t_packed, m, k, n)`):
+//! * **Backward (INT4 × FP4 `[1,3,0]`)** — [`product_lut`]: entries are
+//!   the FP7 decodes of the multiplier-free block (App. A.4.1, Fig. 8);
+//!   `products_are_exact_in_fp7_no_rounding` proves those decodes equal
+//!   the reference f32 products bit-for-bit, so the LUT kernel is
+//!   *exact*, not approximate.
+//! * **Forward (signed INT4 × INT4)** — [`int4_product_lut`]: entries are
+//!   the integer products of the two sign-magnitude codes (|a·b| ≤ 49,
+//!   exact in f32). This is the `Y = A·Wᵀ` GEMM of §4.3 (SAWB-clipped
+//!   INT4 activations × INT4 weights).
 //!
-//! * `A`: `m × k` row-major [`Int4Code`]s (weights/activations — the
-//!   mantissa-only operand).
-//! * `B`: the FP4 neural-gradient operand, **transposed and packed**:
-//!   `n` rows of `k` codes at 2 codes/byte (low nibble first), row stride
-//!   `k.div_ceil(2)` bytes — exactly what
-//!   `LogQuantizer::quantize_to_codes_matrix_into` emits for Bᵀ. Both
-//!   dot operands are then contiguous in the reduction dimension.
-//! * `out[i·n + j] = Σ_x A[i·k + x] · B[j·k + x]` in α-units (the
-//!   per-tensor gradient scale multiplies the *accumulated* result
-//!   outside, as in the paper's MAC).
+//! Any future format (FP4 variants, INT2, radix-4 TPR) gets the tiled +
+//! multithreaded GEMM for free by supplying a LUT via
+//! [`ProductLut::from_fn`].
+//!
+//! Operand layout (`qgemm_lut_mt(lut, a_nib, packed_b, m, k, n, …)`):
+//!
+//! * `A`: `m × k` row-major **wire nibbles**, one byte per element (the
+//!   staging [`QgemmScratch`] produces from typed codes or packed rows).
+//! * `B`: **transposed and packed**: `n` rows of `k` codes at 2 codes/byte
+//!   (low nibble first), row stride `k.div_ceil(2)` bytes — exactly what
+//!   `LogQuantizer::quantize_to_codes_matrix_into` (FP4) and
+//!   `UniformQuantizer::encode_packed_matrix_scratch` (INT4) emit for Bᵀ.
+//!   Both dot operands are then contiguous in the reduction dimension.
+//! * `out[i·n + j] = Σ_x lut(A[i·k + x], B[j·k + x])` in code units (the
+//!   per-tensor scales multiply the *accumulated* result outside, as in
+//!   the paper's MAC).
 //!
 //! **Bit-exactness contract** (mirrors the chunked-execution contract of
-//! `quant::kernel`): every variant in this module — scalar MF-BPROP loop,
-//! flat LUT loop, cache-tiled kernel, and the multithreaded row-band
+//! `quant::kernel`): every variant in this module — scalar decode loops,
+//! flat LUT loops, the cache-tiled kernel, and the multithreaded row-band
 //! driver at any thread count — accumulates each output element in
 //! strictly increasing `k` order into a single f32 accumulator, so all of
-//! them are **bit-identical** to the decode-then-f32-matmul oracle. Tiling
-//! and threading only reorder *which outputs* are computed when, never the
+//! them are **bit-identical** to their decode-then-f32-matmul oracle
+//! ([`qgemm_decode_oracle`] / [`qgemm_int4_decode_oracle`]). Tiling and
+//! threading only reorder *which outputs* are computed when, never the
 //! accumulation inside an output.
 //!
 //! [`mfbprop_dot_packed`](super::mfbprop::mfbprop_dot_packed) is the
-//! `1 × k` special case of this kernel.
+//! `1 × k` special case of the backward instantiation.
 
 use super::mfbprop::{decode_fp7, mfbprop_multiply, Fp4Code, Int4Code};
 use std::sync::OnceLock;
@@ -47,45 +61,82 @@ pub const TILE_M: usize = 16;
 /// Column-tile width (B rows per tile).
 pub const TILE_N: usize = 16;
 
-/// The 256-entry product table: index `(int4_nibble << 4) | fp4_nibble`,
-/// value `decode_fp7(mfbprop_multiply(int4, fp4))`. 1 KiB of f32 — lives
-/// in L1 for the whole GEMM.
+/// A 256-entry product table: index `(a_nibble << 4) | b_nibble`, value
+/// the exact f32 product of the two 4-bit codes. 1 KiB of f32 — lives in
+/// L1 for the whole GEMM. The engine ([`qgemm_lut_mt`]) is generic over
+/// which table it is handed; [`Self::from_fn`] builds one for any format
+/// pair.
 pub struct ProductLut {
     table: [f32; 256],
 }
 
 impl ProductLut {
-    /// Build the table from the multiplier-free block itself, so the LUT
-    /// can never drift from the Fig. 8 transform it caches.
-    pub fn build() -> ProductLut {
+    /// Build a table from an arbitrary nibble-pair product function — the
+    /// generic constructor every format instantiation goes through, so a
+    /// LUT can never drift from the transform it caches.
+    pub fn from_fn(mut f: impl FnMut(u8, u8) -> f32) -> ProductLut {
         let mut table = [0.0f32; 256];
-        for a in Int4Code::all() {
-            for g in Fp4Code::all() {
-                let idx = ((a.nibble() as usize) << 4) | g.nibble() as usize;
-                table[idx] = decode_fp7(mfbprop_multiply(a, g));
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                table[((a as usize) << 4) | b as usize] = f(a, b);
             }
         }
         ProductLut { table }
     }
 
+    /// The backward-phase INT4 × FP4 table, built from the multiplier-free
+    /// block itself (`decode_fp7(mfbprop_multiply(..))`), so the LUT can
+    /// never drift from the Fig. 8 transform it caches.
+    pub fn build() -> ProductLut {
+        ProductLut::from_fn(|a, g| {
+            decode_fp7(mfbprop_multiply(Int4Code::from_nibble(a), Fp4Code::from_nibble(g)))
+        })
+    }
+
+    /// The forward-phase signed INT4 × INT4 table: plain integer products
+    /// of the two sign-magnitude wire codes (`|a·b| ≤ 49` — every entry
+    /// and every partial sum below 2²⁴ is exact in f32).
+    pub fn int4_int4() -> ProductLut {
+        ProductLut::from_fn(|a, b| {
+            Int4Code::from_nibble(a).value() * Int4Code::from_nibble(b).value()
+        })
+    }
+
     /// The exact f32 product of the two 4-bit codes. Masking keeps the
     /// index provably in-bounds, which also elides the bounds check.
     #[inline(always)]
-    pub fn product(&self, int4_nibble: u8, fp4_nibble: u8) -> f32 {
-        self.table[((int4_nibble as usize & 0xF) << 4) | (fp4_nibble as usize & 0xF)]
+    pub fn product(&self, a_nibble: u8, b_nibble: u8) -> f32 {
+        self.table[((a_nibble as usize & 0xF) << 4) | (b_nibble as usize & 0xF)]
     }
 }
 
-static LUT: OnceLock<ProductLut> = OnceLock::new();
+/// Extract element `x` of a packed byte-aligned code row (low nibble
+/// first) — the single copy of the packed-row nibble extraction shared
+/// by every non-oracle consumer (the decode oracle and scalar reference
+/// keep deliberately independent copies).
+#[inline(always)]
+pub(crate) fn row_nibble(row: &[u8], x: usize) -> u8 {
+    (row[x >> 1] >> ((x & 1) << 2)) & 0x0F
+}
 
-/// The process-wide product LUT (built once, on first use).
+static LUT: OnceLock<ProductLut> = OnceLock::new();
+static INT4_LUT: OnceLock<ProductLut> = OnceLock::new();
+
+/// The process-wide backward INT4 × FP4 product LUT (built once, on first
+/// use).
 pub fn product_lut() -> &'static ProductLut {
     LUT.get_or_init(ProductLut::build)
 }
 
-/// Reusable staging for the tiled kernel: the A operand converted to raw
-/// wire nibbles once per call (1 byte/element instead of re-deriving
-/// `[sign | magnitude]` from the struct `m·n` times). One instance per
+/// The process-wide forward signed INT4 × INT4 product LUT (built once,
+/// on first use).
+pub fn int4_product_lut() -> &'static ProductLut {
+    INT4_LUT.get_or_init(ProductLut::int4_int4)
+}
+
+/// Reusable staging for the tiled kernels: the A operand converted to raw
+/// wire nibbles once per call (1 byte/element instead of re-deriving it
+/// from the typed code or the packed byte `m·n` times). One instance per
 /// long-lived consumer makes repeated GEMMs allocation-free.
 #[derive(Default)]
 pub struct QgemmScratch {
@@ -96,38 +147,45 @@ impl QgemmScratch {
     pub fn new() -> QgemmScratch {
         QgemmScratch::default()
     }
-}
 
-fn check_shapes(int4: &[Int4Code], packed_fp4: &[u8], m: usize, k: usize, n: usize, out: &[f32]) {
-    assert!(
-        int4.len() >= m * k,
-        "int4 operand too short: {} < {}",
-        int4.len(),
-        m * k
-    );
-    if n > 0 && k > 0 {
-        let kb = k.div_ceil(2);
-        assert!(
-            packed_fp4.len() >= n * kb,
-            "packed fp4 operand too short: {} < {}",
-            packed_fp4.len(),
-            n * kb
-        );
+    /// Bytes currently reserved by the staging buffer — diagnostics for
+    /// the allocation-free steady-state contract (stable across repeated
+    /// same-shape calls once warmed up).
+    pub fn capacity_bytes(&self) -> usize {
+        self.a_nib.capacity()
     }
-    assert!(out.len() >= m * n, "output too short: {} < {}", out.len(), m * n);
-}
 
-fn fill_nibbles(int4: &[Int4Code], out: &mut Vec<u8>) {
-    out.clear();
-    out.extend(int4.iter().map(Int4Code::nibble));
+    /// Stage typed INT4 codes as wire nibbles (backward-path A operand).
+    fn stage_codes(&mut self, int4: &[Int4Code]) -> &[u8] {
+        self.a_nib.clear();
+        self.a_nib.extend(int4.iter().map(Int4Code::nibble));
+        &self.a_nib
+    }
+
+    /// Stage a packed byte-aligned row matrix (`rows` rows of `k` codes,
+    /// 2 per byte, row stride `k.div_ceil(2)`) as one nibble per byte —
+    /// the forward-path A operand arriving straight from
+    /// `UniformQuantizer::encode_packed_matrix_scratch`.
+    fn stage_packed_rows(&mut self, packed: &[u8], rows: usize, k: usize) -> &[u8] {
+        let kb = k.div_ceil(2);
+        self.a_nib.clear();
+        self.a_nib.reserve(rows * k);
+        for r in 0..rows {
+            let row = &packed[r * kb..r * kb + kb];
+            for x in 0..k {
+                self.a_nib.push(row_nibble(row, x));
+            }
+        }
+        &self.a_nib
+    }
 }
 
 /// The single copy of the packed-dot inner loop: `k` products off one
 /// packed B row (`brow`, low nibble first, half-filled trailing byte for
 /// odd `k`), the A-side nibble supplied by index through `nib` (a
-/// pre-extracted byte or an `Int4Code::nibble()` call — monomorphized
-/// and inlined either way). One f32 accumulator in increasing element
-/// order — the accumulation contract every variant and the oracle share.
+/// pre-extracted byte or an on-the-fly extraction — monomorphized and
+/// inlined either way). One f32 accumulator in increasing element order —
+/// the accumulation contract every variant and the oracles share.
 #[inline(always)]
 fn dot_lut(lut: &ProductLut, k: usize, brow: &[u8], nib: impl Fn(usize) -> u8) -> f32 {
     let mut acc = 0.0f32;
@@ -142,8 +200,8 @@ fn dot_lut(lut: &ProductLut, k: usize, brow: &[u8], nib: impl Fn(usize) -> u8) -
     acc
 }
 
-/// One packed dot product through the LUT — the `1 × k` kernel that
-/// [`super::mfbprop::mfbprop_dot_packed`] delegates to.
+/// One packed dot product through the backward LUT — the `1 × k` kernel
+/// that [`super::mfbprop::mfbprop_dot_packed`] delegates to.
 pub fn dot_packed_lut(int4: &[Int4Code], packed_fp4: &[u8], k: usize) -> f32 {
     assert!(int4.len() >= k, "int4 operand too short");
     assert!(packed_fp4.len() >= k.div_ceil(2), "packed fp4 operand too short");
@@ -154,7 +212,7 @@ pub fn dot_packed_lut(int4: &[Int4Code], packed_fp4: &[u8], k: usize) -> f32 {
 /// pre-extracted nibbles). `out` is the matching `rows × n` band.
 fn gemm_tiles(
     a_nib: &[u8],
-    packed_fp4: &[u8],
+    packed_b: &[u8],
     rows: usize,
     k: usize,
     n: usize,
@@ -172,7 +230,7 @@ fn gemm_tiles(
                 let arow = &a_nib[i * k..i * k + k];
                 let orow = &mut out[i * n..i * n + n];
                 for j in j0..j0 + nj {
-                    let brow = &packed_fp4[j * kb..j * kb + kb];
+                    let brow = &packed_b[j * kb..j * kb + kb];
                     orow[j] = dot_lut(lut, k, brow, |x| arow[x]);
                 }
             }
@@ -180,13 +238,65 @@ fn gemm_tiles(
     }
 }
 
-/// The full-control entry point: tiled packed GEMM over `n_threads`
-/// contiguous row bands (one scoped thread per band), reusing `scratch`
-/// for the A-nibble staging — **allocation-free at steady state** for
-/// any thread count. Each output element is computed by exactly one
-/// thread with the same sequential-`k` accumulation as the
-/// single-threaded kernel, so the result is **bit-identical for every
-/// `n_threads`** (the qgemm instance of the chunked-execution contract).
+/// **The generic engine**: tiled packed GEMM over `n_threads` contiguous
+/// row bands (one scoped thread per band), parameterized by the product
+/// LUT and consuming the A operand as pre-staged wire nibbles. Each
+/// output element is computed by exactly one thread with the same
+/// sequential-`k` accumulation as the single-threaded kernel, so the
+/// result is **bit-identical for every `n_threads`** (the qgemm instance
+/// of the chunked-execution contract) — for *any* LUT.
+///
+/// Format instantiations ([`qgemm_packed_mt_with`],
+/// [`qgemm_int4_mt_with`]) are staging wrappers around this function.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_lut_mt(
+    lut: &ProductLut,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+) {
+    if m == 0 || n == 0 {
+        return; // nothing to compute or write
+    }
+    assert!(a_nib.len() >= m * k, "a operand too short: {} < {}", a_nib.len(), m * k);
+    assert!(out.len() >= m * n, "output too short: {} < {}", out.len(), m * n);
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(
+        packed_b.len() >= n * kb,
+        "packed b operand too short: {} < {}",
+        packed_b.len(),
+        n * kb
+    );
+    let t = n_threads.max(1).min(m);
+    if t == 1 {
+        gemm_tiles(a_nib, packed_b, m, k, n, &mut out[..m * n], lut);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (b, out_band) in out[..m * n].chunks_mut(rows_per * n).enumerate() {
+            let rows = out_band.len() / n;
+            let nib_band = &a_nib[b * rows_per * k..(b * rows_per + rows) * k];
+            s.spawn(move || gemm_tiles(nib_band, packed_b, rows, k, n, out_band, lut));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backward instantiation: INT4 (typed codes) × FP4 (packed), MF-BPROP LUT.
+// ---------------------------------------------------------------------------
+
+/// The full-control backward entry point: tiled INT4×FP4 GEMM through the
+/// MF-BPROP LUT, reusing `scratch` for the A-nibble staging —
+/// **allocation-free at steady state** for any thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm_packed_mt_with(
     int4: &[Int4Code],
@@ -199,32 +309,14 @@ pub fn qgemm_packed_mt_with(
     scratch: &mut QgemmScratch,
 ) {
     if m == 0 || n == 0 {
-        return; // nothing to compute or write
-    }
-    check_shapes(int4, packed_fp4, m, k, n, out);
-    if k == 0 {
-        out[..m * n].fill(0.0);
         return;
     }
-    let lut = product_lut();
-    fill_nibbles(&int4[..m * k], &mut scratch.a_nib);
-    let a_nib = &scratch.a_nib;
-    let t = n_threads.max(1).min(m);
-    if t == 1 {
-        gemm_tiles(a_nib, packed_fp4, m, k, n, &mut out[..m * n], lut);
-        return;
-    }
-    let rows_per = m.div_ceil(t);
-    std::thread::scope(|s| {
-        for (b, out_band) in out[..m * n].chunks_mut(rows_per * n).enumerate() {
-            let rows = out_band.len() / n;
-            let nib_band = &a_nib[b * rows_per * k..(b * rows_per + rows) * k];
-            s.spawn(move || gemm_tiles(nib_band, packed_fp4, rows, k, n, out_band, lut));
-        }
-    });
+    assert!(int4.len() >= m * k, "int4 operand too short: {} < {}", int4.len(), m * k);
+    let a_nib = scratch.stage_codes(&int4[..m * k]);
+    qgemm_lut_mt(product_lut(), a_nib, packed_fp4, m, k, n, out, n_threads);
 }
 
-/// Single-threaded tiled packed GEMM reusing `scratch` for the A-nibble
+/// Single-threaded tiled backward GEMM reusing `scratch` for the A-nibble
 /// staging (allocation-free at steady state).
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm_packed_with(
@@ -239,7 +331,7 @@ pub fn qgemm_packed_with(
     qgemm_packed_mt_with(int4, packed_fp4, m, k, n, out, 1, scratch);
 }
 
-/// Tiled packed GEMM into a caller buffer (owns its scratch).
+/// Tiled backward GEMM into a caller buffer (owns its scratch).
 pub fn qgemm_packed_into(
     int4: &[Int4Code],
     packed_fp4: &[u8],
@@ -252,7 +344,7 @@ pub fn qgemm_packed_into(
     qgemm_packed_with(int4, packed_fp4, m, k, n, out, &mut scratch);
 }
 
-/// Allocating wrapper: `m × n` result in α-units.
+/// Allocating backward wrapper: `m × n` result in α-units.
 pub fn qgemm_packed(
     int4: &[Int4Code],
     packed_fp4: &[u8],
@@ -265,7 +357,7 @@ pub fn qgemm_packed(
     out
 }
 
-/// Multithreaded tiled packed GEMM (owns its scratch); see
+/// Multithreaded tiled backward GEMM (owns its scratch); see
 /// [`qgemm_packed_mt_with`] for the allocation-free variant and the
 /// thread-count-invariance contract.
 pub fn qgemm_packed_mt(
@@ -281,8 +373,9 @@ pub fn qgemm_packed_mt(
     qgemm_packed_mt_with(int4, packed_fp4, m, k, n, out, n_threads, &mut scratch);
 }
 
-/// Flat (untiled) LUT loop — the middle rung of the bench ladder between
-/// the scalar MF-BPROP loop and the tiled kernel. Same bit-exact result.
+/// Flat (untiled) backward LUT loop — the middle rung of the bench ladder
+/// between the scalar MF-BPROP loop and the tiled kernel. Same bit-exact
+/// result.
 pub fn qgemm_packed_flat(
     int4: &[Int4Code],
     packed_fp4: &[u8],
@@ -294,12 +387,14 @@ pub fn qgemm_packed_flat(
     if m == 0 || n == 0 {
         return;
     }
-    check_shapes(int4, packed_fp4, m, k, n, out);
+    assert!(int4.len() >= m * k, "int4 operand too short");
+    assert!(out.len() >= m * n, "output too short");
     if k == 0 {
         out[..m * n].fill(0.0);
         return;
     }
     let kb = k.div_ceil(2);
+    assert!(packed_fp4.len() >= n * kb, "packed fp4 operand too short");
     let lut = product_lut();
     for i in 0..m {
         let arow = &int4[i * k..i * k + k];
@@ -311,13 +406,14 @@ pub fn qgemm_packed_flat(
     }
 }
 
-/// The decode-then-f32-matmul **oracle**: decode every FP4 nibble to its
-/// α-unit f32 value ([`Fp4Code::value`]) and matmul with [`Int4Code::value`]
-/// in plain f32, accumulating in the same increasing-`k` order as every
-/// kernel variant. This is the independent reference the bit-exactness
-/// gates (unit tests, property test, `benches/qgemm.rs`) compare against —
-/// it shares no code with the LUT/MF-BPROP kernels, only the accumulation
-/// contract. Not a performance path.
+/// The backward decode-then-f32-matmul **oracle**: decode every FP4
+/// nibble to its α-unit f32 value ([`Fp4Code::value`]) and matmul with
+/// [`Int4Code::value`] in plain f32, accumulating in the same
+/// increasing-`k` order as every kernel variant. This is the independent
+/// reference the bit-exactness gates (unit tests, property test,
+/// `benches/qgemm.rs`) compare against — it shares no code with the
+/// LUT/MF-BPROP kernels, only the accumulation contract. Not a
+/// performance path.
 pub fn qgemm_decode_oracle(
     int4: &[Int4Code],
     packed_fp4: &[u8],
@@ -341,12 +437,12 @@ pub fn qgemm_decode_oracle(
     out
 }
 
-/// The scalar baseline: per-element `mfbprop_multiply` + `decode_fp7`,
-/// exactly what consuming the packed stream cost before the LUT kernel
-/// (the per-element body of the pre-qgemm `mfbprop_dot_packed`, looped
-/// over the output matrix). Kept as the bench baseline the ≥4× gate in
-/// `benches/qgemm.rs` measures against — and as a second oracle, since
-/// its accumulation order matches the LUT kernels.
+/// The backward scalar baseline: per-element `mfbprop_multiply` +
+/// `decode_fp7`, exactly what consuming the packed stream cost before the
+/// LUT kernel (the per-element body of the pre-qgemm `mfbprop_dot_packed`,
+/// looped over the output matrix). Kept as the bench baseline the ≥4×
+/// gate in `benches/qgemm.rs` measures against — and as a second oracle,
+/// since its accumulation order matches the LUT kernels.
 pub fn qgemm_scalar_reference(
     int4: &[Int4Code],
     packed_fp4: &[u8],
@@ -358,12 +454,14 @@ pub fn qgemm_scalar_reference(
     if m == 0 || n == 0 {
         return;
     }
-    check_shapes(int4, packed_fp4, m, k, n, out);
+    assert!(int4.len() >= m * k, "int4 operand too short");
+    assert!(out.len() >= m * n, "output too short");
     if k == 0 {
         out[..m * n].fill(0.0);
         return;
     }
     let kb = k.div_ceil(2);
+    assert!(packed_fp4.len() >= n * kb, "packed fp4 operand too short");
     for i in 0..m {
         let arow = &int4[i * k..i * k + k];
         let orow = &mut out[i * n..i * n + n];
@@ -380,10 +478,188 @@ pub fn qgemm_scalar_reference(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Forward instantiation: signed INT4 × INT4, both operands packed.
+// ---------------------------------------------------------------------------
+
+/// The full-control forward entry point: tiled signed INT4×INT4 GEMM
+/// through [`int4_product_lut`]. Both operands arrive **packed** in the
+/// byte-aligned row layout `UniformQuantizer::encode_packed_matrix_scratch`
+/// emits: `A` as `m` rows of `k` codes (row stride `k.div_ceil(2)`
+/// bytes), `B` as `n` rows of `k` codes — `Y = A·Bᵀ` with both reduction
+/// streams contiguous. `A` is unpacked once into `scratch` (1 nibble per
+/// byte), so repeated calls are allocation-free at steady state, and the
+/// result is bit-identical for every `n_threads`.
+///
+/// The result is in **code units**: multiply by `Δ_a · Δ_b` (the two
+/// uniform-quantizer step sizes) outside the accumulation, as with the
+/// backward path's α.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_int4_mt_with(
+    a_packed: &[u8],
+    b_packed: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(
+        a_packed.len() >= m * kb,
+        "packed a operand too short: {} < {}",
+        a_packed.len(),
+        m * kb
+    );
+    let a_nib = scratch.stage_packed_rows(a_packed, m, k);
+    qgemm_lut_mt(int4_product_lut(), a_nib, b_packed, m, k, n, out, n_threads);
+}
+
+/// Single-threaded tiled forward GEMM reusing `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_int4_with(
+    a_packed: &[u8],
+    b_packed: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    scratch: &mut QgemmScratch,
+) {
+    qgemm_int4_mt_with(a_packed, b_packed, m, k, n, out, 1, scratch);
+}
+
+/// Tiled forward GEMM into a caller buffer (owns its scratch).
+pub fn qgemm_int4_into(
+    a_packed: &[u8],
+    b_packed: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let mut scratch = QgemmScratch::new();
+    qgemm_int4_with(a_packed, b_packed, m, k, n, out, &mut scratch);
+}
+
+/// Allocating forward wrapper: `m × n` result in code units.
+pub fn qgemm_int4(a_packed: &[u8], b_packed: &[u8], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    qgemm_int4_into(a_packed, b_packed, m, k, n, &mut out);
+    out
+}
+
+/// Flat (untiled) forward LUT loop — the A nibble is extracted from the
+/// packed byte on the fly (no staging). Same bit-exact result as the
+/// tiled kernel; the middle rung of the forward bench ladder.
+pub fn qgemm_int4_flat(
+    a_packed: &[u8],
+    b_packed: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(out.len() >= m * n, "output too short");
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(a_packed.len() >= m * kb, "packed a operand too short");
+    assert!(b_packed.len() >= n * kb, "packed b operand too short");
+    let lut = int4_product_lut();
+    for i in 0..m {
+        let arow = &a_packed[i * kb..i * kb + kb];
+        let orow = &mut out[i * n..i * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b_packed[j * kb..j * kb + kb];
+            *o = dot_lut(lut, k, brow, |x| row_nibble(arow, x));
+        }
+    }
+}
+
+/// The forward decode-then-f32-matmul **oracle**: decode both nibbles to
+/// their signed integer f32 values ([`Int4Code::value`]) and matmul in
+/// plain f32, accumulating in the same increasing-`k` order as every
+/// kernel variant. Independent reference for the forward bit-exactness
+/// gates; not a performance path.
+pub fn qgemm_int4_decode_oracle(
+    a_packed: &[u8],
+    b_packed: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let kb = k.div_ceil(2);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for x in 0..k {
+                let an = (a_packed[i * kb + (x >> 1)] >> ((x & 1) << 2)) & 0x0F;
+                let bn = (b_packed[j * kb + (x >> 1)] >> ((x & 1) << 2)) & 0x0F;
+                acc += Int4Code::from_nibble(an).value() * Int4Code::from_nibble(bn).value();
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// The forward scalar baseline: per-element nibble decode to signed f32
+/// and a real multiply — what consuming the two packed INT4 streams costs
+/// without the LUT. The `benches/qgemm.rs` forward gate measures the
+/// tiled LUT kernel against this loop (≥4×); its accumulation order
+/// matches the LUT kernels, so it doubles as a second oracle.
+pub fn qgemm_int4_scalar_reference(
+    a_packed: &[u8],
+    b_packed: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(out.len() >= m * n, "output too short");
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(a_packed.len() >= m * kb, "packed a operand too short");
+    assert!(b_packed.len() >= n * kb, "packed b operand too short");
+    for i in 0..m {
+        let arow = &a_packed[i * kb..i * kb + kb];
+        let orow = &mut out[i * n..i * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b_packed[j * kb..j * kb + kb];
+            let mut acc = 0.0f32;
+            for x in 0..k {
+                let an = (arow[x >> 1] >> ((x & 1) << 2)) & 0x0F;
+                let bn = (brow[x >> 1] >> ((x & 1) << 2)) & 0x0F;
+                acc += Int4Code::from_nibble(an).value() * Int4Code::from_nibble(bn).value();
+            }
+            *o = acc;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{LogFormat, LogQuantConfig, LogQuantizer};
+    use crate::quant::{
+        LogFormat, LogQuantConfig, LogQuantizer, UniformQuantizer, UniformRounding,
+    };
     use crate::rng::Xoshiro256;
     use crate::testutil::prop_check;
 
@@ -423,6 +699,19 @@ mod tests {
                 let reference = super::super::mfbprop::reference_product(a, g);
                 assert_eq!(got.to_bits(), via_block.to_bits(), "{a:?} × {g:?}");
                 assert_eq!(got.to_bits(), reference.to_bits(), "{a:?} × {g:?}");
+            }
+        }
+    }
+
+    /// Every entry of the forward LUT is the exact integer product of the
+    /// two signed sign-magnitude codes (exhaustive 16×16).
+    #[test]
+    fn int4_lut_entries_are_exact_integer_products() {
+        let lut = int4_product_lut();
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                let want = Int4Code::from_nibble(a).value() * Int4Code::from_nibble(b).value();
+                assert_eq!(lut.product(a, b).to_bits(), want.to_bits(), "a={a} b={b}");
             }
         }
     }
@@ -471,6 +760,50 @@ mod tests {
         );
     }
 
+    /// The forward mirror of the property test: scalar / flat / tiled /
+    /// multithreaded INT4×INT4 all match the forward decode oracle
+    /// bit-exactly across shapes and thread counts.
+    #[test]
+    fn int4_qgemm_matches_oracle_across_shapes_and_threads() {
+        prop_check(
+            "int4_qgemm_oracle",
+            0xF0,
+            25,
+            |rng| {
+                let m = 1 + rng.uniform_usize(2 * TILE_M + 3);
+                let k = 1 + rng.uniform_usize(67);
+                let n = 1 + rng.uniform_usize(2 * TILE_N + 3);
+                let a = random_packed(rng, m, k);
+                let b = random_packed(rng, n, k);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let want = qgemm_int4_decode_oracle(a, b, m, k, n);
+                let tiled = qgemm_int4(a, b, m, k, n);
+                if tiled.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
+                    return Err(format!("tiled != oracle at m={m} k={k} n={n}"));
+                }
+                let mut flat = vec![0.0f32; m * n];
+                qgemm_int4_flat(a, b, m, k, n, &mut flat);
+                let mut scalar = vec![0.0f32; m * n];
+                qgemm_int4_scalar_reference(a, b, m, k, n, &mut scalar);
+                let mut scratch = QgemmScratch::new();
+                for threads in [1usize, 2, 8] {
+                    let mut mt = vec![0.0f32; m * n];
+                    qgemm_int4_mt_with(a, b, m, k, n, &mut mt, threads, &mut scratch);
+                    if mt.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
+                        return Err(format!("{threads}T != oracle at m={m} k={k} n={n}"));
+                    }
+                }
+                if flat != tiled || scalar != tiled {
+                    return Err(format!("variant disagreement at m={m} k={k} n={n}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
     /// Deliberate boundary shapes: exact tile multiples, one-off-tile,
     /// single row/col, odd and even K crossing the trailing-byte path.
     #[test]
@@ -500,8 +833,25 @@ mod tests {
         qgemm_packed_into(&[], &[], 0, 5, 3, &mut out);
         qgemm_packed_into(&[], &[], 4, 5, 0, &mut out);
         assert_eq!(out, vec![1.0f32; 8]); // m==0 / n==0: untouched
-        qgemm_packed_mt(&random_codes(&mut Xoshiro256::seed_from_u64(1), 6), &[], 2, 0, 3, &mut out, 4);
+        let codes = random_codes(&mut Xoshiro256::seed_from_u64(1), 6);
+        qgemm_packed_mt(&codes, &[], 2, 0, 3, &mut out, 4);
         assert_eq!(&out[..6], &[0.0; 6]); // k==0: zero dot products
+    }
+
+    /// Forward empty shapes: m/n = 0 leave the buffer untouched, k = 0
+    /// writes zeros — across every forward variant.
+    #[test]
+    fn int4_qgemm_empty_shapes_are_safe() {
+        let mut out = vec![1.0f32; 8];
+        qgemm_int4_into(&[], &[], 0, 5, 3, &mut out);
+        qgemm_int4_into(&[], &[], 4, 5, 0, &mut out);
+        qgemm_int4_flat(&[], &[], 0, 5, 3, &mut out);
+        qgemm_int4_scalar_reference(&[], &[], 4, 5, 0, &mut out);
+        assert_eq!(out, vec![1.0f32; 8]);
+        let mut scratch = QgemmScratch::new();
+        qgemm_int4_mt_with(&[], &[], 2, 0, 3, &mut out, 4, &mut scratch);
+        assert_eq!(&out[..6], &[0.0; 6]);
+        assert!(qgemm_int4_decode_oracle(&[], &[], 2, 0, 3).iter().all(|v| *v == 0.0));
     }
 
     /// `mfbprop_dot_packed` is the 1×K special case of the GEMM kernel.
@@ -536,7 +886,35 @@ mod tests {
         assert_bits_eq(&got, &want, "e2e");
     }
 
-    /// Reusing one scratch across differently-shaped calls stays correct.
+    /// Forward end-to-end: the UniformQuantizer's packed matrix emission
+    /// drives the INT4×INT4 engine and agrees with decoding the codes and
+    /// matmul-ing in f32 (code units).
+    #[test]
+    fn uniform_matrix_codes_feed_int4_qgemm() {
+        let mut rng = Xoshiro256::seed_from_u64(0xE3);
+        let (m, k, n) = (9usize, 13, 7); // odd k: per-row padding nibbles
+        let acts: Vec<f32> = (0..m * k).map(|_| rng.normal_ms_f32(0.0, 1.5)).collect();
+        let wts: Vec<f32> = (0..n * k).map(|_| rng.normal_ms_f32(0.0, 0.5)).collect();
+        let aq = UniformQuantizer::new(4, 2.5, UniformRounding::Rdn);
+        let wq = UniformQuantizer::new(4, 1.5, UniformRounding::Rdn);
+        let a_packed = aq.encode_packed_matrix(&acts, m, k, &mut rng);
+        let b_packed = wq.encode_packed_matrix(&wts, n, k, &mut rng);
+        let want = qgemm_int4_decode_oracle(&a_packed, &b_packed, m, k, n);
+        let got = qgemm_int4(&a_packed, &b_packed, m, k, n);
+        assert_bits_eq(&got, &want, "int4 e2e");
+        // Spot-check one output against the per-element code path.
+        let mut acc = 0.0f32;
+        for x in 0..k {
+            let ca = aq.code_of(acts[x], 0.0) as f32;
+            let cb = wq.code_of(wts[x], 0.0) as f32;
+            acc += ca * cb;
+        }
+        assert_eq!(got[0].to_bits(), acc.to_bits(), "code-unit spot check");
+    }
+
+    /// Reusing one scratch across differently-shaped calls stays correct,
+    /// including when the backward and forward instantiations interleave
+    /// on the same scratch.
     #[test]
     fn scratch_reuse_across_shapes() {
         let mut rng = Xoshiro256::seed_from_u64(0xF3);
@@ -547,6 +925,26 @@ mod tests {
             let mut out = vec![0.0f32; m * n];
             qgemm_packed_with(&a, &b, m, k, n, &mut out, &mut scratch);
             assert_bits_eq(&out, &oracle(&a, &b, m, k, n), &format!("m={m} k={k} n={n}"));
+            let ap = random_packed(&mut rng, m, k);
+            qgemm_int4_with(&ap, &b, m, k, n, &mut out, &mut scratch);
+            assert_bits_eq(
+                &out,
+                &qgemm_int4_decode_oracle(&ap, &b, m, k, n),
+                &format!("int4 m={m} k={k} n={n}"),
+            );
         }
+    }
+
+    /// The generic engine itself accepts any LUT: a custom table (here,
+    /// an all-ones table) reduces the GEMM to counting k per output.
+    #[test]
+    fn engine_is_lut_generic() {
+        let ones = ProductLut::from_fn(|_, _| 1.0);
+        let (m, k, n) = (3usize, 9, 4);
+        let a_nib = vec![0u8; m * k];
+        let b = vec![0u8; n * k.div_ceil(2)];
+        let mut out = vec![0.0f32; m * n];
+        qgemm_lut_mt(&ones, &a_nib, &b, m, k, n, &mut out, 2);
+        assert!(out.iter().all(|v| *v == k as f32), "{out:?}");
     }
 }

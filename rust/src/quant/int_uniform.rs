@@ -9,7 +9,32 @@
 //! rounding per the paper's §3.3 conclusion for the forward pass, and a
 //! clip scale chosen by SAWB ([`super::sawb`]) or any caller-supplied clip.
 
+use super::kernel::QuantScratch;
 use crate::rng::Xoshiro256;
+
+/// The MF-BPROP wire nibble `[sign | magnitude]` of a signed integer
+/// code — exactly `hw::mfbprop::Int4Code::from_int(code).nibble()`,
+/// branch-free (the packed emitters below feed the INT4×INT4 and
+/// INT4×FP4 product-LUT GEMMs of [`crate::hw::qgemm`]).
+#[inline(always)]
+fn nibble_of(code: i32) -> u8 {
+    (((code < 0) as u8) << 3) | (code.unsigned_abs() as u8)
+}
+
+/// Shared packed-nibble emission loop: write `n` codes 2-per-byte (low
+/// nibble first, `LogFormat::pack_nibbles` layout), the code supplied by
+/// index through `nib` — monomorphized per rounding mode so the mode
+/// dispatch stays hoisted out of the element loop.
+#[inline(always)]
+fn pack_nibbles_by(n: usize, packed: &mut [u8], nib: impl Fn(usize) -> u8) {
+    let pairs = n / 2;
+    for (p, byte) in packed[..pairs].iter_mut().enumerate() {
+        *byte = (nib(2 * p) & 0x0F) | ((nib(2 * p + 1) & 0x0F) << 4);
+    }
+    if n % 2 == 1 {
+        packed[pairs] = nib(n - 1) & 0x0F;
+    }
+}
 
 /// Rounding mode for the uniform quantizer (the Fig. 1b/1c experiments
 /// compare both on the forward/backward passes).
@@ -107,16 +132,182 @@ impl UniformQuantizer {
     }
 
     /// Integer codes (for packing/bandwidth accounting).
+    ///
+    /// Noise is drawn **only in stochastic mode** — one uniform per
+    /// element, exactly like [`Self::quantize`] — so the caller's RNG
+    /// stream stays aligned across the two paths. (The seed drew one
+    /// uniform per element unconditionally, silently diverging the
+    /// stream from `quantize` in RDN mode.)
     pub fn encode(&self, x: &[f32], rng: &mut Xoshiro256) -> Vec<i8> {
-        x.iter()
-            .map(|&v| self.code_of(v, rng.uniform_f32()) as i8)
-            .collect()
+        match self.rounding {
+            UniformRounding::Rdn => x.iter().map(|&v| self.code_of(v, 0.0) as i8).collect(),
+            UniformRounding::Stochastic => x
+                .iter()
+                .map(|&v| self.code_of(v, rng.uniform_f32()) as i8)
+                .collect(),
+        }
     }
 
     /// Decode integer codes back to grid values.
     pub fn decode(&self, codes: &[i8]) -> Vec<f32> {
         let d = self.delta();
         codes.iter().map(|&c| c as f32 * d).collect()
+    }
+
+    /// Fused quantize→packed-code path: emit the sign-magnitude wire
+    /// nibbles (two per byte, low nibble first — the
+    /// `LogFormat::pack_nibbles` layout) directly, with no intermediate
+    /// i8 code or dequantized f32 tensor. This is the INT4 operand stream
+    /// [`crate::hw::qgemm::qgemm_int4_mt_with`] consumes.
+    ///
+    /// The rounding-mode dispatch is hoisted out of the loop and each
+    /// loop replicates [`Self::code_of`]'s exact expressions, so the
+    /// emitted codes are bit-identical to the per-element
+    /// `code_of` → `Int4Code::from_int` → `nibble` path. `noise` supplies
+    /// one uniform per element and is consumed only in stochastic mode.
+    /// Requires `bits <= 4` (nibble packing);
+    /// `packed.len() >= x.len().div_ceil(2)`.
+    pub fn encode_packed_into(&self, x: &[f32], noise: &[f32], packed: &mut [u8]) {
+        assert!(self.bits <= 4, "packed-nibble emission needs a <= 4-bit format");
+        let n = x.len();
+        assert!(packed.len() >= n.div_ceil(2), "packed buffer too small");
+        let d = self.delta();
+        let levels = self.levels();
+        match self.rounding {
+            UniformRounding::Rdn => pack_nibbles_by(n, packed, |i| {
+                let t = x[i] / d;
+                let code =
+                    ((t.abs() + 0.5).floor().copysign(t) as i32).clamp(-levels, levels);
+                nibble_of(code)
+            }),
+            UniformRounding::Stochastic => {
+                assert!(noise.len() >= n, "need one uniform per element");
+                pack_nibbles_by(n, packed, |i| {
+                    let t = x[i] / d;
+                    let code = ((t + noise[i]).floor() as i32).clamp(-levels, levels);
+                    nibble_of(code)
+                })
+            }
+        }
+    }
+
+    /// Row-major **matrix** variant of
+    /// [`encode_packed_into`](Self::encode_packed_into), mirroring
+    /// `LogQuantizer::quantize_to_codes_matrix_into`: each row is packed
+    /// independently so it starts at a byte boundary (odd `cols` rows end
+    /// in a zero-padded half byte), and rows land `row_stride_bytes`
+    /// apart (`>= cols.div_ceil(2)`) so callers can emit into
+    /// padded/tiled layouts. This is exactly the packed operand layout
+    /// the forward INT4×INT4 GEMM consumes for both of its operands.
+    pub fn encode_packed_matrix_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        noise: &[f32],
+        packed: &mut [u8],
+        row_stride_bytes: usize,
+    ) {
+        assert!(self.bits <= 4, "packed-nibble emission needs a <= 4-bit format");
+        let n = rows * cols;
+        assert!(x.len() >= n, "matrix input too short");
+        let rb = cols.div_ceil(2);
+        assert!(row_stride_bytes >= rb, "row stride smaller than a packed row");
+        if rows > 0 {
+            assert!(
+                packed.len() >= (rows - 1) * row_stride_bytes + rb,
+                "packed buffer too small"
+            );
+        }
+        if self.rounding == UniformRounding::Stochastic {
+            assert!(noise.len() >= n, "need one uniform per element");
+        }
+        for r in 0..rows {
+            let xs = &x[r * cols..r * cols + cols];
+            let ns = match self.rounding {
+                UniformRounding::Rdn => &[][..],
+                UniformRounding::Stochastic => &noise[r * cols..r * cols + cols],
+            };
+            self.encode_packed_into(
+                xs,
+                ns,
+                &mut packed[r * row_stride_bytes..r * row_stride_bytes + rb],
+            );
+        }
+    }
+
+    /// Zero-steady-state-allocation matrix emission mirroring
+    /// `LogQuantizer::quantize_to_codes_matrix_scratch`: stochastic noise
+    /// is staged row-by-row in `scratch` (one `fill_uniform` per row,
+    /// uniform consumption order equal to one flat fill over
+    /// `rows × cols`). **Stream contract:** the call consumes exactly
+    /// `rows · cols` uniforms in stochastic mode and exactly zero in RDN
+    /// mode — data-independent either way, and aligned with
+    /// [`Self::encode`]/[`Self::quantize`] semantics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_packed_matrix_scratch(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Xoshiro256,
+        packed: &mut [u8],
+        row_stride_bytes: usize,
+        scratch: &mut QuantScratch,
+    ) {
+        assert!(self.bits <= 4, "packed-nibble emission needs a <= 4-bit format");
+        let n = rows * cols;
+        assert!(x.len() >= n, "matrix input too short");
+        let rb = cols.div_ceil(2);
+        assert!(row_stride_bytes >= rb, "row stride smaller than a packed row");
+        if rows > 0 {
+            assert!(
+                packed.len() >= (rows - 1) * row_stride_bytes + rb,
+                "packed buffer too small"
+            );
+        }
+        match self.rounding {
+            UniformRounding::Rdn => {
+                for r in 0..rows {
+                    self.encode_packed_into(
+                        &x[r * cols..r * cols + cols],
+                        &[],
+                        &mut packed[r * row_stride_bytes..r * row_stride_bytes + rb],
+                    );
+                }
+            }
+            UniformRounding::Stochastic => {
+                if scratch.noise.len() < cols {
+                    scratch.noise.resize(cols, 0.0);
+                }
+                for r in 0..rows {
+                    let nb = &mut scratch.noise[..cols];
+                    rng.fill_uniform(nb);
+                    self.encode_packed_into(
+                        &x[r * cols..r * cols + cols],
+                        nb,
+                        &mut packed[r * row_stride_bytes..r * row_stride_bytes + rb],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Allocating wrapper around
+    /// [`encode_packed_matrix_scratch`](Self::encode_packed_matrix_scratch)
+    /// with the dense stride (`cols.div_ceil(2)` bytes per row).
+    pub fn encode_packed_matrix(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        rng: &mut Xoshiro256,
+    ) -> Vec<u8> {
+        let rb = cols.div_ceil(2);
+        let mut packed = vec![0u8; rows * rb];
+        let mut scratch = QuantScratch::new();
+        self.encode_packed_matrix_scratch(x, rows, cols, rng, &mut packed, rb, &mut scratch);
+        packed
     }
 
     /// Mean-squared quantization error over a slice (deterministic only
@@ -229,6 +420,162 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Satellite regression: `encode` must draw noise **only** in
+    /// stochastic mode. The seed consumed one uniform per element even
+    /// for RDN, diverging the stream relative to `quantize`.
+    #[test]
+    fn encode_stream_alignment_matches_quantize() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let x: Vec<f32> = (0..257).map(|_| rng.normal_ms_f32(0.0, 2.0)).collect();
+        // RDN: zero uniforms consumed — generator untouched.
+        let q_rdn = UniformQuantizer::new(4, 5.0, UniformRounding::Rdn);
+        let mut a = Xoshiro256::seed_from_u64(7);
+        let b = a.clone();
+        let codes = q_rdn.encode(&x, &mut a);
+        assert_eq!(a.clone().next_u64(), b.clone().next_u64(), "RDN consumed RNG");
+        // And the codes still equal the per-element path.
+        for (c, &v) in codes.iter().zip(x.iter()) {
+            assert_eq!(*c as i32, q_rdn.code_of(v, 0.0));
+        }
+        // Stochastic: exactly one uniform per element, same stream as a
+        // manual per-element draw.
+        let q_sr = UniformQuantizer::new(4, 5.0, UniformRounding::Stochastic);
+        let mut a = Xoshiro256::seed_from_u64(9);
+        let mut b = a.clone();
+        let codes = q_sr.encode(&x, &mut a);
+        for _ in 0..x.len() {
+            let _ = b.uniform_f32();
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "SR stream misaligned");
+        assert_eq!(codes.len(), x.len());
+    }
+
+    /// The fused packed emitter is bit-identical to the per-element
+    /// `code_of` → sign-magnitude-nibble path in both rounding modes,
+    /// including the odd-length half byte.
+    #[test]
+    fn encode_packed_matches_code_of_bitwise() {
+        use crate::quant::logfmt::LogFormat;
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let n = 1025; // odd: half-filled trailing byte
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_ms_f32(0.0, 3.0)).collect();
+        let mut noise = vec![0.0f32; n];
+        rng.fill_uniform(&mut noise);
+        for rounding in [UniformRounding::Rdn, UniformRounding::Stochastic] {
+            let q = UniformQuantizer::new(4, 4.5, rounding);
+            let mut packed = vec![0xFFu8; n.div_ceil(2)];
+            q.encode_packed_into(&x, &noise, &mut packed);
+            let nibs = LogFormat::unpack_nibbles(&packed, n);
+            for i in 0..n {
+                let u = if rounding == UniformRounding::Stochastic { noise[i] } else { 0.0 };
+                let code = q.code_of(x[i], u);
+                let want = (((code < 0) as u8) << 3) | code.unsigned_abs() as u8;
+                assert_eq!(nibs[i], want, "{rounding:?} i={i} code={code}");
+            }
+            assert_eq!(packed[n / 2] >> 4, 0, "odd-n padding nibble is zero");
+        }
+    }
+
+    /// Matrix emitter vs flat emitter: bitwise identical for even cols
+    /// (no per-row padding), rows byte-aligned with zero padding for odd
+    /// cols, stride gaps untouched — the uniform mirror of the
+    /// `LogQuantizer` matrix-emitter contract.
+    #[test]
+    fn encode_packed_matrix_layout_contract() {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let q = UniformQuantizer::new(4, 3.0, UniformRounding::Rdn);
+        // Even cols: matrix == flat.
+        let (rows, cols) = (5usize, 12usize);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal_ms_f32(0.0, 1.5)).collect();
+        let rb = cols / 2;
+        let mut mat = vec![0u8; rows * rb];
+        q.encode_packed_matrix_into(&x, rows, cols, &[], &mut mat, rb);
+        let mut flat = vec![0u8; rows * rb];
+        q.encode_packed_into(&x, &[], &mut flat);
+        assert_eq!(mat, flat);
+        // Odd cols: per-row zero-padded half byte.
+        let (rows, cols) = (4usize, 7usize);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal_ms_f32(0.0, 1.5)).collect();
+        let rb = cols.div_ceil(2);
+        let mut mat = vec![0xEEu8; rows * rb];
+        q.encode_packed_matrix_into(&x, rows, cols, &[], &mut mat, rb);
+        for r in 0..rows {
+            assert_eq!(mat[r * rb + rb - 1] >> 4, 0, "row {r} padding nibble");
+        }
+        // Stride > rb: rows land stride apart, gap bytes never written.
+        let stride = rb + 3;
+        let mut strided = vec![0xEEu8; (rows - 1) * stride + rb];
+        q.encode_packed_matrix_into(&x, rows, cols, &[], &mut strided, stride);
+        for r in 0..rows {
+            assert_eq!(
+                &strided[r * stride..r * stride + rb],
+                &mat[r * rb..(r + 1) * rb],
+                "row {r}"
+            );
+            if r + 1 < rows {
+                assert!(
+                    strided[r * stride + rb..(r + 1) * stride].iter().all(|&b| b == 0xEE),
+                    "gap after row {r} untouched"
+                );
+            }
+        }
+    }
+
+    /// Degenerate matrix shapes are safe: rows = 0 and cols = 0 write
+    /// nothing, cols = 1 packs one half byte per row.
+    #[test]
+    fn encode_packed_matrix_degenerate_shapes() {
+        let q = UniformQuantizer::new(4, 2.0, UniformRounding::Rdn);
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        let mut packed = vec![0xABu8; 8];
+        q.encode_packed_matrix_into(&[], 0, 5, &[], &mut packed, 3);
+        q.encode_packed_matrix_into(&[], 4, 0, &[], &mut packed, 0);
+        assert!(packed.iter().all(|&b| b == 0xAB), "degenerate shapes wrote bytes");
+        let mut scratch = QuantScratch::new();
+        q.encode_packed_matrix_scratch(&[], 0, 5, &mut rng, &mut packed, 3, &mut scratch);
+        assert!(packed.iter().all(|&b| b == 0xAB));
+        // cols = 1: one code per row, high nibble zero.
+        let x = [1.4f32, -2.0, 0.2];
+        q.encode_packed_matrix_into(&x, 3, 1, &[], &mut packed, 1);
+        for (r, &v) in x.iter().enumerate() {
+            let code = q.code_of(v, 0.0);
+            let want = (((code < 0) as u8) << 3) | code.unsigned_abs() as u8;
+            assert_eq!(packed[r], want, "row {r}");
+        }
+    }
+
+    /// The scratch-staged matrix emitter equals the `_into` variant and
+    /// honors the RNG stream contract: rows·cols uniforms for SR, zero
+    /// for RDN.
+    #[test]
+    fn encode_packed_matrix_scratch_stream_contract() {
+        let mut rng = Xoshiro256::seed_from_u64(47);
+        let (rows, cols) = (6usize, 9usize);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal_ms_f32(0.0, 2.0)).collect();
+        let rb = cols.div_ceil(2);
+        // RDN: no RNG consumption, output equals the noise-free _into path.
+        let q_rdn = UniformQuantizer::new(4, 3.5, UniformRounding::Rdn);
+        let mut a = Xoshiro256::seed_from_u64(5);
+        let before = a.clone();
+        let mut got = vec![0u8; rows * rb];
+        let mut scratch = QuantScratch::new();
+        q_rdn.encode_packed_matrix_scratch(&x, rows, cols, &mut a, &mut got, rb, &mut scratch);
+        assert_eq!(a.next_u64(), before.clone().next_u64(), "RDN consumed RNG");
+        let mut want = vec![0u8; rows * rb];
+        q_rdn.encode_packed_matrix_into(&x, rows, cols, &[], &mut want, rb);
+        assert_eq!(got, want);
+        // SR: per-row staging equals one flat fill of rows·cols uniforms.
+        let q_sr = UniformQuantizer::new(4, 3.5, UniformRounding::Stochastic);
+        let mut a = Xoshiro256::seed_from_u64(11);
+        let mut b = a.clone();
+        q_sr.encode_packed_matrix_scratch(&x, rows, cols, &mut a, &mut got, rb, &mut scratch);
+        let mut noise = vec![0.0f32; rows * cols];
+        b.fill_uniform(&mut noise);
+        q_sr.encode_packed_matrix_into(&x, rows, cols, &noise, &mut want, rb);
+        assert_eq!(got, want);
+        assert_eq!(a.next_u64(), b.next_u64(), "SR stream misaligned");
     }
 
     #[test]

@@ -339,8 +339,10 @@ pub fn codes_dispatch(
 #[derive(Default)]
 pub struct QuantScratch {
     /// Uniform-noise staging buffer: chunk-sized for SMP, row-sized for
-    /// the matrix code emitter (`quantize_to_codes_matrix_scratch`);
-    /// grows to the larger consumer and is reused by both.
+    /// the matrix code emitters (`LogQuantizer::
+    /// quantize_to_codes_matrix_scratch` and the stochastic path of
+    /// `UniformQuantizer::encode_packed_matrix_scratch`); grows to the
+    /// largest consumer and is reused by all of them.
     pub(crate) noise: Vec<f32>,
     /// Chunk-sized per-sample staging buffer (SMP accumulation).
     pub(crate) sample: Vec<f32>,

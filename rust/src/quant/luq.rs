@@ -1096,6 +1096,68 @@ mod tests {
         }
     }
 
+    /// Satellite: matrix-emitter edge shapes. `rows = 0` and `cols = 0`
+    /// write nothing and are safe on both the `_into` and `_scratch`
+    /// variants; `cols = 1` packs one half byte per row with a zero
+    /// padding nibble; stride > packed-row-bytes with odd cols leaves
+    /// every gap byte (including the one after the padding nibble)
+    /// untouched.
+    #[test]
+    fn matrix_codes_edge_shapes() {
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let mut rng = Xoshiro256::seed_from_u64(37);
+        // rows = 0 / cols = 0: no bytes written, no panic.
+        let mut packed = vec![0xABu8; 8];
+        let noise = vec![0.5f32; 8];
+        let st = q.quantize_to_codes_matrix_into(&[], 0, 5, &noise, &mut packed, 3);
+        assert_eq!(st.max_abs, 0.0);
+        q.quantize_to_codes_matrix_into(&[], 4, 0, &noise, &mut packed, 0);
+        assert!(packed.iter().all(|&b| b == 0xAB), "degenerate shapes wrote bytes");
+        let mut scratch = QuantScratch::new();
+        q.quantize_to_codes_matrix_scratch(&[], 0, 5, &mut rng, &mut packed, 3, &mut scratch);
+        assert!(packed.iter().all(|&b| b == 0xAB));
+        // cols = 1: one code per row, zero high nibble, and decoding each
+        // row reproduces the dequantized value.
+        let rows = 5usize;
+        let x: Vec<f32> = (0..rows).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let mut nz = vec![0.0f32; rows];
+        rng.fill_uniform(&mut nz);
+        let mut one = vec![0xFFu8; rows];
+        let st = q.quantize_to_codes_matrix_into(&x, rows, 1, &nz, &mut one, 1);
+        let mut want = vec![0.0f32; rows];
+        q.quantize_into(&x, &nz, &mut want);
+        for r in 0..rows {
+            assert_eq!(one[r] >> 4, 0, "row {r} padding nibble");
+            let dec = LogFormat::FP4.decode(one[r] & 0x0F, st.alpha);
+            let w = if want[r] == 0.0 { 0.0 } else { want[r] };
+            assert_eq!(dec.to_bits(), w.to_bits(), "row {r}");
+        }
+        // Odd cols + stride > rb: rows land stride apart, gaps untouched.
+        let (rows, cols, stride) = (3usize, 5usize, 6usize);
+        let rb = cols.div_ceil(2);
+        let x: Vec<f32> =
+            (0..rows * cols).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let mut nz = vec![0.0f32; rows * cols];
+        rng.fill_uniform(&mut nz);
+        let mut dense = vec![0u8; rows * rb];
+        q.quantize_to_codes_matrix_into(&x, rows, cols, &nz, &mut dense, rb);
+        let mut strided = vec![0xEEu8; (rows - 1) * stride + rb];
+        q.quantize_to_codes_matrix_into(&x, rows, cols, &nz, &mut strided, stride);
+        for r in 0..rows {
+            assert_eq!(
+                &strided[r * stride..r * stride + rb],
+                &dense[r * rb..(r + 1) * rb],
+                "row {r}"
+            );
+            if r + 1 < rows {
+                assert!(
+                    strided[r * stride + rb..(r + 1) * stride].iter().all(|&b| b == 0xEE),
+                    "gap after row {r} untouched"
+                );
+            }
+        }
+    }
+
     /// All-zero matrix: zero codes on both matrix paths (satellite).
     #[test]
     fn all_zero_matrix_emits_zero_codes() {

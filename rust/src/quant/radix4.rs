@@ -18,8 +18,18 @@
 //! Rounding is deterministic nearest-in-log (geometric midpoint), matching
 //! Sun et al.'s deterministic scheme — the contrast with LUQ's unbiased
 //! stochastic rounding is the point of the comparison.
+//!
+//! Execution follows the `quant::kernel` architecture (§Perf): the tensor
+//! path [`Radix4Quantizer::quantize_into`] is a **branch-free bit-op
+//! loop** — the radix-4 exponent comes straight from the f32 exponent
+//! field (`⌊(e+1)/2⌋`, ties at the geometric midpoint `2·4^i` resolved by
+//! exponent parity), region membership only drives selects, and the
+//! scale/phase constants are hoisted. The seed per-element f64-`log2`
+//! loop survives as [`Radix4Quantizer::quantize_value`] /
+//! [`Radix4Quantizer::quantize_reference`], the bit-exactness oracle the
+//! tests pin the kernel against.
 
-use super::rounding::floor_log2;
+use super::rounding::{floor_log2, pow2i};
 
 /// Radix-4 logarithmic format `[1, exp_bits, 0]` with radix-4 spacing.
 #[derive(Clone, Copy, Debug)]
@@ -103,8 +113,80 @@ impl Radix4Quantizer {
         }
     }
 
-    /// Quantize a tensor in one phase, scale from the tensor max.
+    /// Quantize a tensor in one phase, scale from the tensor max. Runs on
+    /// the branch-free kernel ([`Self::quantize_into`]); bit-identical to
+    /// [`Self::quantize_reference`].
     pub fn quantize(&self, x: &[f32], phase: TprPhase) -> Vec<f32> {
+        let mut out = vec![0.0f32; x.len()];
+        self.quantize_into(x, phase, &mut out);
+        out
+    }
+
+    /// The branch-free tensor kernel: per-element, the radix-4 level index
+    /// is derived from the f32 exponent field alone —
+    ///
+    /// ```text
+    ///   i = ⌊(e + 1) / 2⌋,   e = ⌊log2(|x| / base)⌋  (exponent bits)
+    /// ```
+    ///
+    /// which is exactly `⌊log4(r) + 1/2⌋`: the geometric midpoint `2·4^i`
+    /// of the bin `[4^i, 4^(i+1)]` is an exact power of two, so the
+    /// nearest-in-log decision is just the parity of `e` (ties at the
+    /// midpoint round up, matching the f64 path, where `log2` of an exact
+    /// power of two is exact). Underflow (`i < 0`) and clip
+    /// (`i ≥ levels`) membership only drive selects; `4^i` is built by
+    /// exponent-field construction ([`pow2i`]), no `powi`/`log2`
+    /// libcalls. Division by `base` (not a reciprocal multiply) keeps `r`
+    /// bit-identical to the reference, so the whole loop is **bitwise**
+    /// the seed scalar path — pinned by
+    /// `branch_free_kernel_matches_reference_bitwise`.
+    ///
+    /// The bitwise contract is scoped to **finite inputs with a normal
+    /// (non-underflowing) α** — the domain every caller inhabits: a NaN
+    /// element reads as exponent 0xFF here but as `floor(NaN) = 0` in the
+    /// f64 path, and a tensor max below `~4096·f32::MIN` underflows
+    /// `α`/`base` to 0 (`r = ∞`), where the two paths can disagree about
+    /// the sign of a zero output.
+    ///
+    /// Returns the scale α (0 for an all-zero tensor).
+    pub fn quantize_into(&self, x: &[f32], phase: TprPhase, out: &mut [f32]) -> f32 {
+        assert_eq!(x.len(), out.len());
+        let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if max_abs == 0.0 {
+            out.fill(0.0);
+            return 0.0;
+        }
+        let alpha = self.format.alpha_for_max(max_abs);
+        let shift = match phase {
+            TprPhase::Base => 1.0f32,
+            TprPhase::Shifted => 2.0,
+        };
+        let base = alpha * shift;
+        let half_base = base * 0.5;
+        let levels = self.format.levels() as i32;
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            let a = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+            let r = a / base;
+            let e = ((r.to_bits() >> 23) & 0xFF) as i32 - 127;
+            let idx = (e + 1).div_euclid(2);
+            // Both region candidates, selected on precomputed conditions.
+            let n = idx.max(0).min(levels - 1);
+            let q_mid = base * pow2i(2 * n);
+            let q_under = if a >= half_base { base } else { 0.0 };
+            let q = if idx < 0 { q_under } else { q_mid };
+            // Sign: OR the sign bit into nonzero magnitudes only — zeros
+            // stay +0.0, exactly like the reference's literal `0.0` arms.
+            let neg = (v < 0.0) as u32;
+            let nonzero = (q != 0.0) as u32;
+            *o = f32::from_bits(q.to_bits() | ((neg & nonzero) << 31));
+        }
+        alpha
+    }
+
+    /// The seed per-element loop ([`Self::quantize_value`] over the
+    /// tensor), retained verbatim as the **bit-exactness oracle** for the
+    /// branch-free kernel.
+    pub fn quantize_reference(&self, x: &[f32], phase: TprPhase) -> Vec<f32> {
         let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
         if max_abs == 0.0 {
             return vec![0.0; x.len()];
@@ -193,6 +275,90 @@ mod tests {
         for w in union.windows(2) {
             assert_eq!(w[1] / w[0], 2.0, "union must be the radix-2 grid");
         }
+    }
+
+    /// The branch-free bit-op kernel is bit-identical to the retained
+    /// seed loop (`quantize_reference`) on heavy-tailed random tensors,
+    /// in both TPR phases.
+    #[test]
+    fn branch_free_kernel_matches_reference_bitwise() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        let mut rng = Xoshiro256::seed_from_u64(0x44);
+        for sigma in [1.0f32, 3.0, 6.0] {
+            let x: Vec<f32> =
+                (0..4096).map(|_| rng.signed_lognormal_f32(0.0, sigma)).collect();
+            for phase in [TprPhase::Base, TprPhase::Shifted] {
+                let want = q.quantize_reference(&x, phase);
+                let mut got = vec![0.0f32; x.len()];
+                let alpha = q.quantize_into(&x, phase, &mut got);
+                assert!(alpha > 0.0);
+                for i in 0..x.len() {
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want[i].to_bits(),
+                        "{phase:?} sigma={sigma} i={i}: {} vs {} (x={})",
+                        got[i],
+                        want[i],
+                        x[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Deliberate boundary inputs where the exponent-parity derivation
+    /// must agree with the f64 log path: exact grid points `4^i`, exact
+    /// geometric midpoints `2·4^i` (ties round up), one-ulp neighbors of
+    /// the midpoint, the underflow threshold `base/2`, zeros, and signs.
+    /// (The `min(levels−1)` clamp can never bind when α comes from the
+    /// tensor max, so clipping is exercised only through the clamp's
+    /// presence in both paths.)
+    #[test]
+    fn branch_free_kernel_exact_on_boundaries() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        // Pin alpha = 1 by making 4096 the tensor max (= the top level).
+        let mut x = vec![4096.0f32];
+        for i in 0..6 {
+            let g = 4.0f32.powi(i);
+            let mid = 2.0 * g;
+            x.extend_from_slice(&[
+                g,
+                -g,
+                mid,
+                -mid,
+                f32::from_bits(mid.to_bits() - 1),
+                f32::from_bits(mid.to_bits() + 1),
+            ]);
+        }
+        x.extend_from_slice(&[
+            0.0, -0.0, 0.5, -0.5, 0.499999, 0.500001, 0.25, 1e-20, -1e-20, 1.9, 2.1,
+        ]);
+        for phase in [TprPhase::Base, TprPhase::Shifted] {
+            let want = q.quantize_reference(&x, phase);
+            let mut got = vec![0.0f32; x.len()];
+            q.quantize_into(&x, phase, &mut got);
+            for i in 0..x.len() {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "{phase:?} x={}: {} vs {}",
+                    x[i],
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    /// All-zero tensors stay a fixed point of the kernel path too.
+    #[test]
+    fn branch_free_kernel_zero_tensor() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        let x = vec![0.0f32; 7];
+        let mut out = vec![1.0f32; 7];
+        let alpha = q.quantize_into(&x, TprPhase::Base, &mut out);
+        assert_eq!(alpha, 0.0);
+        assert!(out.iter().all(|v| v.to_bits() == 0));
     }
 
     #[test]

@@ -18,13 +18,19 @@
 use super::int_uniform::{UniformQuantizer, UniformRounding};
 use crate::rng::Xoshiro256;
 
-/// The two tensor statistics SAWB consumes.
+/// The two tensor statistics SAWB consumes, plus the tensor max —
+/// measured in **one pass** so [`SawbQuantizer::clip_for`]'s degenerate
+/// fallback never rescans the tensor (satellite: the seed folded over
+/// the data a second time whenever the linear rule went non-positive).
 #[derive(Clone, Copy, Debug)]
 pub struct SawbStats {
     /// `sqrt(E[x²])`
     pub rms: f32,
     /// `E[|x|]`
     pub mean_abs: f32,
+    /// `max|x|` (0 for an empty tensor), picked up for free by the same
+    /// loop.
+    pub max_abs: f32,
 }
 
 impl SawbStats {
@@ -32,13 +38,17 @@ impl SawbStats {
         let n = x.len().max(1) as f64;
         let mut s2 = 0.0f64;
         let mut s1 = 0.0f64;
+        let mut mx = 0.0f32;
         for &v in x {
+            let a = v.abs();
             s2 += (v as f64) * (v as f64);
-            s1 += v.abs() as f64;
+            s1 += a as f64;
+            mx = mx.max(a);
         }
         SawbStats {
             rms: (s2 / n).sqrt() as f32,
             mean_abs: (s1 / n) as f32,
+            max_abs: mx,
         }
     }
 }
@@ -169,14 +179,18 @@ impl SawbQuantizer {
     }
 
     /// The SAWB clip for a tensor (falls back to max|x| if the linear rule
-    /// goes non-positive, which only happens on degenerate inputs).
+    /// goes non-positive, which only happens on degenerate inputs). The
+    /// fallback reads `SawbStats::max_abs` from the same single pass that
+    /// produced the statistics — no second scan; `max(1e-12)` reproduces
+    /// the seed's `fold(1e-12, max)` bit-for-bit (all operands are
+    /// non-negative, so the fold seed commutes out of the reduction).
     pub fn clip_for(&self, x: &[f32]) -> f32 {
         let st = SawbStats::measure(x);
         let c = self.c1 * st.rms + self.c2 * st.mean_abs;
         if c > 0.0 {
             c
         } else {
-            x.iter().fold(1e-12f32, |m, v| m.max(v.abs()))
+            st.max_abs.max(1e-12f32)
         }
     }
 
@@ -261,6 +275,31 @@ mod tests {
                 (code - code.round()).abs() < 1e-4 && code.abs() <= 7.0 + 1e-4,
                 "off-grid value {v} (delta {d})"
             );
+        }
+    }
+
+    /// Satellite: the fused single-pass `measure` is bit-identical to the
+    /// seed's two-pass version (separate stats fold + max rescan), and
+    /// the degenerate fallback of `clip_for` equals the old rescan.
+    #[test]
+    fn fused_measure_matches_two_pass_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for n in [0usize, 1, 17, 4096] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_ms_f32(0.1, 1.3)).collect();
+            let st = SawbStats::measure(&xs);
+            // Two-pass reference: the seed's stats loop…
+            let nn = xs.len().max(1) as f64;
+            let mut s2 = 0.0f64;
+            let mut s1 = 0.0f64;
+            for &v in &xs {
+                s2 += (v as f64) * (v as f64);
+                s1 += v.abs() as f64;
+            }
+            assert_eq!(st.rms.to_bits(), (((s2 / nn).sqrt()) as f32).to_bits());
+            assert_eq!(st.mean_abs.to_bits(), ((s1 / nn) as f32).to_bits());
+            // …and the seed's fallback rescan.
+            let rescan = xs.iter().fold(1e-12f32, |m, v| m.max(v.abs()));
+            assert_eq!(st.max_abs.max(1e-12f32).to_bits(), rescan.to_bits(), "n={n}");
         }
     }
 

@@ -11,6 +11,17 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 127
 fi
 
+# fmt first: fail fast on formatting drift before the expensive build.
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    if ! cargo fmt --check; then
+        echo "check.sh: formatting drift — run 'cargo fmt' and re-check" >&2
+        exit 1
+    fi
+else
+    echo "== rustfmt not installed; skipped (install with: rustup component add rustfmt) =="
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
