@@ -5,7 +5,10 @@
 //!   quantize→pack→multiply pipeline (`coordinator::QgemmPath`);
 //! * **forward INT4×INT4**: scalar decode-and-multiply loop vs flat LUT
 //!   vs cache-tiled LUT vs multithreaded tiles, operands emitted by the
-//!   `UniformQuantizer` fused packed matrix emitter.
+//!   `UniformQuantizer` fused packed matrix emitter;
+//! * **radix-4 TPR INT4×radix-4**: the same ladder, gradient operand
+//!   emitted by the `Radix4Quantizer` fused packed matrix emitter
+//!   (shifted phase) — the `radix4_kernels` JSON section.
 //!
 //! Emits a machine-readable `BENCH_qgemm.json` (override with
 //! `LUQ_BENCH_JSON=<path>`) and **asserts** the acceptance gates:
@@ -21,11 +24,14 @@ use luq::hw::mfbprop::Int4Code;
 use luq::hw::qgemm::{
     qgemm_decode_oracle, qgemm_int4_decode_oracle, qgemm_int4_flat, qgemm_int4_mt_with,
     qgemm_int4_scalar_reference, qgemm_int4_with, qgemm_packed_flat, qgemm_packed_mt,
-    qgemm_packed_mt_with, qgemm_packed_with, qgemm_scalar_reference, QgemmScratch,
+    qgemm_packed_mt_with, qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat,
+    qgemm_radix4_mt_with, qgemm_radix4_scalar_reference, qgemm_radix4_with,
+    qgemm_scalar_reference, QgemmScratch,
 };
 use luq::metrics::Json;
 use luq::quant::{
-    LogFormat, LogQuantConfig, LogQuantizer, UniformQuantizer, UniformRounding,
+    LogFormat, LogQuantConfig, LogQuantizer, Radix4Format, Radix4Quantizer, TprPhase,
+    UniformQuantizer, UniformRounding,
 };
 use luq::rng::Xoshiro256;
 
@@ -160,6 +166,55 @@ fn main() {
         fwd_mt_results.push((t, r));
     }
 
+    // --- radix-4 TPR: gradient operand from the fused radix-4 emitter ----
+    let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+    let (r4_packed, r4_st) = r4.encode_packed_matrix(&g_t, n, k, TprPhase::Shifted);
+    assert!(r4_st.alpha > 0.0);
+
+    let r4_want = qgemm_radix4_decode_oracle(&a, &r4_packed, m, k, n);
+    qgemm_radix4_with(&a, &r4_packed, m, k, n, &mut out, &mut scratch);
+    let r4_tiled_exact = bits_equal(&out, &r4_want);
+    qgemm_radix4_scalar_reference(&a, &r4_packed, m, k, n, &mut out);
+    let r4_scalar_exact = bits_equal(&out, &r4_want);
+    qgemm_radix4_flat(&a, &r4_packed, m, k, n, &mut out);
+    let r4_flat_exact = bits_equal(&out, &r4_want);
+    let mut r4_mt_exact = true;
+    for t in [2usize, hw_threads] {
+        qgemm_radix4_mt_with(&a, &r4_packed, m, k, n, &mut out, t, &mut scratch);
+        r4_mt_exact &= bits_equal(&out, &r4_want);
+    }
+    println!(
+        "radix-4 bit-exact vs decode-then-f32-matmul oracle: scalar={r4_scalar_exact} \
+         flat={r4_flat_exact} tiled={r4_tiled_exact} mt={r4_mt_exact}"
+    );
+
+    group(&format!("radix-4 TPR packed INT4xradix4 GEMM, {m}x{k}x{n} ({products} products)"));
+    let r4_scalar = b.bench_throughput("scalar radix-4 decode+f32-multiply", products, || {
+        qgemm_radix4_scalar_reference(&a, &r4_packed, m, k, n, &mut out);
+        out[0]
+    });
+    println!("{}", r4_scalar.report());
+    let r4_flat = b.bench_throughput("radix-4 LUT flat", products, || {
+        qgemm_radix4_flat(&a, &r4_packed, m, k, n, &mut out);
+        out[0]
+    });
+    println!("{}", r4_flat.report());
+    let r4_tiled = b.bench_throughput("radix-4 LUT tiled (nibble precompute)", products, || {
+        qgemm_radix4_with(&a, &r4_packed, m, k, n, &mut out, &mut scratch);
+        out[0]
+    });
+    println!("{}", r4_tiled.report());
+    let mut r4_mt_results: Vec<(usize, BenchResult)> = Vec::new();
+    for t in &thread_counts {
+        let t = *t;
+        let r = b.bench_throughput(&format!("radix-4 LUT tiled {t}T"), products, || {
+            qgemm_radix4_mt_with(&a, &r4_packed, m, k, n, &mut out, t, &mut scratch);
+            out[0]
+        });
+        println!("{}", r.report());
+        r4_mt_results.push((t, r));
+    }
+
     // --- report + JSON ---------------------------------------------------
     let ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / products as f64;
     let scalar_ns = ns(&scalar);
@@ -191,11 +246,23 @@ fn main() {
         fwd_kernels.push((format!("int4 lut tiled {t}T"), kernel_json(r, fwd_scalar_ns)));
     }
 
+    let r4_scalar_ns = ns(&r4_scalar);
+    let mut radix4_kernels: Vec<(String, Json)> = vec![
+        ("scalar radix4 decode".to_string(), kernel_json(&r4_scalar, r4_scalar_ns)),
+        ("radix4 lut flat".to_string(), kernel_json(&r4_flat, r4_scalar_ns)),
+        ("radix4 lut tiled".to_string(), kernel_json(&r4_tiled, r4_scalar_ns)),
+    ];
+    for (t, r) in &r4_mt_results {
+        radix4_kernels.push((format!("radix4 lut tiled {t}T"), kernel_json(r, r4_scalar_ns)));
+    }
+
     let bit_exact = scalar_exact && flat_exact && tiled_exact && mt_exact;
     let fwd_bit_exact =
         fwd_scalar_exact && fwd_flat_exact && fwd_tiled_exact && fwd_mt_exact;
+    let r4_bit_exact = r4_scalar_exact && r4_flat_exact && r4_tiled_exact && r4_mt_exact;
     let tiled_speedup = speedup(&tiled);
     let fwd_tiled_speedup = fwd_scalar_ns / ns(&fwd_tiled);
+    let r4_tiled_speedup = r4_scalar_ns / ns(&r4_tiled);
     let doc = Json::obj(vec![
         ("bench", Json::str("qgemm")),
         ("m", Json::num(m as f64)),
@@ -204,14 +271,17 @@ fn main() {
         ("products", Json::num(products as f64)),
         ("kernels", Json::Obj(kernels)),
         ("forward_kernels", Json::Obj(fwd_kernels)),
+        ("radix4_kernels", Json::Obj(radix4_kernels)),
         (
             "gate",
             Json::obj(vec![
                 ("lut_tiled_speedup_vs_scalar", Json::num(tiled_speedup)),
                 ("int4_tiled_speedup_vs_scalar", Json::num(fwd_tiled_speedup)),
+                ("radix4_tiled_speedup_vs_scalar", Json::num(r4_tiled_speedup)),
                 ("required_speedup", Json::num(4.0)),
                 ("bit_exact_vs_oracle", Json::Bool(bit_exact)),
                 ("forward_bit_exact_vs_oracle", Json::Bool(fwd_bit_exact)),
+                ("radix4_bit_exact_vs_oracle", Json::Bool(r4_bit_exact)),
             ]),
         ),
     ]);
@@ -229,8 +299,13 @@ fn main() {
         "forward INT4 LUT tiled speedup over scalar decode loop: {fwd_tiled_speedup:.2}x \
          (gate: >= 4x)"
     );
+    println!(
+        "radix-4 LUT tiled speedup over scalar decode loop: {r4_tiled_speedup:.2}x \
+         (gate: >= 4x)"
+    );
     assert!(bit_exact, "a backward kernel variant diverged from the f32 oracle");
     assert!(fwd_bit_exact, "a forward kernel variant diverged from the f32 oracle");
+    assert!(r4_bit_exact, "a radix-4 kernel variant diverged from the f32 oracle");
     assert!(
         tiled_speedup >= 4.0,
         "backward LUT tiled kernel only {tiled_speedup:.2}x over the scalar loop (gate: >= 4x)"
@@ -238,6 +313,11 @@ fn main() {
     assert!(
         fwd_tiled_speedup >= 4.0,
         "forward INT4 LUT tiled kernel only {fwd_tiled_speedup:.2}x over the scalar loop \
+         (gate: >= 4x)"
+    );
+    assert!(
+        r4_tiled_speedup >= 4.0,
+        "radix-4 LUT tiled kernel only {r4_tiled_speedup:.2}x over the scalar loop \
          (gate: >= 4x)"
     );
 }

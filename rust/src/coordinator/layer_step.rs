@@ -24,14 +24,29 @@
 //!    consuming GEMM), computed as `dWᵀ = Aᵀ·Gᵀ` against the Aᵀ nibble
 //!    staging. Real units: `α_g' · Δ_a`.
 //!
+//! The gradient pipeline is **format-selectable** via [`ForwardFormat`],
+//! dispatched **once per step** (a single `match` choosing the code
+//! emitters, product LUT, and scale factors — no per-element branching):
+//!
+//! * [`ForwardFormat::Sawb`] — the paper's scheme above (LUQ FP4
+//!   gradients through the MF-BPROP LUT). Bit-reproduces the PR 3 step
+//!   on the same RNG stream.
+//! * [`ForwardFormat::Radix4Tpr`] — the Ultra-low baseline (Sun et al.,
+//!   App. A.3): the same SAWB INT4 forward, but both gradient
+//!   quantizations are radix-4 with **two-phase rounding** — dx on the
+//!   shifted grid (`2α·4^i`), dW on the base grid (`α·4^i`) — through
+//!   [`crate::hw::qgemm::radix4_product_lut`]. Deterministic
+//!   nearest-in-log rounding, so the step consumes **zero** uniforms.
+//!
 //! All staging (packed operands, transposed nibble/f32 buffers, outputs,
 //! quant + GEMM scratch) is owned by the step and grows monotonically, so
 //! **steady-state calls are allocation-free** (pinned by
 //! `steady_state_is_allocation_free`). RNG stream contract: one `step`
-//! call consumes exactly `2 · batch · d_out` uniforms — `batch·d_out` for
-//! the dx quantization, then `batch·d_out` for the dW quantization; the
-//! RDN forward emitters consume none — so stream alignment never depends
-//! on the data.
+//! call consumes exactly `2 · batch · d_out` uniforms in `Sawb` mode —
+//! `batch·d_out` for the dx quantization, then `batch·d_out` for the dW
+//! quantization; the RDN forward emitters consume none — and exactly
+//! **zero** in `Radix4Tpr` mode (TPR is deterministic), so stream
+//! alignment never depends on the data.
 //!
 //! Per-GEMM [`QuantStats`] come back in [`LayerStepStats`];
 //! [`LayerStepStats::grad_max`] is what feeds the hindsight tracker
@@ -39,10 +54,25 @@
 
 use crate::hw::qgemm::{self, row_nibble, QgemmScratch};
 use crate::quant::{
-    LogQuantConfig, LogQuantizer, QuantScratch, QuantStats, SawbQuantizer, UniformQuantizer,
-    UniformRounding,
+    LogQuantConfig, LogQuantizer, QuantScratch, QuantStats, Radix4Format, Radix4Quantizer,
+    SawbQuantizer, TprPhase, UniformQuantizer, UniformRounding,
 };
 use crate::rng::Xoshiro256;
+
+/// Which quantization scheme drives one [`QuantizedLayerStep`] — the
+/// paper's LUQ pipeline or the Ultra-low radix-4 TPR baseline it compares
+/// against (Table 1). Selected once per step (one `match`, no per-element
+/// branching); the forward GEMM is SAWB-clipped INT4 RDN in both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForwardFormat {
+    /// SAWB INT4 forward + LUQ FP4 gradients (MF-BPROP LUT) — the PR 3
+    /// pipeline, bit-for-bit.
+    Sawb,
+    /// SAWB INT4 forward + radix-4 TPR gradients: dx quantized on the
+    /// shifted grid, dW on the base grid, both through the radix-4 LUT.
+    /// Deterministic — draws no RNG.
+    Radix4Tpr,
+}
 
 /// Per-GEMM statistics of one [`QuantizedLayerStep::step`] call.
 #[derive(Clone, Copy, Debug)]
@@ -76,9 +106,14 @@ impl LayerStepStats {
 /// persistent staging. One instance per long-lived layer makes repeated
 /// `step` calls allocation-free.
 pub struct QuantizedLayerStep {
-    /// LUQ configuration for the neural-gradient quantizations.
+    /// Which gradient pipeline this step runs (see [`ForwardFormat`]).
+    pub format: ForwardFormat,
+    /// LUQ configuration for the neural-gradient quantizations
+    /// (`Sawb` mode; unused by `Radix4Tpr`).
     pub grad_cfg: LogQuantConfig,
     grad_quantizer: LogQuantizer,
+    /// Radix-4 quantizer for the TPR gradient pipeline (`Radix4Tpr`).
+    radix4: Radix4Quantizer,
     /// SAWB clip rule for activations (forward pass, §4.3).
     pub act_sawb: SawbQuantizer,
     /// SAWB clip rule for weights.
@@ -119,12 +154,25 @@ impl QuantizedLayerStep {
     /// `grad_cfg` drives both gradient quantizations (LUQ FP4 in the
     /// paper's configuration, hindsight-scaled via
     /// `LogQuantConfig::luq_hindsight`); `bits` is the forward INT width
-    /// (4 in the paper; ≤ 4 required by the packed-nibble layout).
+    /// (4 in the paper; ≤ 4 required by the packed-nibble layout). The
+    /// gradient pipeline defaults to [`ForwardFormat::Sawb`]; use
+    /// [`Self::with_format`] for the radix-4 TPR baseline.
     pub fn new(grad_cfg: LogQuantConfig, bits: u32) -> QuantizedLayerStep {
+        Self::with_format(grad_cfg, bits, ForwardFormat::Sawb)
+    }
+
+    /// [`Self::new`] with an explicit gradient pipeline.
+    pub fn with_format(
+        grad_cfg: LogQuantConfig,
+        bits: u32,
+        format: ForwardFormat,
+    ) -> QuantizedLayerStep {
         assert!((2..=4).contains(&bits), "forward packed emission needs 2..=4 bits");
         QuantizedLayerStep {
+            format,
             grad_cfg,
             grad_quantizer: LogQuantizer::new(grad_cfg),
+            radix4: Radix4Quantizer::new(Radix4Format::FP4),
             act_sawb: SawbQuantizer::new(bits),
             weight_sawb: SawbQuantizer::new(bits),
             bits,
@@ -150,7 +198,8 @@ impl QuantizedLayerStep {
     /// * `weights`: `d_out × d_in` row-major weights.
     /// * `grads`: `batch × d_out` row-major output gradient `dY`.
     /// * `rng` drives the two stochastic gradient quantizations (exactly
-    ///   `2·batch·d_out` uniforms; the RDN forward consumes none).
+    ///   `2·batch·d_out` uniforms in `Sawb` mode; zero in `Radix4Tpr`
+    ///   mode; the RDN forward consumes none either way).
     ///
     /// Results land in [`Self::y`] (`batch × d_out`), [`Self::dx_t`]
     /// (`d_in × batch`, i.e. `dXᵀ`) and [`Self::dw_t`] (`d_in × d_out`,
@@ -234,22 +283,76 @@ impl QuantizedLayerStep {
             }
         }
 
-        // --- dx GEMM: dXᵀ = Wᵀ·Gᵀ through the MF-BPROP LUT -------------
-        // Quantize G row-major (batch rows of d_out) — the same operand,
-        // RNG order, and engine path as QgemmPath::backward_matmul.
+        // --- gradient code emission: one format dispatch per step -------
+        // Gᵀ staging is format-independent (pure data movement, no RNG).
+        ensure_f32(&mut self.gt_f32, d_out * batch);
+        for o in 0..d_out {
+            let row = &mut self.gt_f32[o * batch..o * batch + batch];
+            for (b, g) in row.iter_mut().enumerate() {
+                *g = grads[b * d_out + o];
+            }
+        }
         ensure_u8(&mut self.g_packed, batch * ob);
-        let dx_stats = self.grad_quantizer.quantize_to_codes_matrix_scratch(
-            grads,
-            batch,
-            d_out,
-            rng,
-            &mut self.g_packed,
-            ob,
-            &mut self.quant_scratch,
-        );
+        ensure_u8(&mut self.gt_packed, d_out * bb);
+        // Emit the dx operand (G row-major, the same operand, RNG order,
+        // and engine path as QgemmPath::backward_matmul) first, then the
+        // dW operand (Gᵀ, independently quantized per Eq. 26/27) — the
+        // PR 3 RNG order, preserved bit-for-bit in Sawb mode. The single
+        // dispatch selects the emitters, the product LUT, and the scale
+        // applied before each GEMM's Δ.
+        let (lut, dx_stats, dx_scale, dw_stats, dw_scale) = match self.format {
+            ForwardFormat::Sawb => {
+                let dx_stats = self.grad_quantizer.quantize_to_codes_matrix_scratch(
+                    grads,
+                    batch,
+                    d_out,
+                    rng,
+                    &mut self.g_packed,
+                    ob,
+                    &mut self.quant_scratch,
+                );
+                let dw_stats = self.grad_quantizer.quantize_to_codes_matrix_scratch(
+                    &self.gt_f32,
+                    d_out,
+                    batch,
+                    rng,
+                    &mut self.gt_packed,
+                    bb,
+                    &mut self.quant_scratch,
+                );
+                (qgemm::product_lut(), dx_stats, dx_stats.alpha, dw_stats, dw_stats.alpha)
+            }
+            ForwardFormat::Radix4Tpr => {
+                let dx_stats = self.radix4.encode_packed_matrix_into(
+                    grads,
+                    batch,
+                    d_out,
+                    TprPhase::Shifted,
+                    &mut self.g_packed,
+                    ob,
+                );
+                let dw_stats = self.radix4.encode_packed_matrix_into(
+                    &self.gt_f32,
+                    d_out,
+                    batch,
+                    TprPhase::Base,
+                    &mut self.gt_packed,
+                    bb,
+                );
+                (
+                    qgemm::radix4_product_lut(),
+                    dx_stats,
+                    dx_stats.alpha * TprPhase::Shifted.shift(),
+                    dw_stats,
+                    dw_stats.alpha * TprPhase::Base.shift(),
+                )
+            }
+        };
+
+        // --- dx GEMM: dXᵀ = Wᵀ·Gᵀ through the selected LUT -------------
         ensure_f32(&mut self.dx_t, d_in * batch);
         qgemm::qgemm_lut_mt(
-            qgemm::product_lut(),
+            lut,
             &self.wt_nib,
             &self.g_packed,
             d_in,
@@ -258,33 +361,17 @@ impl QuantizedLayerStep {
             &mut self.dx_t,
             n_threads,
         );
-        // Scale sequence matches backward_matmul (α first), then Δ_w.
+        // Scale sequence matches backward_matmul: the gradient scale (α,
+        // or the radix-4 phase scale α·shift) first, then Δ_w.
         for v in self.dx_t[..d_in * batch].iter_mut() {
-            *v *= dx_stats.alpha;
+            *v *= dx_scale;
             *v *= wq.delta();
         }
 
-        // --- dW GEMM: dWᵀ = Aᵀ·Gᵀ through the MF-BPROP LUT -------------
-        ensure_f32(&mut self.gt_f32, d_out * batch);
-        for o in 0..d_out {
-            let row = &mut self.gt_f32[o * batch..o * batch + batch];
-            for (b, g) in row.iter_mut().enumerate() {
-                *g = grads[b * d_out + o];
-            }
-        }
-        ensure_u8(&mut self.gt_packed, d_out * bb);
-        let dw_stats = self.grad_quantizer.quantize_to_codes_matrix_scratch(
-            &self.gt_f32,
-            d_out,
-            batch,
-            rng,
-            &mut self.gt_packed,
-            bb,
-            &mut self.quant_scratch,
-        );
+        // --- dW GEMM: dWᵀ = Aᵀ·Gᵀ through the selected LUT -------------
         ensure_f32(&mut self.dw_t, d_in * d_out);
         qgemm::qgemm_lut_mt(
-            qgemm::product_lut(),
+            lut,
             &self.at_nib,
             &self.gt_packed,
             d_in,
@@ -294,7 +381,7 @@ impl QuantizedLayerStep {
             n_threads,
         );
         for v in self.dw_t[..d_in * d_out].iter_mut() {
-            *v *= dw_stats.alpha;
+            *v *= dw_scale;
             *v *= aq.delta();
         }
 
@@ -566,6 +653,204 @@ mod tests {
         assert!(step.dw_t().iter().all(|v| *v == 0.0));
         assert!(step.dx_t().iter().all(|v| v.is_finite()));
         assert!(stats.grad_max() > 0.0);
+    }
+
+    /// Acceptance gate: `ForwardFormat::Sawb` is the PR 3 step,
+    /// bit-for-bit, on the same RNG stream (`new` delegates to
+    /// `with_format(.., Sawb)`, and an explicitly-formatted step produces
+    /// identical outputs and stats).
+    #[test]
+    fn sawb_format_bit_reproduces_the_default_step() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x57);
+        let (batch, d_in, d_out) = (7usize, 12, 9);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let mut a = QuantizedLayerStep::new(cfg, BITS);
+        let mut b = QuantizedLayerStep::with_format(cfg, BITS, ForwardFormat::Sawb);
+        assert_eq!(a.format, ForwardFormat::Sawb);
+        let mut rng_a = Xoshiro256::seed_from_u64(0x99);
+        let mut rng_b = Xoshiro256::seed_from_u64(0x99);
+        let st_a = a.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng_a, 2);
+        let st_b = b.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng_b, 2);
+        assert_eq!(st_a.dx.alpha.to_bits(), st_b.dx.alpha.to_bits());
+        assert_eq!(st_a.dw.alpha.to_bits(), st_b.dw.alpha.to_bits());
+        for (x, y) in a.y().iter().zip(b.y().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.dx_t().iter().zip(b.dx_t().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.dw_t().iter().zip(b.dw_t().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "streams diverged");
+    }
+
+    /// Satellite: RNG draw accounting in both forward formats. `Sawb`
+    /// consumes exactly `2·batch·d_out` uniforms per step (dx then dW
+    /// gradient quantization — the stream-alignment contract from PR 3);
+    /// `Radix4Tpr` is deterministic and consumes exactly zero.
+    #[test]
+    fn rng_draw_accounting_per_format() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x58);
+        let (batch, d_in, d_out) = (6usize, 11, 7);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        // Sawb: exactly 2·batch·d_out uniforms.
+        let mut step = QuantizedLayerStep::with_format(cfg, BITS, ForwardFormat::Sawb);
+        let mut a = Xoshiro256::seed_from_u64(0xAA);
+        let mut b = a.clone();
+        step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut a, 1);
+        let mut sink = vec![0.0f32; 2 * batch * d_out];
+        b.fill_uniform(&mut sink);
+        assert_eq!(a.next_u64(), b.next_u64(), "Sawb step != 2·batch·d_out uniforms");
+        // Radix4Tpr: generator untouched.
+        let mut step = QuantizedLayerStep::with_format(cfg, BITS, ForwardFormat::Radix4Tpr);
+        let mut a = Xoshiro256::seed_from_u64(0xBB);
+        let b = a.clone();
+        step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut a, 1);
+        assert_eq!(a.next_u64(), b.clone().next_u64(), "Radix4Tpr consumed RNG");
+    }
+
+    /// The radix-4 dx GEMM matches quantizing G on the shifted TPR grid,
+    /// decoding, f32-matmul against Wᵀ codes, and the `α·shift` then
+    /// `Δ_w` scale sequence — bit for bit. The dW GEMM mirrors it on the
+    /// base grid with `Δ_a`.
+    #[test]
+    fn radix4_step_matches_decode_oracles() {
+        use crate::hw::qgemm::qgemm_radix4_decode_oracle;
+        use crate::quant::{Radix4Format, Radix4Quantizer, TprPhase};
+        let mut data_rng = Xoshiro256::seed_from_u64(0x59);
+        let (batch, d_in, d_out) = (6usize, 10, 9); // odd d_out: row tails
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let mut step = QuantizedLayerStep::with_format(
+            LogQuantConfig::luq(LogFormat::FP4),
+            BITS,
+            ForwardFormat::Radix4Tpr,
+        );
+        let mut rng = Xoshiro256::seed_from_u64(0x91);
+        let stats = step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 2);
+
+        let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+        let (aq, wq) = forward_quantizers(&acts, &wts);
+        // dx: G row-major on the shifted grid vs Wᵀ codes.
+        let (g_packed, g_st) = r4.encode_packed_matrix(&grads, batch, d_out, TprPhase::Shifted);
+        assert_eq!(stats.dx.alpha.to_bits(), g_st.alpha.to_bits());
+        assert_eq!(stats.dx.max_abs.to_bits(), g_st.max_abs.to_bits());
+        let wt_codes: Vec<Int4Code> = (0..d_in * d_out)
+            .map(|idx| {
+                let (j, o) = (idx / d_out, idx % d_out);
+                Int4Code::from_int(wq.code_of(wts[o * d_in + j], 0.0))
+            })
+            .collect();
+        let units = qgemm_radix4_decode_oracle(&wt_codes, &g_packed, d_in, d_out, batch);
+        let dx_scale = g_st.alpha * TprPhase::Shifted.shift();
+        for (i, (got, acc)) in step.dx_t().iter().zip(units.iter()).enumerate() {
+            let want = (acc * dx_scale) * wq.delta();
+            assert_eq!(got.to_bits(), want.to_bits(), "dx[{i}]: {got} vs {want}");
+        }
+        // dW: Gᵀ on the base grid vs Aᵀ codes.
+        let mut gt = vec![0.0f32; d_out * batch];
+        for o in 0..d_out {
+            for b in 0..batch {
+                gt[o * batch + b] = grads[b * d_out + o];
+            }
+        }
+        let (gt_packed, gt_st) = r4.encode_packed_matrix(&gt, d_out, batch, TprPhase::Base);
+        assert_eq!(stats.dw.alpha.to_bits(), gt_st.alpha.to_bits());
+        let at_codes: Vec<Int4Code> = (0..d_in * batch)
+            .map(|idx| {
+                let (j, b) = (idx / batch, idx % batch);
+                Int4Code::from_int(aq.code_of(acts[b * d_in + j], 0.0))
+            })
+            .collect();
+        let units = qgemm_radix4_decode_oracle(&at_codes, &gt_packed, d_in, batch, d_out);
+        let dw_scale = gt_st.alpha * TprPhase::Base.shift();
+        for (i, (got, acc)) in step.dw_t().iter().zip(units.iter()).enumerate() {
+            let want = (acc * dw_scale) * aq.delta();
+            assert_eq!(got.to_bits(), want.to_bits(), "dw[{i}]: {got} vs {want}");
+        }
+        // The two phases saw the same tensor: the maxima coincide.
+        assert_eq!(stats.grad_max().to_bits(), g_st.max_abs.to_bits());
+    }
+
+    /// Thread-count invariance carries through the radix-4 pipeline too.
+    #[test]
+    fn radix4_step_is_thread_count_invariant() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x5A);
+        let (batch, d_in, d_out) = (18usize, 21, 17);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let mut want: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        for threads in [1usize, 2, 8] {
+            let mut step = QuantizedLayerStep::with_format(
+                LogQuantConfig::luq(LogFormat::FP4),
+                BITS,
+                ForwardFormat::Radix4Tpr,
+            );
+            let mut rng = Xoshiro256::seed_from_u64(5);
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, threads);
+            match &want {
+                None => {
+                    want = Some((step.y().to_vec(), step.dx_t().to_vec(), step.dw_t().to_vec()))
+                }
+                Some((y, dx, dw)) => {
+                    for (g, w) in step.y().iter().zip(y.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "y threads={threads}");
+                    }
+                    for (g, w) in step.dx_t().iter().zip(dx.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "dx threads={threads}");
+                    }
+                    for (g, w) in step.dw_t().iter().zip(dw.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "dw threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Satellite: the allocation-free steady state extends to the
+    /// radix-4 path (the TPR emitters stage nothing, so the same
+    /// capacity-pinning holds).
+    #[test]
+    fn radix4_steady_state_is_allocation_free() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x5B);
+        let (batch, d_in, d_out) = (9usize, 15, 11);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let mut step = QuantizedLayerStep::with_format(
+            LogQuantConfig::luq(LogFormat::FP4),
+            BITS,
+            ForwardFormat::Radix4Tpr,
+        );
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 4);
+        let warmed = step.scratch_capacities();
+        for _ in 0..3 {
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 4);
+            assert_eq!(step.scratch_capacities(), warmed, "buffer grew after warm-up");
+        }
+        step.step(&acts, &wts, &grads, batch - 2, d_in - 3, d_out - 1, &mut rng, 2);
+        assert_eq!(step.scratch_capacities(), warmed, "smaller shape reallocated");
+    }
+
+    /// Radix-4 degenerate tensors are as safe as the LUQ path: an
+    /// all-zero gradient zeroes dx/dW with α = 0 and no NaN.
+    #[test]
+    fn radix4_degenerate_tensors_are_safe() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x5C);
+        let (batch, d_in, d_out) = (4usize, 6, 3);
+        let (acts, wts, _) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let zeros_g = vec![0.0f32; batch * d_out];
+        let mut step = QuantizedLayerStep::with_format(
+            LogQuantConfig::luq(LogFormat::FP4),
+            BITS,
+            ForwardFormat::Radix4Tpr,
+        );
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let stats = step.step(&acts, &wts, &zeros_g, batch, d_in, d_out, &mut rng, 1);
+        assert_eq!(stats.dx.alpha, 0.0);
+        assert!(step.dx_t().iter().all(|v| *v == 0.0));
+        assert!(step.dw_t().iter().all(|v| *v == 0.0));
+        assert!(step.y().iter().all(|v| v.is_finite()));
     }
 
     /// `grad_max` is the defensive max of the two per-GEMM maxima.

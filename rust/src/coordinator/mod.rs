@@ -13,7 +13,7 @@ pub mod qgemm_path;
 pub mod schedule;
 pub mod trainer;
 
-pub use layer_step::{LayerStepStats, QuantizedLayerStep};
+pub use layer_step::{ForwardFormat, LayerStepStats, QuantizedLayerStep};
 pub use qgemm_path::QgemmPath;
 pub use schedule::{FntSchedule, LrSchedule, StepDecay};
 pub use trainer::{DataSource, RunResult, Trainer, TrainerOptions};

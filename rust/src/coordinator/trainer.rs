@@ -1,7 +1,7 @@
 //! The Trainer: drives one AOT train-step executable through a schedule,
 //! owning data, noise, hindsight state, and metrics.
 
-use crate::coordinator::layer_step::{LayerStepStats, QuantizedLayerStep};
+use crate::coordinator::layer_step::{ForwardFormat, LayerStepStats, QuantizedLayerStep};
 use crate::coordinator::qgemm_path::QgemmPath;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{CorpusConfig, ImageDataset, ImagesConfig, TokenCorpus};
@@ -398,13 +398,17 @@ impl Trainer {
     }
 
     /// Build the host-side **full three-GEMM layer step**
-    /// ([`QuantizedLayerStep`]: forward INT4×INT4, dx and dW INT4×FP4)
-    /// for quantized layer `layer`, with the same hindsight-aware
-    /// gradient scale as [`Self::qgemm_path`]. Feed the returned step's
-    /// per-GEMM stats back through [`Self::observe_layer_step`] to keep
-    /// the Eq. 24 tracker warm.
-    pub fn quantized_layer_step(&self, layer: usize) -> QuantizedLayerStep {
-        QuantizedLayerStep::new(self.grad_cfg_for_layer(layer), 4)
+    /// ([`QuantizedLayerStep`]: forward INT4×INT4, dx and dW through the
+    /// gradient pipeline `format` selects — LUQ FP4 for
+    /// [`ForwardFormat::Sawb`], radix-4 TPR for
+    /// [`ForwardFormat::Radix4Tpr`]) for quantized layer `layer`, with
+    /// the same hindsight-aware gradient scale as [`Self::qgemm_path`]
+    /// (the hindsight estimate only applies to the LUQ pipeline; the
+    /// radix-4 baseline always scales from the measured max, as Sun et
+    /// al. do). Feed the returned step's per-GEMM stats back through
+    /// [`Self::observe_layer_step`] to keep the Eq. 24 tracker warm.
+    pub fn quantized_layer_step(&self, layer: usize, format: ForwardFormat) -> QuantizedLayerStep {
+        QuantizedLayerStep::with_format(self.grad_cfg_for_layer(layer), 4, format)
     }
 
     /// Feed one host layer step's measured gradient max into layer

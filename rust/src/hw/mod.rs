@@ -29,5 +29,6 @@ pub use mac::MacSimulator;
 pub use mfbprop::{mfbprop_multiply, reference_product, Fp4Code, Int4Code};
 pub use qgemm::{
     int4_product_lut, product_lut, qgemm_int4, qgemm_int4_into, qgemm_int4_mt_with,
-    qgemm_lut_mt, qgemm_packed, qgemm_packed_into, qgemm_packed_mt, ProductLut, QgemmScratch,
+    qgemm_lut_mt, qgemm_packed, qgemm_packed_into, qgemm_packed_mt, qgemm_radix4_into,
+    qgemm_radix4_mt_with, radix4_product_lut, ProductLut, QgemmScratch,
 };

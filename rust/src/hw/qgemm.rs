@@ -1,6 +1,7 @@
 //! Host-side packed 4-bit GEMM: a **generic tiled-LUT engine** plus its
-//! two instantiations — the backward INT4×FP4 MF-BPROP kernel and the
-//! forward signed INT4×INT4 kernel.
+//! three instantiations — the backward INT4×FP4 MF-BPROP kernel, the
+//! forward signed INT4×INT4 kernel, and the radix-4 TPR kernel of the
+//! Ultra-low baseline.
 //!
 //! Every 4-bit × 4-bit product is one of at most 16 × 16 = 256 values, so
 //! on a host CPU *any* pair of 4-bit formats multiplies through **one load
@@ -20,10 +21,15 @@
 //!   the integer products of the two sign-magnitude codes (|a·b| ≤ 49,
 //!   exact in f32). This is the `Y = A·Wᵀ` GEMM of §4.3 (SAWB-clipped
 //!   INT4 activations × INT4 weights).
+//! * **Radix-4 TPR (INT4 × radix-4)** — [`radix4_product_lut`]: entries
+//!   are `Int4Code::value · radix4_unit_value` (|a·b| ≤ 7·4⁶, exact in
+//!   f32) — the Ultra-low baseline's GEMM (App. A.3). One table serves
+//!   both TPR phases (the phase shift lives in the external `α · shift`
+//!   scale); the two phase-shifted gradient samples run as two LUT GEMMs,
+//!   fed by the `Radix4Quantizer` fused packed matrix emitters.
 //!
-//! Any future format (FP4 variants, INT2, radix-4 TPR) gets the tiled +
-//! multithreaded GEMM for free by supplying a LUT via
-//! [`ProductLut::from_fn`].
+//! Any future format (FP4 variants, INT2) gets the tiled + multithreaded
+//! GEMM for free by supplying a LUT via [`ProductLut::from_fn`].
 //!
 //! Operand layout (`qgemm_lut_mt(lut, a_nib, packed_b, m, k, n, …)`):
 //!
@@ -52,6 +58,7 @@
 //! `1 × k` special case of the backward instantiation.
 
 use super::mfbprop::{decode_fp7, mfbprop_multiply, Fp4Code, Int4Code};
+use crate::quant::radix4::radix4_unit_value;
 use std::sync::OnceLock;
 
 /// Row-tile height (A rows per tile). With `TILE_N` this bounds the hot
@@ -102,6 +109,18 @@ impl ProductLut {
         })
     }
 
+    /// The radix-4 TPR table (Ultra-low baseline, App. A.3): signed INT4
+    /// magnitudes × radix-4 `[sign | level]` codes. Entries are
+    /// `Int4Code::value · radix4_unit_value` — `|a·b| ≤ 7·4^6 = 28672`,
+    /// exact in f32 — in units of the per-tensor per-phase scale
+    /// `α · shift`, which multiplies the accumulated result outside.
+    /// One table serves **both** TPR phases: the phase shift lives
+    /// entirely in the external scale, so the two phase-shifted gradient
+    /// samples run as two GEMMs through this same LUT.
+    pub fn radix4() -> ProductLut {
+        ProductLut::from_fn(|a, g| Int4Code::from_nibble(a).value() * radix4_unit_value(g))
+    }
+
     /// The exact f32 product of the two 4-bit codes. Masking keeps the
     /// index provably in-bounds, which also elides the bounds check.
     #[inline(always)]
@@ -121,6 +140,7 @@ pub(crate) fn row_nibble(row: &[u8], x: usize) -> u8 {
 
 static LUT: OnceLock<ProductLut> = OnceLock::new();
 static INT4_LUT: OnceLock<ProductLut> = OnceLock::new();
+static RADIX4_LUT: OnceLock<ProductLut> = OnceLock::new();
 
 /// The process-wide backward INT4 × FP4 product LUT (built once, on first
 /// use).
@@ -132,6 +152,12 @@ pub fn product_lut() -> &'static ProductLut {
 /// on first use).
 pub fn int4_product_lut() -> &'static ProductLut {
     INT4_LUT.get_or_init(ProductLut::int4_int4)
+}
+
+/// The process-wide radix-4 TPR INT4 × radix-4 product LUT (built once,
+/// on first use; shared by both TPR phases).
+pub fn radix4_product_lut() -> &'static ProductLut {
+    RADIX4_LUT.get_or_init(ProductLut::radix4)
 }
 
 /// Reusable staging for the tiled kernels: the A operand converted to raw
@@ -654,6 +680,170 @@ pub fn qgemm_int4_scalar_reference(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Radix-4 TPR instantiation: INT4 (typed codes) × radix-4 (packed), one
+// phase per call — the Ultra-low baseline's GEMM (App. A.3).
+// ---------------------------------------------------------------------------
+
+/// The full-control radix-4 entry point: tiled INT4 × radix-4 GEMM
+/// through [`radix4_product_lut`], reusing `scratch` for the A-nibble
+/// staging — allocation-free at steady state for any thread count. `B` is
+/// `n` packed rows of `k` radix-4 `[sign | level]` codes, exactly what
+/// `Radix4Quantizer::encode_packed_matrix_into` emits for one TPR phase;
+/// the result is in **unit** code units — multiply by `α · shift` (the
+/// phase scale) and the other operand's Δ outside the accumulation.
+///
+/// TPR runs its two phase-shifted gradient samples as two calls of this
+/// kernel (dx on the shifted grid, dW on the base grid); each call keeps
+/// the engine's sequential-`k` accumulation, so every variant below is
+/// bit-identical to [`qgemm_radix4_decode_oracle`] at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_radix4_mt_with(
+    int4: &[Int4Code],
+    packed_r4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(int4.len() >= m * k, "int4 operand too short: {} < {}", int4.len(), m * k);
+    let a_nib = scratch.stage_codes(&int4[..m * k]);
+    qgemm_lut_mt(radix4_product_lut(), a_nib, packed_r4, m, k, n, out, n_threads);
+}
+
+/// Single-threaded tiled radix-4 GEMM reusing `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_radix4_with(
+    int4: &[Int4Code],
+    packed_r4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    scratch: &mut QgemmScratch,
+) {
+    qgemm_radix4_mt_with(int4, packed_r4, m, k, n, out, 1, scratch);
+}
+
+/// Tiled radix-4 GEMM into a caller buffer (owns its scratch).
+pub fn qgemm_radix4_into(
+    int4: &[Int4Code],
+    packed_r4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let mut scratch = QgemmScratch::new();
+    qgemm_radix4_with(int4, packed_r4, m, k, n, out, &mut scratch);
+}
+
+/// Flat (untiled) radix-4 LUT loop — the middle rung of the radix-4 bench
+/// ladder. Same bit-exact result as the tiled kernel.
+pub fn qgemm_radix4_flat(
+    int4: &[Int4Code],
+    packed_r4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(int4.len() >= m * k, "int4 operand too short");
+    assert!(out.len() >= m * n, "output too short");
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(packed_r4.len() >= n * kb, "packed radix-4 operand too short");
+    let lut = radix4_product_lut();
+    for i in 0..m {
+        let arow = &int4[i * k..i * k + k];
+        let orow = &mut out[i * n..i * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &packed_r4[j * kb..j * kb + kb];
+            *o = dot_lut(lut, k, brow, |x| arow[x].nibble());
+        }
+    }
+}
+
+/// The radix-4 decode-then-f32-matmul **oracle**: decode every radix-4
+/// nibble to its signed unit value ([`radix4_unit_value`]) and matmul
+/// with [`Int4Code::value`] in plain f32, accumulating in the same
+/// increasing-`k` order as every kernel variant. Independent reference
+/// for the radix-4 bit-exactness gates; not a performance path.
+pub fn qgemm_radix4_decode_oracle(
+    int4: &[Int4Code],
+    packed_r4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let kb = k.div_ceil(2);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for x in 0..k {
+                let byte = packed_r4[j * kb + (x >> 1)];
+                let nib = if x & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+                acc += int4[i * k + x].value() * radix4_unit_value(nib);
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// The radix-4 scalar baseline: per-element nibble decode to the signed
+/// unit f32 value and a real multiply — what consuming the packed radix-4
+/// stream costs without the LUT. The `benches/qgemm.rs` radix-4 gate
+/// measures the tiled LUT kernel against this loop (≥4×); its
+/// accumulation order matches the LUT kernels, so it doubles as a second
+/// oracle.
+pub fn qgemm_radix4_scalar_reference(
+    int4: &[Int4Code],
+    packed_r4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(int4.len() >= m * k, "int4 operand too short");
+    assert!(out.len() >= m * n, "output too short");
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(packed_r4.len() >= n * kb, "packed radix-4 operand too short");
+    for i in 0..m {
+        let arow = &int4[i * k..i * k + k];
+        let orow = &mut out[i * n..i * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &packed_r4[j * kb..j * kb + kb];
+            let mut acc = 0.0f32;
+            for (x, a) in arow.iter().enumerate() {
+                let byte = brow[x >> 1];
+                let nib = if x & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+                acc += a.value() * radix4_unit_value(nib);
+            }
+            *o = acc;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -712,6 +902,42 @@ mod tests {
             for b in 0..16u8 {
                 let want = Int4Code::from_nibble(a).value() * Int4Code::from_nibble(b).value();
                 assert_eq!(lut.product(a, b).to_bits(), want.to_bits(), "a={a} b={b}");
+            }
+        }
+    }
+
+    /// Satellite: the exhaustive 256-entry golden test for the radix-4
+    /// LUT (mirrors the MF-BPROP/INT4 checks). Every `(code, code)` pair
+    /// equals the `quantize_value`-validated decode product bit-for-bit:
+    /// each radix-4 nibble decodes through `Radix4Format::decode` to a
+    /// value that `quantize_value` maps to itself (the decode is on the
+    /// grid), and the LUT entry is exactly `Int4Code::value` times that
+    /// decode in `α·shift` units.
+    #[test]
+    fn radix4_lut_entries_match_quantize_value_decode_products() {
+        use crate::quant::radix4::{Radix4Format, Radix4Quantizer, TprPhase};
+        let lut = radix4_product_lut();
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        for a in 0..16u8 {
+            for g in 0..16u8 {
+                let unit = radix4_unit_value(g);
+                let want = Int4Code::from_nibble(a).value() * unit;
+                assert_eq!(lut.product(a, g).to_bits(), want.to_bits(), "a={a} g={g}");
+                // The decode the entry caches is a quantize_value fixed
+                // point in both phases (alpha = 1 pins the grid).
+                for phase in [TprPhase::Base, TprPhase::Shifted] {
+                    let dec = Radix4Format::FP4.decode(g, 1.0, phase);
+                    assert_eq!(
+                        q.quantize_value(dec, 1.0, phase).to_bits(),
+                        dec.to_bits(),
+                        "g={g} {phase:?}"
+                    );
+                    assert_eq!(
+                        dec.to_bits(),
+                        (unit * phase.shift()).to_bits(),
+                        "g={g} {phase:?}: decode is the unit value times the phase scale"
+                    );
+                }
             }
         }
     }
@@ -802,6 +1028,89 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The radix-4 mirror of the property test: scalar / flat / tiled /
+    /// multithreaded INT4×radix-4 all match the radix-4 decode oracle
+    /// bit-exactly across shapes and thread counts.
+    #[test]
+    fn radix4_qgemm_matches_oracle_across_shapes_and_threads() {
+        prop_check(
+            "radix4_qgemm_oracle",
+            0xB4,
+            25,
+            |rng| {
+                let m = 1 + rng.uniform_usize(2 * TILE_M + 3);
+                let k = 1 + rng.uniform_usize(67);
+                let n = 1 + rng.uniform_usize(2 * TILE_N + 3);
+                let a = random_codes(rng, m * k);
+                let b = random_packed(rng, n, k);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let want = qgemm_radix4_decode_oracle(a, b, m, k, n);
+                let mut scratch = QgemmScratch::new();
+                let mut tiled = vec![0.0f32; m * n];
+                qgemm_radix4_with(a, b, m, k, n, &mut tiled, &mut scratch);
+                if tiled.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
+                    return Err(format!("tiled != oracle at m={m} k={k} n={n}"));
+                }
+                let mut flat = vec![0.0f32; m * n];
+                qgemm_radix4_flat(a, b, m, k, n, &mut flat);
+                let mut scalar = vec![0.0f32; m * n];
+                qgemm_radix4_scalar_reference(a, b, m, k, n, &mut scalar);
+                for threads in [1usize, 2, 8] {
+                    let mut mt = vec![0.0f32; m * n];
+                    qgemm_radix4_mt_with(a, b, m, k, n, &mut mt, threads, &mut scratch);
+                    if mt.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
+                        return Err(format!("{threads}T != oracle at m={m} k={k} n={n}"));
+                    }
+                }
+                if flat != tiled || scalar != tiled {
+                    return Err(format!("variant disagreement at m={m} k={k} n={n}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Radix-4 empty shapes: m/n = 0 leave the buffer untouched, k = 0
+    /// writes zeros — across every radix-4 variant.
+    #[test]
+    fn radix4_qgemm_empty_shapes_are_safe() {
+        let mut out = vec![1.0f32; 8];
+        qgemm_radix4_into(&[], &[], 0, 5, 3, &mut out);
+        qgemm_radix4_into(&[], &[], 4, 5, 0, &mut out);
+        qgemm_radix4_flat(&[], &[], 0, 5, 3, &mut out);
+        qgemm_radix4_scalar_reference(&[], &[], 4, 5, 0, &mut out);
+        assert_eq!(out, vec![1.0f32; 8]);
+        let codes = random_codes(&mut Xoshiro256::seed_from_u64(1), 6);
+        let mut scratch = QgemmScratch::new();
+        qgemm_radix4_mt_with(&codes, &[], 2, 0, 3, &mut out, 4, &mut scratch);
+        assert_eq!(&out[..6], &[0.0; 6]);
+        assert!(qgemm_radix4_decode_oracle(&[], &[], 2, 0, 3).iter().all(|v| *v == 0.0));
+    }
+
+    /// Radix-4 end-to-end: the `Radix4Quantizer` fused packed matrix
+    /// emission drives the radix-4 engine, in both TPR phases, and agrees
+    /// with decoding the codes and matmul-ing in f32 (unit code units).
+    #[test]
+    fn radix4_emitter_codes_feed_qgemm() {
+        use crate::quant::radix4::{Radix4Format, Radix4Quantizer, TprPhase};
+        let mut rng = Xoshiro256::seed_from_u64(0xE4);
+        let (m, k, n) = (9usize, 37, 11); // odd k: half-filled row tails
+        let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+        let g: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 3.0)).collect();
+        let a = random_codes(&mut rng, m * k);
+        for phase in [TprPhase::Base, TprPhase::Shifted] {
+            let (packed, st) = r4.encode_packed_matrix(&g, n, k, phase);
+            assert!(st.alpha > 0.0);
+            let want = qgemm_radix4_decode_oracle(&a, &packed, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            qgemm_radix4_into(&a, &packed, m, k, n, &mut got);
+            assert_bits_eq(&got, &want, &format!("radix4 e2e {phase:?}"));
+        }
     }
 
     /// Deliberate boundary shapes: exact tile multiples, one-off-tile,

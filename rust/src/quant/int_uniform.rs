@@ -9,7 +9,7 @@
 //! rounding per the paper's §3.3 conclusion for the forward pass, and a
 //! clip scale chosen by SAWB ([`super::sawb`]) or any caller-supplied clip.
 
-use super::kernel::QuantScratch;
+use super::kernel::{QuantScratch, CHUNK};
 use crate::rng::Xoshiro256;
 
 /// The MF-BPROP wire nibble `[sign | magnitude]` of a signed integer
@@ -24,9 +24,11 @@ fn nibble_of(code: i32) -> u8 {
 /// Shared packed-nibble emission loop: write `n` codes 2-per-byte (low
 /// nibble first, `LogFormat::pack_nibbles` layout), the code supplied by
 /// index through `nib` — monomorphized per rounding mode so the mode
-/// dispatch stays hoisted out of the element loop.
+/// dispatch stays hoisted out of the element loop. `FnMut` so emitters
+/// can fold per-element statistics (the radix-4 emitter counts its
+/// underflow region) into the same pass.
 #[inline(always)]
-fn pack_nibbles_by(n: usize, packed: &mut [u8], nib: impl Fn(usize) -> u8) {
+pub(crate) fn pack_nibbles_by(n: usize, packed: &mut [u8], mut nib: impl FnMut(usize) -> u8) {
     let pairs = n / 2;
     for (p, byte) in packed[..pairs].iter_mut().enumerate() {
         *byte = (nib(2 * p) & 0x0F) | ((nib(2 * p + 1) & 0x0F) << 4);
@@ -310,6 +312,173 @@ impl UniformQuantizer {
         packed
     }
 
+    /// Multi-threaded chunked quantization with internally generated
+    /// noise — the uniform instance of the PR 1 chunking contract
+    /// (mirrors `LogQuantizer::quantize_chunked`): the tensor is split
+    /// into fixed [`CHUNK`]-element blocks and chunk `i` always draws
+    /// from stream `i` of the caller's generator
+    /// ([`Xoshiro256::fork`]), no matter which thread runs it, so the
+    /// output is **bit-identical for every `n_threads`** — and, in RDN
+    /// mode (where per-element results are noise-free), bit-identical to
+    /// the single-shot [`Self::quantize_into`] as well.
+    ///
+    /// **Stream contract:** the caller's generator is advanced by exactly
+    /// one [`Xoshiro256::jump`] per call in *both* rounding modes, so
+    /// stream alignment never depends on the mode or the data. Per-thread
+    /// noise staging lives in `scratch`; steady-state the call performs
+    /// no allocation.
+    pub fn quantize_chunked(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        rng: &mut Xoshiro256,
+        n_threads: usize,
+        scratch: &mut QuantScratch,
+    ) {
+        assert_eq!(x.len(), out.len());
+        let base = rng.clone();
+        rng.jump();
+        if x.is_empty() {
+            return;
+        }
+        let n_chunks = x.len().div_ceil(CHUNK);
+        let t = n_threads.max(1).min(n_chunks);
+        match self.rounding {
+            UniformRounding::Rdn => {
+                // Noise-free: chunks are pure per-element loops; only the
+                // work split differs from the single-shot path.
+                if t == 1 {
+                    for (xc, oc) in x.chunks(CHUNK).zip(out.chunks_mut(CHUNK)) {
+                        self.quantize_into(xc, &[], oc);
+                    }
+                } else {
+                    std::thread::scope(|s| {
+                        let mut work: Vec<Vec<(&[f32], &mut [f32])>> =
+                            (0..t).map(|_| Vec::new()).collect();
+                        for (i, item) in
+                            x.chunks(CHUNK).zip(out.chunks_mut(CHUNK)).enumerate()
+                        {
+                            work[i % t].push(item);
+                        }
+                        for items in work {
+                            s.spawn(move || {
+                                for (xc, oc) in items {
+                                    self.quantize_into(xc, &[], oc);
+                                }
+                            });
+                        }
+                    });
+                }
+            }
+            UniformRounding::Stochastic => {
+                let mt_noise = &mut scratch.mt_noise;
+                if mt_noise.len() < t * CHUNK {
+                    mt_noise.resize(t * CHUNK, 0.0);
+                }
+                if t == 1 {
+                    let noise = &mut mt_noise[..CHUNK];
+                    for (i, (xc, oc)) in
+                        x.chunks(CHUNK).zip(out.chunks_mut(CHUNK)).enumerate()
+                    {
+                        let mut rng_i = base.fork(i as u64);
+                        let nb = &mut noise[..xc.len()];
+                        rng_i.fill_uniform(nb);
+                        self.quantize_into(xc, nb, oc);
+                    }
+                } else {
+                    let base = &base;
+                    std::thread::scope(|s| {
+                        let mut work: Vec<Vec<(usize, &[f32], &mut [f32])>> =
+                            (0..t).map(|_| Vec::new()).collect();
+                        for (i, (xc, oc)) in
+                            x.chunks(CHUNK).zip(out.chunks_mut(CHUNK)).enumerate()
+                        {
+                            work[i % t].push((i, xc, oc));
+                        }
+                        for (noise, items) in mt_noise.chunks_mut(CHUNK).zip(work) {
+                            s.spawn(move || {
+                                for (i, xc, oc) in items {
+                                    let mut rng_i = base.fork(i as u64);
+                                    let nb = &mut noise[..xc.len()];
+                                    rng_i.fill_uniform(nb);
+                                    self.quantize_into(xc, nb, oc);
+                                }
+                            });
+                        }
+                    });
+                }
+            }
+        }
+    }
+
+    /// Fused single-pass SMP for the uniform quantizer — the §4.1
+    /// variance-reduction estimator on the forward grid, mirroring
+    /// `LogQuantizer::quantize_smp_into`: accumulate `n_samples`
+    /// independent quantizations inline, chunk by chunk, without
+    /// materializing per-sample tensors. Sample `s` draws from the
+    /// `(s+1)`-th [`Xoshiro256::jump`] stream of `rng` (provably disjoint
+    /// streams); the caller's generator is left one jump past the last
+    /// stream — `n_samples + 1` jumps per call in **both** rounding
+    /// modes, so alignment never depends on mode or data. All staging
+    /// lives in `scratch`; steady-state the call allocates nothing.
+    ///
+    /// SMP is meaningful for stochastic rounding (variance drops by
+    /// `1/N`); in RDN mode every sample is identical and the call reduces
+    /// to a well-defined (if redundant) mean of `N` equal tensors.
+    pub fn quantize_smp_into(
+        &self,
+        x: &[f32],
+        n_samples: usize,
+        rng: &mut Xoshiro256,
+        out: &mut [f32],
+        scratch: &mut QuantScratch,
+    ) {
+        assert!(n_samples >= 1);
+        assert_eq!(x.len(), out.len());
+        let QuantScratch { noise, sample, streams, .. } = scratch;
+        streams.clear();
+        for _ in 0..n_samples {
+            rng.jump();
+            streams.push(rng.clone());
+        }
+        rng.jump(); // leave the caller past every sample stream
+        if noise.len() < CHUNK {
+            noise.resize(CHUNK, 0.0);
+        }
+        if sample.len() < CHUNK {
+            sample.resize(CHUNK, 0.0);
+        }
+        let stochastic = self.rounding == UniformRounding::Stochastic;
+        for (xc, oc) in x.chunks(CHUNK).zip(out.chunks_mut(CHUNK)) {
+            oc.fill(0.0);
+            for stream in streams.iter_mut() {
+                let sb = &mut sample[..xc.len()];
+                if stochastic {
+                    let nb = &mut noise[..xc.len()];
+                    stream.fill_uniform(nb);
+                    self.quantize_into(xc, nb, sb);
+                } else {
+                    self.quantize_into(xc, &[], sb);
+                }
+                for (o, v) in oc.iter_mut().zip(sb.iter()) {
+                    *o += *v;
+                }
+            }
+        }
+        let inv = 1.0 / n_samples as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    /// Allocating wrapper around [`quantize_smp_into`](Self::quantize_smp_into).
+    pub fn quantize_smp(&self, x: &[f32], n_samples: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+        let mut out = vec![0.0f32; x.len()];
+        let mut scratch = QuantScratch::new();
+        self.quantize_smp_into(x, n_samples, rng, &mut out, &mut scratch);
+        out
+    }
+
     /// Mean-squared quantization error over a slice (deterministic only
     /// for RDN; for SR this is a single stochastic realization).
     pub fn mse(&self, x: &[f32], rng: &mut Xoshiro256) -> f64 {
@@ -576,6 +745,138 @@ mod tests {
         q_sr.encode_packed_matrix_into(&x, rows, cols, &noise, &mut want, rb);
         assert_eq!(got, want);
         assert_eq!(a.next_u64(), b.next_u64(), "SR stream misaligned");
+    }
+
+    /// Satellite (PR 1 chunking contract, uniform instance): chunked
+    /// multi-threaded execution is bit-identical across thread counts in
+    /// both rounding modes, RDN additionally equals the single-shot path,
+    /// and every call advances the caller's generator by exactly one
+    /// jump.
+    #[test]
+    fn uniform_chunked_is_thread_count_invariant() {
+        let mut rng = Xoshiro256::seed_from_u64(61);
+        let n = 3 * CHUNK + 1234; // ragged final chunk
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_ms_f32(0.0, 3.0)).collect();
+        for rounding in [UniformRounding::Rdn, UniformRounding::Stochastic] {
+            let q = UniformQuantizer::new(4, 4.5, rounding);
+            let base = Xoshiro256::seed_from_u64(77);
+            let mut scratch = QuantScratch::new();
+            let mut reference: Option<Vec<f32>> = None;
+            for threads in [1usize, 2, 3, 8] {
+                let mut out = vec![0.0f32; n];
+                let mut b = base.clone();
+                q.quantize_chunked(&x, &mut out, &mut b, threads, &mut scratch);
+                // Stream contract: exactly one jump, both modes.
+                let mut want_rng = base.clone();
+                want_rng.jump();
+                assert_eq!(b.next_u64(), want_rng.next_u64(), "{rounding:?} stream");
+                match &reference {
+                    None => reference = Some(out),
+                    Some(want) => {
+                        for i in 0..n {
+                            assert_eq!(
+                                out[i].to_bits(),
+                                want[i].to_bits(),
+                                "{rounding:?} threads={threads} idx={i}"
+                            );
+                        }
+                    }
+                }
+            }
+            if rounding == UniformRounding::Rdn {
+                // Noise-free: the chunked result is the single-shot path.
+                let mut flat = vec![0.0f32; n];
+                q.quantize_into(&x, &[], &mut flat);
+                let got = reference.unwrap();
+                for i in 0..n {
+                    assert_eq!(got[i].to_bits(), flat[i].to_bits(), "RDN idx={i}");
+                }
+            }
+        }
+    }
+
+    /// The fused chunk-wise uniform SMP equals the naive
+    /// materialize-N-buffers implementation bit-for-bit from the same
+    /// jump streams (sample-major accumulation per element), and leaves
+    /// the caller's generator `n_samples + 1` jumps ahead.
+    #[test]
+    fn uniform_fused_smp_equals_naive_smp_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(62);
+        let q = UniformQuantizer::new(4, 5.0, UniformRounding::Stochastic);
+        let n = CHUNK + 257; // cross a chunk boundary
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_ms_f32(0.0, 2.0)).collect();
+        for n_samples in [1usize, 2, 4] {
+            let mut naive_rng = rng.clone();
+            let mut streams = Vec::new();
+            for _ in 0..n_samples {
+                naive_rng.jump();
+                streams.push(naive_rng.clone());
+            }
+            naive_rng.jump();
+            let mut acc = vec![0.0f32; n];
+            let mut noise = vec![0.0f32; n];
+            let mut sample = vec![0.0f32; n];
+            for s in streams.iter_mut() {
+                s.fill_uniform(&mut noise);
+                q.quantize_into(&x, &noise, &mut sample);
+                for (a, v) in acc.iter_mut().zip(sample.iter()) {
+                    *a += *v;
+                }
+            }
+            let inv = 1.0 / n_samples as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+            let mut fused_rng = rng.clone();
+            let mut out = vec![0.0f32; n];
+            let mut scratch = QuantScratch::new();
+            q.quantize_smp_into(&x, n_samples, &mut fused_rng, &mut out, &mut scratch);
+            for i in 0..n {
+                assert_eq!(
+                    out[i].to_bits(),
+                    acc[i].to_bits(),
+                    "n_samples={n_samples} idx={i}: fused {} vs naive {}",
+                    out[i],
+                    acc[i]
+                );
+            }
+            // Stream contract: n_samples + 1 jumps, same as the naive walk.
+            assert_eq!(fused_rng.next_u64(), naive_rng.next_u64(), "n_samples={n_samples}");
+        }
+    }
+
+    /// Uniform SMP reduces SR variance ~linearly in the sample count, and
+    /// the RDN degenerate case stays exact for power-of-two sample counts
+    /// (sums of equal f32 values halve exactly).
+    #[test]
+    fn uniform_smp_reduces_variance() {
+        let mut rng = Xoshiro256::seed_from_u64(63);
+        let q = UniformQuantizer::new(4, 7.0, UniformRounding::Stochastic);
+        let x = vec![2.5f32]; // mid-bin: SR flips between 2 and 3
+        let var_of = |n_samples: usize, rng: &mut Xoshiro256| {
+            let trials = 20_000;
+            let mut vals = Vec::with_capacity(trials);
+            for _ in 0..trials {
+                let y = q.quantize_smp(&x, n_samples, rng);
+                vals.push(y[0] as f64);
+            }
+            let m = vals.iter().sum::<f64>() / trials as f64;
+            vals.iter().map(|v| (v - m).powi(2)).sum::<f64>() / trials as f64
+        };
+        let v1 = var_of(1, &mut rng);
+        let v4 = var_of(4, &mut rng);
+        let ratio = v1 / v4;
+        assert!((ratio - 4.0).abs() < 0.8, "variance ratio {ratio}, want ~4");
+        // RDN, n_samples = 2: the mean of two identical samples is the
+        // sample itself, bit for bit.
+        let q_rdn = UniformQuantizer::new(4, 7.0, UniformRounding::Rdn);
+        let xs: Vec<f32> = (0..100).map(|_| rng.normal_ms_f32(0.0, 3.0)).collect();
+        let got = q_rdn.quantize_smp(&xs, 2, &mut rng);
+        let mut want = vec![0.0f32; xs.len()];
+        q_rdn.quantize_into(&xs, &[], &mut want);
+        for i in 0..xs.len() {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "RDN SMP idx={i}");
+        }
     }
 
     #[test]

@@ -32,5 +32,5 @@ pub use kernel::{QuantScratch, CHUNK};
 pub use logfmt::LogFormat;
 pub use luq::{AlphaPolicy, LogQuantConfig, LogQuantizer, LogRounding, QuantStats, Underflow};
 pub use minifloat::MiniFloat;
-pub use radix4::{Radix4Format, Radix4Quantizer, TprPhase};
+pub use radix4::{radix4_unit_value, Radix4Format, Radix4Quantizer, TprPhase};
 pub use sawb::SawbQuantizer;

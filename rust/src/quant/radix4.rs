@@ -28,7 +28,18 @@
 //! loop survives as [`Radix4Quantizer::quantize_value`] /
 //! [`Radix4Quantizer::quantize_reference`], the bit-exactness oracle the
 //! tests pin the kernel against.
+//!
+//! On top of the kernel sit the **fused packed-code emitters**
+//! ([`Radix4Quantizer::encode_packed_into`] and its stride-aware matrix
+//! variants): they emit the `[sign | level]` wire nibbles directly (no
+//! dequantized f32 intermediate), which — together with
+//! [`radix4_unit_value`] and the 256-entry
+//! [`crate::hw::qgemm::radix4_product_lut`] — gives the Ultra-low
+//! baseline the full tiled + multithreaded GEMM of the generic engine,
+//! one LUT GEMM per TPR phase.
 
+use super::int_uniform::pack_nibbles_by;
+use super::luq::QuantStats;
 use super::rounding::{floor_log2, pow2i};
 
 /// Radix-4 logarithmic format `[1, exp_bits, 0]` with radix-4 spacing.
@@ -58,6 +69,41 @@ impl Radix4Format {
         g.extend((0..self.levels()).map(|i| alpha * phase_shift * 4.0f32.powi(i as i32)));
         g
     }
+
+    /// Decode a wire nibble to real units on the `phase` grid:
+    /// `unit · (α · shift)` — bit-identical to the value
+    /// [`Radix4Quantizer::quantize_into`] emits for the same element
+    /// (both are one exact power-of-two f32 multiply of `α·shift`).
+    #[inline]
+    pub fn decode(&self, nibble: u8, alpha: f32, phase: TprPhase) -> f32 {
+        radix4_unit_value(nibble) * (alpha * phase.shift())
+    }
+}
+
+/// One element's radix-4 wire nibble — exactly the region/level decisions
+/// of [`Radix4Quantizer::quantize_into`], emitted as a `[sign | level]`
+/// code instead of a dequantized value (level `n+1` for the mid region,
+/// level 1 for an underflow snap, 0 for a flush; sign OR'd into nonzero
+/// codes only). Returns `(nibble, in_underflow_region, clipped)` so the
+/// packing loops can fold [`QuantStats`] counters into the same pass.
+#[inline(always)]
+fn encode_element(v: f32, base: f32, half_base: f32, levels: i32) -> (u8, u32, u32) {
+    let a = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+    let r = a / base;
+    let e = ((r.to_bits() >> 23) & 0xFF) as i32 - 127;
+    let idx = (e + 1).div_euclid(2);
+    let n = idx.max(0).min(levels - 1);
+    let code_mid = (n + 1) as u32;
+    let code_under = (a >= half_base) as u32;
+    let under = idx < 0;
+    let code = if under { code_under } else { code_mid };
+    let neg = (v < 0.0) as u32;
+    let nonzero = (code != 0) as u32;
+    (
+        (code | ((neg & nonzero) << 3)) as u8,
+        under as u32,
+        (idx > levels - 1) as u32,
+    )
 }
 
 /// Which TPR phase a quantization uses.
@@ -67,6 +113,40 @@ pub enum TprPhase {
     Base,
     /// Shifted grid `2α·4^i` — used for the backward (dx) GEMM.
     Shifted,
+}
+
+impl TprPhase {
+    /// The grid shift of this phase: the base grid is `α·4^i`, the
+    /// shifted grid `2α·4^i`.
+    #[inline]
+    pub fn shift(self) -> f32 {
+        match self {
+            TprPhase::Base => 1.0,
+            TprPhase::Shifted => 2.0,
+        }
+    }
+}
+
+/// Decode a packed radix-4 **wire nibble** `[sign | 3-bit level]` to its
+/// *unit* value: level 0 is (+)zero, level `l ≥ 1` is `±4^(l−1)` — the
+/// magnitudes the emitters below write, in units of the per-tensor
+/// per-phase scale `α · shift` (which multiplies the *accumulated* GEMM
+/// result outside, exactly like the FP4 α and the INT4 Δ of the other
+/// two LUT formats). This is the decode
+/// [`crate::hw::qgemm::radix4_product_lut`] caches and the radix-4
+/// decode oracle replays.
+#[inline]
+pub fn radix4_unit_value(nibble: u8) -> f32 {
+    let level = (nibble & 0x7) as i32;
+    if level == 0 {
+        return 0.0;
+    }
+    let mag = pow2i(2 * (level - 1));
+    if nibble & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
 }
 
 /// The Ultra-low radix-4 quantizer.
@@ -87,12 +167,8 @@ impl Radix4Quantizer {
         if x == 0.0 {
             return 0.0;
         }
-        let shift = match phase {
-            TprPhase::Base => 1.0,
-            TprPhase::Shifted => 2.0,
-        };
         let a = x.abs();
-        let base = alpha * shift;
+        let base = alpha * phase.shift();
         let levels = self.format.levels() as i32;
         // log4 of a/base; nearest level by geometric midpoint: the bin
         // [4^i, 4^(i+1)] splits at 2·4^i (the geometric mean), i.e. at
@@ -148,6 +224,11 @@ impl Radix4Quantizer {
     /// `α`/`base` to 0 (`r = ∞`), where the two paths can disagree about
     /// the sign of a zero output.
     ///
+    /// The per-element decision is mirrored code-emitting in
+    /// [`encode_element`] (the packed emitters below): any change to the
+    /// region/level/sign logic here must change there in lock-step —
+    /// `fused_emitter_decodes_to_quantize_into_bitwise` pins the pair.
+    ///
     /// Returns the scale α (0 for an all-zero tensor).
     pub fn quantize_into(&self, x: &[f32], phase: TprPhase, out: &mut [f32]) -> f32 {
         assert_eq!(x.len(), out.len());
@@ -157,11 +238,7 @@ impl Radix4Quantizer {
             return 0.0;
         }
         let alpha = self.format.alpha_for_max(max_abs);
-        let shift = match phase {
-            TprPhase::Base => 1.0f32,
-            TprPhase::Shifted => 2.0,
-        };
-        let base = alpha * shift;
+        let base = alpha * phase.shift();
         let half_base = base * 0.5;
         let levels = self.format.levels() as i32;
         for (o, &v) in out.iter_mut().zip(x.iter()) {
@@ -204,6 +281,134 @@ impl Radix4Quantizer {
             self.quantize(x, TprPhase::Base),
             self.quantize(x, TprPhase::Shifted),
         )
+    }
+
+    /// Fused quantize→packed-code path: emit the radix-4 `[sign | level]`
+    /// wire nibbles (two per byte, low nibble first — the
+    /// `LogFormat::pack_nibbles` layout) directly, with no dequantized
+    /// f32 intermediate. This is the operand stream
+    /// [`crate::hw::qgemm::qgemm_radix4_mt_with`] consumes; decoding
+    /// every nibble with [`Radix4Format::decode`] at the returned
+    /// `stats.alpha` reproduces [`Self::quantize_into`] bit-for-bit
+    /// (same [`encode_element`] decisions, same exact power-of-two
+    /// reconstruction).
+    ///
+    /// TPR rounding is deterministic (nearest-in-log), so the emitter
+    /// draws **no RNG** and needs no noise or scratch staging — it is
+    /// allocation-free by construction. Requires a ≤3-bit level field
+    /// (nibble packing); `packed.len() >= x.len().div_ceil(2)`.
+    pub fn encode_packed_into(&self, x: &[f32], phase: TprPhase, packed: &mut [u8]) -> QuantStats {
+        assert!(self.format.exp_bits <= 3, "packed-nibble emission needs a <= 3-bit level");
+        let n = x.len();
+        assert!(packed.len() >= n.div_ceil(2), "packed buffer too small");
+        let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if max_abs == 0.0 {
+            packed[..n.div_ceil(2)].fill(0);
+            return QuantStats::default();
+        }
+        let alpha = self.format.alpha_for_max(max_abs);
+        let base = alpha * phase.shift();
+        let half_base = base * 0.5;
+        let levels = self.format.levels() as i32;
+        let (mut n_under, mut n_clip) = (0usize, 0usize);
+        pack_nibbles_by(n, packed, |i| {
+            let (nib, under, clip) = encode_element(x[i], base, half_base, levels);
+            n_under += under as usize;
+            n_clip += clip as usize;
+            nib
+        });
+        QuantStats {
+            max_abs,
+            alpha,
+            frac_underflow: n_under as f32 / n.max(1) as f32,
+            frac_clipped: n_clip as f32 / n.max(1) as f32,
+        }
+    }
+
+    /// Allocating wrapper around [`encode_packed_into`](Self::encode_packed_into).
+    pub fn encode_packed(&self, x: &[f32], phase: TprPhase) -> (Vec<u8>, QuantStats) {
+        let mut packed = vec![0u8; x.len().div_ceil(2)];
+        let stats = self.encode_packed_into(x, phase, &mut packed);
+        (packed, stats)
+    }
+
+    /// Row-major **matrix** variant of
+    /// [`encode_packed_into`](Self::encode_packed_into), mirroring the
+    /// Log/Uniform matrix emitters: one per-tensor α over the whole
+    /// `rows × cols` matrix, each row packed independently so it starts
+    /// at a byte boundary (odd `cols` rows end in a zero-padded half
+    /// byte), rows landing `row_stride_bytes` apart
+    /// (`>= cols.div_ceil(2)`) so callers can emit into padded/tiled
+    /// layouts. This is exactly the packed-Bᵀ operand layout the radix-4
+    /// GEMM consumes. Phase-aware via `phase`; deterministic, so it
+    /// consumes no RNG and allocates nothing.
+    pub fn encode_packed_matrix_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        phase: TprPhase,
+        packed: &mut [u8],
+        row_stride_bytes: usize,
+    ) -> QuantStats {
+        assert!(self.format.exp_bits <= 3, "packed-nibble emission needs a <= 3-bit level");
+        let n = rows * cols;
+        assert!(x.len() >= n, "matrix input too short");
+        let rb = cols.div_ceil(2);
+        assert!(row_stride_bytes >= rb, "row stride smaller than a packed row");
+        if rows > 0 {
+            assert!(
+                packed.len() >= (rows - 1) * row_stride_bytes + rb,
+                "packed buffer too small"
+            );
+        }
+        let max_abs = x[..n].iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if max_abs == 0.0 {
+            for r in 0..rows {
+                packed[r * row_stride_bytes..r * row_stride_bytes + rb].fill(0);
+            }
+            return QuantStats::default();
+        }
+        let alpha = self.format.alpha_for_max(max_abs);
+        let base = alpha * phase.shift();
+        let half_base = base * 0.5;
+        let levels = self.format.levels() as i32;
+        let (mut n_under, mut n_clip) = (0usize, 0usize);
+        for r in 0..rows {
+            let xs = &x[r * cols..r * cols + cols];
+            pack_nibbles_by(
+                cols,
+                &mut packed[r * row_stride_bytes..r * row_stride_bytes + rb],
+                |i| {
+                    let (nib, under, clip) = encode_element(xs[i], base, half_base, levels);
+                    n_under += under as usize;
+                    n_clip += clip as usize;
+                    nib
+                },
+            );
+        }
+        QuantStats {
+            max_abs,
+            alpha,
+            frac_underflow: n_under as f32 / n.max(1) as f32,
+            frac_clipped: n_clip as f32 / n.max(1) as f32,
+        }
+    }
+
+    /// Allocating wrapper around
+    /// [`encode_packed_matrix_into`](Self::encode_packed_matrix_into)
+    /// with the dense stride (`cols.div_ceil(2)` bytes per row).
+    pub fn encode_packed_matrix(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        phase: TprPhase,
+    ) -> (Vec<u8>, QuantStats) {
+        let rb = cols.div_ceil(2);
+        let mut packed = vec![0u8; rows * rb];
+        let stats = self.encode_packed_matrix_into(x, rows, cols, phase, &mut packed, rb);
+        (packed, stats)
     }
 }
 
@@ -386,5 +591,156 @@ mod tests {
         let q = Radix4Quantizer::new(Radix4Format::FP4);
         assert_eq!(q.quantize_value(0.0, 1.0, TprPhase::Base), 0.0);
         assert!(q.quantize_value(-5.0, 1.0, TprPhase::Base) < 0.0);
+    }
+
+    /// Every wire nibble's decode is a fixed point of `quantize_value`
+    /// (grid idempotency, bitwise) in both phases, and the 16 decodes
+    /// cover the full signed grid `{0, ±4^0 … ±4^6}` in α·shift units.
+    #[test]
+    fn unit_decodes_are_quantize_value_fixed_points() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        for alpha in [1.0f32, 0.37] {
+            for phase in [TprPhase::Base, TprPhase::Shifted] {
+                for nib in 0..16u8 {
+                    let dec = Radix4Format::FP4.decode(nib, alpha, phase);
+                    let rt = q.quantize_value(dec, alpha, phase);
+                    assert_eq!(
+                        rt.to_bits(),
+                        dec.to_bits(),
+                        "nib={nib} alpha={alpha} {phase:?}: {rt} vs {dec}"
+                    );
+                }
+            }
+        }
+        let mut units: Vec<f32> = (0..16u8).map(radix4_unit_value).collect();
+        units.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        units.dedup();
+        let mut expect: Vec<f32> = (0..7).map(|i| 4.0f32.powi(i)).collect();
+        let mut grid: Vec<f32> = expect.iter().map(|v| -v).collect();
+        grid.push(0.0);
+        grid.append(&mut expect);
+        grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(units, grid, "decode range must be the full signed grid");
+    }
+
+    /// The fused packed emitter agrees with the dequantizing kernel
+    /// bit-for-bit: decoding every emitted nibble at the returned α
+    /// reproduces `quantize_into`'s output, in both phases, including the
+    /// odd-length half byte.
+    #[test]
+    fn fused_emitter_decodes_to_quantize_into_bitwise() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        let mut rng = Xoshiro256::seed_from_u64(0x4A);
+        for n in [1usize, 2, 255, 1024] {
+            let x: Vec<f32> = (0..n).map(|_| rng.signed_lognormal_f32(0.0, 4.0)).collect();
+            for phase in [TprPhase::Base, TprPhase::Shifted] {
+                let mut want = vec![0.0f32; n];
+                let alpha = q.quantize_into(&x, phase, &mut want);
+                let mut packed = vec![0xFFu8; n.div_ceil(2)];
+                let st = q.encode_packed_into(&x, phase, &mut packed);
+                assert_eq!(st.alpha.to_bits(), alpha.to_bits());
+                assert!(st.max_abs > 0.0);
+                for i in 0..n {
+                    let nib = (packed[i / 2] >> ((i & 1) << 2)) & 0x0F;
+                    let dec = Radix4Format::FP4.decode(nib, st.alpha, phase);
+                    // −0.0 never appears: zeros are emitted as code 0.
+                    assert_eq!(
+                        dec.to_bits(),
+                        want[i].to_bits(),
+                        "{phase:?} n={n} i={i}: code {nib} -> {dec} vs {} (x={})",
+                        want[i],
+                        x[i]
+                    );
+                }
+                if n % 2 == 1 {
+                    assert_eq!(packed[n / 2] >> 4, 0, "odd-n padding nibble is zero");
+                }
+            }
+        }
+    }
+
+    /// Matrix emitter vs flat emitter: bitwise identical for even cols,
+    /// per-row zero-padded half byte for odd cols, stride gaps untouched
+    /// — the radix-4 mirror of the Log/Uniform matrix-emitter contract.
+    #[test]
+    fn emitter_matrix_layout_contract() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        let mut rng = Xoshiro256::seed_from_u64(0x4B);
+        // Even cols: matrix == flat.
+        let (rows, cols) = (5usize, 12usize);
+        let x: Vec<f32> =
+            (0..rows * cols).map(|_| rng.signed_lognormal_f32(0.0, 3.0)).collect();
+        let rb = cols / 2;
+        let mut mat = vec![0u8; rows * rb];
+        let st_m = q.encode_packed_matrix_into(&x, rows, cols, TprPhase::Base, &mut mat, rb);
+        let mut flat = vec![0u8; rows * rb];
+        let st_f = q.encode_packed_into(&x, TprPhase::Base, &mut flat);
+        assert_eq!(mat, flat);
+        assert_eq!(st_m.alpha.to_bits(), st_f.alpha.to_bits());
+        assert_eq!(st_m.frac_underflow, st_f.frac_underflow);
+        // Odd cols: per-row zero-padded half byte; phases differ.
+        let (rows, cols) = (4usize, 7usize);
+        let x: Vec<f32> =
+            (0..rows * cols).map(|_| rng.signed_lognormal_f32(0.0, 3.0)).collect();
+        let rb = cols.div_ceil(2);
+        let mut base = vec![0xEEu8; rows * rb];
+        q.encode_packed_matrix_into(&x, rows, cols, TprPhase::Base, &mut base, rb);
+        let mut shifted = vec![0xEEu8; rows * rb];
+        q.encode_packed_matrix_into(&x, rows, cols, TprPhase::Shifted, &mut shifted, rb);
+        assert_ne!(base, shifted, "the two phase grids must emit different codes");
+        for r in 0..rows {
+            assert_eq!(base[r * rb + rb - 1] >> 4, 0, "row {r} padding nibble");
+        }
+        // Stride > rb: rows land stride apart, gap bytes never written.
+        let stride = rb + 3;
+        let mut strided = vec![0xEEu8; (rows - 1) * stride + rb];
+        q.encode_packed_matrix_into(&x, rows, cols, TprPhase::Base, &mut strided, stride);
+        for r in 0..rows {
+            assert_eq!(
+                &strided[r * stride..r * stride + rb],
+                &base[r * rb..(r + 1) * rb],
+                "row {r}"
+            );
+            if r + 1 < rows {
+                assert!(
+                    strided[r * stride + rb..(r + 1) * stride].iter().all(|&b| b == 0xEE),
+                    "gap after row {r} untouched"
+                );
+            }
+        }
+    }
+
+    /// Satellite: degenerate matrix shapes are safe on the radix-4
+    /// emitters too — rows = 0 / cols = 0 write nothing, cols = 1 packs
+    /// one half byte per row, all-zero tensors emit all-zero codes.
+    #[test]
+    fn emitter_edge_shapes() {
+        let q = Radix4Quantizer::new(Radix4Format::FP4);
+        let mut packed = vec![0xABu8; 8];
+        let st = q.encode_packed_matrix_into(&[], 0, 5, TprPhase::Base, &mut packed, 3);
+        assert_eq!(st.max_abs, 0.0);
+        q.encode_packed_matrix_into(&[], 4, 0, TprPhase::Shifted, &mut packed, 0);
+        assert!(packed.iter().all(|&b| b == 0xAB), "degenerate shapes wrote bytes");
+        // cols = 1: one code per row, zero high nibble, decode roundtrip.
+        let x = [64.0f32, -2.0, 0.2, 4096.0];
+        let mut one = vec![0xFFu8; 4];
+        let st = q.encode_packed_matrix_into(&x, 4, 1, TprPhase::Base, &mut one, 1);
+        let mut want = vec![0.0f32; 4];
+        q.quantize_into(&x, TprPhase::Base, &mut want);
+        for (r, nib) in one.iter().enumerate() {
+            assert_eq!(nib >> 4, 0, "row {r} padding nibble");
+            let dec = Radix4Format::FP4.decode(nib & 0x0F, st.alpha, TprPhase::Base);
+            assert_eq!(dec.to_bits(), want[r].to_bits(), "row {r}");
+        }
+        // All-zero tensor: zero codes, zero alpha, on both emitters.
+        let zeros = vec![0.0f32; 7];
+        let mut p = vec![0xFFu8; 4];
+        let st = q.encode_packed_into(&zeros, TprPhase::Shifted, &mut p);
+        assert_eq!(st.alpha, 0.0);
+        assert!(p.iter().all(|&b| b == 0));
+        p.fill(0xFF);
+        let st = q.encode_packed_matrix_into(&zeros, 1, 7, TprPhase::Base, &mut p, 4);
+        assert_eq!(st.alpha, 0.0);
+        assert!(p.iter().all(|&b| b == 0));
     }
 }

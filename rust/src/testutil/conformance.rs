@@ -1,0 +1,312 @@
+//! Cross-format GEMM conformance harness — the engine's bit-exactness
+//! contract as a systematically enforced property instead of per-kernel
+//! ad-hoc tests.
+//!
+//! Every LUT instantiation of [`crate::hw::qgemm`] — backward INT4×FP4
+//! (MF-BPROP), forward signed INT4×INT4, and radix-4 TPR — promises that
+//! every kernel variant (scalar decode loop, flat LUT, tiled LUT, and the
+//! multithreaded row-band driver at any thread count) is **bit-identical**
+//! to the format's decode-then-f32-matmul oracle. This module drives all
+//! three formats through one table: seeded randomized shapes plus a fixed
+//! edge-shape list (`m`/`n` ∈ {0, 1}, `k` ∈ {0, 1, odd}, tile boundaries)
+//! × thread counts {1, 2, num_cpus}, with every packed operand emitted by
+//! the format's real matrix emitter — once densely and once at a row
+//! stride **wider than the packed row**, asserting the two emissions
+//! agree byte-for-byte before the GEMM runs.
+//!
+//! [`run_conformance`] panics with the format, case, and shape on the
+//! first divergence (the `prop_check` reporting convention), so a
+//! replaying `cargo test conformance` pinpoints the exact case.
+
+use crate::hw::mfbprop::Int4Code;
+use crate::hw::qgemm::{
+    qgemm_decode_oracle, qgemm_int4_decode_oracle, qgemm_int4_flat, qgemm_int4_into,
+    qgemm_int4_mt_with, qgemm_int4_scalar_reference, qgemm_int4_with, qgemm_packed_flat,
+    qgemm_packed_into, qgemm_packed_mt_with, qgemm_packed_with, qgemm_radix4_decode_oracle,
+    qgemm_radix4_flat, qgemm_radix4_into, qgemm_radix4_mt_with, qgemm_radix4_scalar_reference,
+    qgemm_radix4_with, qgemm_scalar_reference, QgemmScratch, TILE_M, TILE_N,
+};
+use crate::quant::radix4::{Radix4Format, Radix4Quantizer, TprPhase};
+use crate::quant::{
+    LogFormat, LogQuantConfig, LogQuantizer, UniformQuantizer, UniformRounding,
+};
+use crate::rng::Xoshiro256;
+
+/// One LUT format's hookup into the harness: a name for failure reports
+/// and a checker that builds operands for a `(m, k, n)` shape (drawing
+/// from the shared seeded generator) and verifies every kernel variant
+/// against the format's decode oracle at each thread count.
+pub struct FormatConformance {
+    pub name: &'static str,
+    pub check: fn(&mut Xoshiro256, usize, usize, usize, &[usize]) -> Result<(), String>,
+}
+
+/// The format table: every LUT instantiation of the generic engine. A new
+/// format joins the enforced contract by adding one row here.
+pub fn conformance_formats() -> Vec<FormatConformance> {
+    vec![
+        FormatConformance { name: "backward-int4xfp4", check: check_backward },
+        FormatConformance { name: "forward-int4xint4", check: check_forward },
+        FormatConformance { name: "radix4-tpr", check: check_radix4 },
+    ]
+}
+
+/// Thread counts the multithreaded driver is checked at: single-threaded,
+/// the smallest parallel split, and the host's full parallelism.
+pub fn conformance_thread_counts() -> Vec<usize> {
+    let hw = std::thread::available_parallelism().map_or(2, |p| p.get());
+    let mut t = vec![1usize, 2, hw];
+    t.sort_unstable();
+    t.dedup();
+    t
+}
+
+/// Deliberate edge shapes: empty operands in each dimension, single
+/// rows/columns, `k` = 1 (one half byte per row), odd `k` (half-filled
+/// trailing bytes), and exact/off-by-one tile boundaries.
+pub fn conformance_edge_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (0, 5, 3),
+        (4, 5, 0),
+        (2, 0, 3),
+        (1, 1, 1),
+        (1, 7, 1),
+        (3, 1, 5),
+        (TILE_M, 16, TILE_N),
+        (TILE_M + 1, 33, TILE_N - 1),
+    ]
+}
+
+/// Run the full conformance table: every format × (edge shapes +
+/// `random_cases` seeded random shapes) × every thread count. Panics with
+/// format, case, and shape on the first divergence.
+pub fn run_conformance(seed: u64, random_cases: usize) {
+    let threads = conformance_thread_counts();
+    for fmt in conformance_formats() {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        for (i, &(m, k, n)) in conformance_edge_shapes().iter().enumerate() {
+            if let Err(msg) = (fmt.check)(&mut rng, m, k, n, &threads) {
+                panic!(
+                    "conformance[{}] edge case {i} (m={m} k={k} n={n}, threads {threads:?}): {msg}",
+                    fmt.name
+                );
+            }
+        }
+        for c in 0..random_cases {
+            let m = rng.uniform_usize(2 * TILE_M + 4);
+            let k = rng.uniform_usize(67);
+            let n = rng.uniform_usize(2 * TILE_N + 4);
+            if let Err(msg) = (fmt.check)(&mut rng, m, k, n, &threads) {
+                panic!(
+                    "conformance[{}] random case {c}/{random_cases} (seed {seed}, m={m} k={k} \
+                     n={n}, threads {threads:?}): {msg}",
+                    fmt.name
+                );
+            }
+        }
+    }
+}
+
+fn bits_check(what: &str, got: &[f32], want: &[f32]) -> Result<(), String> {
+    if got.len() < want.len() {
+        return Err(format!("{what}: output too short ({} < {})", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(format!(
+                "{what}[{i}]: {g} ({:#010x}) vs {w} ({:#010x})",
+                g.to_bits(),
+                w.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn random_codes(rng: &mut Xoshiro256, len: usize) -> Vec<Int4Code> {
+    (0..len).map(|_| Int4Code::from_nibble((rng.next_u64() & 0xF) as u8)).collect()
+}
+
+/// Emit `rows × cols` packed codes twice through `emit` — densely and at
+/// a row stride 3 bytes wider than the packed row — and require the two
+/// emissions to agree byte-for-byte. Returns the dense operand the GEMM
+/// consumes.
+fn emit_dense_and_strided(
+    rows: usize,
+    cols: usize,
+    mut emit: impl FnMut(&mut [u8], usize),
+) -> Result<Vec<u8>, String> {
+    let rb = cols.div_ceil(2);
+    let mut dense = vec![0u8; rows * rb];
+    emit(&mut dense, rb);
+    let stride = rb + 3;
+    let strided_len = if rows == 0 { 0 } else { (rows - 1) * stride + rb };
+    let mut strided = vec![0xEEu8; strided_len];
+    emit(&mut strided, stride);
+    for r in 0..rows {
+        if strided[r * stride..r * stride + rb] != dense[r * rb..(r + 1) * rb] {
+            return Err(format!(
+                "strided emission (stride {stride} > {rb} row bytes) row {r} differs from dense"
+            ));
+        }
+    }
+    Ok(dense)
+}
+
+/// Backward INT4×FP4: A as random typed INT4 codes, B emitted by the LUQ
+/// matrix code emitter (dense and strided) from lognormal gradients.
+fn check_backward(
+    rng: &mut Xoshiro256,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: &[usize],
+) -> Result<(), String> {
+    let a = random_codes(rng, m * k);
+    let g: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let mut noise = vec![0.0f32; n * k];
+    rng.fill_uniform(&mut noise);
+    let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+    let b = emit_dense_and_strided(n, k, |buf, stride| {
+        q.quantize_to_codes_matrix_into(&g, n, k, &noise, buf, stride);
+    })?;
+
+    let want = qgemm_decode_oracle(&a, &b, m, k, n);
+    let mut scratch = QgemmScratch::new();
+    let mut out = vec![f32::NAN; m * n];
+    qgemm_packed_with(&a, &b, m, k, n, &mut out, &mut scratch);
+    bits_check("tiled", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_packed_flat(&a, &b, m, k, n, &mut out);
+    bits_check("flat", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_scalar_reference(&a, &b, m, k, n, &mut out);
+    bits_check("scalar", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_packed_into(&a, &b, m, k, n, &mut out);
+    bits_check("into", &out, &want)?;
+    for &t in threads {
+        out.fill(f32::NAN);
+        qgemm_packed_mt_with(&a, &b, m, k, n, &mut out, t, &mut scratch);
+        bits_check(&format!("mt[{t}]"), &out, &want)?;
+    }
+    Ok(())
+}
+
+/// Forward signed INT4×INT4: both operands emitted by the uniform fused
+/// matrix emitter (dense and strided) — A stochastically rounded, B with
+/// RDN, covering both emission modes.
+fn check_forward(
+    rng: &mut Xoshiro256,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: &[usize],
+) -> Result<(), String> {
+    let acts: Vec<f32> = (0..m * k).map(|_| rng.normal_ms_f32(0.0, 1.5)).collect();
+    let wts: Vec<f32> = (0..n * k).map(|_| rng.normal_ms_f32(0.0, 0.5)).collect();
+    let mut noise = vec![0.0f32; m * k];
+    rng.fill_uniform(&mut noise);
+    let aq = UniformQuantizer::new(4, 2.5, UniformRounding::Stochastic);
+    let wq = UniformQuantizer::new(4, 1.5, UniformRounding::Rdn);
+    let a = emit_dense_and_strided(m, k, |buf, stride| {
+        aq.encode_packed_matrix_into(&acts, m, k, &noise, buf, stride);
+    })?;
+    let b = emit_dense_and_strided(n, k, |buf, stride| {
+        wq.encode_packed_matrix_into(&wts, n, k, &[], buf, stride);
+    })?;
+
+    let want = qgemm_int4_decode_oracle(&a, &b, m, k, n);
+    let mut scratch = QgemmScratch::new();
+    let mut out = vec![f32::NAN; m * n];
+    qgemm_int4_with(&a, &b, m, k, n, &mut out, &mut scratch);
+    bits_check("tiled", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_int4_flat(&a, &b, m, k, n, &mut out);
+    bits_check("flat", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_int4_scalar_reference(&a, &b, m, k, n, &mut out);
+    bits_check("scalar", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_int4_into(&a, &b, m, k, n, &mut out);
+    bits_check("into", &out, &want)?;
+    for &t in threads {
+        out.fill(f32::NAN);
+        qgemm_int4_mt_with(&a, &b, m, k, n, &mut out, t, &mut scratch);
+        bits_check(&format!("mt[{t}]"), &out, &want)?;
+    }
+    Ok(())
+}
+
+/// Radix-4 TPR: A as random typed INT4 codes, B emitted by the radix-4
+/// fused matrix emitter (dense and strided) from lognormal gradients, in
+/// **both** TPR phases — each phase is a full GEMM of its own.
+fn check_radix4(
+    rng: &mut Xoshiro256,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: &[usize],
+) -> Result<(), String> {
+    let a = random_codes(rng, m * k);
+    let g: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 3.0)).collect();
+    let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+    for phase in [TprPhase::Base, TprPhase::Shifted] {
+        let b = emit_dense_and_strided(n, k, |buf, stride| {
+            r4.encode_packed_matrix_into(&g, n, k, phase, buf, stride);
+        })?;
+
+        let want = qgemm_radix4_decode_oracle(&a, &b, m, k, n);
+        let mut scratch = QgemmScratch::new();
+        let mut out = vec![f32::NAN; m * n];
+        qgemm_radix4_with(&a, &b, m, k, n, &mut out, &mut scratch);
+        bits_check(&format!("{phase:?}/tiled"), &out, &want)?;
+        out.fill(f32::NAN);
+        qgemm_radix4_flat(&a, &b, m, k, n, &mut out);
+        bits_check(&format!("{phase:?}/flat"), &out, &want)?;
+        out.fill(f32::NAN);
+        qgemm_radix4_scalar_reference(&a, &b, m, k, n, &mut out);
+        bits_check(&format!("{phase:?}/scalar"), &out, &want)?;
+        out.fill(f32::NAN);
+        qgemm_radix4_into(&a, &b, m, k, n, &mut out);
+        bits_check(&format!("{phase:?}/into"), &out, &want)?;
+        for &t in threads {
+            out.fill(f32::NAN);
+            qgemm_radix4_mt_with(&a, &b, m, k, n, &mut out, t, &mut scratch);
+            bits_check(&format!("{phase:?}/mt[{t}]"), &out, &want)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite: the one table-driven cross-format suite — all three LUT
+    /// formats × edge + randomized shapes × thread counts
+    /// {1, 2, num_cpus}, bit-exact vs each format's decode oracle.
+    #[test]
+    fn cross_format_qgemm_conformance() {
+        run_conformance(0xC04F, 10);
+    }
+
+    /// The harness itself covers what it claims: every engine format has
+    /// a table row, the thread list starts at 1 and is strictly
+    /// increasing, and the edge-shape list hits each degenerate
+    /// dimension.
+    #[test]
+    fn conformance_table_covers_formats_threads_and_edges() {
+        let names: Vec<&str> = conformance_formats().iter().map(|f| f.name).collect();
+        assert_eq!(names, vec!["backward-int4xfp4", "forward-int4xint4", "radix4-tpr"]);
+        let threads = conformance_thread_counts();
+        assert_eq!(threads[0], 1);
+        assert!(threads.windows(2).all(|w| w[0] < w[1]), "{threads:?}");
+        let shapes = conformance_edge_shapes();
+        assert!(shapes.iter().any(|&(m, _, _)| m == 0), "missing m = 0");
+        assert!(shapes.iter().any(|&(_, _, n)| n == 0), "missing n = 0");
+        assert!(shapes.iter().any(|&(_, k, _)| k == 0), "missing k = 0");
+        assert!(shapes.iter().any(|&(_, k, _)| k % 2 == 1), "missing odd k");
+        assert!(shapes.iter().any(|&(m, _, n)| m == 1 && n == 1), "missing 1x1");
+    }
+}

@@ -6,6 +6,8 @@
 //! can be replayed. Statistical assertions (`assert_mean_within`) wrap the
 //! standard-error machinery used by the unbiasedness tests.
 
+pub mod conformance;
+
 use crate::rng::Xoshiro256;
 
 /// Run `prop` over `cases` random inputs drawn by `gen` from a seeded RNG.

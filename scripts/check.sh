@@ -28,6 +28,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Cross-format GEMM conformance suite (testutil::conformance): every LUT
+# instantiation × edge + randomized shapes × thread counts, bit-exact vs
+# each format's decode oracle. Part of `cargo test -q` already; run it
+# again by name so a conformance break is called out explicitly.
+echo "== cross-format GEMM conformance suite =="
+cargo test -q conformance
+
 if [[ "${1:-}" == "--fast" ]]; then
     echo "== clippy skipped (--fast) =="
     exit 0
