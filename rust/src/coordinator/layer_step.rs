@@ -57,7 +57,7 @@ use crate::quant::{
     LogQuantConfig, LogQuantizer, QuantScratch, QuantStats, Radix4Format, Radix4Quantizer,
     SawbQuantizer, TprPhase, UniformQuantizer, UniformRounding,
 };
-use crate::rng::Xoshiro256;
+use crate::rng::{NoiseSource, Xoshiro256};
 
 /// Which quantization scheme drives one [`QuantizedLayerStep`] — the
 /// paper's LUQ pipeline or the Ultra-low radix-4 TPR baseline it compares
@@ -104,8 +104,11 @@ impl LayerStepStats {
 
 /// One layer's complete quantized training step (forward + dx + dW) with
 /// persistent staging. One instance per long-lived layer makes repeated
-/// `step` calls allocation-free.
-pub struct QuantizedLayerStep {
+/// `step` calls allocation-free. Generic over the noise engine driving
+/// the stochastic gradient quantizations (default: xoshiro — the PR 3/4
+/// streams bit-for-bit; `crate::rng::EngineRng` is the runtime-dispatched
+/// choice the trainer's `NoiseEngine` option resolves to).
+pub struct QuantizedLayerStep<R = Xoshiro256> {
     /// Which gradient pipeline this step runs (see [`ForwardFormat`]).
     pub format: ForwardFormat,
     /// LUQ configuration for the neural-gradient quantizations
@@ -120,7 +123,7 @@ pub struct QuantizedLayerStep {
     pub weight_sawb: SawbQuantizer,
     bits: u32,
     shape: (usize, usize, usize),
-    quant_scratch: QuantScratch,
+    quant_scratch: QuantScratch<R>,
     gemm_scratch: QgemmScratch,
     // Forward operands (packed byte-aligned rows).
     a_packed: Vec<u8>,
@@ -150,14 +153,14 @@ fn ensure_u8(buf: &mut Vec<u8>, n: usize) {
     }
 }
 
-impl QuantizedLayerStep {
+impl<R: NoiseSource> QuantizedLayerStep<R> {
     /// `grad_cfg` drives both gradient quantizations (LUQ FP4 in the
     /// paper's configuration, hindsight-scaled via
     /// `LogQuantConfig::luq_hindsight`); `bits` is the forward INT width
     /// (4 in the paper; ≤ 4 required by the packed-nibble layout). The
     /// gradient pipeline defaults to [`ForwardFormat::Sawb`]; use
     /// [`Self::with_format`] for the radix-4 TPR baseline.
-    pub fn new(grad_cfg: LogQuantConfig, bits: u32) -> QuantizedLayerStep {
+    pub fn new(grad_cfg: LogQuantConfig, bits: u32) -> QuantizedLayerStep<R> {
         Self::with_format(grad_cfg, bits, ForwardFormat::Sawb)
     }
 
@@ -166,7 +169,7 @@ impl QuantizedLayerStep {
         grad_cfg: LogQuantConfig,
         bits: u32,
         format: ForwardFormat,
-    ) -> QuantizedLayerStep {
+    ) -> QuantizedLayerStep<R> {
         assert!((2..=4).contains(&bits), "forward packed emission needs 2..=4 bits");
         QuantizedLayerStep {
             format,
@@ -213,7 +216,7 @@ impl QuantizedLayerStep {
         batch: usize,
         d_in: usize,
         d_out: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         n_threads: usize,
     ) -> LayerStepStats {
         assert!(acts.len() >= batch * d_in, "activation tensor too short");
@@ -851,6 +854,93 @@ mod tests {
         assert!(step.dx_t().iter().all(|v| *v == 0.0));
         assert!(step.dw_t().iter().all(|v| *v == 0.0));
         assert!(step.y().iter().all(|v| v.is_finite()));
+    }
+
+    /// Acceptance gate (PR 5): with `NoiseEngine::Xoshiro` — the default
+    /// engine, dispatched through `EngineRng` — the layer step
+    /// reproduces the raw-`Xoshiro256` PR 4 pipeline bit-for-bit: same
+    /// outputs, same stats, and the same post-step stream position
+    /// (draw accounting unchanged).
+    #[test]
+    fn engine_xoshiro_layer_step_reproduces_raw_xoshiro_bitwise() {
+        use crate::rng::{EngineRng, NoiseEngine};
+        let mut data_rng = Xoshiro256::seed_from_u64(0x5D);
+        let (batch, d_in, d_out) = (6usize, 10, 9);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+            let mut raw_step = QuantizedLayerStep::with_format(cfg, BITS, format);
+            let mut raw_rng = Xoshiro256::seed_from_u64(0xE7);
+            let raw_st =
+                raw_step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut raw_rng, 2);
+            let mut eng_step: QuantizedLayerStep<EngineRng> =
+                QuantizedLayerStep::with_format(cfg, BITS, format);
+            let mut eng_rng = NoiseEngine::Xoshiro.seed_rng(0xE7);
+            let eng_st =
+                eng_step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut eng_rng, 2);
+            assert_eq!(raw_st.dx.alpha.to_bits(), eng_st.dx.alpha.to_bits());
+            assert_eq!(raw_st.dw.alpha.to_bits(), eng_st.dw.alpha.to_bits());
+            for (x, y) in raw_step.y().iter().zip(eng_step.y().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{format:?} y");
+            }
+            for (x, y) in raw_step.dx_t().iter().zip(eng_step.dx_t().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{format:?} dx");
+            }
+            for (x, y) in raw_step.dw_t().iter().zip(eng_step.dw_t().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{format:?} dw");
+            }
+            assert_eq!(
+                raw_rng.next_u64(),
+                crate::rng::NoiseSource::next_u64(&mut eng_rng),
+                "{format:?}: stream positions diverged"
+            );
+        }
+    }
+
+    /// The Philox engine drives the full layer step: deterministic from
+    /// the seed, thread-count invariant, and distinct from the xoshiro
+    /// stream.
+    #[test]
+    fn philox_layer_step_is_deterministic_and_thread_invariant() {
+        use crate::rng::Philox4x32;
+        let mut data_rng = Xoshiro256::seed_from_u64(0x5E);
+        let (batch, d_in, d_out) = (8usize, 12, 7);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let mut want: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        for threads in [1usize, 2, 8] {
+            let mut step: QuantizedLayerStep<Philox4x32> =
+                QuantizedLayerStep::new(cfg, BITS);
+            let mut rng = Philox4x32::seed_from_u64(0xF1);
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, threads);
+            match &want {
+                None => {
+                    want =
+                        Some((step.y().to_vec(), step.dx_t().to_vec(), step.dw_t().to_vec()))
+                }
+                Some((y, dx, dw)) => {
+                    for (g, w) in step.y().iter().zip(y.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "y threads={threads}");
+                    }
+                    for (g, w) in step.dx_t().iter().zip(dx.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "dx threads={threads}");
+                    }
+                    for (g, w) in step.dw_t().iter().zip(dw.iter()) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "dw threads={threads}");
+                    }
+                }
+            }
+        }
+        // Distinct engine, distinct stochastic stream: the dx gradients
+        // differ from an identically-seeded xoshiro run.
+        let mut xo_step = QuantizedLayerStep::new(cfg, BITS);
+        let mut xo_rng = Xoshiro256::seed_from_u64(0xF1);
+        xo_step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut xo_rng, 1);
+        let (_, dx, _) = want.unwrap();
+        assert!(
+            xo_step.dx_t().iter().zip(dx.iter()).any(|(a, b)| a != b),
+            "philox and xoshiro produced identical stochastic gradients"
+        );
     }
 
     /// `grad_max` is the defensive max of the two per-GEMM maxima.

@@ -18,7 +18,7 @@
 use crate::hw::mfbprop::Int4Code;
 use crate::hw::qgemm::{self, QgemmScratch};
 use crate::quant::{LogQuantConfig, LogQuantizer, QuantScratch, QuantStats};
-use crate::rng::Xoshiro256;
+use crate::rng::{NoiseSource, Xoshiro256};
 
 /// Convert the forward quantizer's signed INT4 levels (e.g.
 /// [`crate::quant::UniformQuantizer::encode`] with `bits = 4`, range
@@ -28,16 +28,18 @@ pub fn int4_codes_from_levels(codes: &[i8]) -> Vec<Int4Code> {
 }
 
 /// One layer's packed backward-GEMM pipeline with persistent staging.
-pub struct QgemmPath {
+/// Generic over the noise engine driving the stochastic gradient
+/// quantization (default: xoshiro — the historical streams bit-for-bit).
+pub struct QgemmPath<R = Xoshiro256> {
     pub quantizer: LogQuantizer,
-    scratch: QuantScratch,
+    scratch: QuantScratch<R>,
     gemm_scratch: QgemmScratch,
     packed: Vec<u8>,
     out: Vec<f32>,
 }
 
-impl QgemmPath {
-    pub fn new(cfg: LogQuantConfig) -> QgemmPath {
+impl<R: NoiseSource> QgemmPath<R> {
+    pub fn new(cfg: LogQuantConfig) -> QgemmPath<R> {
         QgemmPath {
             quantizer: LogQuantizer::new(cfg),
             scratch: QuantScratch::new(),
@@ -68,7 +70,7 @@ impl QgemmPath {
         m: usize,
         k: usize,
         n: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         n_threads: usize,
     ) -> (&[f32], QuantStats) {
         assert!(a_int4.len() >= m * k, "int4 operand too short");

@@ -6,7 +6,7 @@ use crate::coordinator::qgemm_path::QgemmPath;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{CorpusConfig, ImageDataset, ImagesConfig, TokenCorpus};
 use crate::quant::{LogFormat, LogQuantConfig};
-use crate::rng::{NoiseBank, Xoshiro256};
+use crate::rng::{EngineRng, NoiseBank, NoiseEngine, NoiseSource, Xoshiro256};
 use crate::runtime::{Engine, Executable, HostTensor};
 use crate::stats::HindsightMax;
 use anyhow::{bail, Context, Result};
@@ -148,6 +148,17 @@ pub struct TrainerOptions {
     pub noise_reuse: usize,
     /// Record the hindsight trace (costs memory on long runs).
     pub record_hindsight: bool,
+    /// Which RNG engine backs the trainer's own stochastic draws (the
+    /// per-layer noise banks feeding the artifact's noise inputs) and
+    /// the engine-dispatched host-side layer-step path
+    /// (`Trainer::quantized_layer_step_engine` + `layer_step_rng`).
+    /// Dispatched **once** at construction, mirroring the
+    /// `ForwardFormat` pattern. The default xoshiro engine reproduces
+    /// the historical streams bit-for-bit; `NoiseEngine::Philox`
+    /// switches to the counter-based vectorized engine. Note that the
+    /// Xoshiro-typed `Trainer::quantized_layer_step` ignores this
+    /// option by construction — its RNG is caller-supplied.
+    pub noise_engine: NoiseEngine,
 }
 
 impl Default for TrainerOptions {
@@ -158,6 +169,7 @@ impl Default for TrainerOptions {
             hindsight_eta: 0.1,
             noise_reuse: 1,
             record_hindsight: false,
+            noise_engine: NoiseEngine::Xoshiro,
         }
     }
 }
@@ -229,7 +241,14 @@ impl Trainer {
         let noise = meta
             .qgrads
             .iter()
-            .map(|g| NoiseBank::new(seeder.next_u64(), smp * g.numel(), opts.noise_reuse))
+            .map(|g| {
+                NoiseBank::with_engine(
+                    opts.noise_engine,
+                    seeder.next_u64(),
+                    smp * g.numel(),
+                    opts.noise_reuse,
+                )
+            })
             .collect();
         let noise_inputs = meta
             .qgrads
@@ -408,7 +427,44 @@ impl Trainer {
     /// al. do). Feed the returned step's per-GEMM stats back through
     /// [`Self::observe_layer_step`] to keep the Eq. 24 tracker warm.
     pub fn quantized_layer_step(&self, layer: usize, format: ForwardFormat) -> QuantizedLayerStep {
+        self.quantized_layer_step_for(layer, format)
+    }
+
+    /// [`Self::quantized_layer_step`] on the trainer's configured
+    /// [`NoiseEngine`]: the engine choice made at construction
+    /// (`TrainerOptions::noise_engine`) is resolved here **once** into
+    /// the step's RNG type — drive the returned step with a generator
+    /// from [`Self::layer_step_rng`].
+    pub fn quantized_layer_step_engine(
+        &self,
+        layer: usize,
+        format: ForwardFormat,
+    ) -> QuantizedLayerStep<EngineRng> {
+        self.quantized_layer_step_for(layer, format)
+    }
+
+    /// The single construction point both layer-step variants share —
+    /// any noise source, same hindsight-aware config and bit width.
+    fn quantized_layer_step_for<R: NoiseSource>(
+        &self,
+        layer: usize,
+        format: ForwardFormat,
+    ) -> QuantizedLayerStep<R> {
         QuantizedLayerStep::with_format(self.grad_cfg_for_layer(layer), 4, format)
+    }
+
+    /// A generator of the trainer's configured noise engine for driving
+    /// host-side layer steps, derived from the trainer seed and the
+    /// layer index (streams are per-layer disjoint by key derivation).
+    pub fn layer_step_rng(&self, layer: usize) -> EngineRng {
+        self.opts
+            .noise_engine
+            .seed_rng(self.opts.seed ^ 0x1A7E_57E9 ^ ((layer as u64) << 32))
+    }
+
+    /// The noise engine this trainer was constructed with.
+    pub fn noise_engine(&self) -> NoiseEngine {
+        self.opts.noise_engine
     }
 
     /// Feed one host layer step's measured gradient max into layer

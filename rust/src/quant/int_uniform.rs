@@ -10,7 +10,7 @@
 //! clip scale chosen by SAWB ([`super::sawb`]) or any caller-supplied clip.
 
 use super::kernel::{QuantScratch, CHUNK};
-use crate::rng::Xoshiro256;
+use crate::rng::NoiseSource;
 
 /// The MF-BPROP wire nibble `[sign | magnitude]` of a signed integer
 /// code — exactly `hw::mfbprop::Int4Code::from_int(code).nibble()`,
@@ -123,7 +123,7 @@ impl UniformQuantizer {
     }
 
     /// Allocating wrapper; draws noise internally for stochastic mode.
-    pub fn quantize(&self, x: &[f32], rng: &mut Xoshiro256) -> Vec<f32> {
+    pub fn quantize<R: NoiseSource>(&self, x: &[f32], rng: &mut R) -> Vec<f32> {
         let mut noise = vec![0.0f32; x.len()];
         if self.rounding == UniformRounding::Stochastic {
             rng.fill_uniform(&mut noise);
@@ -140,13 +140,21 @@ impl UniformQuantizer {
     /// stream stays aligned across the two paths. (The seed drew one
     /// uniform per element unconditionally, silently diverging the
     /// stream from `quantize` in RDN mode.)
-    pub fn encode(&self, x: &[f32], rng: &mut Xoshiro256) -> Vec<i8> {
+    pub fn encode<R: NoiseSource>(&self, x: &[f32], rng: &mut R) -> Vec<i8> {
         match self.rounding {
             UniformRounding::Rdn => x.iter().map(|&v| self.code_of(v, 0.0) as i8).collect(),
-            UniformRounding::Stochastic => x
-                .iter()
-                .map(|&v| self.code_of(v, rng.uniform_f32()) as i8)
-                .collect(),
+            UniformRounding::Stochastic => {
+                // Noise staged with one `fill_uniform` so the draw order
+                // (and the generator's end position) matches `quantize`
+                // on every engine — block-based sources would diverge
+                // under per-element scalar draws.
+                let mut noise = vec![0.0f32; x.len()];
+                rng.fill_uniform(&mut noise);
+                x.iter()
+                    .zip(noise.iter())
+                    .map(|(&v, &u)| self.code_of(v, u) as i8)
+                    .collect()
+            }
         }
     }
 
@@ -247,15 +255,15 @@ impl UniformQuantizer {
     /// mode — data-independent either way, and aligned with
     /// [`Self::encode`]/[`Self::quantize`] semantics.
     #[allow(clippy::too_many_arguments)]
-    pub fn encode_packed_matrix_scratch(
+    pub fn encode_packed_matrix_scratch<R: NoiseSource>(
         &self,
         x: &[f32],
         rows: usize,
         cols: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         packed: &mut [u8],
         row_stride_bytes: usize,
-        scratch: &mut QuantScratch,
+        scratch: &mut QuantScratch<R>,
     ) {
         assert!(self.bits <= 4, "packed-nibble emission needs a <= 4-bit format");
         let n = rows * cols;
@@ -298,12 +306,12 @@ impl UniformQuantizer {
     /// Allocating wrapper around
     /// [`encode_packed_matrix_scratch`](Self::encode_packed_matrix_scratch)
     /// with the dense stride (`cols.div_ceil(2)` bytes per row).
-    pub fn encode_packed_matrix(
+    pub fn encode_packed_matrix<R: NoiseSource>(
         &self,
         x: &[f32],
         rows: usize,
         cols: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
     ) -> Vec<u8> {
         let rb = cols.div_ceil(2);
         let mut packed = vec![0u8; rows * rb];
@@ -317,23 +325,25 @@ impl UniformQuantizer {
     /// (mirrors `LogQuantizer::quantize_chunked`): the tensor is split
     /// into fixed [`CHUNK`]-element blocks and chunk `i` always draws
     /// from stream `i` of the caller's generator
-    /// ([`Xoshiro256::fork`]), no matter which thread runs it, so the
-    /// output is **bit-identical for every `n_threads`** — and, in RDN
-    /// mode (where per-element results are noise-free), bit-identical to
-    /// the single-shot [`Self::quantize_into`] as well.
+    /// ([`NoiseSource::chunk_stream`] — `fork` on the default xoshiro
+    /// engine, a counter offset on Philox), no matter which thread runs
+    /// it, so the output is **bit-identical for every `n_threads`** —
+    /// and bit-identical to the single-shot [`Self::quantize_into`] in
+    /// RDN mode (noise-free) on every engine, in *both* modes on a
+    /// counter-based engine.
     ///
     /// **Stream contract:** the caller's generator is advanced by exactly
-    /// one [`Xoshiro256::jump`] per call in *both* rounding modes, so
+    /// one [`NoiseSource::jump`] per call in *both* rounding modes, so
     /// stream alignment never depends on the mode or the data. Per-thread
     /// noise staging lives in `scratch`; steady-state the call performs
     /// no allocation.
-    pub fn quantize_chunked(
+    pub fn quantize_chunked<R: NoiseSource>(
         &self,
         x: &[f32],
         out: &mut [f32],
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         n_threads: usize,
-        scratch: &mut QuantScratch,
+        scratch: &mut QuantScratch<R>,
     ) {
         assert_eq!(x.len(), out.len());
         let base = rng.clone();
@@ -380,7 +390,7 @@ impl UniformQuantizer {
                     for (i, (xc, oc)) in
                         x.chunks(CHUNK).zip(out.chunks_mut(CHUNK)).enumerate()
                     {
-                        let mut rng_i = base.fork(i as u64);
+                        let mut rng_i = base.chunk_stream(i as u64, CHUNK);
                         let nb = &mut noise[..xc.len()];
                         rng_i.fill_uniform(nb);
                         self.quantize_into(xc, nb, oc);
@@ -398,7 +408,7 @@ impl UniformQuantizer {
                         for (noise, items) in mt_noise.chunks_mut(CHUNK).zip(work) {
                             s.spawn(move || {
                                 for (i, xc, oc) in items {
-                                    let mut rng_i = base.fork(i as u64);
+                                    let mut rng_i = base.chunk_stream(i as u64, CHUNK);
                                     let nb = &mut noise[..xc.len()];
                                     rng_i.fill_uniform(nb);
                                     self.quantize_into(xc, nb, oc);
@@ -415,33 +425,31 @@ impl UniformQuantizer {
     /// variance-reduction estimator on the forward grid, mirroring
     /// `LogQuantizer::quantize_smp_into`: accumulate `n_samples`
     /// independent quantizations inline, chunk by chunk, without
-    /// materializing per-sample tensors. Sample `s` draws from the
-    /// `(s+1)`-th [`Xoshiro256::jump`] stream of `rng` (provably disjoint
-    /// streams); the caller's generator is left one jump past the last
-    /// stream — `n_samples + 1` jumps per call in **both** rounding
-    /// modes, so alignment never depends on mode or data. All staging
-    /// lives in `scratch`; steady-state the call allocates nothing.
+    /// materializing per-sample tensors. Per-sample streams come from
+    /// [`NoiseSource::smp_streams`]: on the default xoshiro engine,
+    /// sample `s` draws from the `(s+1)`-th jump stream of `rng`
+    /// (provably disjoint) and the caller ends `n_samples + 1` jumps
+    /// ahead — the historical contract bit-for-bit; on Philox, sample 0
+    /// is the caller's own position. The advancement is identical in
+    /// **both** rounding modes, so alignment never depends on mode or
+    /// data. All staging lives in `scratch`; steady-state the call
+    /// allocates nothing.
     ///
     /// SMP is meaningful for stochastic rounding (variance drops by
     /// `1/N`); in RDN mode every sample is identical and the call reduces
     /// to a well-defined (if redundant) mean of `N` equal tensors.
-    pub fn quantize_smp_into(
+    pub fn quantize_smp_into<R: NoiseSource>(
         &self,
         x: &[f32],
         n_samples: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         out: &mut [f32],
-        scratch: &mut QuantScratch,
+        scratch: &mut QuantScratch<R>,
     ) {
         assert!(n_samples >= 1);
         assert_eq!(x.len(), out.len());
         let QuantScratch { noise, sample, streams, .. } = scratch;
-        streams.clear();
-        for _ in 0..n_samples {
-            rng.jump();
-            streams.push(rng.clone());
-        }
-        rng.jump(); // leave the caller past every sample stream
+        rng.smp_streams(n_samples, streams);
         if noise.len() < CHUNK {
             noise.resize(CHUNK, 0.0);
         }
@@ -472,7 +480,12 @@ impl UniformQuantizer {
     }
 
     /// Allocating wrapper around [`quantize_smp_into`](Self::quantize_smp_into).
-    pub fn quantize_smp(&self, x: &[f32], n_samples: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    pub fn quantize_smp<R: NoiseSource>(
+        &self,
+        x: &[f32],
+        n_samples: usize,
+        rng: &mut R,
+    ) -> Vec<f32> {
         let mut out = vec![0.0f32; x.len()];
         let mut scratch = QuantScratch::new();
         self.quantize_smp_into(x, n_samples, rng, &mut out, &mut scratch);
@@ -481,7 +494,7 @@ impl UniformQuantizer {
 
     /// Mean-squared quantization error over a slice (deterministic only
     /// for RDN; for SR this is a single stochastic realization).
-    pub fn mse(&self, x: &[f32], rng: &mut Xoshiro256) -> f64 {
+    pub fn mse<R: NoiseSource>(&self, x: &[f32], rng: &mut R) -> f64 {
         let y = self.quantize(x, rng);
         x.iter()
             .zip(y.iter())
@@ -793,6 +806,51 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Counter-based contract (PR 5), uniform instance: with Philox the
+    /// *stochastic* chunked path equals the single-shot path bit-for-bit
+    /// at every thread count (for xoshiro that holds only in the
+    /// noise-free RDN mode), and 1-sample SMP reproduces it too (up to
+    /// the mean's `-0.0 → +0.0` normalization).
+    #[test]
+    fn philox_uniform_chunked_equals_single_shot() {
+        use crate::rng::Philox4x32;
+        let mut rng = Xoshiro256::seed_from_u64(65);
+        let n = 2 * CHUNK + 531;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_ms_f32(0.0, 3.0)).collect();
+        let q = UniformQuantizer::new(4, 4.5, UniformRounding::Stochastic);
+        let base = Philox4x32::seed_from_u64(0xFEED);
+        let mut noise = vec![0.0f32; n];
+        base.clone().fill_uniform(&mut noise);
+        let mut want = vec![0.0f32; n];
+        q.quantize_into(&x, &noise, &mut want);
+        let ncpu = std::thread::available_parallelism().map_or(4, |p| p.get());
+        let mut scratch: QuantScratch<Philox4x32> = QuantScratch::new();
+        for threads in [1usize, 2, ncpu] {
+            let mut out = vec![0.0f32; n];
+            q.quantize_chunked(&x, &mut out, &mut base.clone(), threads, &mut scratch);
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), want[i].to_bits(), "t={threads} i={i}");
+            }
+        }
+        let got = q.quantize_smp(&x, 1, &mut base.clone());
+        for i in 0..n {
+            let want_bits = if want[i] == 0.0 { 0.0f32.to_bits() } else { want[i].to_bits() };
+            assert_eq!(got[i].to_bits(), want_bits, "smp i={i}");
+        }
+        // encode stays stream-aligned with quantize on the block engine
+        // too: same noise words per element, same end position.
+        let mut enc_rng = base.clone();
+        let codes = q.encode(&x, &mut enc_rng);
+        let decoded = q.decode(&codes);
+        for i in 0..n {
+            assert_eq!(decoded[i].to_bits(), want[i].to_bits(), "encode i={i}");
+        }
+        let mut fill_rng = base.clone();
+        let mut sink = vec![0.0f32; n];
+        fill_rng.fill_uniform(&mut sink);
+        assert_eq!(enc_rng.counter(), fill_rng.counter(), "encode end position");
     }
 
     /// The fused chunk-wise uniform SMP equals the naive

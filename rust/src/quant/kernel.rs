@@ -38,12 +38,17 @@
 //! buffer pool for SMP / chunked execution) and the chunked
 //! multi-threaded drivers [`par_max_abs`] / [`par_quantize`], whose
 //! results are **bit-identical for every thread count**: work is split
-//! into fixed [`CHUNK`]-element blocks and chunk `i` always consumes RNG
-//! stream `i` ([`Xoshiro256::fork`]), no matter which thread runs it.
+//! into fixed [`CHUNK`]-element blocks and chunk `i` always consumes
+//! noise stream `i` of the caller's generator
+//! ([`NoiseSource::chunk_stream`] — `Xoshiro256::fork` on the default
+//! engine, a pure counter offset on `Philox4x32`, where the chunked
+//! result additionally equals the single-shot fill), no matter which
+//! thread runs it. The drivers are generic over [`NoiseSource`] with
+//! xoshiro as the default, so every historical bitstream is unchanged.
 
 use super::luq::{LogRounding, Underflow};
 use super::rounding::pow2i;
-use crate::rng::Xoshiro256;
+use crate::rng::{NoiseSource, Xoshiro256};
 
 /// Fixed block size for chunked execution. Small enough that a chunk of
 /// input + noise + output stays in L1/L2, large enough that per-chunk
@@ -335,9 +340,9 @@ pub fn codes_dispatch(
 
 /// Reusable buffer pool for the quantization hot paths. One instance per
 /// long-lived consumer (trainer, bench loop, SMP estimator) makes every
-/// `*_into` call allocation-free after warmup.
-#[derive(Default)]
-pub struct QuantScratch {
+/// `*_into` call allocation-free after warmup. Generic over the noise
+/// source backing the SMP sample streams (default: the xoshiro engine).
+pub struct QuantScratch<R = Xoshiro256> {
     /// Uniform-noise staging buffer: chunk-sized for SMP, row-sized for
     /// the matrix code emitters (`LogQuantizer::
     /// quantize_to_codes_matrix_scratch` and the stochastic path of
@@ -352,19 +357,36 @@ pub struct QuantScratch {
     pub(crate) chunk_stats: Vec<ChunkStats>,
     /// Per-chunk |x| maxima for [`par_max_abs`].
     pub(crate) chunk_maxes: Vec<f32>,
-    /// Per-sample RNG streams (SMP), split via `Xoshiro256::jump`.
-    pub(crate) streams: Vec<Xoshiro256>,
+    /// Per-sample RNG streams (SMP), derived via
+    /// [`NoiseSource::smp_streams`].
+    pub(crate) streams: Vec<R>,
 }
 
-impl QuantScratch {
-    pub fn new() -> QuantScratch {
+// Manual impl: the derive would demand `R: Default`, which no generator
+// implements (or needs — an empty stream vec is engine-agnostic).
+#[allow(clippy::derivable_impls)]
+impl<R> Default for QuantScratch<R> {
+    fn default() -> QuantScratch<R> {
+        QuantScratch {
+            noise: Vec::new(),
+            sample: Vec::new(),
+            mt_noise: Vec::new(),
+            chunk_stats: Vec::new(),
+            chunk_maxes: Vec::new(),
+            streams: Vec::new(),
+        }
+    }
+}
+
+impl<R> QuantScratch<R> {
+    pub fn new() -> QuantScratch<R> {
         QuantScratch::default()
     }
 }
 
 /// Parallel `max|x|` over fixed chunks. Chunk maxima are reduced **in
 /// chunk order**, so the result is bit-identical for every thread count.
-pub fn par_max_abs(x: &[f32], n_threads: usize, scratch: &mut QuantScratch) -> f32 {
+pub fn par_max_abs<R>(x: &[f32], n_threads: usize, scratch: &mut QuantScratch<R>) -> f32 {
     if x.is_empty() {
         return 0.0;
     }
@@ -400,20 +422,23 @@ pub fn par_max_abs(x: &[f32], n_threads: usize, scratch: &mut QuantScratch) -> f
 /// Multi-threaded chunked quantization with internally generated noise.
 ///
 /// The tensor is split into fixed [`CHUNK`]-element blocks; chunk `i`
-/// draws its uniforms from `base.fork(i)` regardless of which thread
-/// processes it, so output and statistics are **bit-identical for every
-/// `n_threads`** (including 1). Per-thread noise staging lives in
-/// `scratch` — steady-state, the call performs no allocation.
+/// draws its uniforms from `base.chunk_stream(i, CHUNK)` regardless of
+/// which thread processes it, so output and statistics are
+/// **bit-identical for every `n_threads`** (including 1) — and, on a
+/// counter-based source like `Philox4x32`, additionally bit-identical
+/// to the single-shot fill from the same state. Per-thread noise
+/// staging lives in `scratch` — steady-state, the call performs no
+/// allocation.
 #[allow(clippy::too_many_arguments)]
-pub fn par_quantize(
+pub fn par_quantize<R: NoiseSource>(
     uf: Underflow,
     rnd: LogRounding,
     p: &KernelParams,
     x: &[f32],
     out: &mut [f32],
-    base: &Xoshiro256,
+    base: &R,
     n_threads: usize,
-    scratch: &mut QuantScratch,
+    scratch: &mut QuantScratch<R>,
 ) -> ChunkStats {
     assert_eq!(x.len(), out.len());
     if x.is_empty() {
@@ -436,7 +461,7 @@ pub fn par_quantize(
             .zip(chunk_stats.iter_mut())
             .enumerate()
         {
-            let mut rng = base.fork(i as u64);
+            let mut rng = base.chunk_stream(i as u64, CHUNK);
             let nb = &mut noise[..xc.len()];
             rng.fill_uniform(nb);
             *st = quantize_dispatch(uf, rnd, p, xc, nb, oc);
@@ -456,7 +481,7 @@ pub fn par_quantize(
             for (noise, items) in mt_noise.chunks_mut(CHUNK).zip(work) {
                 s.spawn(move || {
                     for (i, xc, oc, st) in items {
-                        let mut rng = base.fork(i as u64);
+                        let mut rng = base.chunk_stream(i as u64, CHUNK);
                         let nb = &mut noise[..xc.len()];
                         rng.fill_uniform(nb);
                         *st = quantize_dispatch(uf, rnd, p, xc, nb, oc);
@@ -686,7 +711,8 @@ mod tests {
     #[test]
     fn par_max_abs_matches_sequential_fold() {
         let mut rng = Xoshiro256::seed_from_u64(41);
-        let mut scratch = QuantScratch::new();
+        // Annotated: nothing else pins the scratch's (unused) stream type.
+        let mut scratch: QuantScratch = QuantScratch::new();
         for n in [0usize, 1, CHUNK - 1, CHUNK, 2 * CHUNK + 17] {
             let x = lognormal(&mut rng, n, 3.0);
             let want = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
@@ -714,6 +740,45 @@ mod tests {
                 .iter()
                 .any(|g| (v.abs() - g).abs() <= g.max(1e-30) * 1e-6);
             assert!(on_grid, "out[{i}]={v} off-grid (alpha={})", st.alpha);
+        }
+    }
+
+    /// The counter-based engine makes the PR 1 chunking contract
+    /// trivial: chunked quantization from a Philox base is not only
+    /// thread-count invariant but **bit-identical to the single-shot
+    /// path** (one flat noise fill from the same generator state), at
+    /// every thread count — chunk `i` is a pure counter offset into the
+    /// same stream.
+    #[test]
+    fn par_quantize_philox_equals_single_shot_fill() {
+        use crate::rng::Philox4x32;
+        let mut rng = Xoshiro256::seed_from_u64(61);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let n = 2 * CHUNK + 777; // ragged final chunk
+        let x = lognormal(&mut rng, n, 2.5);
+        let base = Philox4x32::seed_from_u64(0xC0FFEE);
+        // Single-shot oracle: one flat fill, then the plain kernel path.
+        let mut noise = vec![0.0f32; n];
+        base.clone().fill_uniform(&mut noise);
+        let mut want = vec![0.0f32; n];
+        let st_want = q.quantize_into(&x, &noise, &mut want);
+        let ncpu = std::thread::available_parallelism().map_or(4, |p| p.get());
+        let mut scratch: QuantScratch<Philox4x32> = QuantScratch::new();
+        for threads in [1usize, 2, ncpu] {
+            let mut out = vec![0.0f32; n];
+            let mut b = base.clone();
+            let st = q.quantize_chunked(&x, &mut out, &mut b, threads, &mut scratch);
+            for i in 0..n {
+                assert_eq!(
+                    out[i].to_bits(),
+                    want[i].to_bits(),
+                    "threads={threads} idx={i}"
+                );
+            }
+            assert_eq!(st.frac_underflow, st_want.frac_underflow);
+            assert_eq!(st.frac_clipped, st_want.frac_clipped);
+            assert_eq!(st.alpha, st_want.alpha);
+            assert_eq!(st.max_abs, st_want.max_abs);
         }
     }
 

@@ -30,7 +30,7 @@
 use super::kernel::{self, KernelParams, QuantScratch, CHUNK};
 use super::logfmt::LogFormat;
 use super::rounding::{floor_log2, pow2_ceil_f32, pow2i, rdnp_exponent};
-use crate::rng::Xoshiro256;
+use crate::rng::NoiseSource;
 
 /// How values below `α` are handled.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -278,7 +278,11 @@ impl LogQuantizer {
     }
 
     /// Allocating wrapper around [`quantize_to_codes_into`](Self::quantize_to_codes_into).
-    pub fn quantize_to_codes(&self, x: &[f32], rng: &mut Xoshiro256) -> (Vec<u8>, QuantStats) {
+    pub fn quantize_to_codes<R: NoiseSource>(
+        &self,
+        x: &[f32],
+        rng: &mut R,
+    ) -> (Vec<u8>, QuantStats) {
         let mut noise = vec![0.0f32; x.len()];
         rng.fill_uniform(&mut noise);
         let mut packed = vec![0u8; x.len().div_ceil(2)];
@@ -351,12 +355,12 @@ impl LogQuantizer {
     /// Allocating wrapper around
     /// [`quantize_to_codes_matrix_into`](Self::quantize_to_codes_matrix_into)
     /// with the dense stride (`cols.div_ceil(2)` bytes per row).
-    pub fn quantize_to_codes_matrix(
+    pub fn quantize_to_codes_matrix<R: NoiseSource>(
         &self,
         x: &[f32],
         rows: usize,
         cols: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
     ) -> (Vec<u8>, QuantStats) {
         let mut noise = vec![0.0f32; rows * cols];
         rng.fill_uniform(&mut noise);
@@ -368,23 +372,25 @@ impl LogQuantizer {
     }
 
     /// Zero-steady-state-allocation matrix code emission: noise is staged
-    /// row-by-row in `scratch` (one `fill_uniform` per row). The uniform
+    /// row-by-row in `scratch` (one `fill_uniform` per row). On a
+    /// word-serial source (the default xoshiro engine) the uniform
     /// consumption order equals one flat fill over `rows × cols`, so the
     /// packed output and stats are bit-identical to
     /// [`quantize_to_codes_matrix`](Self::quantize_to_codes_matrix) from
-    /// the same generator state — this call always consumes exactly
-    /// `rows · cols` uniforms, degenerate tensors included, so stream
+    /// the same generator state (block-based sources consume whole
+    /// blocks per row instead); either way this call always stages
+    /// exactly `rows` row fills, degenerate tensors included, so stream
     /// alignment never depends on the data.
     #[allow(clippy::too_many_arguments)]
-    pub fn quantize_to_codes_matrix_scratch(
+    pub fn quantize_to_codes_matrix_scratch<R: NoiseSource>(
         &self,
         x: &[f32],
         rows: usize,
         cols: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         packed: &mut [u8],
         row_stride_bytes: usize,
-        scratch: &mut QuantScratch,
+        scratch: &mut QuantScratch<R>,
     ) -> QuantStats {
         assert!(
             self.cfg.format.bits() <= 4,
@@ -432,7 +438,7 @@ impl LogQuantizer {
     }
 
     /// Convenience allocating wrapper around [`quantize_into`](Self::quantize_into).
-    pub fn quantize(&self, x: &[f32], rng: &mut Xoshiro256) -> (Vec<f32>, QuantStats) {
+    pub fn quantize<R: NoiseSource>(&self, x: &[f32], rng: &mut R) -> (Vec<f32>, QuantStats) {
         let mut noise = vec![0.0f32; x.len()];
         rng.fill_uniform(&mut noise);
         let mut out = vec![0.0f32; x.len()];
@@ -448,21 +454,25 @@ impl LogQuantizer {
     /// algebraically identical because the GEMM is linear in the neural
     /// gradient — Eq. 27).
     ///
-    /// Sample `s` draws from the `(s+1)`-th [`Xoshiro256::jump`] stream
-    /// of `rng` (streams provably 2^128 apart); the caller's generator is
-    /// left one jump past the last stream. All staging lives in
-    /// `scratch` — steady-state the call allocates nothing.
+    /// Per-sample streams come from [`NoiseSource::smp_streams`]: on the
+    /// default xoshiro engine, sample `s` draws from the `(s+1)`-th
+    /// `jump` stream of `rng` (streams provably 2^128 apart) and the
+    /// caller's generator is left one jump past the last stream — the
+    /// historical contract, bit-for-bit. On the counter-based Philox
+    /// engine, sample 0 **is** the caller's current stream position, so
+    /// 1-sample SMP coincides with the single-shot path. All staging
+    /// lives in `scratch` — steady-state the call allocates nothing.
     ///
     /// Returned stats aggregate across samples: `frac_underflow` /
     /// `frac_clipped` are means over the `n_samples` passes (the seed
     /// implementation silently kept only the last sample's stats).
-    pub fn quantize_smp_into(
+    pub fn quantize_smp_into<R: NoiseSource>(
         &self,
         x: &[f32],
         n_samples: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         out: &mut [f32],
-        scratch: &mut QuantScratch,
+        scratch: &mut QuantScratch<R>,
     ) -> QuantStats {
         assert!(n_samples >= 1);
         assert_eq!(x.len(), out.len());
@@ -471,12 +481,10 @@ impl LogQuantizer {
             Some(a) => a,
             None => {
                 // Advance the generator exactly as the quantizing path
-                // would (n_samples streams + 1), so stream alignment
+                // would (past n_samples streams), so stream alignment
                 // across calls does not depend on whether a degenerate
                 // tensor appeared.
-                for _ in 0..=n_samples {
-                    rng.jump();
-                }
+                rng.smp_advance(n_samples);
                 out.fill(0.0);
                 return QuantStats { max_abs, ..QuantStats::default() };
             }
@@ -484,12 +492,7 @@ impl LogQuantizer {
         let p = KernelParams::new(self.cfg.format, alpha);
 
         let QuantScratch { noise, sample, streams, .. } = scratch;
-        streams.clear();
-        for _ in 0..n_samples {
-            rng.jump();
-            streams.push(rng.clone());
-        }
-        rng.jump(); // leave the caller past every sample stream
+        rng.smp_streams(n_samples, streams);
 
         if noise.len() < CHUNK {
             noise.resize(CHUNK, 0.0);
@@ -526,11 +529,11 @@ impl LogQuantizer {
     }
 
     /// Allocating wrapper around [`quantize_smp_into`](Self::quantize_smp_into).
-    pub fn quantize_smp(
+    pub fn quantize_smp<R: NoiseSource>(
         &self,
         x: &[f32],
         n_samples: usize,
-        rng: &mut Xoshiro256,
+        rng: &mut R,
     ) -> (Vec<f32>, QuantStats) {
         let mut out = vec![0.0f32; x.len()];
         let mut scratch = QuantScratch::new();
@@ -541,16 +544,18 @@ impl LogQuantizer {
     /// Multi-threaded chunked quantization with internally generated
     /// noise: the tensor is split into fixed [`CHUNK`]-element blocks and
     /// chunk `i` always draws from stream `i` of the caller's generator
-    /// ([`Xoshiro256::fork`]), so the output is **bit-identical for every
-    /// `n_threads`**. The caller's generator is advanced by one
-    /// [`Xoshiro256::jump`] per call.
-    pub fn quantize_chunked(
+    /// ([`NoiseSource::chunk_stream`] — `fork` on the default xoshiro
+    /// engine, a counter offset on Philox, where the result additionally
+    /// equals the single-shot path bit-for-bit), so the output is
+    /// **bit-identical for every `n_threads`**. The caller's generator
+    /// is advanced by one [`NoiseSource::jump`] per call.
+    pub fn quantize_chunked<R: NoiseSource>(
         &self,
         x: &[f32],
         out: &mut [f32],
-        rng: &mut Xoshiro256,
+        rng: &mut R,
         n_threads: usize,
-        scratch: &mut QuantScratch,
+        scratch: &mut QuantScratch<R>,
     ) -> QuantStats {
         assert_eq!(x.len(), out.len());
         let base = rng.clone();
@@ -666,6 +671,7 @@ impl LogQuantizer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Xoshiro256;
     use crate::testutil::{assert_mean_within, prop_check};
 
     fn lognormal_tensor(rng: &mut Xoshiro256, n: usize, sigma: f32) -> Vec<f32> {
@@ -841,6 +847,46 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Counter-based contract (PR 5): on the Philox engine, single-shot,
+    /// chunked (any thread count), and 1-sample SMP quantization agree —
+    /// chunk `i` is a pure counter offset into the single-shot stream
+    /// and SMP sample stream 0 is the caller's own position. Values are
+    /// bit-identical, except that SMP's mean normalizes `-0.0` to `+0.0`
+    /// (inherent to `0.0 + (-0.0)`).
+    #[test]
+    fn philox_smp_chunked_single_shot_agree() {
+        use crate::rng::Philox4x32;
+        let mut data_rng = Xoshiro256::seed_from_u64(0x77AA);
+        let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+        let n = CHUNK + 999;
+        let x = lognormal_tensor(&mut data_rng, n, 2.0);
+        let base = Philox4x32::seed_from_u64(0x1CE);
+        let (want, st_want) = q.quantize(&x, &mut base.clone());
+        let ncpu = std::thread::available_parallelism().map_or(4, |p| p.get());
+        let mut scratch: QuantScratch<Philox4x32> = QuantScratch::new();
+        for threads in [1usize, 2, ncpu] {
+            let mut out = vec![0.0f32; n];
+            let st =
+                q.quantize_chunked(&x, &mut out, &mut base.clone(), threads, &mut scratch);
+            for i in 0..n {
+                assert_eq!(
+                    out[i].to_bits(),
+                    want[i].to_bits(),
+                    "chunked t={threads} i={i}"
+                );
+            }
+            assert_eq!(st.alpha, st_want.alpha);
+            assert_eq!(st.frac_underflow, st_want.frac_underflow);
+        }
+        let (smp, st_smp) = q.quantize_smp(&x, 1, &mut base.clone());
+        for i in 0..n {
+            let want_bits = if want[i] == 0.0 { 0.0f32.to_bits() } else { want[i].to_bits() };
+            assert_eq!(smp[i].to_bits(), want_bits, "smp i={i}");
+        }
+        assert_eq!(st_smp.alpha, st_want.alpha);
+        assert_eq!(st_smp.frac_underflow, st_want.frac_underflow);
     }
 
     /// Satellite: SMP stats aggregate across samples instead of keeping

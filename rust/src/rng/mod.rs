@@ -1,19 +1,39 @@
 //! Deterministic, fast pseudo-random number generation.
 //!
-//! The training loop consumes large volumes of uniform noise for stochastic
-//! rounding (one or two uniforms per gradient element), so the generator has
-//! to be cheap, seedable, and stream-splittable. We implement
-//! **xoshiro256++** (Blackman & Vigna, 2019) seeded through **SplitMix64**,
-//! the standard recommendation for initializing xoshiro state.
+//! The training loop consumes large volumes of uniform noise for
+//! stochastic rounding (one or two uniforms per gradient element), so the
+//! generator has to be cheap, seedable, and stream-splittable. The module
+//! is a substrate (the offline crate registry has no `rand`) layered as:
 //!
-//! This module is a substrate (the offline crate registry has no `rand`):
-//! it provides uniforms, normals (Box–Muller), lognormals (the paper models
-//! neural gradients as lognormal — Chmiel et al. 2021), and the
-//! *noise-reuse* buffer used by the Fig. 4 amortization experiment.
+//! * [`xoshiro::Xoshiro256`] — xoshiro256++ seeded through SplitMix64:
+//!   the **default engine**, word-serial, with `jump`/`split` (provably
+//!   disjoint streams) and `fork` (O(1) keyed chunk streams). Every
+//!   bit-exactness and draw-accounting contract is pinned against it.
+//! * [`philox::Philox4x32`] — Philox4x32-10, a **counter-based** keyed
+//!   block cipher: no sequential state chain, O(1) stream addressing,
+//!   and an interleaved multi-lane `fill_uniform` that vectorizes. With
+//!   it, chunked / SMP / single-shot quantization are bit-identical by
+//!   construction.
+//! * [`NoiseSource`] — the trait the quantization drivers are generic
+//!   over; [`NoiseEngine`] + [`EngineRng`] are the runtime dispatch pair
+//!   (one `match` per call into the engine, mirroring the
+//!   `ForwardFormat` pattern).
+//!
+//! `Xoshiro256` also provides the distribution helpers the experiments
+//! use (normals via Box–Muller, the paper's lognormal gradient model —
+//! Chmiel et al. 2021 — Laplace), and [`NoiseBank`] is the noise-reuse
+//! buffer of the Fig. 4 amortization experiment.
 
-/// SplitMix64 — used to expand a 64-bit seed into xoshiro state.
+pub mod philox;
+pub mod xoshiro;
+
+pub use philox::{philox4x32_10, Philox4x32};
+pub use xoshiro::Xoshiro256;
+
+/// SplitMix64 — used to expand 64-bit seeds into generator state
+/// (xoshiro state words, Philox keys, fork derivations).
 #[inline]
-fn splitmix64(state: &mut u64) -> u64 {
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
@@ -21,74 +41,32 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// xoshiro256++ PRNG. Period 2^256 − 1; passes BigCrush.
-#[derive(Clone, Debug)]
-pub struct Xoshiro256 {
-    s: [u64; 4],
-}
-
-impl Xoshiro256 {
-    /// Seed from a single u64 via SplitMix64 (never yields the all-zero state).
-    pub fn seed_from_u64(seed: u64) -> Self {
-        let mut sm = seed;
-        let s = [
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-        ];
-        Xoshiro256 { s }
-    }
-
+/// A seedable uniform-noise generator with the stream-splitting contracts
+/// the quantization stack needs. The quant drivers (`quantize_chunked`,
+/// SMP, the matrix code emitters, `NoiseBank`) are generic over this
+/// trait with [`Xoshiro256`] as the default, so every existing bitwise
+/// contract is untouched; [`Philox4x32`] overrides the stream hooks with
+/// counter arithmetic.
+pub trait NoiseSource: Sized + Clone + Send + Sync {
     /// Next raw 64-bit output.
-    #[inline]
-    pub fn next_u64(&mut self) -> u64 {
-        let s = &mut self.s;
-        let result = s[0]
-            .wrapping_add(s[3])
-            .rotate_left(23)
-            .wrapping_add(s[0]);
-        let t = s[1] << 17;
-        s[2] ^= s[0];
-        s[3] ^= s[1];
-        s[1] ^= s[2];
-        s[0] ^= s[3];
-        s[2] ^= t;
-        s[3] = s[3].rotate_left(45);
-        result
-    }
+    fn next_u64(&mut self) -> u64;
 
-    /// The xoshiro `jump` function: equivalent to 2^128 `next_u64` calls.
-    /// Used to split one seed into non-overlapping per-layer / per-sample
-    /// streams (SMP needs independent noise per sample).
-    pub fn jump(&mut self) {
-        const JUMP: [u64; 4] = [
-            0x180e_c6d3_3cfd_0aba,
-            0xd5a6_1266_f0c9_392c,
-            0xa958_2618_e03f_c9aa,
-            0x39ab_dc45_29b1_661c,
-        ];
-        let mut s0 = 0u64;
-        let mut s1 = 0u64;
-        let mut s2 = 0u64;
-        let mut s3 = 0u64;
-        for j in JUMP {
-            for b in 0..64 {
-                if (j & (1u64 << b)) != 0 {
-                    s0 ^= self.s[0];
-                    s1 ^= self.s[1];
-                    s2 ^= self.s[2];
-                    s3 ^= self.s[3];
-                }
-                self.next_u64();
-            }
-        }
-        self.s = [s0, s1, s2, s3];
-    }
+    /// Uniform f32 in [0, 1).
+    fn uniform_f32(&mut self) -> f32;
 
-    /// Derive the `n`-th independent stream from this generator
-    /// (clone + n jumps). Streams are separated by 2^128 outputs.
-    pub fn split(&self, n: usize) -> Self {
+    /// Fill a slice with uniforms in [0, 1).
+    fn fill_uniform(&mut self, out: &mut [f32]);
+
+    /// O(1) keyed stream derivation: a statistically independent stream
+    /// whose identity depends only on `(state, index)`; `self` is not
+    /// advanced (the PR 1 chunk-stream contract).
+    fn fork(&self, index: u64) -> Self;
+
+    /// Advance to the next provably disjoint stream.
+    fn jump(&mut self);
+
+    /// Derive the `n`-th disjoint stream (clone + n+1 jumps).
+    fn split(&self, n: usize) -> Self {
         let mut g = self.clone();
         for _ in 0..=n {
             g.jump();
@@ -96,98 +74,262 @@ impl Xoshiro256 {
         g
     }
 
-    /// O(1) keyed stream derivation: re-seed a child generator from the
-    /// full 256-bit state hashed with `index` through SplitMix64.
-    ///
-    /// Contract (ROADMAP §Performance architecture): `fork` is for
-    /// *chunk-indexed* streams — thousands of cheap, statistically
-    /// independent streams whose identity depends only on `(state,
-    /// index)`, which is what makes chunked multi-threaded quantization
-    /// bit-identical across thread counts. Streams are independent
-    /// statistically but not provably non-overlapping; where a proof
-    /// matters (SMP per-sample streams), use [`Self::jump`]/[`Self::split`],
-    /// which guarantee 2^128-output separation.
-    pub fn fork(&self, index: u64) -> Self {
-        let mut sm = self.s[0]
-            .wrapping_add(self.s[1].rotate_left(13))
-            .wrapping_add(self.s[2].rotate_left(29))
-            .wrapping_add(self.s[3].rotate_left(43))
-            ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let s = [
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-        ];
-        Xoshiro256 { s }
+    /// The noise stream for chunk `index` of a tensor processed in
+    /// fixed `chunk_elems`-element chunks. Default: [`Self::fork`] —
+    /// keyed derivation, thread-count invariant but distinct from the
+    /// single-shot stream. Counter-based sources override this with a
+    /// counter offset so that chunked execution reproduces the
+    /// single-shot fill **bit-for-bit** (requires `chunk_elems` to be a
+    /// multiple of the source's block width; [`crate::quant::CHUNK`]
+    /// is).
+    fn chunk_stream(&self, index: u64, chunk_elems: usize) -> Self {
+        let _ = chunk_elems;
+        self.fork(index)
     }
 
-    /// Uniform f32 in [0, 1). Uses the top 24 bits (f32 mantissa width).
+    /// Populate `streams` with `n` per-sample SMP streams derived from
+    /// `self`, advancing `self` past all of them. Default (the xoshiro
+    /// contract, preserved bit-for-bit): stream `s` is `self` after
+    /// `s+1` jumps and `self` ends `n+1` jumps ahead. Counter-based
+    /// sources override so that stream 0 **is** `self`'s current
+    /// position — which makes 1-sample SMP coincide with the
+    /// single-shot stream.
+    fn smp_streams(&mut self, n: usize, streams: &mut Vec<Self>) {
+        streams.clear();
+        for _ in 0..n {
+            self.jump();
+            streams.push(self.clone());
+        }
+        self.jump();
+    }
+
+    /// Advance `self` exactly as [`Self::smp_streams`] would for `n`
+    /// samples, without materializing the streams — the degenerate-
+    /// tensor path's stream-alignment mirror.
+    fn smp_advance(&mut self, n: usize) {
+        for _ in 0..=n {
+            self.jump();
+        }
+    }
+}
+
+impl NoiseSource for Xoshiro256 {
     #[inline]
-    pub fn uniform_f32(&mut self) -> f32 {
-        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    fn next_u64(&mut self) -> u64 {
+        Xoshiro256::next_u64(self)
     }
 
-    /// Uniform f64 in [0, 1). Uses the top 53 bits.
     #[inline]
-    pub fn uniform_f64(&mut self) -> f64 {
-        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    fn uniform_f32(&mut self) -> f32 {
+        Xoshiro256::uniform_f32(self)
     }
 
-    /// Uniform f32 in [lo, hi).
+    fn fill_uniform(&mut self, out: &mut [f32]) {
+        Xoshiro256::fill_uniform(self, out)
+    }
+
+    fn fork(&self, index: u64) -> Self {
+        Xoshiro256::fork(self, index)
+    }
+
+    fn jump(&mut self) {
+        Xoshiro256::jump(self)
+    }
+
+    fn split(&self, n: usize) -> Self {
+        Xoshiro256::split(self, n)
+    }
+}
+
+impl NoiseSource for Philox4x32 {
     #[inline]
-    pub fn uniform_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
-        lo + (hi - lo) * self.uniform_f32()
+    fn next_u64(&mut self) -> u64 {
+        Philox4x32::next_u64(self)
     }
 
-    /// Uniform integer in [0, n) by Lemire's multiply-shift (no modulo bias
-    /// worth caring about at our n ≪ 2^32 scales).
     #[inline]
-    pub fn uniform_usize(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
-        ((self.next_u64() >> 32).wrapping_mul(n as u64) >> 32) as usize
+    fn uniform_f32(&mut self) -> f32 {
+        Philox4x32::uniform_f32(self)
     }
 
-    /// Standard normal via Box–Muller (returns one value, caches none —
-    /// simplicity beats the 2x saving here; the hot path uses uniforms).
-    pub fn normal_f32(&mut self) -> f32 {
-        loop {
-            let u1 = self.uniform_f64();
-            if u1 > 1e-300 {
-                let u2 = self.uniform_f64();
-                let r = (-2.0 * u1.ln()).sqrt();
-                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+    fn fill_uniform(&mut self, out: &mut [f32]) {
+        Philox4x32::fill_uniform(self, out)
+    }
+
+    fn fork(&self, index: u64) -> Self {
+        Philox4x32::fork(self, index)
+    }
+
+    fn jump(&mut self) {
+        Philox4x32::jump(self)
+    }
+
+    fn split(&self, n: usize) -> Self {
+        Philox4x32::split(self, n)
+    }
+
+    /// Counter offset: chunk `i` starts exactly where a single-shot fill
+    /// would be after `i·chunk_elems` elements, so chunked == single-shot
+    /// bit-for-bit (debug-asserted block alignment).
+    fn chunk_stream(&self, index: u64, chunk_elems: usize) -> Self {
+        debug_assert!(
+            chunk_elems % 4 == 0,
+            "Philox chunk streams need 4-element block alignment"
+        );
+        self.at_block_offset(index * (chunk_elems as u64 / 4))
+    }
+
+    /// Stream `s` = `self` + s jumps — stream 0 is `self`'s current
+    /// position, so 1-sample SMP reproduces the single-shot stream.
+    fn smp_streams(&mut self, n: usize, streams: &mut Vec<Self>) {
+        streams.clear();
+        for s in 0..n {
+            let mut g = self.clone();
+            g.jump_by(s as u32);
+            streams.push(g);
+        }
+        self.jump_by(n as u32);
+    }
+
+    fn smp_advance(&mut self, n: usize) {
+        self.jump_by(n as u32);
+    }
+}
+
+/// Which noise engine a consumer runs on — the once-per-construction
+/// dispatch enum (mirroring `coordinator::layer_step::ForwardFormat`):
+/// resolve it to an [`EngineRng`] with [`NoiseEngine::seed_rng`] and the
+/// choice is made; everything downstream is generic over
+/// [`NoiseSource`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NoiseEngine {
+    /// xoshiro256++ — the default; every existing bit-exactness,
+    /// thread-invariance, and draw-accounting contract holds unchanged.
+    #[default]
+    Xoshiro,
+    /// Philox4x32-10 — counter-based: vectorized fills, and chunked /
+    /// SMP / single-shot quantization bit-identical by construction.
+    Philox,
+}
+
+impl NoiseEngine {
+    /// Seed a generator of this engine.
+    pub fn seed_rng(self, seed: u64) -> EngineRng {
+        match self {
+            NoiseEngine::Xoshiro => EngineRng::Xoshiro(Xoshiro256::seed_from_u64(seed)),
+            NoiseEngine::Philox => EngineRng::Philox(Philox4x32::seed_from_u64(seed)),
+        }
+    }
+}
+
+/// Runtime-dispatched noise source: one `match` per call into the
+/// underlying engine (hoisted relative to the per-element work — each
+/// `fill_uniform` dispatches once for a whole buffer). The
+/// `Xoshiro` variant delegates to the exact same code paths as a bare
+/// [`Xoshiro256`], so it is bit-identical to it from equal seeds.
+#[derive(Clone, Debug)]
+pub enum EngineRng {
+    Xoshiro(Xoshiro256),
+    Philox(Philox4x32),
+}
+
+impl EngineRng {
+    /// Which engine this generator runs on.
+    pub fn engine(&self) -> NoiseEngine {
+        match self {
+            EngineRng::Xoshiro(_) => NoiseEngine::Xoshiro,
+            EngineRng::Philox(_) => NoiseEngine::Philox,
+        }
+    }
+}
+
+impl NoiseSource for EngineRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        match self {
+            EngineRng::Xoshiro(g) => g.next_u64(),
+            EngineRng::Philox(g) => g.next_u64(),
+        }
+    }
+
+    #[inline]
+    fn uniform_f32(&mut self) -> f32 {
+        match self {
+            EngineRng::Xoshiro(g) => g.uniform_f32(),
+            EngineRng::Philox(g) => g.uniform_f32(),
+        }
+    }
+
+    fn fill_uniform(&mut self, out: &mut [f32]) {
+        match self {
+            EngineRng::Xoshiro(g) => g.fill_uniform(out),
+            EngineRng::Philox(g) => g.fill_uniform(out),
+        }
+    }
+
+    fn fork(&self, index: u64) -> Self {
+        match self {
+            EngineRng::Xoshiro(g) => EngineRng::Xoshiro(g.fork(index)),
+            EngineRng::Philox(g) => EngineRng::Philox(g.fork(index)),
+        }
+    }
+
+    fn jump(&mut self) {
+        match self {
+            EngineRng::Xoshiro(g) => g.jump(),
+            EngineRng::Philox(g) => g.jump(),
+        }
+    }
+
+    fn split(&self, n: usize) -> Self {
+        match self {
+            EngineRng::Xoshiro(g) => EngineRng::Xoshiro(g.split(n)),
+            EngineRng::Philox(g) => EngineRng::Philox(g.split(n)),
+        }
+    }
+
+    fn chunk_stream(&self, index: u64, chunk_elems: usize) -> Self {
+        match self {
+            EngineRng::Xoshiro(g) => {
+                EngineRng::Xoshiro(NoiseSource::chunk_stream(g, index, chunk_elems))
+            }
+            EngineRng::Philox(g) => {
+                EngineRng::Philox(NoiseSource::chunk_stream(g, index, chunk_elems))
             }
         }
     }
 
-    /// Normal with given mean and std.
-    pub fn normal_ms_f32(&mut self, mean: f32, std: f32) -> f32 {
-        mean + std * self.normal_f32()
-    }
-
-    /// Lognormal: sign-symmetric heavy-tailed values `± exp(N(mu, sigma))`.
-    /// This is the paper's model of neural-gradient magnitudes
-    /// (Chmiel et al. 2021: sigma ≈ 1..5 depending on layer).
-    pub fn signed_lognormal_f32(&mut self, mu: f32, sigma: f32) -> f32 {
-        let mag = (self.normal_ms_f32(mu, sigma)).exp();
-        if self.next_u64() & 1 == 0 {
-            mag
-        } else {
-            -mag
+    // Inlined per-engine walks (no temporary vec — `streams` is the
+    // reused scratch, so steady-state SMP stays allocation-free for
+    // the dispatched type too). Bit-agreement with each inner engine's
+    // own `smp_streams` is pinned by
+    // `engine_rng_smp_streams_match_inner`, so the duplicated walks
+    // cannot silently drift.
+    fn smp_streams(&mut self, n: usize, streams: &mut Vec<Self>) {
+        streams.clear();
+        match self {
+            EngineRng::Xoshiro(g) => {
+                for _ in 0..n {
+                    g.jump();
+                    streams.push(EngineRng::Xoshiro(g.clone()));
+                }
+                g.jump();
+            }
+            EngineRng::Philox(g) => {
+                for s in 0..n {
+                    let mut child = g.clone();
+                    child.jump_by(s as u32);
+                    streams.push(EngineRng::Philox(child));
+                }
+                g.jump_by(n as u32);
+            }
         }
     }
 
-    /// Laplace(0, b) via inverse CDF.
-    pub fn laplace_f32(&mut self, b: f32) -> f32 {
-        let u = self.uniform_f64() - 0.5;
-        (-(1.0 - 2.0 * u.abs()).ln() * b as f64).copysign(u) as f32
-    }
-
-    /// Fill a slice with uniforms in [0,1).
-    pub fn fill_uniform(&mut self, out: &mut [f32]) {
-        for v in out.iter_mut() {
-            *v = self.uniform_f32();
+    fn smp_advance(&mut self, n: usize) {
+        match self {
+            EngineRng::Xoshiro(g) => NoiseSource::smp_advance(g, n),
+            EngineRng::Philox(g) => NoiseSource::smp_advance(g, n),
         }
     }
 }
@@ -197,9 +339,11 @@ impl Xoshiro256 {
 /// The Fig. 4 experiment ("stochastic rounding amortization") re-uses the
 /// same random samples for `k` consecutive iterations to cut RNG cost.
 /// `NoiseBank` owns the buffer and regenerates it every `reuse_period`
-/// requests; in between it hands out the cached slice.
+/// requests; in between it hands out the cached slice. The backing
+/// generator is engine-selectable ([`NoiseEngine`]); the default
+/// xoshiro engine reproduces the historical streams bit-for-bit.
 pub struct NoiseBank {
-    rng: Xoshiro256,
+    rng: EngineRng,
     buf: Vec<f32>,
     reuse_period: usize,
     uses_since_fill: usize,
@@ -207,18 +351,25 @@ pub struct NoiseBank {
 
 impl NoiseBank {
     /// `capacity`: number of f32 uniforms held; `reuse_period`: how many
-    /// requests each fill serves (1 = fresh noise every request).
+    /// requests each fill serves (1 = fresh noise every request). Runs
+    /// on the default xoshiro engine.
     pub fn new(seed: u64, capacity: usize, reuse_period: usize) -> Self {
+        Self::with_engine(NoiseEngine::Xoshiro, seed, capacity, reuse_period)
+    }
+
+    /// [`Self::new`] on an explicit engine — the trainer's
+    /// `NoiseEngine` dispatch point.
+    pub fn with_engine(
+        engine: NoiseEngine,
+        seed: u64,
+        capacity: usize,
+        reuse_period: usize,
+    ) -> Self {
         assert!(reuse_period >= 1, "reuse_period must be >= 1");
-        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut rng = engine.seed_rng(seed);
         let mut buf = vec![0.0f32; capacity];
         rng.fill_uniform(&mut buf);
-        NoiseBank {
-            rng,
-            buf,
-            reuse_period,
-            uses_since_fill: 0,
-        }
+        NoiseBank { rng, buf, reuse_period, uses_since_fill: 0 }
     }
 
     /// Borrow `n` uniforms; refills the buffer when the reuse period lapses.
@@ -247,115 +398,16 @@ impl NoiseBank {
     pub fn reuse_period(&self) -> usize {
         self.reuse_period
     }
+
+    /// The engine backing this bank.
+    pub fn engine(&self) -> NoiseEngine {
+        self.rng.engine()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn deterministic_for_same_seed() {
-        let mut a = Xoshiro256::seed_from_u64(42);
-        let mut b = Xoshiro256::seed_from_u64(42);
-        for _ in 0..100 {
-            assert_eq!(a.next_u64(), b.next_u64());
-        }
-    }
-
-    #[test]
-    fn different_seeds_differ() {
-        let mut a = Xoshiro256::seed_from_u64(1);
-        let mut b = Xoshiro256::seed_from_u64(2);
-        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
-        assert!(same < 2);
-    }
-
-    #[test]
-    fn uniform_in_unit_interval_and_mean_half() {
-        let mut g = Xoshiro256::seed_from_u64(7);
-        let n = 100_000;
-        let mut sum = 0.0f64;
-        for _ in 0..n {
-            let u = g.uniform_f32();
-            assert!((0.0..1.0).contains(&u));
-            sum += u as f64;
-        }
-        let mean = sum / n as f64;
-        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
-    }
-
-    #[test]
-    fn normal_moments() {
-        let mut g = Xoshiro256::seed_from_u64(9);
-        let n = 200_000;
-        let (mut s1, mut s2) = (0.0f64, 0.0f64);
-        for _ in 0..n {
-            let x = g.normal_f32() as f64;
-            s1 += x;
-            s2 += x * x;
-        }
-        let mean = s1 / n as f64;
-        let var = s2 / n as f64 - mean * mean;
-        assert!(mean.abs() < 0.02, "mean={mean}");
-        assert!((var - 1.0).abs() < 0.03, "var={var}");
-    }
-
-    #[test]
-    fn split_streams_are_uncorrelated_prefixes() {
-        let base = Xoshiro256::seed_from_u64(1234);
-        let mut a = base.split(0);
-        let mut b = base.split(1);
-        let matches = (0..256).filter(|_| a.next_u64() == b.next_u64()).count();
-        assert_eq!(matches, 0);
-    }
-
-    #[test]
-    fn fork_streams_are_deterministic_and_distinct() {
-        let base = Xoshiro256::seed_from_u64(42);
-        // Determinism: same (state, index) -> same stream.
-        let mut a = base.fork(7);
-        let mut b = base.fork(7);
-        for _ in 0..64 {
-            assert_eq!(a.next_u64(), b.next_u64());
-        }
-        // Distinctness: different indices (and the base itself) disagree.
-        let mut c = base.fork(8);
-        let mut d = base.clone();
-        let mut a2 = base.fork(7);
-        let mut same_c = 0;
-        let mut same_d = 0;
-        for _ in 0..256 {
-            let v = a2.next_u64();
-            if v == c.next_u64() {
-                same_c += 1;
-            }
-            if v == d.next_u64() {
-                same_d += 1;
-            }
-        }
-        assert!(same_c < 2 && same_d < 2, "fork streams overlap");
-        // Forking is a pure function of the base state: the base is not
-        // advanced.
-        let mut e = base.clone();
-        let mut f = Xoshiro256::seed_from_u64(42);
-        for _ in 0..16 {
-            assert_eq!(e.next_u64(), f.next_u64());
-        }
-    }
-
-    #[test]
-    fn fork_uniforms_look_uniform() {
-        let base = Xoshiro256::seed_from_u64(3);
-        let mut sum = 0.0f64;
-        let n = 50_000;
-        for i in 0..n {
-            let mut g = base.fork(i);
-            sum += g.uniform_f32() as f64;
-        }
-        let mean = sum / n as f64;
-        // First draw across forked streams must still be uniform-ish.
-        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
-    }
 
     #[test]
     fn take_into_matches_take() {
@@ -366,29 +418,6 @@ mod tests {
             bank_a.take_into(&mut dst);
             assert_eq!(dst, bank_b.take(32));
         }
-    }
-
-    #[test]
-    fn lognormal_is_heavy_tailed_and_sign_symmetric() {
-        let mut g = Xoshiro256::seed_from_u64(5);
-        let n = 50_000;
-        let mut pos = 0usize;
-        let mut max_abs = 0.0f32;
-        let mut med_buf: Vec<f32> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let x = g.signed_lognormal_f32(0.0, 2.0);
-            if x > 0.0 {
-                pos += 1;
-            }
-            max_abs = max_abs.max(x.abs());
-            med_buf.push(x.abs());
-        }
-        med_buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = med_buf[n / 2];
-        // Heavy tail: max magnitude far above median magnitude.
-        assert!(max_abs / median > 100.0);
-        let frac_pos = pos as f64 / n as f64;
-        assert!((frac_pos - 0.5).abs() < 0.02);
     }
 
     #[test]
@@ -407,5 +436,145 @@ mod tests {
         let a: Vec<f32> = bank.take(8).to_vec();
         let b: Vec<f32> = bank.take(8).to_vec();
         assert_ne!(a, b);
+    }
+
+    /// Regression (PR 5): the default-engine bank and the engine-
+    /// dispatched xoshiro bank are the same stream bit-for-bit — the
+    /// trainer's per-step noise tensors must not move when the
+    /// NoiseEngine plumbing is threaded through.
+    #[test]
+    fn xoshiro_engine_bank_reproduces_default_bank_bitwise() {
+        let mut plain = NoiseBank::new(41, 64, 2);
+        let mut engine = NoiseBank::with_engine(NoiseEngine::Xoshiro, 41, 64, 2);
+        assert_eq!(engine.engine(), NoiseEngine::Xoshiro);
+        for _ in 0..5 {
+            let a: Vec<f32> = plain.take(64).to_vec();
+            let b: Vec<f32> = engine.take(64).to_vec();
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // And the raw EngineRng wrapper tracks a bare Xoshiro256 exactly.
+        let mut raw = Xoshiro256::seed_from_u64(77);
+        let mut wrapped = NoiseEngine::Xoshiro.seed_rng(77);
+        let mut a = vec![0.0f32; 100];
+        let mut b = vec![0.0f32; 100];
+        raw.fill_uniform(&mut a);
+        wrapped.fill_uniform(&mut b);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(raw.next_u64(), NoiseSource::next_u64(&mut wrapped));
+    }
+
+    #[test]
+    fn philox_engine_bank_is_deterministic_and_distinct() {
+        let mut a = NoiseBank::with_engine(NoiseEngine::Philox, 5, 32, 1);
+        let mut b = NoiseBank::with_engine(NoiseEngine::Philox, 5, 32, 1);
+        assert_eq!(a.engine(), NoiseEngine::Philox);
+        assert_eq!(a.take(32), b.take(32));
+        let mut x = NoiseBank::with_engine(NoiseEngine::Xoshiro, 5, 32, 1);
+        assert_ne!(a.take(32), x.take(32), "engines share a stream");
+    }
+
+    /// The trait-level xoshiro SMP stream derivation is bit-identical to
+    /// the historical inline jump walk (stream s = base after s+1 jumps,
+    /// caller n+1 jumps ahead).
+    #[test]
+    fn xoshiro_smp_streams_match_manual_jump_walk() {
+        for n in [1usize, 2, 4] {
+            let mut rng = Xoshiro256::seed_from_u64(0x5111);
+            let mut manual = rng.clone();
+            let mut streams: Vec<Xoshiro256> = Vec::new();
+            rng.smp_streams(n, &mut streams);
+            for s in streams.iter_mut() {
+                manual.jump();
+                assert_eq!(s.next_u64(), manual.clone().next_u64(), "n={n}");
+            }
+            manual.jump();
+            assert_eq!(rng.next_u64(), manual.next_u64(), "n={n} caller position");
+            // smp_advance mirrors the same end position.
+            let mut adv = Xoshiro256::seed_from_u64(0x5111);
+            adv.smp_advance(n);
+            let mut want = Xoshiro256::seed_from_u64(0x5111);
+            for _ in 0..=n {
+                want.jump();
+            }
+            assert_eq!(adv.next_u64(), want.next_u64());
+        }
+    }
+
+    /// Philox SMP stream 0 is the caller's own position (the property
+    /// that makes 1-sample SMP equal the single-shot stream), streams
+    /// are disjoint, and smp_advance matches smp_streams' end position.
+    #[test]
+    fn philox_smp_stream_zero_is_base() {
+        let mut rng = Philox4x32::seed_from_u64(0x2b);
+        let base = rng.clone();
+        let mut streams: Vec<Philox4x32> = Vec::new();
+        rng.smp_streams(3, &mut streams);
+        assert_eq!(streams[0], base, "stream 0 must be the base position");
+        assert_eq!(streams[1], base.split(0), "stream 1 is one jump ahead");
+        let mut adv = base.clone();
+        adv.smp_advance(3);
+        assert_eq!(rng, adv);
+        // Distinct streams draw distinct prefixes.
+        let a: Vec<u64> = (0..64).map(|_| streams[1].next_u64()).collect();
+        let b: Vec<u64> = (0..64).map(|_| streams[2].next_u64()).collect();
+        assert!(a.iter().zip(b.iter()).filter(|(x, y)| x == y).count() < 2);
+    }
+
+    /// EngineRng's SMP stream derivation is exactly the wrapped
+    /// engine's — both variants, caller end position included. This is
+    /// the drift-pin for the inlined walks in `EngineRng::smp_streams`.
+    #[test]
+    fn engine_rng_smp_streams_match_inner() {
+        let mut wrapped = NoiseEngine::Xoshiro.seed_rng(0xABCD);
+        let mut w_streams: Vec<EngineRng> = Vec::new();
+        wrapped.smp_streams(3, &mut w_streams);
+        let mut inner = Xoshiro256::seed_from_u64(0xABCD);
+        let mut i_streams: Vec<Xoshiro256> = Vec::new();
+        inner.smp_streams(3, &mut i_streams);
+        for (w, i) in w_streams.iter_mut().zip(i_streams.iter_mut()) {
+            assert_eq!(NoiseSource::next_u64(w), i.next_u64());
+        }
+        assert_eq!(NoiseSource::next_u64(&mut wrapped), inner.next_u64());
+
+        let mut wrapped = NoiseEngine::Philox.seed_rng(0xABCD);
+        let mut w_streams: Vec<EngineRng> = Vec::new();
+        wrapped.smp_streams(3, &mut w_streams);
+        let mut inner = Philox4x32::seed_from_u64(0xABCD);
+        let mut i_streams: Vec<Philox4x32> = Vec::new();
+        inner.smp_streams(3, &mut i_streams);
+        for (w, i) in w_streams.iter_mut().zip(i_streams.iter_mut()) {
+            assert_eq!(NoiseSource::next_u64(w), i.next_u64());
+        }
+        assert_eq!(NoiseSource::next_u64(&mut wrapped), inner.next_u64());
+    }
+
+    /// chunk_stream: xoshiro keeps the PR 1 fork contract; Philox is a
+    /// pure counter offset reproducing the single-shot fill positions.
+    #[test]
+    fn chunk_stream_contracts() {
+        let xo = Xoshiro256::seed_from_u64(12);
+        let mut a = NoiseSource::chunk_stream(&xo, 5, 4096);
+        let mut b = xo.fork(5);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let ph = Philox4x32::seed_from_u64(12);
+        let mut whole = vec![0.0f32; 3 * 4096];
+        ph.clone().fill_uniform(&mut whole);
+        for chunk in 0..3usize {
+            let mut part = vec![0.0f32; 4096];
+            NoiseSource::chunk_stream(&ph, chunk as u64, 4096).fill_uniform(&mut part);
+            for (i, v) in part.iter().enumerate() {
+                assert_eq!(
+                    v.to_bits(),
+                    whole[chunk * 4096 + i].to_bits(),
+                    "chunk={chunk} i={i}"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,306 @@
+//! **xoshiro256++** (Blackman & Vigna, 2019), seeded through SplitMix64 —
+//! the repo's default, word-serial noise source. Period 2^256 − 1; passes
+//! BigCrush. Every bit-exactness, draw-accounting, and stream-splitting
+//! contract in the quantization stack is pinned against this generator.
+
+use super::splitmix64;
+
+/// xoshiro256++ PRNG. Period 2^256 − 1; passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed from a single u64 via SplitMix64 (never yields the all-zero state).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256 { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0].wrapping_add(s[3]).rotate_left(23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// The xoshiro `jump` function: equivalent to 2^128 `next_u64` calls.
+    /// Used to split one seed into non-overlapping per-layer / per-sample
+    /// streams (SMP needs independent noise per sample).
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180e_c6d3_3cfd_0aba,
+            0xd5a6_1266_f0c9_392c,
+            0xa958_2618_e03f_c9aa,
+            0x39ab_dc45_29b1_661c,
+        ];
+        let mut s0 = 0u64;
+        let mut s1 = 0u64;
+        let mut s2 = 0u64;
+        let mut s3 = 0u64;
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    s0 ^= self.s[0];
+                    s1 ^= self.s[1];
+                    s2 ^= self.s[2];
+                    s3 ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = [s0, s1, s2, s3];
+    }
+
+    /// Derive the `n`-th independent stream from this generator
+    /// (clone + n jumps). Streams are separated by 2^128 outputs.
+    pub fn split(&self, n: usize) -> Self {
+        let mut g = self.clone();
+        for _ in 0..=n {
+            g.jump();
+        }
+        g
+    }
+
+    /// O(1) keyed stream derivation: re-seed a child generator from the
+    /// full 256-bit state hashed with `index` through SplitMix64.
+    ///
+    /// Contract (ROADMAP §Performance architecture): `fork` is for
+    /// *chunk-indexed* streams — thousands of cheap, statistically
+    /// independent streams whose identity depends only on `(state,
+    /// index)`, which is what makes chunked multi-threaded quantization
+    /// bit-identical across thread counts. Streams are independent
+    /// statistically but not provably non-overlapping; where a proof
+    /// matters (SMP per-sample streams), use [`Self::jump`]/[`Self::split`],
+    /// which guarantee 2^128-output separation.
+    pub fn fork(&self, index: u64) -> Self {
+        let mut sm = self.s[0]
+            .wrapping_add(self.s[1].rotate_left(13))
+            .wrapping_add(self.s[2].rotate_left(29))
+            .wrapping_add(self.s[3].rotate_left(43))
+            ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256 { s }
+    }
+
+    /// Uniform f32 in [0, 1). Uses the top 24 bits (f32 mantissa width).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1). Uses the top 53 bits.
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform_f32()
+    }
+
+    /// Uniform integer in [0, n) by Lemire's multiply-shift (no modulo bias
+    /// worth caring about at our n ≪ 2^32 scales).
+    #[inline]
+    pub fn uniform_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() >> 32).wrapping_mul(n as u64) >> 32) as usize
+    }
+
+    /// Standard normal via Box–Muller (returns one value, caches none —
+    /// simplicity beats the 2x saving here; the hot path uses uniforms).
+    pub fn normal_f32(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform_f64();
+            if u1 > 1e-300 {
+                let u2 = self.uniform_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Normal with given mean and std.
+    pub fn normal_ms_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal_f32()
+    }
+
+    /// Lognormal: sign-symmetric heavy-tailed values `± exp(N(mu, sigma))`.
+    /// This is the paper's model of neural-gradient magnitudes
+    /// (Chmiel et al. 2021: sigma ≈ 1..5 depending on layer).
+    pub fn signed_lognormal_f32(&mut self, mu: f32, sigma: f32) -> f32 {
+        let mag = (self.normal_ms_f32(mu, sigma)).exp();
+        if self.next_u64() & 1 == 0 {
+            mag
+        } else {
+            -mag
+        }
+    }
+
+    /// Laplace(0, b) via inverse CDF.
+    pub fn laplace_f32(&mut self, b: f32) -> f32 {
+        let u = self.uniform_f64() - 0.5;
+        (-(1.0 - 2.0 * u.abs()).ln() * b as f64).copysign(u) as f32
+    }
+
+    /// Fill a slice with uniforms in [0,1).
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.uniform_f32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::seed_from_u64(1);
+        let mut b = Xoshiro256::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_mean_half() {
+        let mut g = Xoshiro256::seed_from_u64(7);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let u = g.uniform_f32();
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Xoshiro256::seed_from_u64(9);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = g.normal_f32() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn split_streams_are_uncorrelated_prefixes() {
+        let base = Xoshiro256::seed_from_u64(1234);
+        let mut a = base.split(0);
+        let mut b = base.split(1);
+        let matches = (0..256).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(matches, 0);
+    }
+
+    #[test]
+    fn fork_streams_are_deterministic_and_distinct() {
+        let base = Xoshiro256::seed_from_u64(42);
+        // Determinism: same (state, index) -> same stream.
+        let mut a = base.fork(7);
+        let mut b = base.fork(7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Distinctness: different indices (and the base itself) disagree.
+        let mut c = base.fork(8);
+        let mut d = base.clone();
+        let mut a2 = base.fork(7);
+        let mut same_c = 0;
+        let mut same_d = 0;
+        for _ in 0..256 {
+            let v = a2.next_u64();
+            if v == c.next_u64() {
+                same_c += 1;
+            }
+            if v == d.next_u64() {
+                same_d += 1;
+            }
+        }
+        assert!(same_c < 2 && same_d < 2, "fork streams overlap");
+        // Forking is a pure function of the base state: the base is not
+        // advanced.
+        let mut e = base.clone();
+        let mut f = Xoshiro256::seed_from_u64(42);
+        for _ in 0..16 {
+            assert_eq!(e.next_u64(), f.next_u64());
+        }
+    }
+
+    #[test]
+    fn fork_uniforms_look_uniform() {
+        let base = Xoshiro256::seed_from_u64(3);
+        let mut sum = 0.0f64;
+        let n = 50_000;
+        for i in 0..n {
+            let mut g = base.fork(i);
+            sum += g.uniform_f32() as f64;
+        }
+        let mean = sum / n as f64;
+        // First draw across forked streams must still be uniform-ish.
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_is_heavy_tailed_and_sign_symmetric() {
+        let mut g = Xoshiro256::seed_from_u64(5);
+        let n = 50_000;
+        let mut pos = 0usize;
+        let mut max_abs = 0.0f32;
+        let mut med_buf: Vec<f32> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = g.signed_lognormal_f32(0.0, 2.0);
+            if x > 0.0 {
+                pos += 1;
+            }
+            max_abs = max_abs.max(x.abs());
+            med_buf.push(x.abs());
+        }
+        med_buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = med_buf[n / 2];
+        // Heavy tail: max magnitude far above median magnitude.
+        assert!(max_abs / median > 100.0);
+        let frac_pos = pos as f64 / n as f64;
+        assert!((frac_pos - 0.5).abs() < 0.02);
+    }
+}
