@@ -111,7 +111,12 @@ fn dump_curves(opts: &ExpOptions, tag: &str, runs: &[&RunResult]) -> Result<()> 
     Ok(())
 }
 
-fn print_and_save(opts: &ExpOptions, tag: &str, headers: &[&str], rows: Vec<Vec<String>>) -> Result<String> {
+fn print_and_save(
+    opts: &ExpOptions,
+    tag: &str,
+    headers: &[&str],
+    rows: Vec<Vec<String>>,
+) -> Result<String> {
     let table = render_table(headers, &rows);
     println!("\n### {tag}\n{table}");
     write_csv(format!("{}/{tag}.csv", opts.out_dir), headers, &rows)?;
@@ -141,10 +146,14 @@ pub fn table1(engine: &Engine, opts: &ExpOptions) -> Result<String> {
         let steps = (opts.steps as f32 * steps_mult) as usize;
         let mut row = vec![label.to_string()];
         for scheme in ["base", "ultralow", "luq", "luq_smp2"] {
-            let r = run_scheme(engine, profile, scheme, steps, opts, TrainerOptions {
-                seed: opts.seed,
-                ..Default::default()
-            })?;
+            let r = run_scheme(
+                engine,
+                profile,
+                scheme,
+                steps,
+                opts,
+                TrainerOptions { seed: opts.seed, ..Default::default() },
+            )?;
             row.push(if profile.starts_with("tfm") { fmt_loss(&r) } else { fmt_acc(&r) });
             all_runs.push(r);
         }
@@ -225,15 +234,22 @@ pub fn table2(engine: &Engine, opts: &ExpOptions) -> Result<String> {
 pub fn table3(engine: &Engine, opts: &ExpOptions) -> Result<String> {
     let mut rows = vec![];
     for (profile, label) in [("mlp_s", "MLP-s"), ("cnn_s", "CNN-s")] {
-        let measured = run_scheme(engine, profile, "luq", opts.steps, opts, TrainerOptions {
-            seed: opts.seed,
-            ..Default::default()
-        })?;
-        let hindsight = run_scheme(engine, profile, "luq", opts.steps, opts, TrainerOptions {
-            seed: opts.seed,
-            hindsight: true,
-            ..Default::default()
-        })?;
+        let measured = run_scheme(
+            engine,
+            profile,
+            "luq",
+            opts.steps,
+            opts,
+            TrainerOptions { seed: opts.seed, ..Default::default() },
+        )?;
+        let hindsight = run_scheme(
+            engine,
+            profile,
+            "luq",
+            opts.steps,
+            opts,
+            TrainerOptions { seed: opts.seed, hindsight: true, ..Default::default() },
+        )?;
         rows.push(vec![label.into(), fmt_acc(&measured), fmt_acc(&hindsight)]);
     }
     print_and_save(opts, "table3", &["Model", "LUQ", "LUQ + Hindsight [14]"], rows)
@@ -251,10 +267,14 @@ pub fn table4(engine: &Engine, opts: &ExpOptions) -> Result<String> {
         ("bwd_only", "FP32", "FP4"),
         ("luq", "INT4", "FP4"),
     ] {
-        let r = run_scheme(engine, "cnn_s", scheme, opts.steps, opts, TrainerOptions {
-            seed: opts.seed,
-            ..Default::default()
-        })?;
+        let r = run_scheme(
+            engine,
+            "cnn_s",
+            scheme,
+            opts.steps,
+            opts,
+            TrainerOptions { seed: opts.seed, ..Default::default() },
+        )?;
         rows.push(vec![fwd.into(), bwd.into(), fmt_acc(&r)]);
     }
     print_and_save(opts, "table4", &["Forward", "Backward", "Accuracy"], rows)
@@ -273,10 +293,14 @@ pub fn fig1bc(engine: &Engine, opts: &ExpOptions) -> Result<String> {
         ("fig1c bwd RDN", "bwd_int_rdn", "backward"),
         ("fig1c bwd SR", "bwd_int_sr", "backward"),
     ] {
-        let r = run_scheme(engine, "cnn_s", scheme, opts.steps, opts, TrainerOptions {
-            seed: opts.seed,
-            ..Default::default()
-        })?;
+        let r = run_scheme(
+            engine,
+            "cnn_s",
+            scheme,
+            opts.steps,
+            opts,
+            TrainerOptions { seed: opts.seed, ..Default::default() },
+        )?;
         rows.push(vec![arm.into(), tag.into(), fmt_acc(&r), fmt_loss(&r)]);
         runs.push(r);
     }
@@ -377,10 +401,14 @@ pub fn fig3_left(engine: &Engine, opts: &ExpOptions) -> Result<String> {
         ("sp_rdnp", "FP4 + SP + RDNP"),
         ("luq", "LUQ"),
     ] {
-        let r = run_scheme(engine, "cnn_s", scheme, opts.steps, opts, TrainerOptions {
-            seed: opts.seed,
-            ..Default::default()
-        })?;
+        let r = run_scheme(
+            engine,
+            "cnn_s",
+            scheme,
+            opts.steps,
+            opts,
+            TrainerOptions { seed: opts.seed, ..Default::default() },
+        )?;
         let diverged = r.history.len() < opts.steps;
         rows.push(vec![
             label.into(),
@@ -395,10 +423,14 @@ pub fn fig3_left(engine: &Engine, opts: &ExpOptions) -> Result<String> {
 
 pub fn fig3_right(engine: &Engine, opts: &ExpOptions) -> Result<String> {
     let mut rows = vec![];
-    let base = run_scheme(engine, "cnn_s", "base", opts.steps, opts, TrainerOptions {
-        seed: opts.seed,
-        ..Default::default()
-    })?;
+    let base = run_scheme(
+        engine,
+        "cnn_s",
+        "base",
+        opts.steps,
+        opts,
+        TrainerOptions { seed: opts.seed, ..Default::default() },
+    )?;
     rows.push(vec!["FP32 baseline".into(), fmt_acc(&base)]);
     for n in [1usize, 2, 4, 8, 16] {
         let r = run_scheme(
@@ -421,11 +453,14 @@ pub fn fig3_right(engine: &Engine, opts: &ExpOptions) -> Result<String> {
 pub fn fig4(engine: &Engine, opts: &ExpOptions) -> Result<String> {
     let mut rows = vec![];
     for reuse in [1usize, 2, 4, 8] {
-        let r = run_scheme(engine, "cnn_s", "luq", opts.steps, opts, TrainerOptions {
-            seed: opts.seed,
-            noise_reuse: reuse,
-            ..Default::default()
-        })?;
+        let r = run_scheme(
+            engine,
+            "cnn_s",
+            "luq",
+            opts.steps,
+            opts,
+            TrainerOptions { seed: opts.seed, noise_reuse: reuse, ..Default::default() },
+        )?;
         rows.push(vec![format!("{reuse}"), fmt_acc(&r)]);
     }
     print_and_save(opts, "fig4", &["Noise re-use period (iters)", "Accuracy"], rows)
@@ -436,15 +471,23 @@ pub fn fig4(engine: &Engine, opts: &ExpOptions) -> Result<String> {
 // ---------------------------------------------------------------------------
 
 pub fn fig5(engine: &Engine, opts: &ExpOptions) -> Result<String> {
-    let smp2 = run_scheme(engine, "cnn_s", "luq3_smp2", opts.steps, opts, TrainerOptions {
-        seed: opts.seed,
-        ..Default::default()
-    })?;
+    let smp2 = run_scheme(
+        engine,
+        "cnn_s",
+        "luq3_smp2",
+        opts.steps,
+        opts,
+        TrainerOptions { seed: opts.seed, ..Default::default() },
+    )?;
     let longer_steps = opts.steps * 4 / 3;
-    let longer = run_scheme(engine, "cnn_s", "luq3_smp1", longer_steps, opts, TrainerOptions {
-        seed: opts.seed,
-        ..Default::default()
-    })?;
+    let longer = run_scheme(
+        engine,
+        "cnn_s",
+        "luq3_smp1",
+        longer_steps,
+        opts,
+        TrainerOptions { seed: opts.seed, ..Default::default() },
+    )?;
     let rows = vec![
         vec![
             format!("LUQ (FP3) + SMP-2, {} steps", opts.steps),

@@ -29,7 +29,11 @@ pub fn gate_table_standard() -> Vec<GateEntry> {
         GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Mantissa multiplier", gates: 99 },
         GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Exponent adder", gates: 37 },
         GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Sign xor", gates: 1 },
-        GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Mantissa normalization", gates: 48 },
+        GateEntry {
+            block: "FP7 [1,4,2] multiplier",
+            operation: "Mantissa normalization",
+            gates: 48,
+        },
         GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Rounding adder", gates: 12 },
         GateEntry { block: "FP7 [1,4,2] multiplier", operation: "Fix exponent", gates: 37 },
     ]
