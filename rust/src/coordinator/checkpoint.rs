@@ -1,21 +1,218 @@
-//! Checkpointing: params (or any HostTensor list) to a simple
-//! self-describing binary: a JSON header (tensor specs) + raw
-//! little-endian payload. Used by Table-2 (FNT continues from the 4-bit
-//! checkpoints) and the e2e example.
+//! Crash-safe checkpointing: params (or any HostTensor list) plus trainer
+//! step and RNG engine state, in a self-describing binary with per-tensor
+//! CRC32 integrity. Used by Table-2 (FNT continues from the 4-bit
+//! checkpoints), the e2e example, and the supervisor's resume path.
+//!
+//! Format v2 (`LUQCKPT2`): magic, u64 LE header length, u32 LE CRC32 of
+//! the header bytes, JSON header `{version, step, tensors: [{shape,
+//! dtype, crc32}], rng?}`, then the raw little-endian payload in header
+//! order. The header CRC plus the per-tensor CRCs cover every byte after
+//! the fixed prefix, so *any* single-bit corruption anywhere in the file
+//! is a load error (the fault suite proves this by exhaustive injection).
+//! The rng entry serializes the [`EngineRng`] state as u32 words (exact
+//! through the hand-rolled JSON's f64 numbers), so kill-at-any-step →
+//! resume continues every noise stream bit-for-bit.
+//!
+//! Durability contract: [`Checkpoint::save`] writes `<path>.tmp` in the
+//! same directory, fsyncs, then renames over the destination — a crash at
+//! any point leaves either the old complete file or the new complete file,
+//! never a torn one. [`Checkpoint::load`] verifies magic, version, header
+//! sanity, exact file size, and every tensor CRC before returning; any
+//! mismatch is an error (`FaultClass::CheckpointCorrupt` territory), never
+//! a panic or silently-garbage tensors. Transient IO failure is retried
+//! with bounded doubling backoff via [`save_with_retry`].
 
 use crate::metrics::{parse_json, Json};
+use crate::rng::{EngineRng, NoiseEngine};
 use crate::runtime::HostTensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
+use std::time::Duration;
 
-const MAGIC: &[u8; 8] = b"LUQCKPT1";
+const MAGIC: &[u8; 8] = b"LUQCKPT2";
+const V1_MAGIC: &[u8; 8] = b"LUQCKPT1";
+/// A header longer than this is corruption, not a real checkpoint —
+/// reject it before trusting the length field with an allocation.
+const MAX_HEADER_LEN: usize = 1 << 24;
 
-pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
+/// CRC32 (IEEE 802.3, poly 0xEDB88320) lookup table, built at compile
+/// time — the offline registry has no crc crate.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
     }
-    let header = Json::Arr(
+    table
+};
+
+/// Standard CRC32 (IEEE) of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+#[inline]
+fn crc32_update(state: u32, bytes: &[u8]) -> u32 {
+    let mut c = state;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+/// Serialized noise-engine state: the engine tag plus its
+/// [`EngineRng::state_words`]. Restoring yields a generator that
+/// continues the stream bit-for-bit from the checkpointed position.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RngState {
+    pub engine: NoiseEngine,
+    pub words: Vec<u32>,
+}
+
+impl RngState {
+    /// Snapshot a generator's current position.
+    pub fn capture(rng: &EngineRng) -> RngState {
+        RngState { engine: rng.engine(), words: rng.state_words() }
+    }
+
+    /// Rebuild the generator at the snapshotted position.
+    pub fn restore(&self) -> Result<EngineRng> {
+        EngineRng::from_state_words(self.engine, &self.words)
+            .map_err(|e| anyhow!("checkpoint rng state: {e}"))
+    }
+}
+
+/// A full training checkpoint: step counter, parameter tensors, and
+/// (optionally) the trainer's RNG position.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<HostTensor>,
+    pub rng: Option<RngState>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64, tensors: Vec<HostTensor>) -> Checkpoint {
+        Checkpoint { step, tensors, rng: None }
+    }
+
+    /// Attach the RNG position captured from `rng`.
+    pub fn with_rng(mut self, rng: &EngineRng) -> Checkpoint {
+        self.rng = Some(RngState::capture(rng));
+        self
+    }
+
+    /// Atomically write the checkpoint (temp file + fsync + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_atomic(path.as_ref(), self.step, &self.tensors, self.rng.as_ref())
+    }
+
+    /// Load and fully verify a checkpoint.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        read_verified(path.as_ref())
+    }
+}
+
+/// Legacy API (kept for the FNT experiment and the examples): save a bare
+/// tensor list as step 0 with no RNG state. Atomic like [`Checkpoint::save`].
+pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> Result<()> {
+    write_atomic(path.as_ref(), 0, tensors, None)
+}
+
+/// Legacy API: load just the tensors (still fully CRC-verified).
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
+    Ok(read_verified(path.as_ref())?.tensors)
+}
+
+/// Run `op` up to `attempts` times, sleeping `backoff` (doubling each
+/// retry) between failures — the bounded-retry wrapper for transient IO
+/// errors (NFS blips, ENOSPC races). Returns the first success or the
+/// last error.
+pub fn retry_io<T>(
+    attempts: usize,
+    mut backoff: Duration,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    assert!(attempts >= 1, "retry_io needs at least one attempt");
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                last_err = Some(e);
+                if attempt + 1 < attempts {
+                    std::thread::sleep(backoff);
+                    backoff = backoff.saturating_mul(2);
+                }
+            }
+        }
+    }
+    Err(last_err.expect("attempts >= 1").context("retries exhausted"))
+}
+
+/// [`Checkpoint::save`] with bounded retry/backoff. The write is atomic
+/// per attempt, so a failed attempt never corrupts an existing file.
+pub fn save_with_retry(
+    ckpt: &Checkpoint,
+    path: impl AsRef<Path>,
+    attempts: usize,
+    backoff: Duration,
+) -> Result<()> {
+    let path = path.as_ref();
+    retry_io(attempts, backoff, || ckpt.save(path))
+}
+
+fn dtype_name(t: &HostTensor) -> &'static str {
+    match t {
+        HostTensor::F32 { .. } => "float32",
+        HostTensor::I32 { .. } => "int32",
+    }
+}
+
+/// CRC32 of a tensor's little-endian payload, streamed (no staging buffer).
+fn tensor_crc(t: &HostTensor) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    match t {
+        HostTensor::F32 { data, .. } => {
+            for v in data {
+                c = crc32_update(c, &v.to_le_bytes());
+            }
+        }
+        HostTensor::I32 { data, .. } => {
+            for v in data {
+                c = crc32_update(c, &v.to_le_bytes());
+            }
+        }
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+fn write_tensor(f: &mut impl Write, t: &HostTensor) -> std::io::Result<()> {
+    match t {
+        HostTensor::F32 { data, .. } => {
+            for v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        HostTensor::I32 { data, .. } => {
+            for v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn render_header(step: u64, tensors: &[HostTensor], rng: Option<&RngState>) -> String {
+    let specs = Json::Arr(
         tensors
             .iter()
             .map(|t| {
@@ -24,106 +221,272 @@ pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> Result<()> {
                         "shape",
                         Json::Arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect()),
                     ),
-                    (
-                        "dtype",
-                        Json::str(match t {
-                            HostTensor::F32 { .. } => "float32",
-                            HostTensor::I32 { .. } => "int32",
-                        }),
-                    ),
+                    ("dtype", Json::str(dtype_name(t))),
+                    ("crc32", Json::num(tensor_crc(t) as f64)),
                 ])
             })
             .collect(),
-    )
-    .render();
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u64).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
-    for t in tensors {
-        match t {
-            HostTensor::F32 { data, .. } => {
-                for v in data {
-                    f.write_all(&v.to_le_bytes())?;
-                }
-            }
-            HostTensor::I32 { data, .. } => {
-                for v in data {
-                    f.write_all(&v.to_le_bytes())?;
-                }
-            }
+    );
+    let mut pairs = vec![
+        ("version", Json::num(2.0)),
+        // Steps stay far below 2^53, so an f64 JSON number is exact.
+        ("step", Json::num(step as f64)),
+        ("tensors", specs),
+    ];
+    if let Some(rs) = rng {
+        pairs.push((
+            "rng",
+            Json::obj(vec![
+                ("engine", Json::str(rs.engine.name())),
+                (
+                    "words",
+                    Json::Arr(rs.words.iter().map(|&w| Json::num(w as f64)).collect()),
+                ),
+            ]),
+        ));
+    }
+    Json::obj(pairs).render()
+}
+
+fn write_atomic(
+    path: &Path,
+    step: u64,
+    tensors: &[HostTensor],
+    rng: Option<&RngState>,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
         }
     }
-    f.flush()?;
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("checkpoint path has no file name: {}", path.display()))?;
+    // The temp file must live in the destination directory: rename(2) is
+    // only atomic within one filesystem.
+    let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+    let header = render_header(step, tensors, rng);
+
+    let write_all = || -> Result<()> {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut f = std::io::BufWriter::new(file);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(&crc32(header.as_bytes()).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in tensors {
+            write_tensor(&mut f, t)?;
+        }
+        f.flush()?;
+        // fsync before rename: otherwise the rename can land while the
+        // data is still only in the page cache, and a crash yields a
+        // valid-looking but truncated file — the exact torn-write bug
+        // this module exists to close.
+        f.get_ref().sync_all()?;
+        Ok(())
+    };
+    if let Err(e) = write_all() {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
     Ok(())
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(&path)
-            .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
-    );
+fn read_verified(path: &Path) -> Result<Checkpoint> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    let mut f = std::io::BufReader::new(file);
+
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic).context("checkpoint magic: short read")?;
+    if &magic == V1_MAGIC {
+        bail!(
+            "version 1 checkpoint (pre-CRC, non-atomic) is not supported; \
+             re-save with the current writer"
+        );
+    }
     if &magic != MAGIC {
-        bail!("not a LUQ checkpoint");
+        bail!("not a LUQ checkpoint (bad magic)");
     }
     let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8)?;
-    let hlen = u64::from_le_bytes(len8) as usize;
-    let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf)?;
-    let header = parse_json(std::str::from_utf8(&hbuf)?)
+    f.read_exact(&mut len8).context("checkpoint header length: short read")?;
+    let hlen = u64::from_le_bytes(len8);
+    if hlen as usize > MAX_HEADER_LEN {
+        bail!("checkpoint header length {hlen} exceeds sanity cap (corrupt length field)");
+    }
+    let mut crc4 = [0u8; 4];
+    f.read_exact(&mut crc4).context("checkpoint header CRC: short read")?;
+    let want_hcrc = u32::from_le_bytes(crc4);
+    let mut hbuf = vec![0u8; hlen as usize];
+    f.read_exact(&mut hbuf).context("checkpoint header: short read")?;
+    // Verify the header's own CRC before trusting anything parsed from
+    // it: step, rng words, and tensor shapes all live here, and a bit
+    // flip in a digit would otherwise parse as valid JSON.
+    let got_hcrc = crc32(&hbuf);
+    if got_hcrc != want_hcrc {
+        bail!(
+            "checkpoint header CRC32 mismatch (stored {want_hcrc:#010x}, computed \
+             {got_hcrc:#010x}) — header corrupt"
+        );
+    }
+    let header = parse_json(std::str::from_utf8(&hbuf).context("checkpoint header not UTF-8")?)
         .map_err(|e| anyhow!("checkpoint header: {e}"))?;
-    let specs = header.as_arr().ok_or_else(|| anyhow!("header not an array"))?;
-    let mut out = Vec::with_capacity(specs.len());
-    for s in specs {
+
+    let version = header
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("checkpoint header missing version"))?;
+    if version != 2 {
+        bail!("unsupported checkpoint version {version} (supported: 2)");
+    }
+    let step = header
+        .get("step")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("checkpoint header missing step"))? as u64;
+    let specs = header
+        .get("tensors")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("checkpoint header missing tensors array"))?;
+
+    // Validate the total size *before* trusting any per-tensor length
+    // with an allocation or a read: a truncated file fails here with a
+    // precise message instead of a short read halfway through.
+    let mut payload: u64 = 0;
+    let mut parsed: Vec<(Vec<usize>, String, u32, usize)> = Vec::with_capacity(specs.len());
+    for (i, s) in specs.iter().enumerate() {
         let shape: Vec<usize> = s
             .get("shape")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .ok_or_else(|| anyhow!("tensor {i}: missing shape"))?
             .iter()
-            .map(|v| v.as_usize().unwrap())
-            .collect();
-        let n: usize = shape.iter().product();
-        match s.get("dtype").and_then(Json::as_str) {
-            Some("float32") => {
-                let mut data = vec![0f32; n];
-                let mut buf = vec![0u8; 4 * n];
-                f.read_exact(&mut buf)?;
-                for (i, c) in buf.chunks_exact(4).enumerate() {
-                    data[i] = f32::from_le_bytes(c.try_into().unwrap());
-                }
-                out.push(HostTensor::f32(shape, data));
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("tensor {i}: bad shape entry")))
+            .collect::<Result<_>>()?;
+        let n = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| anyhow!("tensor {i}: shape product overflows"))?;
+        let dtype = s
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor {i}: missing dtype"))?
+            .to_string();
+        if dtype != "float32" && dtype != "int32" {
+            bail!("tensor {i}: bad dtype {dtype:?}");
+        }
+        let crc = s
+            .get("crc32")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("tensor {i}: missing crc32"))? as u32;
+        payload = payload
+            .checked_add(4 * n as u64)
+            .ok_or_else(|| anyhow!("tensor sizes overflow"))?;
+        parsed.push((shape, dtype, crc, n));
+    }
+    let expected = 20 + hlen + payload;
+    if file_len != expected {
+        bail!(
+            "checkpoint size mismatch: file is {file_len} bytes, header describes {expected} \
+             (truncated or corrupt)"
+        );
+    }
+
+    let mut tensors = Vec::with_capacity(parsed.len());
+    for (i, (shape, dtype, want_crc, n)) in parsed.into_iter().enumerate() {
+        let mut buf = vec![0u8; 4 * n];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("tensor {i}: short payload read"))?;
+        let got_crc = crc32(&buf);
+        if got_crc != want_crc {
+            bail!(
+                "tensor {i}: CRC32 mismatch (stored {want_crc:#010x}, computed {got_crc:#010x}) \
+                 — checkpoint payload corrupt"
+            );
+        }
+        match dtype.as_str() {
+            "float32" => {
+                let data = buf
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                tensors.push(HostTensor::f32(shape, data));
             }
-            Some("int32") => {
-                let mut data = vec![0i32; n];
-                let mut buf = vec![0u8; 4 * n];
-                f.read_exact(&mut buf)?;
-                for (i, c) in buf.chunks_exact(4).enumerate() {
-                    data[i] = i32::from_le_bytes(c.try_into().unwrap());
-                }
-                out.push(HostTensor::i32(shape, data));
+            _ => {
+                let data = buf
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                tensors.push(HostTensor::i32(shape, data));
             }
-            other => bail!("bad dtype {other:?}"),
         }
     }
-    Ok(out)
+
+    let rng = match header.get("rng") {
+        None | Some(Json::Null) => None,
+        Some(r) => {
+            let engine = r
+                .get("engine")
+                .and_then(Json::as_str)
+                .and_then(NoiseEngine::from_name)
+                .ok_or_else(|| anyhow!("checkpoint rng: bad engine tag"))?;
+            let words: Vec<u32> = r
+                .get("words")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("checkpoint rng: missing words"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|&x| (0.0..=u32::MAX as f64).contains(&x) && x.fract() == 0.0)
+                        .map(|x| x as u32)
+                        .ok_or_else(|| anyhow!("checkpoint rng: bad state word"))
+                })
+                .collect::<Result<_>>()?;
+            let state = RngState { engine, words };
+            // Validate now so a corrupt stream state is a load error, not
+            // a surprise at resume time.
+            state.restore()?;
+            Some(state)
+        }
+    };
+
+    Ok(Checkpoint { step, tensors, rng })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::NoiseSource;
 
-    #[test]
-    fn roundtrip() {
-        let dir = std::env::temp_dir().join("luq_ckpt_test");
-        let path = dir.join("t.ckpt");
-        let tensors = vec![
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("luq_ckpt_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_tensors() -> Vec<HostTensor> {
+        vec![
             HostTensor::f32(vec![2, 3], vec![1., -2., 3., 4.5, 5., 6.]),
             HostTensor::i32(vec![4], vec![7, -8, 9, 10]),
             HostTensor::scalar_f32(0.25),
-        ];
+        ]
+    }
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // The canonical IEEE CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn legacy_roundtrip() {
+        let dir = tmpdir("legacy");
+        let path = dir.join("t.ckpt");
+        let tensors = sample_tensors();
         save(&path, &tensors).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back.len(), 3);
@@ -135,12 +498,170 @@ mod tests {
     }
 
     #[test]
-    fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("luq_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.ckpt");
-        std::fs::write(&path, b"not a checkpoint").unwrap();
-        assert!(load(&path).is_err());
+    fn full_roundtrip_with_step_and_rng_both_engines() {
+        let dir = tmpdir("full");
+        for engine in [NoiseEngine::Xoshiro, NoiseEngine::Philox] {
+            let path = dir.join(format!("{}.ckpt", engine.name()));
+            let mut rng = engine.seed_rng(0xD00D);
+            for _ in 0..9 {
+                NoiseSource::next_u64(&mut rng);
+            }
+            let ckpt = Checkpoint::new(421, sample_tensors()).with_rng(&rng);
+            ckpt.save(&path).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(back.step, 421);
+            assert_eq!(back.tensors.len(), 3);
+            // The restored generator continues the original stream
+            // bit-for-bit.
+            let mut restored = back.rng.as_ref().unwrap().restore().unwrap();
+            assert_eq!(restored.engine(), engine);
+            for _ in 0..32 {
+                assert_eq!(
+                    NoiseSource::next_u64(&mut rng),
+                    NoiseSource::next_u64(&mut restored)
+                );
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_and_overwrites_cleanly() {
+        let dir = tmpdir("atomic");
+        let path = dir.join("t.ckpt");
+        save(&path, &sample_tensors()).unwrap();
+        let ckpt = Checkpoint::new(7, vec![HostTensor::scalar_f32(1.5)]);
+        ckpt.save(&path).unwrap();
+        // No temp residue; destination holds the new contents.
+        assert!(!dir.join("t.ckpt.tmp").exists());
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 7);
+        assert_eq!(back.tensors.len(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_v1_and_truncation() {
+        let dir = tmpdir("reject");
+        let bad = dir.join("bad.ckpt");
+        std::fs::write(&bad, b"not a checkpoint").unwrap();
+        assert!(load(&bad).is_err());
+
+        // v1 magic gets a version-specific message, not a generic one.
+        let v1 = dir.join("v1.ckpt");
+        std::fs::write(&v1, b"LUQCKPT1rest").unwrap();
+        let err = format!("{:#}", load(&v1).unwrap_err());
+        assert!(err.contains("version 1"), "{err}");
+
+        // Truncation at every interesting boundary errors; no panics.
+        let good = dir.join("good.ckpt");
+        save(&good, &sample_tensors()).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        for cut in [0, 4, 8, 12, 20, bytes.len() / 2, bytes.len() - 1] {
+            let t = dir.join(format!("cut{cut}.ckpt"));
+            std::fs::write(&t, &bytes[..cut]).unwrap();
+            assert!(load(&t).is_err(), "cut at {cut} must fail to load");
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn payload_bit_flip_fails_crc() {
+        let dir = tmpdir("crc");
+        let path = dir.join("t.ckpt");
+        save(&path, &sample_tensors()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit in the last payload byte: size still matches, so
+        // only the CRC can catch it.
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("CRC32 mismatch"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn header_bit_flip_fails_header_crc() {
+        let dir = tmpdir("hcrc");
+        let path = dir.join("t.ckpt");
+        let ckpt = Checkpoint::new(421, sample_tensors());
+        ckpt.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Byte 20 is the first header byte (after magic + length + CRC):
+        // flip a bit inside the JSON — e.g. turning a digit of `step`
+        // into another digit would still parse, so only the header CRC
+        // can catch it.
+        bytes[24] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("header CRC32 mismatch"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn absurd_header_length_is_rejected_without_allocation() {
+        let dir = tmpdir("hlen");
+        let path = dir.join("t.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("sanity cap"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn retry_io_retries_then_succeeds_and_gives_up() {
+        let mut calls = 0;
+        let got = retry_io(3, Duration::from_millis(1), || {
+            calls += 1;
+            if calls < 3 {
+                Err(anyhow!("transient"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!((got, calls), (42, 3));
+
+        let mut calls = 0;
+        let err: Result<()> = retry_io(2, Duration::from_millis(1), || {
+            calls += 1;
+            Err(anyhow!("permanent"))
+        });
+        assert!(err.is_err());
+        assert_eq!(calls, 2);
+    }
+
+    #[test]
+    fn save_with_retry_writes_a_loadable_checkpoint() {
+        let dir = tmpdir("retrysave");
+        let path = dir.join("t.ckpt");
+        let ckpt = Checkpoint::new(3, sample_tensors());
+        save_with_retry(&ckpt, &path, 3, Duration::from_millis(1)).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 3);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn nan_payloads_roundtrip_bitwise() {
+        // Poisoned tensors must survive checkpointing bit-exactly — the
+        // fault-injection suite depends on NaN payloads being preserved.
+        let dir = tmpdir("nan");
+        let path = dir.join("t.ckpt");
+        let t = vec![HostTensor::f32(
+            vec![3],
+            vec![f32::NAN, f32::INFINITY, -0.0],
+        )];
+        save(&path, &t).unwrap();
+        let back = load(&path).unwrap();
+        let a = t[0].as_f32().unwrap();
+        let b = back[0].as_f32().unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 }

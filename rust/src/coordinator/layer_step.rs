@@ -439,6 +439,110 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
     }
 }
 
+/// The fp32 reference layer step: the same three GEMMs as
+/// [`QuantizedLayerStep`] — `Y = A·Wᵀ`, `dXᵀ = Wᵀ·Gᵀ`, `dWᵀ = Aᵀ·Gᵀ` —
+/// with no quantization anywhere. This is the supervisor's escalation
+/// target (the paper's FNT fallback, automated): when a layer's 4-bit
+/// health sentinel trips, its steps run here until the layer is
+/// re-admitted. Output layout conventions match the quantized step
+/// exactly ([`Self::y`] `batch × d_out`, [`Self::dx_t`] `d_in × batch`,
+/// [`Self::dw_t`] `d_in × d_out`), so the trainer swaps pipelines without
+/// touching any downstream indexing. Deterministic, draws no RNG, and
+/// steady-state calls are allocation-free like the quantized step.
+#[derive(Default)]
+pub struct Fp32LayerStep {
+    shape: (usize, usize, usize),
+    y: Vec<f32>,
+    dx_t: Vec<f32>,
+    dw_t: Vec<f32>,
+}
+
+impl Fp32LayerStep {
+    pub fn new() -> Fp32LayerStep {
+        Fp32LayerStep::default()
+    }
+
+    /// Run one full-precision layer step. Operand shapes and output
+    /// conventions are identical to [`QuantizedLayerStep::step`].
+    pub fn step(
+        &mut self,
+        acts: &[f32],
+        weights: &[f32],
+        grads: &[f32],
+        batch: usize,
+        d_in: usize,
+        d_out: usize,
+    ) {
+        assert!(acts.len() >= batch * d_in, "activation tensor too short");
+        assert!(weights.len() >= d_out * d_in, "weight tensor too short");
+        assert!(grads.len() >= batch * d_out, "gradient tensor too short");
+        self.shape = (batch, d_in, d_out);
+
+        ensure_f32(&mut self.y, batch * d_out);
+        for b in 0..batch {
+            let a_row = &acts[b * d_in..b * d_in + d_in];
+            let y_row = &mut self.y[b * d_out..b * d_out + d_out];
+            for (o, y) in y_row.iter_mut().enumerate() {
+                let w_row = &weights[o * d_in..o * d_in + d_in];
+                let mut acc = 0.0f32;
+                for (a, w) in a_row.iter().zip(w_row.iter()) {
+                    acc += a * w;
+                }
+                *y = acc;
+            }
+        }
+
+        ensure_f32(&mut self.dx_t, d_in * batch);
+        for j in 0..d_in {
+            let row = &mut self.dx_t[j * batch..j * batch + batch];
+            for (b, dx) in row.iter_mut().enumerate() {
+                let g_row = &grads[b * d_out..b * d_out + d_out];
+                let mut acc = 0.0f32;
+                for (o, g) in g_row.iter().enumerate() {
+                    acc += g * weights[o * d_in + j];
+                }
+                *dx = acc;
+            }
+        }
+
+        ensure_f32(&mut self.dw_t, d_in * d_out);
+        for j in 0..d_in {
+            let row = &mut self.dw_t[j * d_out..j * d_out + d_out];
+            for dw in row.iter_mut() {
+                *dw = 0.0;
+            }
+            for b in 0..batch {
+                let a = acts[b * d_in + j];
+                let g_row = &grads[b * d_out..b * d_out + d_out];
+                for (o, dw) in row.iter_mut().enumerate() {
+                    *dw += g_row[o] * a;
+                }
+            }
+        }
+    }
+
+    /// Forward output of the last step, `batch × d_out`.
+    pub fn y(&self) -> &[f32] {
+        &self.y[..self.shape.0 * self.shape.2]
+    }
+
+    /// Input gradient of the last step, transposed: `d_in × batch`.
+    pub fn dx_t(&self) -> &[f32] {
+        &self.dx_t[..self.shape.1 * self.shape.0]
+    }
+
+    /// Weight gradient of the last step, transposed: `d_in × d_out`.
+    pub fn dw_t(&self) -> &[f32] {
+        &self.dw_t[..self.shape.1 * self.shape.2]
+    }
+
+    /// Buffer capacities (the allocation-free steady-state diagnostic,
+    /// mirroring [`QuantizedLayerStep::scratch_capacities`]).
+    pub fn scratch_capacities(&self) -> Vec<usize> {
+        vec![self.y.capacity(), self.dx_t.capacity(), self.dw_t.capacity()]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -941,6 +1045,49 @@ mod tests {
             xo_step.dx_t().iter().zip(dx.iter()).any(|(a, b)| a != b),
             "philox and xoshiro produced identical stochastic gradients"
         );
+    }
+
+    /// The fp32 reference step computes the exact three matmuls with the
+    /// quantized step's output layout conventions (checked against a
+    /// direct index-formula oracle), is deterministic, and reuses its
+    /// buffers after warm-up.
+    #[test]
+    fn fp32_reference_step_matches_naive_matmuls() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x5F);
+        let (batch, d_in, d_out) = (5usize, 9, 7);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let mut step = Fp32LayerStep::new();
+        step.step(&acts, &wts, &grads, batch, d_in, d_out);
+        for b in 0..batch {
+            for o in 0..d_out {
+                let want: f32 = (0..d_in).map(|j| acts[b * d_in + j] * wts[o * d_in + j]).sum();
+                assert_eq!(step.y()[b * d_out + o].to_bits(), want.to_bits(), "y[{b},{o}]");
+            }
+        }
+        for j in 0..d_in {
+            for b in 0..batch {
+                let want: f32 =
+                    (0..d_out).map(|o| grads[b * d_out + o] * wts[o * d_in + j]).sum();
+                assert_eq!(step.dx_t()[j * batch + b], want, "dx_t[{j},{b}]");
+            }
+        }
+        for j in 0..d_in {
+            for o in 0..d_out {
+                let want: f32 =
+                    (0..batch).map(|b| grads[b * d_out + o] * acts[b * d_in + j]).sum();
+                assert_eq!(step.dw_t()[j * d_out + o], want, "dw_t[{j},{o}]");
+            }
+        }
+        // Deterministic: a second run is bit-identical.
+        let mut again = Fp32LayerStep::new();
+        again.step(&acts, &wts, &grads, batch, d_in, d_out);
+        assert_eq!(step.y(), again.y());
+        // Allocation-free steady state, smaller shapes included.
+        let warmed = step.scratch_capacities();
+        step.step(&acts, &wts, &grads, batch, d_in, d_out);
+        assert_eq!(step.scratch_capacities(), warmed);
+        step.step(&acts, &wts, &grads, batch - 1, d_in - 2, d_out - 3);
+        assert_eq!(step.scratch_capacities(), warmed, "smaller shape reallocated");
     }
 
     /// `grad_max` is the defensive max of the two per-GEMM maxima.

@@ -11,9 +11,15 @@ pub mod experiments;
 pub mod layer_step;
 pub mod qgemm_path;
 pub mod schedule;
+pub mod supervisor;
 pub mod trainer;
 
-pub use layer_step::{ForwardFormat, LayerStepStats, QuantizedLayerStep};
+pub use checkpoint::{Checkpoint, RngState};
+pub use layer_step::{ForwardFormat, Fp32LayerStep, LayerStepStats, QuantizedLayerStep};
 pub use qgemm_path::QgemmPath;
 pub use schedule::{FntSchedule, LrSchedule, StepDecay};
-pub use trainer::{DataSource, RunResult, Trainer, TrainerOptions};
+pub use supervisor::{
+    EscalationEvent, StepPrecision, SupervisedLayerStep, SupervisedStepOutcome, Supervisor,
+    SupervisorPolicy, Transition,
+};
+pub use trainer::{DataSource, RunFault, RunResult, StepRecord, Trainer, TrainerOptions};

@@ -1,0 +1,665 @@
+//! The numerical-fault supervisor: per-layer health sentinels with a
+//! hysteresis escalation policy, and the supervised layer step that
+//! enforces it.
+//!
+//! The paper's answer to 4-bit failure is FNT — fine-tune the afflicted
+//! net in high precision, *manually, after the fact*. This module
+//! automates that fallback during the run. Each layer has a sentinel
+//! driven by the [`StepHealth`] verdicts of `quant::health`:
+//!
+//! ```text
+//!            fault                       window elapsed
+//!  Healthy ────────▶ Fallback (fp32, K steps) ──────────▶ Probation
+//!     ▲                    ▲       (fault restarts K)    (quantized,
+//!     │                    │ fault: window doubles,       M steps)
+//!     │                    └──────────────────────────────────┘
+//!     └─────────────── M healthy probation steps ("Cleared")
+//! ```
+//!
+//! Escalation is **hysteretic**: a layer that trips falls back to the
+//! fp32 reference step ([`Fp32LayerStep`]) for `K = fallback_steps`
+//! steps, is then re-admitted to its quantized [`ForwardFormat`] on
+//! probation, and only counts as healthy again after `M =
+//! probation_steps` clean quantized steps. A relapse during probation
+//! doubles the fallback window (capped at `max_fallback_steps`), so a
+//! persistently sick layer converges to running in fp32 instead of
+//! oscillating. Every transition is recorded as an [`EscalationEvent`]
+//! and surfaced in the trainer's `StepRecord`s.
+//!
+//! [`SupervisedLayerStep`] wraps a [`QuantizedLayerStep`] and a
+//! [`Fp32LayerStep`] behind one `step` call: it consults the sentinel
+//! for the step's precision, probes operands and outputs for non-finite
+//! values, assesses the per-GEMM [`QuantStats`][crate::quant::QuantStats],
+//! and (optionally) verifies the RNG draw-accounting contract — `Sawb`
+//! consumes exactly `batch` row fills of `d_out` then `d_out` row fills
+//! of `batch`; `Radix4Tpr` consumes nothing — flagging
+//! [`FaultClass::RngDesync`] when the stream moved by any other amount.
+
+use super::layer_step::{ForwardFormat, Fp32LayerStep, LayerStepStats, QuantizedLayerStep};
+use crate::quant::{FaultClass, HealthConfig, LogQuantConfig, StepHealth};
+use crate::rng::{NoiseSource, Xoshiro256};
+
+/// Which pipeline executes a layer's next step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPrecision {
+    /// The layer's configured 4-bit [`ForwardFormat`] pipeline.
+    Quantized,
+    /// The fp32 reference step (escalated — the automated FNT fallback).
+    Fp32,
+}
+
+/// The escalation policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorPolicy {
+    /// Detection thresholds fed to every assessment.
+    pub health: HealthConfig,
+    /// `K`: fp32 steps served after an escalation before re-admission.
+    pub fallback_steps: usize,
+    /// `M`: clean quantized steps on probation before a layer counts as
+    /// healthy again.
+    pub probation_steps: usize,
+    /// Cap for the doubling fallback window under repeated relapse.
+    pub max_fallback_steps: usize,
+    /// Verify the per-format RNG draw-accounting contract every step.
+    pub verify_draws: bool,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            health: HealthConfig::default(),
+            fallback_steps: 8,
+            probation_steps: 4,
+            max_fallback_steps: 64,
+            verify_draws: true,
+        }
+    }
+}
+
+/// A sentinel state change, kept in the supervisor's event log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transition {
+    /// Healthy → Fallback: the layer tripped and now runs fp32.
+    Escalated,
+    /// Probation → Fallback: tripped again; the window doubled.
+    Relapsed,
+    /// Fallback → Probation: window served, quantized again on watch.
+    Readmitted,
+    /// Probation → Healthy: sustained health, fully cleared.
+    Cleared,
+}
+
+/// One logged sentinel transition.
+#[derive(Clone, Debug)]
+pub struct EscalationEvent {
+    /// Trainer step at which the transition fired.
+    pub step: u64,
+    pub layer: usize,
+    pub transition: Transition,
+    /// The faults that drove it (empty for Readmitted/Cleared).
+    pub faults: Vec<FaultClass>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum SentinelState {
+    Healthy,
+    Fallback { remaining: usize },
+    Probation { remaining: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Sentinel {
+    state: SentinelState,
+    /// Current fallback window; doubles on relapse, resets on Cleared.
+    window: usize,
+}
+
+/// Per-layer sentinels + policy + event log. One instance per trainer.
+#[derive(Debug)]
+pub struct Supervisor {
+    policy: SupervisorPolicy,
+    sentinels: Vec<Sentinel>,
+    events: Vec<EscalationEvent>,
+}
+
+impl Supervisor {
+    pub fn new(n_layers: usize, policy: SupervisorPolicy) -> Supervisor {
+        assert!(policy.fallback_steps >= 1, "fallback window must be >= 1 step");
+        assert!(policy.probation_steps >= 1, "probation must be >= 1 step");
+        assert!(
+            policy.max_fallback_steps >= policy.fallback_steps,
+            "fallback window cap below the initial window"
+        );
+        Supervisor {
+            policy,
+            sentinels: vec![
+                Sentinel { state: SentinelState::Healthy, window: policy.fallback_steps };
+                n_layers
+            ],
+            events: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &SupervisorPolicy {
+        &self.policy
+    }
+
+    /// The precision the given layer's *next* step must run at.
+    pub fn precision(&self, layer: usize) -> StepPrecision {
+        match self.sentinels[layer].state {
+            SentinelState::Fallback { .. } => StepPrecision::Fp32,
+            _ => StepPrecision::Quantized,
+        }
+    }
+
+    /// Feed one step's verdict for `layer` into its sentinel. Returns the
+    /// transition this verdict caused, if any; transitions take effect at
+    /// the layer's next step.
+    pub fn observe(
+        &mut self,
+        layer: usize,
+        step: u64,
+        health: &StepHealth,
+    ) -> Option<Transition> {
+        let faulty = !health.is_healthy();
+        let s = &mut self.sentinels[layer];
+        let transition = match &mut s.state {
+            SentinelState::Healthy => faulty.then(|| {
+                s.state = SentinelState::Fallback { remaining: s.window };
+                Transition::Escalated
+            }),
+            SentinelState::Fallback { remaining } => {
+                if faulty {
+                    // The fp32 step saw a fault too (e.g. poisoned data):
+                    // restart the window rather than re-admit into it.
+                    *remaining = s.window;
+                    None
+                } else {
+                    *remaining -= 1;
+                    (*remaining == 0).then(|| {
+                        s.state = SentinelState::Probation {
+                            remaining: self.policy.probation_steps,
+                        };
+                        Transition::Readmitted
+                    })
+                }
+            }
+            SentinelState::Probation { remaining } => {
+                if faulty {
+                    s.window = (s.window * 2).min(self.policy.max_fallback_steps);
+                    s.state = SentinelState::Fallback { remaining: s.window };
+                    Some(Transition::Relapsed)
+                } else {
+                    *remaining -= 1;
+                    (*remaining == 0).then(|| {
+                        s.window = self.policy.fallback_steps;
+                        s.state = SentinelState::Healthy;
+                        Transition::Cleared
+                    })
+                }
+            }
+        };
+        if let Some(t) = transition {
+            self.events.push(EscalationEvent {
+                step,
+                layer,
+                transition: t,
+                faults: health.faults().to_vec(),
+            });
+        }
+        transition
+    }
+
+    /// Every transition so far, in firing order.
+    pub fn events(&self) -> &[EscalationEvent] {
+        &self.events
+    }
+
+    /// Number of layers currently escalated to fp32.
+    pub fn n_fallback(&self) -> usize {
+        self.sentinels
+            .iter()
+            .filter(|s| matches!(s.state, SentinelState::Fallback { .. }))
+            .count()
+    }
+
+    /// True when every layer is fully healthy (not escalated, not on
+    /// probation).
+    pub fn all_clear(&self) -> bool {
+        self.sentinels
+            .iter()
+            .all(|s| matches!(s.state, SentinelState::Healthy))
+    }
+}
+
+/// Outcome of one [`SupervisedLayerStep::step`] call.
+#[derive(Clone, Debug)]
+pub struct SupervisedStepOutcome {
+    /// The precision this step actually ran at.
+    pub precision: StepPrecision,
+    /// Per-GEMM stats — `None` when the step ran fp32 (nothing was
+    /// quantized).
+    pub stats: Option<LayerStepStats>,
+    /// The step's health verdict (what the sentinel saw).
+    pub health: StepHealth,
+    /// The sentinel transition this step triggered, if any.
+    pub transition: Option<Transition>,
+}
+
+/// A [`QuantizedLayerStep`] and its [`Fp32LayerStep`] escape hatch behind
+/// one supervised `step` call. Output accessors dispatch on the precision
+/// of the last step, with the quantized step's layout conventions either
+/// way.
+pub struct SupervisedLayerStep<R = Xoshiro256> {
+    quant: QuantizedLayerStep<R>,
+    fp32: Fp32LayerStep,
+    last_precision: StepPrecision,
+    /// The RNG position recorded after the previous step — the
+    /// between-steps desync detector.
+    expected_rng: Option<R>,
+    draw_buf: Vec<f32>,
+}
+
+impl<R: NoiseSource> SupervisedLayerStep<R> {
+    pub fn new(grad_cfg: LogQuantConfig, bits: u32) -> SupervisedLayerStep<R> {
+        Self::with_format(grad_cfg, bits, ForwardFormat::Sawb)
+    }
+
+    pub fn with_format(
+        grad_cfg: LogQuantConfig,
+        bits: u32,
+        format: ForwardFormat,
+    ) -> SupervisedLayerStep<R> {
+        SupervisedLayerStep {
+            quant: QuantizedLayerStep::with_format(grad_cfg, bits, format),
+            fp32: Fp32LayerStep::new(),
+            last_precision: StepPrecision::Quantized,
+            expected_rng: None,
+            draw_buf: Vec::new(),
+        }
+    }
+
+    /// The wrapped quantized step (e.g. to inspect its configuration).
+    pub fn quantized(&self) -> &QuantizedLayerStep<R> {
+        &self.quant
+    }
+
+    /// True when the streams of `a` and `b` are at the same position
+    /// (compared by one draw from clones; originals untouched).
+    fn same_position(a: &R, b: &R) -> bool {
+        a.clone().next_u64() == b.clone().next_u64()
+    }
+
+    /// Advance `rng` by exactly the draw contract of one quantized step:
+    /// `Sawb` stages `batch` row fills of `d_out` (dx quantization) then
+    /// `d_out` row fills of `batch` (dW quantization) — the row
+    /// granularity matters on block-based engines; `Radix4Tpr` draws
+    /// nothing.
+    fn advance_by_contract(&mut self, rng: &mut R, batch: usize, d_out: usize) {
+        if self.quant.format == ForwardFormat::Sawb {
+            let need = batch.max(d_out);
+            if self.draw_buf.len() < need {
+                self.draw_buf.resize(need, 0.0);
+            }
+            for _ in 0..batch {
+                rng.fill_uniform(&mut self.draw_buf[..d_out]);
+            }
+            for _ in 0..d_out {
+                rng.fill_uniform(&mut self.draw_buf[..batch]);
+            }
+        }
+    }
+
+    /// Run one supervised layer step. Arguments mirror
+    /// [`QuantizedLayerStep::step`]; `layer`/`step_idx` address the
+    /// sentinel and tag any logged event. The verdict is assessed from
+    /// operand probes, output probes, per-GEMM stats, and the RNG
+    /// draw-accounting check, then fed to the sentinel — an escalation
+    /// changes the precision of the layer's *next* step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        supervisor: &mut Supervisor,
+        layer: usize,
+        step_idx: u64,
+        acts: &[f32],
+        weights: &[f32],
+        grads: &[f32],
+        batch: usize,
+        d_in: usize,
+        d_out: usize,
+        rng: &mut R,
+        n_threads: usize,
+    ) -> SupervisedStepOutcome {
+        let policy = *supervisor.policy();
+        let precision = supervisor.precision(layer);
+        let mut health = StepHealth::healthy();
+
+        // Between-steps desync check: the caller's stream must still be
+        // where the previous step left it.
+        if policy.verify_draws {
+            if let Some(expected) = &self.expected_rng {
+                if !Self::same_position(expected, rng) {
+                    health.note(FaultClass::RngDesync);
+                }
+            }
+        }
+
+        // Operand probes: quantization can silently squash NaN/Inf into
+        // finite codes, so the inputs — not just the outputs — are probed.
+        policy.health.assess_slice(&acts[..batch * d_in], &mut health);
+        policy.health.assess_slice(&weights[..d_out * d_in], &mut health);
+        policy.health.assess_slice(&grads[..batch * d_out], &mut health);
+
+        let stats = match precision {
+            StepPrecision::Quantized => {
+                let pre = policy.verify_draws.then(|| rng.clone());
+                let stats =
+                    self.quant.step(acts, weights, grads, batch, d_in, d_out, rng, n_threads);
+                if let Some(mut pre) = pre {
+                    // In-step contract check: the stream moved by exactly
+                    // the format's documented draw count.
+                    self.advance_by_contract(&mut pre, batch, d_out);
+                    if !Self::same_position(&pre, rng) {
+                        health.note(FaultClass::RngDesync);
+                    }
+                }
+                policy.health.assess_gemm(&stats.dx, &mut health);
+                policy.health.assess_gemm(&stats.dw, &mut health);
+                policy.health.assess_slice(self.quant.y(), &mut health);
+                policy.health.assess_slice(self.quant.dx_t(), &mut health);
+                policy.health.assess_slice(self.quant.dw_t(), &mut health);
+                Some(stats)
+            }
+            StepPrecision::Fp32 => {
+                self.fp32.step(acts, weights, grads, batch, d_in, d_out);
+                policy.health.assess_slice(self.fp32.y(), &mut health);
+                policy.health.assess_slice(self.fp32.dx_t(), &mut health);
+                policy.health.assess_slice(self.fp32.dw_t(), &mut health);
+                None
+            }
+        };
+        self.last_precision = precision;
+        if policy.verify_draws {
+            self.expected_rng = Some(rng.clone());
+        }
+
+        let transition = supervisor.observe(layer, step_idx, &health);
+        SupervisedStepOutcome { precision, stats, health, transition }
+    }
+
+    /// Forward output of the last step, `batch × d_out`.
+    pub fn y(&self) -> &[f32] {
+        match self.last_precision {
+            StepPrecision::Quantized => self.quant.y(),
+            StepPrecision::Fp32 => self.fp32.y(),
+        }
+    }
+
+    /// Input gradient of the last step, transposed: `d_in × batch`.
+    pub fn dx_t(&self) -> &[f32] {
+        match self.last_precision {
+            StepPrecision::Quantized => self.quant.dx_t(),
+            StepPrecision::Fp32 => self.fp32.dx_t(),
+        }
+    }
+
+    /// Weight gradient of the last step, transposed: `d_in × d_out`.
+    pub fn dw_t(&self) -> &[f32] {
+        match self.last_precision {
+            StepPrecision::Quantized => self.quant.dw_t(),
+            StepPrecision::Fp32 => self.fp32.dw_t(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::LogFormat;
+
+    const BITS: u32 = 4;
+
+    fn policy(k: usize, m: usize) -> SupervisorPolicy {
+        SupervisorPolicy {
+            fallback_steps: k,
+            probation_steps: m,
+            max_fallback_steps: 16,
+            ..SupervisorPolicy::default()
+        }
+    }
+
+    fn faulty() -> StepHealth {
+        let mut h = StepHealth::healthy();
+        h.note(FaultClass::NonFinite);
+        h
+    }
+
+    #[test]
+    fn sentinel_walks_escalate_readmit_clear() {
+        let mut sup = Supervisor::new(2, policy(2, 2));
+        assert_eq!(sup.precision(0), StepPrecision::Quantized);
+        assert!(sup.all_clear());
+
+        // Fault at step 0: escalate. The other layer is untouched.
+        assert_eq!(sup.observe(0, 0, &faulty()), Some(Transition::Escalated));
+        assert_eq!(sup.precision(0), StepPrecision::Fp32);
+        assert_eq!(sup.precision(1), StepPrecision::Quantized);
+        assert_eq!(sup.n_fallback(), 1);
+
+        // Two healthy fp32 steps serve the window: readmitted on probation.
+        assert_eq!(sup.observe(0, 1, &StepHealth::healthy()), None);
+        assert_eq!(
+            sup.observe(0, 2, &StepHealth::healthy()),
+            Some(Transition::Readmitted)
+        );
+        assert_eq!(sup.precision(0), StepPrecision::Quantized);
+        assert!(!sup.all_clear(), "probation is not clear");
+
+        // Two healthy probation steps: cleared.
+        assert_eq!(sup.observe(0, 3, &StepHealth::healthy()), None);
+        assert_eq!(
+            sup.observe(0, 4, &StepHealth::healthy()),
+            Some(Transition::Cleared)
+        );
+        assert!(sup.all_clear());
+
+        let kinds: Vec<Transition> = sup.events().iter().map(|e| e.transition).collect();
+        assert_eq!(
+            kinds,
+            vec![Transition::Escalated, Transition::Readmitted, Transition::Cleared]
+        );
+        assert_eq!(sup.events()[0].faults, vec![FaultClass::NonFinite]);
+        assert_eq!((sup.events()[0].step, sup.events()[0].layer), (0, 0));
+    }
+
+    #[test]
+    fn relapse_doubles_window_up_to_cap() {
+        let mut sup = Supervisor::new(1, policy(2, 1));
+        // Escalate, serve window (2), readmit, relapse -> window 4.
+        sup.observe(0, 0, &faulty());
+        sup.observe(0, 1, &StepHealth::healthy());
+        sup.observe(0, 2, &StepHealth::healthy());
+        assert_eq!(sup.observe(0, 3, &faulty()), Some(Transition::Relapsed));
+        // Window is now 4: three healthy steps don't readmit, the fourth
+        // does.
+        for s in 4..7 {
+            assert_eq!(sup.observe(0, s, &StepHealth::healthy()), None);
+        }
+        assert_eq!(
+            sup.observe(0, 7, &StepHealth::healthy()),
+            Some(Transition::Readmitted)
+        );
+        // Relapse again and again: the window saturates at the cap (16).
+        assert_eq!(sup.observe(0, 8, &faulty()), Some(Transition::Relapsed)); // 8
+        for s in 9..17 {
+            sup.observe(0, s, &StepHealth::healthy());
+        }
+        sup.observe(0, 17, &faulty()); // probation relapse -> 16
+        let mut healthy_needed = 0;
+        loop {
+            let t = sup.observe(0, 18 + healthy_needed, &StepHealth::healthy());
+            healthy_needed += 1;
+            if t == Some(Transition::Readmitted) {
+                break;
+            }
+            assert!(healthy_needed <= 16, "window exceeded the cap");
+        }
+        assert_eq!(healthy_needed, 16);
+        // Clearing resets the window to the configured K.
+        sup.observe(0, 40, &StepHealth::healthy()); // probation (m=1) -> Cleared
+        sup.observe(0, 41, &faulty()); // fresh escalation
+        assert_eq!(sup.observe(0, 42, &StepHealth::healthy()), None);
+        assert_eq!(
+            sup.observe(0, 43, &StepHealth::healthy()),
+            Some(Transition::Readmitted),
+            "cleared layer must escalate with the base window again"
+        );
+    }
+
+    #[test]
+    fn fault_during_fallback_restarts_the_window() {
+        let mut sup = Supervisor::new(1, policy(2, 1));
+        sup.observe(0, 0, &faulty());
+        sup.observe(0, 1, &StepHealth::healthy()); // remaining 1
+        sup.observe(0, 2, &faulty()); // restart: remaining 2
+        assert_eq!(sup.observe(0, 3, &StepHealth::healthy()), None);
+        assert_eq!(
+            sup.observe(0, 4, &StepHealth::healthy()),
+            Some(Transition::Readmitted)
+        );
+    }
+
+    fn random_layer(
+        rng: &mut Xoshiro256,
+        batch: usize,
+        d_in: usize,
+        d_out: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let acts = (0..batch * d_in).map(|_| rng.normal_ms_f32(0.0, 1.2)).collect();
+        let wts = (0..d_out * d_in).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+        let grads = (0..batch * d_out)
+            .map(|_| rng.signed_lognormal_f32(0.0, 2.0))
+            .collect();
+        (acts, wts, grads)
+    }
+
+    /// A healthy supervised run stays quantized and is bit-identical to
+    /// the bare QuantizedLayerStep on the same stream — supervision is
+    /// observation-only until something trips.
+    #[test]
+    fn healthy_supervised_step_is_bitwise_transparent() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x60);
+        let (batch, d_in, d_out) = (6usize, 10, 7);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+            let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+            let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+            let mut sstep: SupervisedLayerStep =
+                SupervisedLayerStep::with_format(cfg, BITS, format);
+            let mut bare = QuantizedLayerStep::with_format(cfg, BITS, format);
+            let mut rng_a = Xoshiro256::seed_from_u64(0xA5);
+            let mut rng_b = Xoshiro256::seed_from_u64(0xA5);
+            for step_idx in 0..4u64 {
+                let out = sstep.step(
+                    &mut sup, 0, step_idx, &acts, &wts, &grads, batch, d_in, d_out, &mut rng_a,
+                    2,
+                );
+                let st = bare.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng_b, 2);
+                assert_eq!(out.precision, StepPrecision::Quantized, "{format:?}");
+                assert!(out.health.is_healthy(), "{format:?}: {:?}", out.health);
+                assert_eq!(out.transition, None);
+                let got = out.stats.unwrap();
+                assert_eq!(got.dx.alpha.to_bits(), st.dx.alpha.to_bits());
+                for (x, y) in sstep.y().iter().zip(bare.y().iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{format:?} y");
+                }
+                for (x, y) in sstep.dx_t().iter().zip(bare.dx_t().iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{format:?} dx");
+                }
+                for (x, y) in sstep.dw_t().iter().zip(bare.dw_t().iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{format:?} dw");
+                }
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{format:?} stream");
+            }
+            assert!(sup.all_clear());
+            assert!(sup.events().is_empty());
+        }
+    }
+
+    /// NaN-poisoned gradients are detected within the same step, the
+    /// layer escalates to fp32 (whose outputs match the reference step),
+    /// and once the data heals the layer walks fallback → probation →
+    /// cleared.
+    #[test]
+    fn poisoned_grads_escalate_then_recover() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x61);
+        let (batch, d_in, d_out) = (5usize, 8, 6);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let mut sup = Supervisor::new(1, policy(2, 2));
+        let mut sstep: SupervisedLayerStep = SupervisedLayerStep::new(cfg, BITS);
+        let mut rng = Xoshiro256::seed_from_u64(0xB7);
+
+        let mut poisoned = grads.clone();
+        poisoned[3] = f32::NAN;
+        let out = sstep.step(
+            &mut sup, 0, 0, &acts, &wts, &poisoned, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert_eq!(out.health.worst(), Some(FaultClass::NonFinite));
+        assert_eq!(out.transition, Some(Transition::Escalated));
+        assert_eq!(out.precision, StepPrecision::Quantized, "detection is same-step");
+
+        // Next step runs fp32 and matches the reference pipeline.
+        let out = sstep.step(
+            &mut sup, 0, 1, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert_eq!(out.precision, StepPrecision::Fp32);
+        assert!(out.stats.is_none());
+        let mut reference = Fp32LayerStep::new();
+        reference.step(&acts, &wts, &grads, batch, d_in, d_out);
+        assert_eq!(sstep.y(), reference.y());
+        assert_eq!(sstep.dx_t(), reference.dx_t());
+        assert_eq!(sstep.dw_t(), reference.dw_t());
+
+        // Serve the window, probation, and clearance on healthy data.
+        let out = sstep.step(
+            &mut sup, 0, 2, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert_eq!(out.transition, Some(Transition::Readmitted));
+        let out = sstep.step(
+            &mut sup, 0, 3, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert_eq!(out.precision, StepPrecision::Quantized);
+        assert_eq!(out.transition, None);
+        let out = sstep.step(
+            &mut sup, 0, 4, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert_eq!(out.transition, Some(Transition::Cleared));
+        assert!(sup.all_clear());
+    }
+
+    /// An externally desynced RNG stream (an extra draw between steps) is
+    /// flagged as `RngDesync` on the very next step.
+    #[test]
+    fn external_rng_desync_is_detected() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x62);
+        let (batch, d_in, d_out) = (4usize, 6, 5);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+        let mut sstep: SupervisedLayerStep = SupervisedLayerStep::new(cfg, BITS);
+        let mut rng = Xoshiro256::seed_from_u64(0xC3);
+        let out = sstep.step(
+            &mut sup, 0, 0, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert!(out.health.is_healthy());
+        // Injected fault: something else consumes a draw from the stream.
+        rng.next_u64();
+        let out = sstep.step(
+            &mut sup, 0, 1, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert!(out.health.faults().contains(&FaultClass::RngDesync));
+        assert_eq!(out.transition, Some(Transition::Escalated));
+    }
+}

@@ -4,8 +4,11 @@
 use crate::coordinator::layer_step::{ForwardFormat, LayerStepStats, QuantizedLayerStep};
 use crate::coordinator::qgemm_path::QgemmPath;
 use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::supervisor::{
+    StepPrecision, SupervisedLayerStep, Supervisor, SupervisorPolicy,
+};
 use crate::data::{CorpusConfig, ImageDataset, ImagesConfig, TokenCorpus};
-use crate::quant::{LogFormat, LogQuantConfig};
+use crate::quant::{FaultClass, LogFormat, LogQuantConfig, StepHealth};
 use crate::rng::{EngineRng, NoiseBank, NoiseEngine, NoiseSource, Xoshiro256};
 use crate::runtime::{Engine, Executable, HostTensor};
 use crate::stats::HindsightMax;
@@ -62,6 +65,31 @@ fn eval_reduce(
         (tot_loss / n_batches as f64) as f32,
         (tot_correct / tot_items) as f32,
     ))
+}
+
+/// Fault verdict for one artifact train step, from its scalar outputs:
+/// a non-finite loss/correct-count or any non-finite reported gradient
+/// max is the canonical 4-bit divergence signature.
+fn step_fault(loss: f32, correct: f32, maxes: &[f32]) -> Option<FaultClass> {
+    let mut health = StepHealth::healthy();
+    if !loss.is_finite() || !correct.is_finite() {
+        health.note(FaultClass::NonFinite);
+    }
+    if maxes.iter().any(|m| !m.is_finite()) {
+        health.note(FaultClass::NonFinite);
+    }
+    health.worst()
+}
+
+/// The record to headline a run with: the last *finite* one when the run
+/// faulted (the faulted step's loss is NaN by definition), the plain last
+/// otherwise.
+fn last_finite_record(history: &[StepRecord]) -> Option<&StepRecord> {
+    history
+        .iter()
+        .rev()
+        .find(|r| r.loss.is_finite())
+        .or_else(|| history.last())
 }
 
 /// Synthetic data source matching a model profile (DESIGN.md §4).
@@ -124,6 +152,19 @@ pub struct StepRecord {
     pub train_acc: f32,
     /// Mean measured gradient max across quantized layers.
     pub mean_grad_max: f32,
+    /// Most severe numerical fault detected this step, if any (non-finite
+    /// loss, non-finite reported gradient maxes).
+    pub fault: Option<FaultClass>,
+    /// Number of layers the supervisor had escalated to fp32 when this
+    /// step was observed.
+    pub fp32_layers: usize,
+}
+
+/// The terminal fault of a run: which step tripped, and on what.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunFault {
+    pub step: usize,
+    pub class: FaultClass,
 }
 
 /// Final result of a run (feeds the experiment tables).
@@ -136,6 +177,10 @@ pub struct RunResult {
     /// (step, hindsight estimate, measured max) traces per layer
     /// (Fig. 6 / Table 3 diagnostics), recorded when hindsight is on.
     pub hindsight_trace: Vec<Vec<(usize, f32, f32)>>,
+    /// The fault that terminated the run, if one did. Divergence is a
+    /// *result* for the naive-FP4 ablations — it must come back labeled,
+    /// not as a garbage eval number.
+    pub fault: Option<RunFault>,
 }
 
 #[derive(Clone, Debug)]
@@ -159,6 +204,15 @@ pub struct TrainerOptions {
     /// Xoshiro-typed `Trainer::quantized_layer_step` ignores this
     /// option by construction — its RNG is caller-supplied.
     pub noise_engine: NoiseEngine,
+    /// Numerical-fault supervision. `Some(policy)` arms per-layer health
+    /// sentinels: [`Trainer::observe_layer_step`] feeds each host layer
+    /// step's [`QuantStats`][crate::quant::QuantStats] through the
+    /// detector, and a layer that trips is escalated to the fp32
+    /// reference step for the policy's fallback window (the automated
+    /// FNT fallback) — consult [`Trainer::layer_precision`] before
+    /// building each step. `None` (the default) keeps the historical
+    /// unsupervised behavior.
+    pub supervisor: Option<SupervisorPolicy>,
 }
 
 impl Default for TrainerOptions {
@@ -170,6 +224,7 @@ impl Default for TrainerOptions {
             noise_reuse: 1,
             record_hindsight: false,
             noise_engine: NoiseEngine::Xoshiro,
+            supervisor: None,
         }
     }
 }
@@ -191,6 +246,12 @@ pub struct Trainer {
     pub step: usize,
     pub history: Vec<StepRecord>,
     pub hindsight_trace: Vec<Vec<(usize, f32, f32)>>,
+    /// Armed when `TrainerOptions::supervisor` is set: one sentinel per
+    /// quantized layer.
+    supervisor: Option<Supervisor>,
+    /// The terminal fault of the run, recorded by [`Self::run`] /
+    /// [`Self::train_step`] when a step trips.
+    pub fault: Option<RunFault>,
 }
 
 impl Trainer {
@@ -263,6 +324,7 @@ impl Trainer {
             .map(|_| HindsightMax::new(opts.hindsight_eta))
             .collect();
         let n_qlayers = meta.n_qlayers;
+        let supervisor = opts.supervisor.map(|p| Supervisor::new(n_qlayers, p));
         Ok(Trainer {
             train,
             eval,
@@ -276,6 +338,8 @@ impl Trainer {
             step: 0,
             history: Vec::new(),
             hindsight_trace: vec![Vec::new(); n_qlayers],
+            supervisor,
+            fault: None,
         })
     }
 
@@ -336,7 +400,12 @@ impl Trainer {
             if self.opts.record_hindsight {
                 self.hindsight_trace[i].push((self.step, h.estimate().unwrap_or(0.0), m));
             }
-            h.observe(m);
+            // A non-finite reported max must not poison the Eq. 24
+            // tracker: the estimate would stay NaN for the rest of the
+            // run even after the layer recovers.
+            if m.is_finite() {
+                h.observe(m);
+            }
             mean_max += m / q.max(1) as f32;
         }
 
@@ -344,12 +413,18 @@ impl Trainer {
             DataSource::Images(_) => batch as f32,
             DataSource::Corpus(_) => (batch * meta.model.seq_len) as f32,
         };
+        let fault = step_fault(loss, correct, &maxes);
+        if let (Some(class), None) = (fault, self.fault) {
+            self.fault = Some(RunFault { step: self.step, class });
+        }
         let rec = StepRecord {
             step: self.step,
             lr,
             loss,
             train_acc: correct / denom,
             mean_grad_max: mean_max,
+            fault,
+            fp32_layers: self.supervisor.as_ref().map_or(0, |s| s.n_fallback()),
         };
         self.step += 1;
         self.history.push(rec);
@@ -469,14 +544,58 @@ impl Trainer {
 
     /// Feed one host layer step's measured gradient max into layer
     /// `layer`'s hindsight tracker (Eq. 24) — the host-path mirror of the
-    /// per-step `maxes` outputs the train artifact reports.
+    /// per-step `maxes` outputs the train artifact reports. When the
+    /// trainer is supervised, the same stats are assessed into a health
+    /// verdict and fed to the layer's sentinel, so a host-path fault
+    /// escalates the layer exactly like a supervised step would.
     pub fn observe_layer_step(&mut self, layer: usize, stats: &LayerStepStats) {
         assert!(
             layer < self.hindsight.len(),
             "layer {layer} out of range (artifact has {} quantized layers)",
             self.hindsight.len()
         );
-        self.hindsight[layer].observe(stats.grad_max());
+        let grad_max = stats.grad_max();
+        if grad_max.is_finite() {
+            self.hindsight[layer].observe(grad_max);
+        }
+        if let Some(sup) = &mut self.supervisor {
+            let mut health = StepHealth::healthy();
+            let cfg = sup.policy().health;
+            cfg.assess_gemm(&stats.dx, &mut health);
+            cfg.assess_gemm(&stats.dw, &mut health);
+            sup.observe(layer, self.step as u64, &health);
+        }
+    }
+
+    /// The precision the supervisor requires for layer `layer`'s next
+    /// host-side step ([`StepPrecision::Quantized`] when unsupervised).
+    pub fn layer_precision(&self, layer: usize) -> StepPrecision {
+        self.supervisor
+            .as_ref()
+            .map_or(StepPrecision::Quantized, |s| s.precision(layer))
+    }
+
+    /// The armed supervisor, if any (event log, fallback census).
+    pub fn supervisor(&self) -> Option<&Supervisor> {
+        self.supervisor.as_ref()
+    }
+
+    /// Mutable access for driving [`SupervisedLayerStep::step`], which
+    /// needs `&mut Supervisor` alongside the step object.
+    pub fn supervisor_mut(&mut self) -> Option<&mut Supervisor> {
+        self.supervisor.as_mut()
+    }
+
+    /// [`Self::quantized_layer_step_engine`] wrapped in the supervisor's
+    /// fp32 escape hatch: a [`SupervisedLayerStep`] on the trainer's
+    /// configured noise engine. Drive it with [`Self::supervisor_mut`]
+    /// and a generator from [`Self::layer_step_rng`].
+    pub fn supervised_layer_step_engine(
+        &self,
+        layer: usize,
+        format: ForwardFormat,
+    ) -> SupervisedLayerStep<EngineRng> {
+        SupervisedLayerStep::with_format(self.grad_cfg_for_layer(layer), 4, format)
     }
 
     /// Train for `steps` under a schedule, with optional progress logging.
@@ -488,10 +607,16 @@ impl Trainer {
     ) -> Result<()> {
         for s in 0..steps {
             let rec = self.train_step(schedule.lr(s))?;
-            if !rec.loss.is_finite() {
+            if let Some(class) = rec.fault {
                 // Divergence is a *result* for the naive-FP4 ablations,
-                // not an error; record and stop.
-                eprintln!("  step {}: loss diverged (NaN/inf), stopping run", rec.step);
+                // not an error; the fault is already recorded in
+                // `self.fault` (and the step's record) — stop stepping
+                // rather than burn the rest of the schedule on NaN.
+                eprintln!(
+                    "  step {}: numerical fault `{}`, stopping run",
+                    rec.step,
+                    class.label()
+                );
                 break;
             }
             if log_every > 0 && (s + 1) % log_every == 0 {
@@ -511,7 +636,10 @@ impl Trainer {
         let (eval_loss, eval_acc) = match &self.eval {
             Some(_) if eval_batches > 0 => self.evaluate(eval_batches)?,
             _ => {
-                let last = self.history.last();
+                // Fall back to the last *finite* record: a faulted run's
+                // final step is NaN by definition, and a NaN headline
+                // number hides the labeled fault right next to it.
+                let last = last_finite_record(&self.history);
                 (last.map_or(f32::NAN, |r| r.loss), last.map_or(0.0, |r| r.train_acc))
             }
         };
@@ -521,6 +649,7 @@ impl Trainer {
             eval_acc,
             history: self.history.clone(),
             hindsight_trace: self.hindsight_trace.clone(),
+            fault: self.fault,
         })
     }
 }
@@ -558,6 +687,54 @@ mod tests {
         let (vals, flag) = resolve_hindsight_inputs(true, &[]);
         assert!(vals.is_empty());
         assert_eq!(flag, 1.0);
+    }
+
+    fn rec(step: usize, loss: f32) -> StepRecord {
+        StepRecord {
+            step,
+            lr: 0.1,
+            loss,
+            train_acc: 0.5,
+            mean_grad_max: 1.0,
+            fault: step_fault(loss, 0.0, &[]),
+            fp32_layers: 0,
+        }
+    }
+
+    /// Satellite regression: a diverged step must come back *labeled* —
+    /// non-finite loss, correct-count, or any reported gradient max is a
+    /// `NonFinite` fault, and a healthy step is `None`.
+    #[test]
+    fn step_fault_labels_divergence() {
+        assert_eq!(step_fault(1.0, 3.0, &[0.5, 2.0]), None);
+        assert_eq!(step_fault(f32::NAN, 3.0, &[]), Some(FaultClass::NonFinite));
+        assert_eq!(
+            step_fault(f32::INFINITY, 3.0, &[]),
+            Some(FaultClass::NonFinite)
+        );
+        assert_eq!(step_fault(1.0, f32::NAN, &[]), Some(FaultClass::NonFinite));
+        assert_eq!(
+            step_fault(1.0, 3.0, &[0.5, f32::INFINITY]),
+            Some(FaultClass::NonFinite)
+        );
+    }
+
+    /// Satellite regression: a faulted run's headline numbers come from
+    /// the last *finite* step, not the NaN that terminated it.
+    #[test]
+    fn headline_record_skips_the_faulted_tail() {
+        let hist = vec![rec(0, 2.0), rec(1, 1.5), rec(2, f32::NAN)];
+        assert_eq!(last_finite_record(&hist).unwrap().step, 1);
+        // Healthy history: plain last.
+        let hist = vec![rec(0, 2.0), rec(1, 1.5)];
+        assert_eq!(last_finite_record(&hist).unwrap().step, 1);
+        // Degenerate: everything non-finite — fall back to the last
+        // record (its fault label is the informative part).
+        let hist = vec![rec(0, f32::NAN), rec(1, f32::NAN)];
+        let last = last_finite_record(&hist).unwrap();
+        assert_eq!(last.step, 1);
+        assert_eq!(last.fault, Some(FaultClass::NonFinite));
+        assert!(last_finite_record(&[]).is_none());
     }
 
     /// Satellite regression: a 0-batch eval must error, not return NaN.

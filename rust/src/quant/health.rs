@@ -1,0 +1,314 @@
+//! Per-GEMM / per-step numerical-health verdicts (the fault *detector* side
+//! of the supervisor loop; `coordinator::supervisor` is the *policy* side).
+//!
+//! The paper's recovery story for 4-bit failure is FNT fine-tuning — a
+//! manual, after-the-fact fallback. A production trainer needs the failure
+//! *detected while it happens*, at the granularity where it happens:
+//! per-layer, per-GEMM ("Scalable Methods for 8-bit Training" localizes
+//! precision failure exactly there). Every quantizing GEMM in this repo
+//! already emits a [`QuantStats`]; this module turns those numbers — plus
+//! cheap single-pass probes over raw f32 slices — into a [`StepHealth`]
+//! verdict listing the [`FaultClass`]es observed, which the trainer feeds
+//! to the supervisor's per-layer sentinels.
+//!
+//! `quant` must not depend on `coordinator`, so everything here is pure
+//! data-in/verdict-out; escalation policy (hysteresis, fallback windows)
+//! lives upstream.
+
+use super::QuantStats;
+
+/// The numerical-fault taxonomy the supervisor acts on. Ordered by
+/// severity: later variants are strictly worse than earlier ones, and
+/// [`StepHealth::worst`] reports the maximum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FaultClass {
+    /// `frac_underflow` above threshold: nearly every element lands below
+    /// the smallest representable magnitude, so the quantized tensor is
+    /// (stochastically) zero and the layer learns nothing.
+    UnderflowStorm,
+    /// `frac_clipped` above threshold: the scale collapsed relative to the
+    /// data and a large fraction of elements saturate at the top code —
+    /// the outlier-driven blow-up mode of Xi et al.
+    SaturationStorm,
+    /// A nonzero tensor produced a non-positive or non-finite scale:
+    /// α can no longer represent the data at all.
+    AlphaCollapse,
+    /// The RNG stream consumed a different number of draws than the format
+    /// contract specifies; downstream stochastic rounding is no longer
+    /// reproducible (detected by the supervisor's draw-accounting check).
+    RngDesync,
+    /// NaN or Inf observed in stats or in a probed activation/gradient
+    /// slice — the canonical 4-bit training failure.
+    NonFinite,
+    /// A checkpoint failed its integrity checks (bad magic, short read,
+    /// CRC mismatch). Reported by `coordinator::checkpoint` loads.
+    CheckpointCorrupt,
+}
+
+impl FaultClass {
+    /// Stable lower-case label for logs / JSON records.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultClass::UnderflowStorm => "underflow_storm",
+            FaultClass::SaturationStorm => "saturation_storm",
+            FaultClass::AlphaCollapse => "alpha_collapse",
+            FaultClass::RngDesync => "rng_desync",
+            FaultClass::NonFinite => "non_finite",
+            FaultClass::CheckpointCorrupt => "checkpoint_corrupt",
+        }
+    }
+}
+
+/// Detection thresholds. Defaults are deliberately loose: LUQ *by design*
+/// underflows most gradient elements (that is the point of the log format),
+/// so only near-total underflow or majority saturation is pathological.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// `frac_clipped` at or above this trips [`FaultClass::SaturationStorm`].
+    pub max_sat_frac: f32,
+    /// `frac_underflow` at or above this trips [`FaultClass::UnderflowStorm`].
+    pub max_underflow_frac: f32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            // LUQ clips nothing by construction (α = max|x|); SAWB clips a
+            // few percent on heavy-tailed data. Half the tensor saturating
+            // means the scale has lost the data.
+            max_sat_frac: 0.5,
+            // frac_underflow ~0.9 is *normal* for LUQ gradients; 0.999+
+            // means the quantized tensor is effectively all-zero.
+            max_underflow_frac: 0.999,
+        }
+    }
+}
+
+/// Single-pass probe over a raw f32 slice: non-finite census plus the
+/// largest finite magnitude. Cheap enough to run on every layer output.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SliceProbe {
+    /// Count of NaN/Inf elements.
+    pub nonfinite: usize,
+    /// Largest finite `|x|` (0 if the slice is empty or all non-finite).
+    pub max_abs: f32,
+}
+
+/// Probe a slice in one pass.
+pub fn probe_f32(xs: &[f32]) -> SliceProbe {
+    let mut p = SliceProbe::default();
+    for &x in xs {
+        if x.is_finite() {
+            p.max_abs = p.max_abs.max(x.abs());
+        } else {
+            p.nonfinite += 1;
+        }
+    }
+    p
+}
+
+/// The verdict for one layer step: the deduplicated, severity-sorted set of
+/// faults observed across its GEMMs and probed tensors.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StepHealth {
+    faults: Vec<FaultClass>,
+}
+
+impl StepHealth {
+    /// A verdict with no observations yet (healthy until noted otherwise).
+    pub fn healthy() -> StepHealth {
+        StepHealth::default()
+    }
+
+    /// Record a fault. Duplicates collapse; the set stays severity-sorted.
+    pub fn note(&mut self, fault: FaultClass) {
+        if let Err(pos) = self.faults.binary_search(&fault) {
+            self.faults.insert(pos, fault);
+        }
+    }
+
+    /// True when no fault has been noted.
+    pub fn is_healthy(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The most severe fault noted, if any.
+    pub fn worst(&self) -> Option<FaultClass> {
+        self.faults.last().copied()
+    }
+
+    /// All noted faults, ascending severity.
+    pub fn faults(&self) -> &[FaultClass] {
+        &self.faults
+    }
+
+    /// Fold another verdict into this one.
+    pub fn merge(&mut self, other: &StepHealth) {
+        for &f in &other.faults {
+            self.note(f);
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Assess one GEMM's [`QuantStats`] into `health`.
+    pub fn assess_gemm(&self, stats: &QuantStats, health: &mut StepHealth) {
+        if !stats.max_abs.is_finite()
+            || !stats.alpha.is_finite()
+            || !stats.frac_underflow.is_finite()
+            || !stats.frac_clipped.is_finite()
+        {
+            health.note(FaultClass::NonFinite);
+            return;
+        }
+        // A zero tensor legitimately has α = 0 under max-scaling; only a
+        // *nonzero* tensor with a degenerate scale is a collapse.
+        if stats.max_abs > 0.0 && stats.alpha <= 0.0 {
+            health.note(FaultClass::AlphaCollapse);
+        }
+        if stats.frac_clipped >= self.max_sat_frac {
+            health.note(FaultClass::SaturationStorm);
+        }
+        if stats.frac_underflow >= self.max_underflow_frac {
+            health.note(FaultClass::UnderflowStorm);
+        }
+    }
+
+    /// Assess a probed activation/gradient slice into `health`.
+    pub fn assess_probe(&self, probe: &SliceProbe, health: &mut StepHealth) {
+        if probe.nonfinite > 0 {
+            health.note(FaultClass::NonFinite);
+        }
+    }
+
+    /// Convenience: probe a raw slice and assess it in one call.
+    pub fn assess_slice(&self, xs: &[f32], health: &mut StepHealth) {
+        self.assess_probe(&probe_f32(xs), health);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(max_abs: f32, alpha: f32, under: f32, clip: f32) -> QuantStats {
+        QuantStats {
+            max_abs,
+            alpha,
+            frac_underflow: under,
+            frac_clipped: clip,
+        }
+    }
+
+    #[test]
+    fn healthy_stats_stay_healthy() {
+        let cfg = HealthConfig::default();
+        let mut h = StepHealth::healthy();
+        cfg.assess_gemm(&stats(1.0, 1.0, 0.9, 0.01), &mut h);
+        assert!(h.is_healthy());
+        assert_eq!(h.worst(), None);
+    }
+
+    #[test]
+    fn zero_tensor_zero_alpha_is_not_a_collapse() {
+        let cfg = HealthConfig::default();
+        let mut h = StepHealth::healthy();
+        cfg.assess_gemm(&stats(0.0, 0.0, 0.0, 0.0), &mut h);
+        assert!(h.is_healthy());
+    }
+
+    #[test]
+    fn nonzero_tensor_zero_alpha_is_a_collapse() {
+        let cfg = HealthConfig::default();
+        let mut h = StepHealth::healthy();
+        cfg.assess_gemm(&stats(3.0, 0.0, 0.0, 0.0), &mut h);
+        assert_eq!(h.worst(), Some(FaultClass::AlphaCollapse));
+    }
+
+    #[test]
+    fn nan_stats_trip_non_finite() {
+        let cfg = HealthConfig::default();
+        for bad in [
+            stats(f32::NAN, 1.0, 0.0, 0.0),
+            stats(1.0, f32::INFINITY, 0.0, 0.0),
+            stats(1.0, 1.0, f32::NAN, 0.0),
+            stats(1.0, 1.0, 0.0, f32::NAN),
+        ] {
+            let mut h = StepHealth::healthy();
+            cfg.assess_gemm(&bad, &mut h);
+            assert_eq!(h.worst(), Some(FaultClass::NonFinite), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn storms_trip_at_thresholds() {
+        let cfg = HealthConfig::default();
+        let mut h = StepHealth::healthy();
+        cfg.assess_gemm(&stats(1.0, 1.0, 0.0, 0.6), &mut h);
+        assert_eq!(h.faults(), &[FaultClass::SaturationStorm]);
+        let mut h = StepHealth::healthy();
+        cfg.assess_gemm(&stats(1.0, 1.0, 1.0, 0.0), &mut h);
+        assert_eq!(h.faults(), &[FaultClass::UnderflowStorm]);
+        // Just below threshold: healthy.
+        let mut h = StepHealth::healthy();
+        cfg.assess_gemm(&stats(1.0, 1.0, 0.99, 0.49), &mut h);
+        assert!(h.is_healthy());
+    }
+
+    #[test]
+    fn probe_counts_nonfinite_and_tracks_max() {
+        let p = probe_f32(&[1.0, -3.0, f32::NAN, f32::INFINITY, 2.0]);
+        assert_eq!(p.nonfinite, 2);
+        assert_eq!(p.max_abs, 3.0);
+        assert_eq!(probe_f32(&[]), SliceProbe::default());
+    }
+
+    #[test]
+    fn assess_slice_trips_on_poison() {
+        let cfg = HealthConfig::default();
+        let mut h = StepHealth::healthy();
+        cfg.assess_slice(&[0.0, 1.0, f32::NEG_INFINITY], &mut h);
+        assert_eq!(h.worst(), Some(FaultClass::NonFinite));
+        let mut h = StepHealth::healthy();
+        cfg.assess_slice(&[0.0, 1.0, -2.0], &mut h);
+        assert!(h.is_healthy());
+    }
+
+    #[test]
+    fn note_dedups_and_sorts_by_severity() {
+        let mut h = StepHealth::healthy();
+        h.note(FaultClass::NonFinite);
+        h.note(FaultClass::UnderflowStorm);
+        h.note(FaultClass::NonFinite);
+        h.note(FaultClass::SaturationStorm);
+        assert_eq!(
+            h.faults(),
+            &[
+                FaultClass::UnderflowStorm,
+                FaultClass::SaturationStorm,
+                FaultClass::NonFinite,
+            ]
+        );
+        assert_eq!(h.worst(), Some(FaultClass::NonFinite));
+    }
+
+    #[test]
+    fn merge_folds_verdicts() {
+        let mut a = StepHealth::healthy();
+        a.note(FaultClass::SaturationStorm);
+        let mut b = StepHealth::healthy();
+        b.note(FaultClass::NonFinite);
+        b.note(FaultClass::SaturationStorm);
+        a.merge(&b);
+        assert_eq!(
+            a.faults(),
+            &[FaultClass::SaturationStorm, FaultClass::NonFinite]
+        );
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(FaultClass::NonFinite.label(), "non_finite");
+        assert_eq!(FaultClass::CheckpointCorrupt.label(), "checkpoint_corrupt");
+    }
+}

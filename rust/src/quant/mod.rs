@@ -12,12 +12,14 @@
 //! | [`radix4`] | §2, A.3 | Ultra-low radix-4 FP4 + two-phase rounding baseline |
 //! | [`minifloat`] | A.4 | generic `[1,E,M]` codec (FP7 product format) |
 //! | [`analysis`] | §3/§4.1 | closed-form LUQ variance / expected MSE / SMP predictor |
+//! | [`health`] | §FNT | per-GEMM fault verdicts from `QuantStats` (supervisor input) |
 //!
 //! The same algorithms exist as Pallas kernels under `python/compile/
 //! kernels/`; `python/tests/test_cross_layer.py` pins both sides to shared
 //! test vectors so the rust substrate and the jax graph cannot drift apart.
 
 pub mod analysis;
+pub mod health;
 pub mod int_uniform;
 pub mod kernel;
 pub mod logfmt;
@@ -27,6 +29,7 @@ pub mod radix4;
 pub mod rounding;
 pub mod sawb;
 
+pub use health::{probe_f32, FaultClass, HealthConfig, SliceProbe, StepHealth};
 pub use int_uniform::{UniformQuantizer, UniformRounding};
 pub use kernel::{QuantScratch, CHUNK};
 pub use logfmt::LogFormat;

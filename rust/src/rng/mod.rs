@@ -220,6 +220,23 @@ impl NoiseEngine {
             NoiseEngine::Philox => EngineRng::Philox(Philox4x32::seed_from_u64(seed)),
         }
     }
+
+    /// Stable lower-case tag used in checkpoint headers.
+    pub fn name(self) -> &'static str {
+        match self {
+            NoiseEngine::Xoshiro => "xoshiro",
+            NoiseEngine::Philox => "philox",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn from_name(name: &str) -> Option<NoiseEngine> {
+        match name {
+            "xoshiro" => Some(NoiseEngine::Xoshiro),
+            "philox" => Some(NoiseEngine::Philox),
+            _ => None,
+        }
+    }
 }
 
 /// Runtime-dispatched noise source: one `match` per call into the
@@ -239,6 +256,58 @@ impl EngineRng {
         match self {
             EngineRng::Xoshiro(_) => NoiseEngine::Xoshiro,
             EngineRng::Philox(_) => NoiseEngine::Philox,
+        }
+    }
+
+    /// The generator state as little-endian u32 words, for checkpoint
+    /// serialization (u32s survive a JSON f64 round-trip exactly; u64s
+    /// would not). Xoshiro: 8 words (lo/hi per state word). Philox: 6
+    /// words (key then counter). Round-trips through
+    /// [`Self::from_state_words`] bit-exactly, stream position included.
+    pub fn state_words(&self) -> Vec<u32> {
+        match self {
+            EngineRng::Xoshiro(g) => g
+                .state()
+                .iter()
+                .flat_map(|&w| [w as u32, (w >> 32) as u32])
+                .collect(),
+            EngineRng::Philox(g) => {
+                let mut words = g.key().to_vec();
+                words.extend_from_slice(&g.counter());
+                words
+            }
+        }
+    }
+
+    /// Rebuild a generator from an engine tag and its
+    /// [`Self::state_words`]. Errors on a word count that does not match
+    /// the engine, or a state the engine rejects (corrupt checkpoint).
+    pub fn from_state_words(engine: NoiseEngine, words: &[u32]) -> Result<EngineRng, String> {
+        match engine {
+            NoiseEngine::Xoshiro => {
+                if words.len() != 8 {
+                    return Err(format!(
+                        "xoshiro state needs 8 u32 words, got {}",
+                        words.len()
+                    ));
+                }
+                let mut s = [0u64; 4];
+                for (i, w) in s.iter_mut().enumerate() {
+                    *w = (words[2 * i] as u64) | ((words[2 * i + 1] as u64) << 32);
+                }
+                Ok(EngineRng::Xoshiro(Xoshiro256::from_state(s)?))
+            }
+            NoiseEngine::Philox => {
+                if words.len() != 6 {
+                    return Err(format!(
+                        "philox state needs 6 u32 words, got {}",
+                        words.len()
+                    ));
+                }
+                let key = [words[0], words[1]];
+                let ctr = [words[2], words[3], words[4], words[5]];
+                Ok(EngineRng::Philox(Philox4x32::from_key_counter(key, ctr)))
+            }
         }
     }
 }
@@ -550,6 +619,37 @@ mod tests {
             assert_eq!(NoiseSource::next_u64(w), i.next_u64());
         }
         assert_eq!(NoiseSource::next_u64(&mut wrapped), inner.next_u64());
+    }
+
+    /// Checkpoint serialization: state words round-trip both engines
+    /// mid-stream, and the restored generator continues bit-for-bit.
+    #[test]
+    fn engine_rng_state_words_roundtrip_mid_stream() {
+        for engine in [NoiseEngine::Xoshiro, NoiseEngine::Philox] {
+            let mut rng = engine.seed_rng(0xFA_u64);
+            for _ in 0..13 {
+                NoiseSource::next_u64(&mut rng);
+            }
+            let words = rng.state_words();
+            let mut restored = EngineRng::from_state_words(engine, &words).unwrap();
+            assert_eq!(restored.engine(), engine);
+            for _ in 0..64 {
+                assert_eq!(
+                    NoiseSource::next_u64(&mut rng),
+                    NoiseSource::next_u64(&mut restored),
+                    "{engine:?}"
+                );
+            }
+            // Wrong word count for the engine is an error, not a panic.
+            assert!(EngineRng::from_state_words(engine, &words[1..]).is_err());
+        }
+        // The all-zero xoshiro state (a dead stream) is rejected.
+        assert!(EngineRng::from_state_words(NoiseEngine::Xoshiro, &[0u32; 8]).is_err());
+        // Engine tags round-trip.
+        for engine in [NoiseEngine::Xoshiro, NoiseEngine::Philox] {
+            assert_eq!(NoiseEngine::from_name(engine.name()), Some(engine));
+        }
+        assert_eq!(NoiseEngine::from_name("mt19937"), None);
     }
 
     /// chunk_stream: xoshiro keeps the PR 1 fork contract; Philox is a

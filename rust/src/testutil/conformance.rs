@@ -31,6 +31,7 @@ use crate::quant::{
     LogFormat, LogQuantConfig, LogQuantizer, UniformQuantizer, UniformRounding,
 };
 use crate::rng::Xoshiro256;
+use crate::testutil::fault::FaultPlan;
 
 /// One LUT format's hookup into the harness: a name for failure reports
 /// and a checker that builds operands for a `(m, k, n)` shape (drawing
@@ -48,6 +49,7 @@ pub fn conformance_formats() -> Vec<FormatConformance> {
         FormatConformance { name: "backward-int4xfp4", check: check_backward },
         FormatConformance { name: "forward-int4xint4", check: check_forward },
         FormatConformance { name: "radix4-tpr", check: check_radix4 },
+        FormatConformance { name: "corrupted-operand", check: check_corrupted },
     ]
 }
 
@@ -279,6 +281,106 @@ fn check_radix4(
     Ok(())
 }
 
+/// Corrupted-operand row: flip bits in each format's packed B operand
+/// (deterministically, via a [`FaultPlan`] keyed off the shared case
+/// generator) and require two things of every kernel variant. First,
+/// **conformance survives corruption**: the kernels must stay
+/// bit-identical to the decode oracle *on the corrupted bytes* — garbage
+/// in may be garbage out, but it must be the same garbage everywhere, at
+/// every thread count. Second, **corruption is benign at the wire level**:
+/// all 256 nibble byte values decode to finite products in every LUT, so
+/// a flipped bit in a packed stream can bound-err a value but never mint
+/// a NaN/Inf — the supervisor relies on this when it treats packed-stream
+/// damage as silent-but-finite rather than a NonFinite fault.
+fn check_corrupted(
+    rng: &mut Xoshiro256,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: &[usize],
+) -> Result<(), String> {
+    let mut plan = FaultPlan::new(rng.next_u64());
+    let rb = k.div_ceil(2);
+    let finite_check = |what: &str, out: &[f32]| -> Result<(), String> {
+        match out.iter().position(|v| !v.is_finite()) {
+            Some(i) => Err(format!("{what}[{i}]: non-finite {} from corrupt operand", out[i])),
+            None => Ok(()),
+        }
+    };
+
+    // Backward INT4×FP4 on corrupted packed gradients.
+    let a = random_codes(rng, m * k);
+    let g: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let mut noise = vec![0.0f32; n * k];
+    rng.fill_uniform(&mut noise);
+    let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+    let mut b = vec![0u8; n * rb];
+    q.quantize_to_codes_matrix_into(&g, n, k, &noise, &mut b, rb);
+    if !b.is_empty() {
+        plan.flip_bits(&mut b, 1 + b.len() / 7);
+    }
+    let want = qgemm_decode_oracle(&a, &b, m, k, n);
+    finite_check("backward/oracle", &want)?;
+    let mut scratch = QgemmScratch::new();
+    let mut out = vec![f32::NAN; m * n];
+    qgemm_packed_with(&a, &b, m, k, n, &mut out, &mut scratch);
+    bits_check("backward/tiled", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_packed_flat(&a, &b, m, k, n, &mut out);
+    bits_check("backward/flat", &out, &want)?;
+    for &t in threads {
+        out.fill(f32::NAN);
+        qgemm_packed_mt_with(&a, &b, m, k, n, &mut out, t, &mut scratch);
+        bits_check(&format!("backward/mt[{t}]"), &out, &want)?;
+    }
+
+    // Forward INT4×INT4 on a corrupted packed weight operand.
+    let wts: Vec<f32> = (0..n * k).map(|_| rng.normal_ms_f32(0.0, 0.5)).collect();
+    let wq = UniformQuantizer::new(4, 1.5, UniformRounding::Rdn);
+    let mut bw = vec![0u8; n * rb];
+    wq.encode_packed_matrix_into(&wts, n, k, &[], &mut bw, rb);
+    if !bw.is_empty() {
+        plan.flip_bits(&mut bw, 1 + bw.len() / 7);
+    }
+    let af: Vec<u8> = (0..m * rb).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+    let want = qgemm_int4_decode_oracle(&af, &bw, m, k, n);
+    finite_check("forward/oracle", &want)?;
+    out.fill(f32::NAN);
+    qgemm_int4_with(&af, &bw, m, k, n, &mut out, &mut scratch);
+    bits_check("forward/tiled", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_int4_flat(&af, &bw, m, k, n, &mut out);
+    bits_check("forward/flat", &out, &want)?;
+    for &t in threads {
+        out.fill(f32::NAN);
+        qgemm_int4_mt_with(&af, &bw, m, k, n, &mut out, t, &mut scratch);
+        bits_check(&format!("forward/mt[{t}]"), &out, &want)?;
+    }
+
+    // Radix-4 TPR on a corrupted packed gradient operand (base phase —
+    // the LUT is phase-independent).
+    let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+    let mut br = vec![0u8; n * rb];
+    r4.encode_packed_matrix_into(&g, n, k, TprPhase::Base, &mut br, rb);
+    if !br.is_empty() {
+        plan.flip_bits(&mut br, 1 + br.len() / 7);
+    }
+    let want = qgemm_radix4_decode_oracle(&a, &br, m, k, n);
+    finite_check("radix4/oracle", &want)?;
+    out.fill(f32::NAN);
+    qgemm_radix4_with(&a, &br, m, k, n, &mut out, &mut scratch);
+    bits_check("radix4/tiled", &out, &want)?;
+    out.fill(f32::NAN);
+    qgemm_radix4_flat(&a, &br, m, k, n, &mut out);
+    bits_check("radix4/flat", &out, &want)?;
+    for &t in threads {
+        out.fill(f32::NAN);
+        qgemm_radix4_mt_with(&a, &br, m, k, n, &mut out, t, &mut scratch);
+        bits_check(&format!("radix4/mt[{t}]"), &out, &want)?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,7 +400,15 @@ mod tests {
     #[test]
     fn conformance_table_covers_formats_threads_and_edges() {
         let names: Vec<&str> = conformance_formats().iter().map(|f| f.name).collect();
-        assert_eq!(names, vec!["backward-int4xfp4", "forward-int4xint4", "radix4-tpr"]);
+        assert_eq!(
+            names,
+            vec![
+                "backward-int4xfp4",
+                "forward-int4xint4",
+                "radix4-tpr",
+                "corrupted-operand",
+            ]
+        );
         let threads = conformance_thread_counts();
         assert_eq!(threads[0], 1);
         assert!(threads.windows(2).all(|w| w[0] < w[1]), "{threads:?}");

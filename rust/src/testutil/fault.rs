@@ -1,0 +1,234 @@
+//! Deterministic fault-injection harness for the numerical-fault
+//! supervisor tests.
+//!
+//! Every fault the supervisor claims to detect must be *injectable on
+//! demand and reproducible bit-for-bit*, or the fault suite degenerates
+//! into flaky best-effort poking. A [`FaultPlan`] is a counter-based
+//! Philox stream keyed by a single seed: the same seed replays the exact
+//! same corruption sites — which bit of which packed nibble byte flips,
+//! which activation turns NaN, how many draws the RNG stream slips, where
+//! a checkpoint file is truncated — independently of platform or call
+//! site. Tests log the seed; a failure replays with it.
+//!
+//! The plan is format-agnostic on purpose: it corrupts *representations*
+//! (byte streams, f32 slices, noise streams, files), and the detection
+//! tests assert what the supervisor stack makes of the damage.
+
+use crate::rng::{NoiseSource, Philox4x32};
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One injected bit flip: `bytes[byte] ^= mask`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitFlip {
+    pub byte: usize,
+    /// Single-bit mask (a power of two).
+    pub mask: u8,
+}
+
+/// The three non-finite f32 poisons, cycled through by draw.
+const POISONS: [f32; 3] = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+
+/// A seeded, replayable source of fault injections (see module docs).
+pub struct FaultPlan {
+    rng: Philox4x32,
+}
+
+impl FaultPlan {
+    /// A plan keyed by `seed`; equal seeds inject identical faults.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { rng: Philox4x32::seed_from_u64(seed) }
+    }
+
+    /// Uniform index in `[0, n)` (Lemire multiply-shift, like the
+    /// engines' own `uniform_usize`).
+    fn index(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.rng.next_u64() >> 32).wrapping_mul(n as u64) >> 32) as usize
+    }
+
+    /// Flip one uniformly chosen bit of `bytes` (e.g. a packed nibble
+    /// stream or a serialized checkpoint). Returns where, so a test can
+    /// assert the damage landed in the lane it meant to hit.
+    pub fn flip_bit(&mut self, bytes: &mut [u8]) -> BitFlip {
+        assert!(!bytes.is_empty(), "cannot flip a bit in an empty buffer");
+        let flip = BitFlip {
+            byte: self.index(bytes.len()),
+            mask: 1u8 << self.index(8),
+        };
+        bytes[flip.byte] ^= flip.mask;
+        flip
+    }
+
+    /// Flip `n` (not necessarily distinct) bits.
+    pub fn flip_bits(&mut self, bytes: &mut [u8], n: usize) -> Vec<BitFlip> {
+        (0..n).map(|_| self.flip_bit(bytes)).collect()
+    }
+
+    /// Poison `n` uniformly chosen positions of `xs` with NaN/±Inf
+    /// (activation/gradient corruption). Returns the poisoned indices.
+    pub fn poison_f32(&mut self, xs: &mut [f32], n: usize) -> Vec<usize> {
+        assert!(!xs.is_empty(), "cannot poison an empty slice");
+        (0..n)
+            .map(|_| {
+                let at = self.index(xs.len());
+                xs[at] = POISONS[self.index(POISONS.len())];
+                at
+            })
+            .collect()
+    }
+
+    /// Desync a noise stream: consume 1..=4 draws from `rng` behind its
+    /// owner's back. Returns how many were stolen.
+    pub fn desync<R: NoiseSource>(&mut self, rng: &mut R) -> usize {
+        let n = 1 + self.index(4);
+        for _ in 0..n {
+            rng.next_u64();
+        }
+        n
+    }
+
+    /// Truncate the file at `path` to a uniformly chosen proper prefix
+    /// (a torn write / partial flush). Returns the new length.
+    pub fn truncate_file(&mut self, path: &Path) -> io::Result<u64> {
+        let len = fs::metadata(path)?.len();
+        if len == 0 {
+            return Ok(0);
+        }
+        let keep = self.index(len as usize) as u64;
+        let f = fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(keep)?;
+        f.sync_all()?;
+        Ok(keep)
+    }
+
+    /// Flip one uniformly chosen bit of the file at `path` in place
+    /// (silent media corruption). Returns where.
+    pub fn corrupt_file(&mut self, path: &Path) -> io::Result<BitFlip> {
+        let mut bytes = fs::read(path)?;
+        if bytes.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "cannot corrupt an empty file",
+            ));
+        }
+        let flip = self.flip_bit(&mut bytes);
+        fs::write(path, &bytes)?;
+        Ok(flip)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("luq_fault_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn plans_replay_bit_for_bit() {
+        let mut a = FaultPlan::new(0xFA);
+        let mut b = FaultPlan::new(0xFA);
+        let mut buf_a = vec![0u8; 64];
+        let mut buf_b = vec![0u8; 64];
+        assert_eq!(a.flip_bits(&mut buf_a, 5), b.flip_bits(&mut buf_b, 5));
+        assert_eq!(buf_a, buf_b);
+        let mut xs_a = vec![1.0f32; 32];
+        let mut xs_b = vec![1.0f32; 32];
+        assert_eq!(a.poison_f32(&mut xs_a, 3), b.poison_f32(&mut xs_b, 3));
+        for (x, y) in xs_a.iter().zip(xs_b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let mut ra = Xoshiro256::seed_from_u64(1);
+        let mut rb = Xoshiro256::seed_from_u64(1);
+        assert_eq!(a.desync(&mut ra), b.desync(&mut rb));
+        assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn distinct_seeds_give_distinct_plans() {
+        let mut a = FaultPlan::new(1);
+        let mut b = FaultPlan::new(2);
+        let same = (0..64)
+            .filter(|_| {
+                let mut ba = [0u8; 128];
+                let mut bb = [0u8; 128];
+                a.flip_bit(&mut ba) == b.flip_bit(&mut bb)
+            })
+            .count();
+        assert!(same < 4, "plans from different seeds agree {same}/64 times");
+    }
+
+    #[test]
+    fn flip_bit_changes_exactly_one_bit() {
+        let mut plan = FaultPlan::new(7);
+        for _ in 0..32 {
+            let mut buf = vec![0xA5u8; 16];
+            let flip = plan.flip_bit(&mut buf);
+            assert_eq!(flip.mask.count_ones(), 1);
+            assert_eq!(buf[flip.byte], 0xA5 ^ flip.mask);
+            let touched = buf.iter().filter(|&&b| b != 0xA5).count();
+            assert_eq!(touched, 1);
+        }
+    }
+
+    #[test]
+    fn poison_writes_nonfinite_values() {
+        let mut plan = FaultPlan::new(9);
+        let mut xs = vec![0.5f32; 20];
+        let hits = plan.poison_f32(&mut xs, 6);
+        assert_eq!(hits.len(), 6);
+        for &i in &hits {
+            assert!(!xs[i].is_finite(), "index {i} still finite: {}", xs[i]);
+        }
+        // Only the reported indices were touched.
+        for (i, &x) in xs.iter().enumerate() {
+            assert!(hits.contains(&i) || x == 0.5);
+        }
+    }
+
+    #[test]
+    fn desync_advances_the_victim_stream() {
+        let mut plan = FaultPlan::new(11);
+        let mut victim = Xoshiro256::seed_from_u64(3);
+        let mut reference = Xoshiro256::seed_from_u64(3);
+        let stolen = plan.desync(&mut victim);
+        assert!((1..=4).contains(&stolen));
+        for _ in 0..stolen {
+            reference.next_u64();
+        }
+        assert_eq!(victim.next_u64(), reference.next_u64());
+    }
+
+    #[test]
+    fn file_faults_truncate_and_corrupt() {
+        let dir = tmpdir("file");
+        let path = dir.join("victim.bin");
+        let payload: Vec<u8> = (0..=255u8).collect();
+
+        std::fs::write(&path, &payload).unwrap();
+        let mut plan = FaultPlan::new(13);
+        let kept = plan.truncate_file(&path).unwrap();
+        assert!(kept < 256);
+        let back = std::fs::read(&path).unwrap();
+        assert_eq!(back, payload[..kept as usize]);
+
+        std::fs::write(&path, &payload).unwrap();
+        let flip = plan.corrupt_file(&path).unwrap();
+        let back = std::fs::read(&path).unwrap();
+        assert_eq!(back.len(), payload.len(), "corruption must not resize");
+        assert_eq!(back[flip.byte], payload[flip.byte] ^ flip.mask);
+        let diffs = back
+            .iter()
+            .zip(payload.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(diffs, 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

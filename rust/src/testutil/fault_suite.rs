@@ -1,0 +1,372 @@
+//! The fault suite: every fault class the supervisor claims to handle,
+//! injected deterministically (via [`super::fault::FaultPlan`]) and either
+//! **detected within one step** or **proven benign**. All tests are
+//! `fault_`-prefixed so `cargo test fault_` runs exactly this tier (CI's
+//! fault-injection job does).
+//!
+//! Coverage map ([`FaultClass`] → evidence):
+//! - `NonFinite`      — NaN/Inf poison in any operand: detected same-step,
+//!   layer escalates ([`fault_nan_poison_detected_in_every_operand`]).
+//! - `RngDesync`      — stolen draws between steps: detected on the next
+//!   step ([`fault_rng_desync_detected_within_one_step`]).
+//! - `UnderflowStorm` — near-total gradient underflow on real data
+//!   ([`fault_underflow_storm_detected`]).
+//! - `SaturationStorm`— collapsed hindsight scale clipping the majority
+//!   ([`fault_saturation_storm_detected`]).
+//! - `AlphaCollapse`  — cannot arise from the real pipeline (α = max|x| is
+//!   positive whenever the tensor is nonzero); the detector arm is unit
+//!   tested in `quant::health`.
+//! - `CheckpointCorrupt` — any truncation and any single-bit flip of a
+//!   v2 checkpoint fails the load
+//!   ([`fault_checkpoint_truncation_always_fails_load`],
+//!   [`fault_checkpoint_bitflip_always_fails_load`]).
+//! - Packed-stream bit flips — proven *benign* (finite, conformant):
+//!   the total-decode test below plus the `corrupted-operand` row of
+//!   [`super::conformance`].
+//!
+//! Plus the crash-safety contract: kill-at-any-step → resume from the
+//! checkpoint is bit-identical to the uninterrupted run, on both noise
+//! engines ([`fault_kill_and_resume_is_bit_identical`]).
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::layer_step::QuantizedLayerStep;
+use crate::coordinator::supervisor::{
+    StepPrecision, SupervisedLayerStep, Supervisor, SupervisorPolicy, Transition,
+};
+use crate::hw::mfbprop::{Fp4Code, Int4Code};
+use crate::hw::qgemm::{int4_product_lut, product_lut, radix4_product_lut};
+use crate::quant::radix4::radix4_unit_value;
+use crate::quant::{FaultClass, LogFormat, LogQuantConfig};
+use crate::rng::{NoiseEngine, NoiseSource, Xoshiro256};
+use crate::runtime::HostTensor;
+use crate::testutil::fault::FaultPlan;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("luq_fault_suite_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn layer_data(
+    seed: u64,
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let acts = (0..batch * d_in).map(|_| rng.normal_ms_f32(0.0, 1.0)).collect();
+    let wts = (0..d_out * d_in).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+    let grads = (0..batch * d_out)
+        .map(|_| rng.signed_lognormal_f32(0.0, 2.0))
+        .collect();
+    (acts, wts, grads)
+}
+
+/// Every 4-bit wire byte decodes to a finite, bounded value in both
+/// nibble lanes under all three wire formats, and every product LUT entry
+/// is finite — so a bit flip in any packed operand stream is *benign* at
+/// the numeric level: it perturbs a value but cannot mint NaN/Inf or
+/// panic. (Per-format value bounds: INT4 |v| ≤ 7, FP4 |v| ≤ 2⁶, radix-4
+/// |v| ≤ 4⁶.)
+#[test]
+fn fault_total_decode_all_wire_bytes_is_benign() {
+    for byte in 0..=255u8 {
+        for nib in [byte & 0x0F, byte >> 4] {
+            let i4 = Int4Code::from_nibble(nib).value();
+            assert!(i4.is_finite() && i4.abs() <= 7.0, "int4 nibble {nib:#x}: {i4}");
+            let f4 = Fp4Code::from_nibble(nib).value();
+            assert!(f4.is_finite() && f4.abs() <= 64.0, "fp4 nibble {nib:#x}: {f4}");
+            let r4 = radix4_unit_value(nib);
+            assert!(
+                r4.is_finite() && r4.abs() <= 4096.0,
+                "radix4 nibble {nib:#x}: {r4}"
+            );
+        }
+    }
+    for (name, lut) in [
+        ("backward", product_lut()),
+        ("forward", int4_product_lut()),
+        ("radix4", radix4_product_lut()),
+    ] {
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                let p = lut.product(a, b);
+                assert!(p.is_finite(), "{name} lut[{a:#x}][{b:#x}] = {p}");
+            }
+        }
+    }
+}
+
+/// NaN/Inf poison injected into each operand (activations, weights,
+/// gradients) is detected in the same step and escalates the layer.
+#[test]
+fn fault_nan_poison_detected_in_every_operand() {
+    let (batch, d_in, d_out) = (5usize, 9, 6);
+    let cfg = LogQuantConfig::luq(LogFormat::FP4);
+    for victim in 0..3usize {
+        let (mut acts, mut wts, mut grads) = layer_data(0xF0 + victim as u64, batch, d_in, d_out);
+        let mut plan = FaultPlan::new(0x90 + victim as u64);
+        let hit = match victim {
+            0 => plan.poison_f32(&mut acts, 2),
+            1 => plan.poison_f32(&mut wts, 2),
+            _ => plan.poison_f32(&mut grads, 2),
+        };
+        assert!(!hit.is_empty());
+        let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+        let mut step: SupervisedLayerStep = SupervisedLayerStep::new(cfg, 4);
+        let mut rng = Xoshiro256::seed_from_u64(0x51);
+        let out = step.step(
+            &mut sup, 0, 0, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert_eq!(
+            out.health.worst(),
+            Some(FaultClass::NonFinite),
+            "operand {victim} poison not detected"
+        );
+        assert_eq!(out.transition, Some(Transition::Escalated));
+        assert_eq!(sup.precision(0), StepPrecision::Fp32);
+    }
+}
+
+/// An RNG stream desynced by a fault plan between supervised steps is
+/// flagged `RngDesync` on the very next step.
+#[test]
+fn fault_rng_desync_detected_within_one_step() {
+    let (batch, d_in, d_out) = (4usize, 7, 5);
+    let (acts, wts, grads) = layer_data(0xD5, batch, d_in, d_out);
+    let cfg = LogQuantConfig::luq(LogFormat::FP4);
+    let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+    let mut step: SupervisedLayerStep = SupervisedLayerStep::new(cfg, 4);
+    let mut rng = Xoshiro256::seed_from_u64(0x52);
+    let out = step.step(
+        &mut sup, 0, 0, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+    );
+    assert!(out.health.is_healthy());
+
+    let mut plan = FaultPlan::new(0xDE);
+    plan.desync(&mut rng);
+    let out = step.step(
+        &mut sup, 0, 1, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+    );
+    assert!(
+        out.health.faults().contains(&FaultClass::RngDesync),
+        "desync not detected: {:?}",
+        out.health
+    );
+    assert_eq!(out.transition, Some(Transition::Escalated));
+}
+
+/// Real-data underflow storm: one enormous gradient element drives α so
+/// high that every other element lands below the smallest representable
+/// magnitude — `frac_underflow` ≥ 0.999 trips the sentinel.
+#[test]
+fn fault_underflow_storm_detected() {
+    let (batch, d_in, d_out) = (4usize, 6, 256);
+    let (acts, wts, mut grads) = layer_data(0xF5, batch, d_in, d_out);
+    for g in grads.iter_mut() {
+        *g = 1e-20 * g.signum();
+    }
+    grads[0] = 1e20;
+    let cfg = LogQuantConfig::luq(LogFormat::FP4);
+    let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+    let mut step: SupervisedLayerStep = SupervisedLayerStep::new(cfg, 4);
+    let mut rng = Xoshiro256::seed_from_u64(0x53);
+    let out = step.step(
+        &mut sup, 0, 0, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+    );
+    assert!(
+        out.health.faults().contains(&FaultClass::UnderflowStorm),
+        "underflow storm not detected: {:?} (stats {:?})",
+        out.health,
+        out.stats
+    );
+    assert_eq!(out.transition, Some(Transition::Escalated));
+}
+
+/// Real-data saturation storm: a collapsed hindsight scale estimate
+/// (FixedMax far below the data) clips the majority of gradient elements
+/// — `frac_clipped` ≥ 0.5 trips the sentinel.
+#[test]
+fn fault_saturation_storm_detected() {
+    let (batch, d_in, d_out) = (6usize, 8, 64);
+    let (acts, wts, grads) = layer_data(0xFA, batch, d_in, d_out);
+    // Median |g| of signed-lognormal(0, 2) is 1, so an estimate of 1e-6
+    // puts essentially every element above the representable top.
+    let cfg = LogQuantConfig::luq_hindsight(LogFormat::FP4, 1e-6);
+    let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+    let mut step: SupervisedLayerStep = SupervisedLayerStep::new(cfg, 4);
+    let mut rng = Xoshiro256::seed_from_u64(0x54);
+    let out = step.step(
+        &mut sup, 0, 0, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+    );
+    assert!(
+        out.health.faults().contains(&FaultClass::SaturationStorm),
+        "saturation storm not detected: {:?} (stats {:?})",
+        out.health,
+        out.stats
+    );
+    assert_eq!(out.transition, Some(Transition::Escalated));
+}
+
+fn sample_checkpoint() -> Checkpoint {
+    let mut rng = NoiseEngine::Philox.seed_rng(0xCC);
+    for _ in 0..5 {
+        rng.next_u64();
+    }
+    Checkpoint::new(
+        17,
+        vec![
+            HostTensor::f32(vec![3, 4], (0..12).map(|i| i as f32 * 0.5 - 3.0).collect()),
+            HostTensor::i32(vec![5], vec![1, -2, 3, -4, 5]),
+        ],
+    )
+    .with_rng(&rng)
+}
+
+/// Every proper prefix of a checkpoint file fails to load: there is no
+/// truncation point — header or payload, aligned or not — that yields a
+/// silently-wrong checkpoint.
+#[test]
+fn fault_checkpoint_truncation_always_fails_load() {
+    let dir = tmpdir("trunc");
+    let path = dir.join("base.ckpt");
+    sample_checkpoint().save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let victim = dir.join("cut.ckpt");
+
+    // Deterministic fault-plan cuts plus every boundary-adjacent length.
+    let mut plan = FaultPlan::new(0x7C);
+    std::fs::write(&victim, &bytes).unwrap();
+    let mut cuts: Vec<u64> = (0..24).map(|_| plan.truncate_file(&victim).unwrap()).collect();
+    cuts.extend([0, 7, 8, 15, 16, 19, 20, bytes.len() as u64 - 1]);
+    for cut in cuts {
+        std::fs::write(&victim, &bytes[..cut as usize]).unwrap();
+        assert!(
+            Checkpoint::load(&victim).is_err(),
+            "truncation to {cut}/{} bytes loaded successfully",
+            bytes.len()
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Any single-bit flip anywhere in a checkpoint file fails the load: the
+/// magic, length-sanity, total-size, header-CRC, and per-tensor-CRC
+/// checks jointly cover every byte.
+#[test]
+fn fault_checkpoint_bitflip_always_fails_load() {
+    let dir = tmpdir("flip");
+    let path = dir.join("base.ckpt");
+    sample_checkpoint().save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let victim = dir.join("flip.ckpt");
+
+    // 96 fault-plan flips, plus one flip in every fixed-prefix byte
+    // (magic, header length, header CRC) where single-point parsing
+    // decisions live.
+    let mut plan = FaultPlan::new(0xB1);
+    let mut flips: Vec<(usize, u8)> = Vec::new();
+    for _ in 0..96 {
+        let mut copy = bytes.clone();
+        let f = plan.flip_bit(&mut copy);
+        flips.push((f.byte, f.mask));
+    }
+    flips.extend((0..20).map(|b| (b, 0x10u8)));
+    for (byte, mask) in flips {
+        let mut copy = bytes.clone();
+        copy[byte] ^= mask;
+        std::fs::write(&victim, &copy).unwrap();
+        assert!(
+            Checkpoint::load(&victim).is_err(),
+            "bit flip at byte {byte} mask {mask:#04x} loaded successfully"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// One toy supervised-format training step: quantized layer step plus an
+/// SGD update of the weights from dWᵀ. Data is derived from the step
+/// index only, so the noise engine under test owns the whole stochastic
+/// state.
+fn toy_step(
+    step: &mut QuantizedLayerStep<crate::rng::EngineRng>,
+    weights: &mut [f32],
+    step_idx: u64,
+    rng: &mut crate::rng::EngineRng,
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    let (acts, _, grads) = layer_data(0xDA7A ^ step_idx, batch, d_in, d_out);
+    step.step(&acts, weights, &grads, batch, d_in, d_out, rng, 1);
+    let dw_t = step.dw_t();
+    for o in 0..d_out {
+        for i in 0..d_in {
+            weights[o * d_in + i] -= 0.01 * dw_t[i * d_out + o];
+        }
+    }
+}
+
+/// Crash-safety: training for N steps equals training to step k, saving a
+/// checkpoint (weights + step + RNG position), "dying", resuming from the
+/// file, and finishing — bit-for-bit in the weights *and* in the noise
+/// stream position, on both engines, for several kill points.
+#[test]
+fn fault_kill_and_resume_is_bit_identical() {
+    let (batch, d_in, d_out) = (4usize, 6, 5);
+    let total_steps = 8u64;
+    let cfg = LogQuantConfig::luq(LogFormat::FP4);
+    let dir = tmpdir("resume");
+    for engine in [NoiseEngine::Philox, NoiseEngine::Xoshiro] {
+        // Uninterrupted reference run.
+        let (_, w0, _) = layer_data(0x3EED, batch, d_in, d_out);
+        let mut w_ref = w0.clone();
+        let mut rng_ref = engine.seed_rng(0xBEEF);
+        let mut step_ref: QuantizedLayerStep<crate::rng::EngineRng> =
+            QuantizedLayerStep::new(cfg, 4);
+        for s in 0..total_steps {
+            toy_step(&mut step_ref, &mut w_ref, s, &mut rng_ref, batch, d_in, d_out);
+        }
+
+        for kill_at in [1u64, 4, 7] {
+            let path = dir.join(format!("{}_{kill_at}.ckpt", engine.name()));
+            // Run to the kill point and checkpoint.
+            let mut w = w0.clone();
+            let mut rng = engine.seed_rng(0xBEEF);
+            let mut lstep: QuantizedLayerStep<crate::rng::EngineRng> =
+                QuantizedLayerStep::new(cfg, 4);
+            for s in 0..kill_at {
+                toy_step(&mut lstep, &mut w, s, &mut rng, batch, d_in, d_out);
+            }
+            Checkpoint::new(kill_at, vec![HostTensor::f32(vec![d_out, d_in], w)])
+                .with_rng(&rng)
+                .save(&path)
+                .unwrap();
+            // "Kill": everything dropped; resume purely from the file.
+            drop(rng);
+            drop(lstep);
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(back.step, kill_at);
+            let mut w = back.tensors[0].as_f32().unwrap().to_vec();
+            let mut rng = back.rng.as_ref().unwrap().restore().unwrap();
+            let mut lstep: QuantizedLayerStep<crate::rng::EngineRng> =
+                QuantizedLayerStep::new(cfg, 4);
+            for s in back.step..total_steps {
+                toy_step(&mut lstep, &mut w, s, &mut rng, batch, d_in, d_out);
+            }
+            for (i, (a, b)) in w.iter().zip(w_ref.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{engine:?} kill@{kill_at}: weight {i} diverged ({a} vs {b})"
+                );
+            }
+            assert_eq!(
+                rng.next_u64(),
+                rng_ref.clone().next_u64(),
+                "{engine:?} kill@{kill_at}: stream position diverged"
+            );
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -7,6 +7,9 @@
 //! standard-error machinery used by the unbiasedness tests.
 
 pub mod conformance;
+pub mod fault;
+#[cfg(test)]
+mod fault_suite;
 
 use crate::rng::Xoshiro256;
 

@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Bench regression gate: diff the current PR's bench snapshots against
+the rolling median of the committed history.
+
+The asserting benches already gate *absolute* floors (tiled LUT >= 4x
+scalar, interleaved Philox >= 2x xoshiro). This script gates the
+*trajectory*: each metric in ``PR<k>_BENCH_*.json`` is compared against
+the median of the same metric over the most recent prior snapshots of
+the same bench file, and a move of more than ``--threshold`` (default
+15%) in the bad direction fails the run.
+
+Direction is inferred from the metric name:
+
+- lower-is-better:  ``*ns_per_elem``, ``*ns_per_product``, ``memcpy_ratio``
+- higher-is-better: ``melem_per_s``, ``gb_per_s``, ``*speedup*``
+
+Gate *constants* recorded in the snapshots (``min_speedup``,
+``required_speedup``) and booleans (``bit_exact*``) are ignored. Metrics
+with no history (new kernels, renamed sections) are reported but never
+fail. With an empty history directory — or none of the prior snapshots
+for this bench name present — the script is a no-op that exits 0, so the
+first toolchain-equipped run backfills history without tripping on
+itself.
+
+Usage (what check.sh runs):
+
+    python3 scripts/bench_diff.py --history bench_history --pr 6
+
+Snapshots are host-dependent; the rolling median (over up to --window
+prior PRs, default 5) absorbs one-off noisy snapshots, and the threshold
+absorbs run-to-run jitter. Compare trajectories from one machine class.
+"""
+
+import argparse
+import json
+import os
+import re
+import statistics
+import sys
+
+SNAPSHOT_RE = re.compile(r"^PR(\d+)_BENCH_(\w+)\.json$")
+
+# Metric-name fragments that mark a numeric leaf as gated, with direction.
+LOWER_IS_BETTER = ("ns_per_elem", "ns_per_product", "memcpy_ratio")
+HIGHER_IS_BETTER = ("melem_per_s", "gb_per_s", "speedup")
+# Recorded gate constants / oracle booleans — not measurements.
+IGNORED = ("min_speedup", "required_speedup", "bit_exact")
+
+
+def direction(key):
+    """'down' | 'up' | None for a metric path like 'kernels/tiled/ns_per_product'."""
+    leaf = key.rsplit("/", 1)[-1]
+    if any(frag in leaf for frag in IGNORED):
+        return None
+    if any(frag in leaf for frag in LOWER_IS_BETTER):
+        return "down"
+    if any(frag in leaf for frag in HIGHER_IS_BETTER):
+        return "up"
+    return None
+
+
+def numeric_leaves(node, prefix=""):
+    """Flatten a snapshot into {'a/b/metric': float} for gated metrics."""
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            path = f"{prefix}/{k}" if prefix else str(k)
+            out.update(numeric_leaves(v, path))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        if direction(prefix) is not None:
+            out[prefix] = float(node)
+    return out
+
+
+def load_snapshot(path):
+    with open(path, encoding="utf-8") as f:
+        return numeric_leaves(json.load(f))
+
+
+def collect(history_dir):
+    """{bench_name: {pr_number: filepath}} for every snapshot on disk."""
+    benches = {}
+    try:
+        entries = sorted(os.listdir(history_dir))
+    except FileNotFoundError:
+        return benches
+    for name in entries:
+        m = SNAPSHOT_RE.match(name)
+        if m:
+            pr, bench = int(m.group(1)), m.group(2)
+            benches.setdefault(bench, {})[pr] = os.path.join(history_dir, name)
+    return benches
+
+
+def diff_bench(bench, snapshots, pr, threshold, window):
+    """Compare PR `pr`'s snapshot of `bench` vs the rolling median.
+
+    Returns (failures, lines): formatted report lines plus the metrics
+    that regressed beyond the threshold.
+    """
+    prior_prs = sorted(p for p in snapshots if p < pr)[-window:]
+    current = load_snapshot(snapshots[pr])
+    history = [load_snapshot(snapshots[p]) for p in prior_prs]
+
+    lines = [f"{bench}: PR{pr} vs median of PRs {prior_prs}"]
+    failures = []
+    for key in sorted(current):
+        cur = current[key]
+        past = [h[key] for h in history if key in h]
+        if not past:
+            lines.append(f"  {key}: {cur:.4g} (no history — baseline)")
+            continue
+        med = statistics.median(past)
+        if med == 0:
+            lines.append(f"  {key}: {cur:.4g} (median 0 — skipped)")
+            continue
+        ratio = cur / med
+        # Normalize so >1 is always "worse" regardless of direction.
+        worse = ratio if direction(key) == "down" else 1.0 / ratio
+        verdict = "ok"
+        if worse > 1.0 + threshold:
+            verdict = f"REGRESSION (> {threshold:.0%} worse)"
+            failures.append(key)
+        lines.append(
+            f"  {key}: {cur:.4g} vs median {med:.4g} "
+            f"({'+' if ratio >= 1 else ''}{(ratio - 1) * 100:.1f}%) {verdict}"
+        )
+    return failures, lines
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default="bench_history", help="snapshot directory")
+    ap.add_argument("--pr", type=int, default=None, help="current PR number (default: newest snapshot)")
+    ap.add_argument("--threshold", type=float, default=0.15, help="allowed fractional regression")
+    ap.add_argument("--window", type=int, default=5, help="prior snapshots in the rolling median")
+    args = ap.parse_args()
+
+    benches = collect(args.history)
+    if not benches:
+        print(f"bench_diff: no snapshots in {args.history}/ — nothing to gate")
+        return 0
+
+    pr = args.pr if args.pr is not None else max(p for s in benches.values() for p in s)
+    failures = []
+    compared = 0
+    for bench, snapshots in sorted(benches.items()):
+        if pr not in snapshots:
+            print(f"bench_diff: {bench}: no PR{pr} snapshot — skipped")
+            continue
+        compared += 1
+        fails, lines = diff_bench(bench, snapshots, pr, args.threshold, args.window)
+        print("\n".join(lines))
+        failures.extend(f"{bench}:{key}" for key in fails)
+
+    if compared == 0:
+        print(f"bench_diff: no PR{pr} snapshots in {args.history}/ — nothing to gate")
+        return 0
+    if failures:
+        print(f"bench_diff: FAIL — {len(failures)} metric(s) regressed: {', '.join(failures)}")
+        return 1
+    print("bench_diff: all gated metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

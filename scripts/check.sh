@@ -64,6 +64,15 @@ if [[ "$BENCH_ONLY" == 0 ]]; then
     echo "== cross-format GEMM conformance suite =="
     cargo test -q conformance
 
+    # Fault-injection suite (testutil::fault_suite): every fault class the
+    # numerical-fault supervisor claims to handle, injected via seeded
+    # FaultPlans — detected within one step or proven benign — plus the
+    # checkpoint truncation/bit-flip and kill-and-resume contracts. Also
+    # part of `cargo test -q`; re-run by name so a fault-tolerance break
+    # is called out explicitly.
+    echo "== fault-injection suite =="
+    cargo test -q fault_
+
     if [[ "$FAST" == 1 ]]; then
         echo "== clippy skipped (--fast) =="
     elif cargo clippy --version >/dev/null 2>&1; then
@@ -103,5 +112,15 @@ RUSTFLAGS="$BENCH_RUSTFLAGS" LUQ_BENCH_FAST=1 \
     LUQ_BENCH_JSON="bench_history/PR${PR_NUM}_BENCH_qgemm.json" \
     cargo bench --bench qgemm
 echo "snapshots written: bench_history/PR${PR_NUM}_BENCH_{quant,qgemm}.json"
+
+# Trajectory gate: the fresh snapshots vs the rolling median of the
+# committed history (>15% worse on any gated metric fails; a missing
+# history is a clean no-op so the first run backfills silently).
+if command -v python3 >/dev/null 2>&1; then
+    echo "== bench regression diff vs bench_history/ =="
+    python3 scripts/bench_diff.py --history bench_history --pr "$PR_NUM"
+else
+    echo "== python3 not found; bench regression diff skipped =="
+fi
 
 echo "== check.sh: all gates passed =="
