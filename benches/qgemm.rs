@@ -8,7 +8,11 @@
 //!   `UniformQuantizer` fused packed matrix emitter;
 //! * **radix-4 TPR INT4×radix-4**: the same ladder, gradient operand
 //!   emitted by the `Radix4Quantizer` fused packed matrix emitter
-//!   (shifted phase) — the `radix4_kernels` JSON section.
+//!   (shifted phase) — the `radix4_kernels` JSON section;
+//! * **full layer step**: `QuantizedLayerStep` (forward + dx + dW) in
+//!   both `ForwardFormat`s at 1 and `num_cpus` threads — the
+//!   `layer_step_kernels` JSON section (unasserted; history tracked by
+//!   `scripts/bench_diff.py`).
 //!
 //! Emits a machine-readable `BENCH_qgemm.json` (override with
 //! `LUQ_BENCH_JSON=<path>`) and **asserts** the acceptance gates:
@@ -19,14 +23,16 @@
 //! * each tiled LUT kernel is ≥4× faster than its scalar reference loop.
 
 use luq::bench::{group, BenchResult, Bencher};
+use luq::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
 use luq::coordinator::QgemmPath;
 use luq::hw::mfbprop::Int4Code;
 use luq::hw::qgemm::{
-    qgemm_decode_oracle, qgemm_int4_decode_oracle, qgemm_int4_flat, qgemm_int4_mt_with,
-    qgemm_int4_scalar_reference, qgemm_int4_with, qgemm_packed_flat, qgemm_packed_mt,
-    qgemm_packed_mt_with, qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat,
-    qgemm_radix4_mt_with, qgemm_radix4_scalar_reference, qgemm_radix4_with,
-    qgemm_scalar_reference, QgemmScratch,
+    int4_product_lut, product_lut, qgemm_decode_oracle, qgemm_int4_decode_oracle,
+    qgemm_int4_flat, qgemm_int4_mt_with, qgemm_int4_scalar_reference, qgemm_int4_with,
+    qgemm_packed_flat, qgemm_packed_mt, qgemm_packed_mt_with, qgemm_packed_with,
+    qgemm_radix4_decode_oracle, qgemm_radix4_flat, qgemm_radix4_mt_with,
+    qgemm_radix4_scalar_reference, qgemm_radix4_with, qgemm_scalar_reference,
+    radix4_product_lut, QgemmScratch,
 };
 use luq::metrics::Json;
 use luq::quant::{
@@ -215,6 +221,38 @@ fn main() {
         r4_mt_results.push((t, r));
     }
 
+    // --- full layer step: forward + dx + dW, both forward formats --------
+    // Warm the three process-wide product LUTs outside the timed region so
+    // a first-use OnceLock build never lands inside a sample.
+    let lut_warm = product_lut().product(1, 1)
+        + int4_product_lut().product(1, 1)
+        + radix4_product_lut().product(1, 1);
+    assert!(lut_warm.is_finite());
+
+    let (batch, d_in, d_out) = (96usize, 192, 96);
+    let ls_products = (3 * batch * d_in * d_out) as u64;
+    let acts: Vec<f32> = (0..batch * d_in).map(|_| rng.normal_ms_f32(0.0, 1.2)).collect();
+    let lw: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+    let grads: Vec<f32> =
+        (0..batch * d_out).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    group(&format!("quantized layer step (3 GEMMs), batch={batch} d_in={d_in} d_out={d_out}"));
+    let mut ls_results: Vec<(String, BenchResult)> = Vec::new();
+    for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+        let mut step: QuantizedLayerStep =
+            QuantizedLayerStep::with_format(LogQuantConfig::luq(LogFormat::FP4), 4, format);
+        let mut ls_rng = Xoshiro256::seed_from_u64(11);
+        // Warm-up: allocate the persistent staging once.
+        step.step(&acts, &lw, &grads, batch, d_in, d_out, &mut ls_rng, 1);
+        for t in [1usize, hw_threads] {
+            let label = format!("{format:?} layer step {t}T");
+            let r = b.bench_throughput(&label, ls_products, || {
+                step.step(&acts, &lw, &grads, batch, d_in, d_out, &mut ls_rng, t).forward_scale
+            });
+            println!("{}", r.report());
+            ls_results.push((format!("{format:?} {t}T"), r));
+        }
+    }
+
     // --- report + JSON ---------------------------------------------------
     let ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / products as f64;
     let scalar_ns = ns(&scalar);
@@ -256,6 +294,18 @@ fn main() {
         radix4_kernels.push((format!("radix4 lut tiled {t}T"), kernel_json(r, r4_scalar_ns)));
     }
 
+    let ls_ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / ls_products as f64;
+    let mut layer_step_kernels: Vec<(String, Json)> = Vec::new();
+    for (name, r) in &ls_results {
+        layer_step_kernels.push((
+            name.clone(),
+            Json::obj(vec![
+                ("ns_per_product", Json::num(ls_ns(r))),
+                ("mproducts_per_s", Json::num(r.throughput_melems().unwrap_or(0.0))),
+            ]),
+        ));
+    }
+
     let bit_exact = scalar_exact && flat_exact && tiled_exact && mt_exact;
     let fwd_bit_exact =
         fwd_scalar_exact && fwd_flat_exact && fwd_tiled_exact && fwd_mt_exact;
@@ -272,6 +322,7 @@ fn main() {
         ("kernels", Json::Obj(kernels)),
         ("forward_kernels", Json::Obj(fwd_kernels)),
         ("radix4_kernels", Json::Obj(radix4_kernels)),
+        ("layer_step_kernels", Json::Obj(layer_step_kernels)),
         (
             "gate",
             Json::obj(vec![

@@ -125,6 +125,8 @@ impl Bencher {
 }
 
 /// Print a bench group header like the criterion output.
+// Bench banners belong on stdout with the rest of the harness output.
+#[allow(clippy::print_stdout)]
 pub fn group(title: &str) {
     println!("\n== {title} ==");
 }

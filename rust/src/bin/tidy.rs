@@ -1,0 +1,1295 @@
+//! `tidy` — dependency-free static analysis for the repo's contracts.
+//!
+//! LUQ's accuracy and perf claims rest on invariants the type system cannot
+//! see: unbiased stochastic rounding needs every RNG draw site accounted for
+//! (one unregistered `uniform_f32` silently breaks the pinned draw-accounting
+//! contracts), and the perf architecture needs the `*_into`/`*_scratch` hot
+//! paths to stay allocation-free. This binary is a token-level scanner over
+//! `rust/src/**` (plus `benches/*.rs` for the coverage rule) that turns those
+//! conventions into a mechanical gate. Pure std, zero dependencies, runs in
+//! well under a second; `scripts/check.sh` runs it first and CI has a
+//! fast-fail `tidy` job.
+//!
+//! Rules (see README "Static analysis & contracts" for the full story):
+//!
+//! * `hot-path-alloc` — functions named `*_into`/`*_scratch` under `quant/`,
+//!   `hw/`, `rng/` and in `coordinator/layer_step.rs` must contain no
+//!   allocation tokens (`Vec::new`, `vec!`, `to_vec`, `collect`, `Box::new`,
+//!   `with_capacity`, `clone`).
+//! * `rng-registry` — every `uniform_f32`/`fill_uniform`/`next_u64` call
+//!   site outside `rng/`, `testutil/` and test code must appear in the
+//!   checked-in `tidy/draw_sites.txt` as `<path> <fn> <token>`.
+//! * `coverage` — every `ForwardFormat` variant, every `FaultClass` variant,
+//!   and every `ProductLut` instantiation (a fn returning
+//!   `&'static ProductLut` in `hw/qgemm.rs`) must be referenced in
+//!   `testutil/conformance.rs`, the bench ladder (`benches/*.rs`), and the
+//!   fault suite (`testutil/fault_suite.rs`); fault classes in the fault
+//!   suite only.
+//! * `panic-policy` — `unwrap()`/`expect()`/`panic!`/`unreachable!` in
+//!   non-test library code are counted against `tidy/panic_budget.txt`,
+//!   whose number may only shrink.
+//! * `safety-comment` — every `unsafe` token needs a `// SAFETY:` comment on
+//!   the same line or within the two lines above it.
+//!
+//! Any rule can be waived at a single site with an inline comment on the
+//! same line or the line directly above:
+//!
+//! ```text
+//! // tidy-allow: <rule-name> (one-line reason)
+//! ```
+//!
+//! The scanner masks string literals, char literals and comments before
+//! matching tokens, so prose and format strings never trip a rule; comments
+//! are kept aside for the `tidy-allow` / `SAFETY:` checks. It is a token
+//! scanner, not a parser: it can be fooled on purpose, but not by accident.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Allocation tokens banned in hot-path functions.
+const ALLOC_TOKENS: &[&str] =
+    &["Vec::new", "vec!", "to_vec", "collect", "Box::new", "with_capacity", "clone"];
+
+/// RNG draw tokens that must be registered outside `rng/`.
+const DRAW_TOKENS: &[&str] = &["uniform_f32", "fill_uniform", "next_u64"];
+
+const REGISTRY_PATH: &str = "tidy/draw_sites.txt";
+const BUDGET_PATH: &str = "tidy/panic_budget.txt";
+
+const HINT_HOT_ALLOC: &str = "move the allocation to a caller-owned scratch/buffer, or waive \
+                              with `// tidy-allow: hot-path-alloc (reason)`";
+const HINT_RNG: &str = "add the printed line to tidy/draw_sites.txt and re-derive the layer's \
+                        draw-accounting contract, or waive with `// tidy-allow: rng-registry \
+                        (reason)`";
+const HINT_COVERAGE: &str = "reference the item from testutil/conformance.rs, benches/*.rs and \
+                             testutil/fault_suite.rs (fault classes: fault suite only), or waive \
+                             at the definition with `// tidy-allow: coverage (reason)`";
+const HINT_PANIC: &str = "propagate a Result instead, waive with `// tidy-allow: panic-policy \
+                          (reason)`, or — only when burning sites down — lower \
+                          tidy/panic_budget.txt";
+const HINT_SAFETY: &str = "add a `// SAFETY: ...` comment on the unsafe line or within the two \
+                           lines above it";
+
+#[derive(Clone, Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+    hint: &'static str,
+}
+
+/// One scanned source file with everything the rules need precomputed.
+struct SourceFile {
+    rel: String,
+    /// Source with comments, strings and char literals blanked to spaces
+    /// (newlines preserved, so byte offsets and line numbers still map).
+    masked: Vec<u8>,
+    /// `(line, text)` for every comment line, kept for `tidy-allow` and
+    /// `SAFETY:` detection.
+    comments: Vec<(usize, String)>,
+    /// Byte offset of the start of each line.
+    line_starts: Vec<usize>,
+    /// Byte ranges covered by `#[cfg(test)]` / `#[test]` items.
+    test_ranges: Vec<(usize, usize)>,
+    fns: Vec<FnItem>,
+}
+
+#[derive(Clone, Debug)]
+struct FnItem {
+    name: String,
+    /// Byte offset of the name token.
+    name_pos: usize,
+    /// End of the declaration: the body `{` or the terminating `;`.
+    decl_end: usize,
+    /// Byte range of the `{ ... }` body, if the fn has one.
+    body: Option<(usize, usize)>,
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn blank(out: &mut [u8], from: usize, to: usize) {
+    for byte in &mut out[from..to.min(out.len())] {
+        if *byte != b'\n' {
+            *byte = b' ';
+        }
+    }
+}
+
+/// Skip a `"..."` string literal starting at `i` (the opening quote),
+/// returning the offset just past the closing quote.
+fn skip_string(b: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Skip a raw string starting at the first `#` or `"` after the `r`/`br`
+/// prefix; returns the offset past the closing delimiter, or `None` if this
+/// is not actually a raw string (e.g. a raw identifier like `r#fn`).
+fn skip_raw_string(b: &[u8], after_prefix: usize) -> Option<usize> {
+    let mut hashes = 0usize;
+    let mut j = after_prefix;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"'
+            && b.len() - j > hashes
+            && b[j + 1..j + 1 + hashes].iter().all(|&h| h == b'#')
+        {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(j)
+}
+
+/// Skip a char (or byte-char) literal starting at the opening `'`. Returns
+/// `None` when the quote is a lifetime/label rather than a literal.
+fn skip_char_literal(b: &[u8], i: usize, force_literal: bool) -> Option<usize> {
+    if i + 1 >= b.len() {
+        return None;
+    }
+    if b[i + 1] == b'\\' {
+        let mut j = i + 2;
+        while j < b.len() {
+            match b[j] {
+                b'\\' => j += 2,
+                b'\'' => return Some(j + 1),
+                _ => j += 1,
+            }
+        }
+        return Some(j);
+    }
+    if i + 2 < b.len() && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+        return Some(i + 3);
+    }
+    if force_literal {
+        // b'x' is never a lifetime; scan to the closing quote defensively.
+        let mut j = i + 1;
+        while j < b.len() && b[j] != b'\'' && b[j] != b'\n' {
+            j += 1;
+        }
+        return Some((j + 1).min(b.len()));
+    }
+    None
+}
+
+/// Blank comments, strings and char literals; collect comment text by line.
+fn mask(src: &str) -> (Vec<u8>, Vec<(usize, String)>) {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push((line, String::from_utf8_lossy(&b[i..j]).into_owned()));
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Block comment (nested), recorded line by line.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut seg = i;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'\n' {
+                    comments.push((line, String::from_utf8_lossy(&b[seg..j]).into_owned()));
+                    line += 1;
+                    j += 1;
+                    seg = j;
+                } else if b[j] == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < b.len() && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            if seg < j {
+                comments.push((line, String::from_utf8_lossy(&b[seg..j]).into_owned()));
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Plain string literal.
+        if c == b'"' {
+            let j = skip_string(b, i);
+            line += out[i..j].iter().filter(|&&x| x == b'\n').count();
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes (word-boundary guarded so identifiers
+        // like `br_x` or raw idents like `r#fn` pass through untouched).
+        let at_word_start = i == 0 || !is_word_byte(b[i - 1]);
+        if at_word_start && (c == b'r' || c == b'b') {
+            let (prefix_len, byte_str) = match (c, b.get(i + 1)) {
+                (b'b', Some(b'r')) => (2, false),
+                (b'b', Some(b'"')) => (1, true),
+                (b'b', Some(b'\'')) => {
+                    if let Some(j) = skip_char_literal(b, i + 1, true) {
+                        blank(&mut out, i, j);
+                        i = j;
+                        continue;
+                    }
+                    (0, false)
+                }
+                (b'r', _) => (1, false),
+                _ => (0, false),
+            };
+            if byte_str {
+                let j = skip_string(b, i + 1);
+                line += out[i..j].iter().filter(|&&x| x == b'\n').count();
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+            if prefix_len > 0 {
+                if let Some(j) = skip_raw_string(b, i + prefix_len) {
+                    line += out[i..j].iter().filter(|&&x| x == b'\n').count();
+                    blank(&mut out, i, j);
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if let Some(j) = skip_char_literal(b, i, false) {
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    (out, comments)
+}
+
+fn line_starts_of(src: &[u8]) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, &b) in src.iter().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+fn line_of(line_starts: &[usize], offset: usize) -> usize {
+    match line_starts.binary_search(&offset) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+/// Word-boundary occurrences of `needle` in `hay`. Needles may end in `!`
+/// (macro tokens) or contain `::`; boundaries are checked on the needle's
+/// outer bytes.
+fn find_word(hay: &[u8], needle: &str) -> Vec<usize> {
+    let n = needle.as_bytes();
+    let mut hits = Vec::new();
+    if n.is_empty() || hay.len() < n.len() {
+        return hits;
+    }
+    let mut i = 0usize;
+    while i + n.len() <= hay.len() {
+        if &hay[i..i + n.len()] == n
+            && (i == 0 || !is_word_byte(hay[i - 1]))
+            && (i + n.len() == hay.len() || !is_word_byte(hay[i + n.len()]))
+        {
+            hits.push(i);
+            i += n.len();
+        } else {
+            i += 1;
+        }
+    }
+    hits
+}
+
+/// Plain substring occurrences (for attribute patterns).
+fn find_substr(hay: &[u8], needle: &str) -> Vec<usize> {
+    let n = needle.as_bytes();
+    if n.is_empty() || hay.len() < n.len() {
+        return Vec::new();
+    }
+    hay.windows(n.len()).enumerate().filter(|(_, w)| *w == n).map(|(i, _)| i).collect()
+}
+
+/// True when, skipping whitespace backwards from `pos`, the previous word
+/// token is exactly `kw`.
+fn preceded_by_kw(masked: &[u8], pos: usize, kw: &str) -> bool {
+    let k = kw.as_bytes();
+    let mut j = pos;
+    while j > 0 && masked[j - 1].is_ascii_whitespace() {
+        j -= 1;
+    }
+    j >= k.len()
+        && &masked[j - k.len()..j] == k
+        && (j == k.len() || !is_word_byte(masked[j - k.len() - 1]))
+}
+
+/// Byte ranges of `#[cfg(test)]` / `#[test]` items: from the attribute to
+/// the end of the following brace block (or `;` for gated declarations).
+fn test_ranges_of(masked: &[u8]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        for start in find_substr(masked, pat) {
+            let mut j = start + pat.len();
+            // Skip whitespace and any further attributes on the same item.
+            loop {
+                while j < masked.len() && masked[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                if j < masked.len() && masked[j] == b'#' {
+                    let mut bdepth = 0i32;
+                    while j < masked.len() {
+                        match masked[j] {
+                            b'[' => bdepth += 1,
+                            b']' => {
+                                bdepth -= 1;
+                                if bdepth == 0 {
+                                    j += 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                } else {
+                    break;
+                }
+            }
+            let mut depth = 0i32;
+            let mut end = masked.len();
+            while j < masked.len() {
+                match masked[j] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = j + 1;
+                            break;
+                        }
+                    }
+                    b';' if depth == 0 => {
+                        end = j + 1;
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            ranges.push((start, end));
+        }
+    }
+    ranges
+}
+
+fn fn_items_of(masked: &[u8]) -> Vec<FnItem> {
+    let mut items = Vec::new();
+    for pos in find_word(masked, "fn") {
+        let mut j = pos + 2;
+        while j < masked.len() && masked[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < masked.len() && is_word_byte(masked[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue; // fn-pointer type like `fn(u32) -> u32`, not an item
+        }
+        let name = String::from_utf8_lossy(&masked[name_start..j]).into_owned();
+        let mut paren = 0i32;
+        let mut body = None;
+        let mut decl_end = masked.len();
+        let mut k = j;
+        while k < masked.len() {
+            match masked[k] {
+                b'(' => paren += 1,
+                b')' => paren -= 1,
+                b'{' if paren == 0 => {
+                    let mut depth = 0i32;
+                    let mut end = masked.len();
+                    let mut m = k;
+                    while m < masked.len() {
+                        match masked[m] {
+                            b'{' => depth += 1,
+                            b'}' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    end = m + 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    body = Some((k, end));
+                    decl_end = k;
+                    break;
+                }
+                b';' if paren == 0 => {
+                    decl_end = k;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        items.push(FnItem { name, name_pos: name_start, decl_end, body });
+    }
+    items
+}
+
+fn analyze(rel: &str, src: &str) -> SourceFile {
+    let (masked, comments) = mask(src);
+    let line_starts = line_starts_of(src.as_bytes());
+    let test_ranges = test_ranges_of(&masked);
+    let fns = fn_items_of(&masked);
+    SourceFile { rel: rel.to_string(), masked, comments, line_starts, test_ranges, fns }
+}
+
+impl SourceFile {
+    fn line_of(&self, offset: usize) -> usize {
+        line_of(&self.line_starts, offset)
+    }
+
+    fn in_test(&self, offset: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| offset >= a && offset < b)
+    }
+
+    /// `tidy-allow: <rule>` on the given line or the line directly above.
+    fn allowed(&self, line: usize, rule: &str) -> bool {
+        let pat = format!("tidy-allow: {rule}");
+        self.comments
+            .iter()
+            .any(|(l, text)| (*l == line || *l + 1 == line) && text.contains(&pat))
+    }
+
+    /// A `SAFETY:` comment on the line or within the two lines above it.
+    fn has_safety_comment(&self, line: usize) -> bool {
+        self.comments
+            .iter()
+            .any(|(l, text)| *l <= line && *l + 2 >= line && text.contains("SAFETY:"))
+    }
+
+    /// Name of the innermost fn whose body contains `offset`.
+    fn enclosing_fn(&self, offset: usize) -> Option<&str> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.is_some_and(|(a, b)| offset >= a && offset < b))
+            .min_by_key(|f| {
+                let (a, b) = f.body.unwrap_or((0, usize::MAX));
+                b - a
+            })
+            .map(|f| f.name.as_str())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: hot-path-alloc
+// ---------------------------------------------------------------------------
+
+fn hot_alloc_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/quant/")
+        || rel.starts_with("rust/src/hw/")
+        || rel.starts_with("rust/src/rng/")
+        || rel == "rust/src/coordinator/layer_step.rs"
+}
+
+fn rule_hot_alloc(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for file in files.iter().filter(|f| hot_alloc_scope(&f.rel)) {
+        for f in &file.fns {
+            let hot = f.name.ends_with("_into") || f.name.ends_with("_scratch");
+            let Some((body_start, body_end)) = f.body else { continue };
+            if !hot || file.in_test(f.name_pos) {
+                continue;
+            }
+            for token in ALLOC_TOKENS {
+                for hit in find_word(&file.masked[body_start..body_end], token) {
+                    let line = file.line_of(body_start + hit);
+                    if file.allowed(line, "hot-path-alloc") {
+                        continue;
+                    }
+                    out.push(Violation {
+                        file: file.rel.clone(),
+                        line,
+                        rule: "hot-path-alloc",
+                        msg: format!("`{token}` in hot-path fn `{}`", f.name),
+                        hint: HINT_HOT_ALLOC,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: rng-registry
+// ---------------------------------------------------------------------------
+
+fn rng_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/")
+        && !rel.starts_with("rust/src/rng/")
+        && !rel.starts_with("rust/src/testutil/")
+}
+
+/// Draw sites found in the tree: registry key -> first line observed.
+fn collect_draw_sites(files: &[SourceFile]) -> BTreeMap<String, usize> {
+    let mut sites = BTreeMap::new();
+    for file in files.iter().filter(|f| rng_scope(&f.rel)) {
+        for token in DRAW_TOKENS {
+            for hit in find_word(&file.masked, token) {
+                if file.in_test(hit) || preceded_by_kw(&file.masked, hit, "fn") {
+                    continue;
+                }
+                let line = file.line_of(hit);
+                if file.allowed(line, "rng-registry") {
+                    continue;
+                }
+                let who = file.enclosing_fn(hit).unwrap_or("<module>");
+                let key = format!("{} {} {}", file.rel, who, token);
+                sites.entry(key).or_insert(line);
+            }
+        }
+    }
+    sites
+}
+
+fn rule_rng_registry(
+    files: &[SourceFile],
+    registry: &BTreeSet<String>,
+) -> (Vec<Violation>, Vec<String>) {
+    let sites = collect_draw_sites(files);
+    let mut violations = Vec::new();
+    let mut notices = Vec::new();
+    for (key, line) in &sites {
+        if !registry.contains(key) {
+            let rel = key.split(' ').next().unwrap_or("");
+            violations.push(Violation {
+                file: rel.to_string(),
+                line: *line,
+                rule: "rng-registry",
+                msg: format!("unregistered RNG draw site; add to {REGISTRY_PATH}: `{key}`"),
+                hint: HINT_RNG,
+            });
+        }
+    }
+    let scanned: BTreeSet<&str> = files.iter().map(|f| f.rel.as_str()).collect();
+    for entry in registry {
+        let rel = entry.split(' ').next().unwrap_or("");
+        if scanned.contains(rel) && !sites.contains_key(entry) {
+            notices.push(format!(
+                "{REGISTRY_PATH}: stale entry `{entry}` (site no longer present; prune it)"
+            ));
+        }
+    }
+    (violations, notices)
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: coverage
+// ---------------------------------------------------------------------------
+
+/// Variant names and definition lines of `enum <name>` in `file`.
+fn enum_variants(file: &SourceFile, enum_name: &str) -> Vec<(String, usize)> {
+    let masked = &file.masked;
+    for pos in find_word(masked, enum_name) {
+        if !preceded_by_kw(masked, pos, "enum") {
+            continue;
+        }
+        let mut k = pos;
+        while k < masked.len() && masked[k] != b'{' {
+            k += 1;
+        }
+        let mut depth = 0i32;
+        let mut expecting = true;
+        let mut out = Vec::new();
+        while k < masked.len() {
+            match masked[k] {
+                b'{' | b'(' | b'[' => depth += 1,
+                b'}' | b')' | b']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                b',' if depth == 1 => expecting = true,
+                b'#' if depth == 1 => {
+                    // Skip an attribute wholesale.
+                    let mut bdepth = 0i32;
+                    while k < masked.len() {
+                        match masked[k] {
+                            b'[' => bdepth += 1,
+                            b']' => {
+                                bdepth -= 1;
+                                if bdepth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                }
+                c if depth == 1 && expecting && is_word_byte(c) => {
+                    let start = k;
+                    while k < masked.len() && is_word_byte(masked[k]) {
+                        k += 1;
+                    }
+                    let name = String::from_utf8_lossy(&masked[start..k]).into_owned();
+                    out.push((name, file.line_of(start)));
+                    expecting = false;
+                    continue;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        return out;
+    }
+    Vec::new()
+}
+
+/// Fns in `file` whose signature returns `&'static ProductLut`.
+fn lut_accessors(file: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for f in &file.fns {
+        let sig = &file.masked[f.name_pos..f.decl_end.min(file.masked.len())];
+        if String::from_utf8_lossy(sig).contains("&'static ProductLut") {
+            out.push((f.name.clone(), file.line_of(f.name_pos)));
+        }
+    }
+    out
+}
+
+fn rule_coverage(files: &[SourceFile]) -> Vec<Violation> {
+    let by_rel = |rel: &str| files.iter().find(|f| f.rel == rel);
+    let conformance = by_rel("rust/src/testutil/conformance.rs");
+    let fault = by_rel("rust/src/testutil/fault_suite.rs");
+    let benches: Vec<&SourceFile> =
+        files.iter().filter(|f| f.rel.starts_with("benches/")).collect();
+
+    let referenced = |name: &str, corpus: Option<&SourceFile>| {
+        corpus.is_some_and(|f| !find_word(&f.masked, name).is_empty())
+    };
+    let referenced_in_benches =
+        |name: &str| benches.iter().any(|f| !find_word(&f.masked, name).is_empty());
+
+    let mut required = Vec::new();
+    if let Some(def) = by_rel("rust/src/coordinator/layer_step.rs") {
+        for (v, line) in enum_variants(def, "ForwardFormat") {
+            required.push((def, v, line, "ForwardFormat variant", true));
+        }
+    }
+    if let Some(def) = by_rel("rust/src/hw/qgemm.rs") {
+        for (v, line) in lut_accessors(def) {
+            required.push((def, v, line, "ProductLut instantiation", true));
+        }
+    }
+    if let Some(def) = by_rel("rust/src/quant/health.rs") {
+        for (v, line) in enum_variants(def, "FaultClass") {
+            required.push((def, v, line, "FaultClass variant", false));
+        }
+    }
+
+    let mut out = Vec::new();
+    for (def, name, line, kind, everywhere) in required {
+        if def.allowed(line, "coverage") {
+            continue;
+        }
+        let mut missing: Vec<&str> = Vec::new();
+        if everywhere && !referenced(&name, conformance) {
+            missing.push("testutil/conformance.rs");
+        }
+        if everywhere && !referenced_in_benches(&name) {
+            missing.push("benches/*.rs");
+        }
+        if !referenced(&name, fault) {
+            missing.push("testutil/fault_suite.rs");
+        }
+        if !missing.is_empty() {
+            out.push(Violation {
+                file: def.rel.clone(),
+                line,
+                rule: "coverage",
+                msg: format!("{kind} `{name}` is not referenced in: {}", missing.join(", ")),
+                hint: HINT_COVERAGE,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: panic-policy
+// ---------------------------------------------------------------------------
+
+fn panic_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/")
+        && rel != "rust/src/main.rs"
+        && !rel.starts_with("rust/src/bin/")
+        && !rel.starts_with("rust/src/testutil/")
+}
+
+/// Whether the next non-whitespace byte after `pos` is `(` — distinguishes
+/// `.unwrap()` calls from identifiers merely containing the word.
+fn followed_by_call(masked: &[u8], pos: usize) -> bool {
+    let mut j = pos;
+    while j < masked.len() && masked[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    j < masked.len() && masked[j] == b'('
+}
+
+/// `file:line: token` for every counted panic site, sorted.
+fn collect_panic_sites(files: &[SourceFile]) -> Vec<String> {
+    let mut sites = Vec::new();
+    for file in files.iter().filter(|f| panic_scope(&f.rel)) {
+        for token in ["unwrap", "expect", "panic!", "unreachable!"] {
+            for hit in find_word(&file.masked, token) {
+                if file.in_test(hit) || preceded_by_kw(&file.masked, hit, "fn") {
+                    continue;
+                }
+                let is_method = !token.ends_with('!');
+                if is_method && !followed_by_call(&file.masked, hit + token.len()) {
+                    continue;
+                }
+                let line = file.line_of(hit);
+                if file.allowed(line, "panic-policy") {
+                    continue;
+                }
+                sites.push((file.rel.clone(), line, token));
+            }
+        }
+    }
+    sites.sort();
+    sites.into_iter().map(|(rel, line, token)| format!("{rel}:{line}: `{token}`")).collect()
+}
+
+fn rule_panic(
+    files: &[SourceFile],
+    budget: Option<usize>,
+) -> (Vec<Violation>, Vec<String>, Vec<String>) {
+    let sites = collect_panic_sites(files);
+    let mut violations = Vec::new();
+    let mut notices = Vec::new();
+    match budget {
+        None => violations.push(Violation {
+            file: BUDGET_PATH.to_string(),
+            line: 1,
+            rule: "panic-policy",
+            msg: format!("missing or unreadable budget file ({} sites counted)", sites.len()),
+            hint: HINT_PANIC,
+        }),
+        Some(b) if sites.len() > b => violations.push(Violation {
+            file: BUDGET_PATH.to_string(),
+            line: 1,
+            rule: "panic-policy",
+            msg: format!(
+                "{} panic sites in non-test library code exceed the budget of {b} \
+                 (the budget may only shrink)",
+                sites.len()
+            ),
+            hint: HINT_PANIC,
+        }),
+        Some(b) if sites.len() < b => notices.push(format!(
+            "{BUDGET_PATH}: budget {b} has slack — {} sites counted; lower it to lock in the \
+             burn-down",
+            sites.len()
+        )),
+        Some(_) => {}
+    }
+    (violations, notices, sites)
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: safety-comment
+// ---------------------------------------------------------------------------
+
+fn rule_safety(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for file in files.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        for hit in find_word(&file.masked, "unsafe") {
+            let line = file.line_of(hit);
+            if file.has_safety_comment(line) || file.allowed(line, "safety-comment") {
+                continue;
+            }
+            out.push(Violation {
+                file: file.rel.clone(),
+                line,
+                rule: "safety-comment",
+                msg: "`unsafe` without a `// SAFETY:` comment".to_string(),
+                hint: HINT_SAFETY,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn load_tree(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    walk_rs(&root.join("rust/src"), &mut paths)?;
+    let benches = root.join("benches");
+    if benches.is_dir() {
+        walk_rs(&benches, &mut paths)?;
+    }
+    let mut files = Vec::new();
+    for path in paths {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src = fs::read_to_string(&path)?;
+        files.push(analyze(&rel, &src));
+    }
+    Ok(files)
+}
+
+/// Registry lines, `#` comments and blanks stripped.
+fn parse_registry(text: &str) -> BTreeSet<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// First integer line of the budget file.
+fn parse_budget(text: &str) -> Option<usize> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .find_map(|l| l.parse().ok())
+}
+
+struct Report {
+    violations: Vec<Violation>,
+    notices: Vec<String>,
+    panic_sites: Vec<String>,
+    n_files: usize,
+}
+
+fn run_all(root: &Path) -> std::io::Result<Report> {
+    let files = load_tree(root)?;
+    let registry = fs::read_to_string(root.join(REGISTRY_PATH))
+        .map(|t| parse_registry(&t))
+        .unwrap_or_default();
+    let budget = fs::read_to_string(root.join(BUDGET_PATH)).ok().and_then(|t| parse_budget(&t));
+
+    let mut violations = Vec::new();
+    let mut notices = Vec::new();
+    violations.extend(rule_hot_alloc(&files));
+    let (v, n) = rule_rng_registry(&files, &registry);
+    violations.extend(v);
+    notices.extend(n);
+    violations.extend(rule_coverage(&files));
+    let (v, n, panic_sites) = rule_panic(&files, budget);
+    let panic_failed = !v.is_empty();
+    violations.extend(v);
+    notices.extend(n);
+    violations.extend(rule_safety(&files));
+
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    let sites = if panic_failed { panic_sites } else { Vec::new() };
+    Ok(Report { violations, notices, panic_sites: sites, n_files: files.len() })
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("tidy: --root requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: tidy [--root <repo-root>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("tidy: unknown flag `{other}` (known: --root <path>)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if !root.join("rust/src").is_dir() {
+        let shown = root.display();
+        eprintln!("tidy: {shown} has no rust/src — run from the repo root or pass --root");
+        return ExitCode::from(2);
+    }
+    let report = match run_all(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("tidy: io error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &report.violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+        println!("  fix: {}", v.hint);
+    }
+    if !report.panic_sites.is_empty() {
+        println!("panic-policy sites counted:");
+        for site in &report.panic_sites {
+            println!("  {site}");
+        }
+    }
+    for n in &report.notices {
+        println!("note: {n}");
+    }
+    if report.violations.is_empty() {
+        println!("tidy: clean ({} files, 5 rules)", report.n_files);
+        ExitCode::SUCCESS
+    } else {
+        println!("tidy: {} violation(s)", report.violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests: fixtures per rule (violating / clean / exempted) plus the
+// scanner primitives and a repo-clean integration check. All names start
+// with `tidy_` so `cargo test -q tidy_` runs exactly this suite.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        analyze(rel, src)
+    }
+
+    #[test]
+    fn tidy_mask_blanks_strings_comments_and_chars() {
+        let src = "let s = \"vec![no]\"; // vec! in comment\nlet c = '\"'; let v = vec![1];\n";
+        let (masked, comments) = mask(src);
+        let m = String::from_utf8_lossy(&masked).into_owned();
+        assert!(!m.contains("no"), "string not blanked: {m}");
+        assert!(!m.contains("comment"), "comment not blanked: {m}");
+        assert_eq!(find_word(masked.as_slice(), "vec!").len(), 1, "{m}");
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].0, 1);
+        assert!(comments[0].1.contains("vec! in comment"));
+    }
+
+    #[test]
+    fn tidy_mask_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> &'static str { r#\"clone()\"# ; b\"to_vec\"; \"x\" }\n";
+        let (masked, _) = mask(src);
+        let m = String::from_utf8_lossy(&masked).into_owned();
+        assert!(m.contains("'a"), "lifetime was eaten: {m}");
+        assert!(m.contains("'static"), "'static was eaten: {m}");
+        assert!(find_word(&masked, "clone").is_empty(), "raw string not blanked: {m}");
+        assert!(find_word(&masked, "to_vec").is_empty(), "byte string not blanked: {m}");
+    }
+
+    #[test]
+    fn tidy_mask_handles_nested_block_comments_and_escapes() {
+        let src = "/* outer /* inner clone */ still */ let x = \"a\\\"clone\\\"b\";\nlet y = 1;\n";
+        let (masked, _) = mask(src);
+        assert!(find_word(&masked, "clone").is_empty());
+        assert_eq!(find_word(&masked, "y").len(), 1);
+    }
+
+    #[test]
+    fn tidy_fn_extraction_finds_bodies_and_enclosing_fn() {
+        let src = "pub fn alpha(x: u32) -> u32 {\n    let v = x;\n    v\n}\nfn beta();\n";
+        let f = file("rust/src/quant/x.rs", src);
+        assert_eq!(f.fns.len(), 2);
+        assert_eq!(f.fns[0].name, "alpha");
+        assert!(f.fns[0].body.is_some());
+        assert_eq!(f.fns[1].name, "beta");
+        assert!(f.fns[1].body.is_none());
+        let off = src.find("let v").unwrap();
+        assert_eq!(f.enclosing_fn(off), Some("alpha"));
+    }
+
+    #[test]
+    fn tidy_test_region_detection() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {}\n}\n";
+        let f = file("rust/src/quant/x.rs", src);
+        let live = src.find("live").unwrap();
+        let t = src.find("fn t").unwrap();
+        assert!(!f.in_test(live));
+        assert!(f.in_test(t));
+    }
+
+    const HOT_VIOLATING: &str =
+        "pub fn quantize_into(out: &mut [f32]) {\n    let v = vec![0.0f32; 4];\n    out[0] = v[0];\n}\n";
+    const HOT_CLEAN: &str =
+        "pub fn quantize_into(out: &mut [f32]) {\n    for o in out.iter_mut() {\n        *o = 0.0;\n    }\n}\n";
+    const HOT_EXEMPT: &str = "pub fn quantize_into(out: &mut [f32]) {\n    \
+         // tidy-allow: hot-path-alloc (cold setup path, measured once)\n    \
+         let v = vec![0.0f32; 4];\n    out[0] = v[0];\n}\n";
+
+    #[test]
+    fn tidy_hot_alloc_flags_vec_in_into_fn() {
+        let files = vec![file("rust/src/quant/x.rs", HOT_VIOLATING)];
+        let v = rule_hot_alloc(&files);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "hot-path-alloc");
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].msg.contains("quantize_into"));
+    }
+
+    #[test]
+    fn tidy_hot_alloc_clean_fn_passes() {
+        let files = vec![file("rust/src/quant/x.rs", HOT_CLEAN)];
+        assert!(rule_hot_alloc(&files).is_empty());
+    }
+
+    #[test]
+    fn tidy_hot_alloc_allow_exempts() {
+        let files = vec![file("rust/src/quant/x.rs", HOT_EXEMPT)];
+        assert!(rule_hot_alloc(&files).is_empty());
+    }
+
+    #[test]
+    fn tidy_hot_alloc_ignores_other_dirs_and_tests() {
+        // Same violating code outside the hot-path scope: clean.
+        let files = vec![file("rust/src/metrics/x.rs", HOT_VIOLATING)];
+        assert!(rule_hot_alloc(&files).is_empty());
+        // Inside a #[cfg(test)] block: clean.
+        let src = format!("#[cfg(test)]\nmod tests {{\n{HOT_VIOLATING}\n}}\n");
+        let files = vec![file("rust/src/quant/x.rs", &src)];
+        assert!(rule_hot_alloc(&files).is_empty());
+    }
+
+    const DRAW_SITE: &str =
+        "pub fn refill(rng: &mut Xoshiro256, out: &mut [f32]) {\n    rng.fill_uniform(out);\n}\n";
+
+    #[test]
+    fn tidy_rng_registry_flags_unregistered() {
+        let files = vec![file("rust/src/quant/x.rs", DRAW_SITE)];
+        let (v, _) = rule_rng_registry(&files, &BTreeSet::new());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("rust/src/quant/x.rs refill fill_uniform"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn tidy_rng_registry_registered_passes_and_stale_notices() {
+        let files = vec![file("rust/src/quant/x.rs", DRAW_SITE)];
+        let mut reg = BTreeSet::new();
+        reg.insert("rust/src/quant/x.rs refill fill_uniform".to_string());
+        reg.insert("rust/src/quant/x.rs gone next_u64".to_string());
+        let (v, notices) = rule_rng_registry(&files, &reg);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(notices.len(), 1);
+        assert!(notices[0].contains("stale"));
+    }
+
+    #[test]
+    fn tidy_rng_registry_allow_and_scope_exempt() {
+        let exempt = "pub fn refill(rng: &mut X, out: &mut [f32]) {\n    \
+             // tidy-allow: rng-registry (draw count asserted locally)\n    \
+             rng.fill_uniform(out);\n}\n";
+        let files = vec![
+            file("rust/src/quant/x.rs", exempt),
+            // rng/ and testutil/ are out of scope entirely.
+            file("rust/src/rng/x.rs", DRAW_SITE),
+            file("rust/src/testutil/x.rs", DRAW_SITE),
+        ];
+        let (v, _) = rule_rng_registry(&files, &BTreeSet::new());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// A minimal multi-file tree for the coverage rule.
+    fn coverage_tree(conf: &str, bench: &str, fault: &str) -> Vec<SourceFile> {
+        let defs = "pub enum ForwardFormat {\n    Sawb,\n    Radix4Tpr,\n}\n";
+        let health = "pub enum FaultClass {\n    NonFinite,\n}\n";
+        let luts = "pub fn product_lut() -> &'static ProductLut {\n    &LUT\n}\n";
+        vec![
+            file("rust/src/coordinator/layer_step.rs", defs),
+            file("rust/src/quant/health.rs", health),
+            file("rust/src/hw/qgemm.rs", luts),
+            file("rust/src/testutil/conformance.rs", conf),
+            file("benches/qgemm.rs", bench),
+            file("rust/src/testutil/fault_suite.rs", fault),
+        ]
+    }
+
+    #[test]
+    fn tidy_coverage_flags_unreferenced_variant() {
+        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite); }\n";
+        let missing_radix = "fn f() { let _ = (Sawb, product_lut, NonFinite); }\n";
+        let v = rule_coverage(&coverage_tree(all, all, missing_radix));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("Radix4Tpr"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("fault_suite"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn tidy_coverage_passes_when_referenced() {
+        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite); }\n";
+        assert!(rule_coverage(&coverage_tree(all, all, all)).is_empty());
+    }
+
+    #[test]
+    fn tidy_coverage_allow_exempts_at_definition() {
+        let defs = "pub enum ForwardFormat {\n    Sawb,\n    \
+             // tidy-allow: coverage (format still landing)\n    Radix4Tpr,\n}\n";
+        let rest = "fn f() { let _ = (Sawb, product_lut, NonFinite); }\n";
+        let mut files = coverage_tree(rest, rest, rest);
+        files[0] = file("rust/src/coordinator/layer_step.rs", defs);
+        assert!(rule_coverage(&files).is_empty());
+    }
+
+    const PANIC_SITE: &str = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+
+    #[test]
+    fn tidy_panic_ratchet_over_budget_fails() {
+        let files = vec![file("rust/src/quant/x.rs", PANIC_SITE)];
+        let (v, _, sites) = rule_panic(&files, Some(0));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0], "rust/src/quant/x.rs:2: `unwrap`");
+    }
+
+    #[test]
+    fn tidy_panic_ratchet_at_budget_passes_and_slack_notices() {
+        let files = vec![file("rust/src/quant/x.rs", PANIC_SITE)];
+        let (v, notices, _) = rule_panic(&files, Some(1));
+        assert!(v.is_empty(), "{v:?}");
+        assert!(notices.is_empty());
+        let (v, notices, _) = rule_panic(&files, Some(5));
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(notices.len(), 1, "{notices:?}");
+        assert!(notices[0].contains("slack"));
+    }
+
+    #[test]
+    fn tidy_panic_ignores_tests_allows_and_non_calls() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    \
+             // tidy-allow: panic-policy (invariant: x checked above)\n    \
+             x.unwrap()\n}\npub fn g(x: Option<u32>) -> u32 {\n    x.unwrap_or(0)\n}\n\
+             #[cfg(test)]\nmod tests {\n    fn t() {\n        panic!();\n    }\n}\n";
+        let files = vec![file("rust/src/quant/x.rs", src)];
+        let (_, _, sites) = rule_panic(&files, Some(0));
+        assert!(sites.is_empty(), "{sites:?}");
+        // main.rs, bin/ and testutil/ are out of scope.
+        let files = vec![
+            file("rust/src/main.rs", PANIC_SITE),
+            file("rust/src/bin/tidy.rs", PANIC_SITE),
+            file("rust/src/testutil/x.rs", PANIC_SITE),
+        ];
+        let (_, _, sites) = rule_panic(&files, Some(0));
+        assert!(sites.is_empty(), "{sites:?}");
+    }
+
+    #[test]
+    fn tidy_panic_missing_budget_is_a_violation() {
+        let files = vec![file("rust/src/quant/x.rs", PANIC_SITE)];
+        let (v, _, _) = rule_panic(&files, None);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("missing"));
+    }
+
+    #[test]
+    fn tidy_safety_requires_comment() {
+        let bad = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let files = vec![file("rust/src/hw/x.rs", bad)];
+        let v = rule_safety(&files);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn tidy_safety_comment_or_allow_passes() {
+        let good = "pub fn f(p: *const u8) -> u8 {\n    \
+             // SAFETY: caller guarantees p is valid for reads\n    unsafe { *p }\n}\n";
+        assert!(rule_safety(&[file("rust/src/hw/x.rs", good)]).is_empty());
+        let waived = "pub fn f(p: *const u8) -> u8 {\n    \
+             // tidy-allow: safety-comment (documented at the call site)\n    unsafe { *p }\n}\n";
+        assert!(rule_safety(&[file("rust/src/hw/x.rs", waived)]).is_empty());
+    }
+
+    #[test]
+    fn tidy_registry_and_budget_parsers() {
+        let reg = parse_registry("# header\n\n a b c \nd e f\n");
+        assert_eq!(reg.len(), 2);
+        assert!(reg.contains("a b c"));
+        assert_eq!(parse_budget("# why\n 42 \n"), Some(42));
+        assert_eq!(parse_budget("# only comments\n"), None);
+    }
+
+    /// The whole tree must be clean: zero unexempted violations against the
+    /// committed registry and budget. This is the same run CI performs.
+    #[test]
+    fn tidy_repo_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run_all(root).expect("repo tree readable");
+        assert!(report.n_files > 20, "suspiciously few files: {}", report.n_files);
+        let rendered: Vec<String> = report
+            .violations
+            .iter()
+            .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg))
+            .collect();
+        assert!(rendered.is_empty(), "tidy violations:\n{}", rendered.join("\n"));
+    }
+}

@@ -135,13 +135,13 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
 /// Run `op` up to `attempts` times, sleeping `backoff` (doubling each
 /// retry) between failures — the bounded-retry wrapper for transient IO
 /// errors (NFS blips, ENOSPC races). Returns the first success or the
-/// last error.
+/// last error; `attempts == 0` is reported as an error rather than a
+/// panic so callers with computed retry counts keep their Result flow.
 pub fn retry_io<T>(
     attempts: usize,
     mut backoff: Duration,
     mut op: impl FnMut() -> Result<T>,
 ) -> Result<T> {
-    assert!(attempts >= 1, "retry_io needs at least one attempt");
     let mut last_err = None;
     for attempt in 0..attempts {
         match op() {
@@ -155,7 +155,10 @@ pub fn retry_io<T>(
             }
         }
     }
-    Err(last_err.expect("attempts >= 1").context("retries exhausted"))
+    match last_err {
+        Some(e) => Err(e.context("retries exhausted")),
+        None => Err(anyhow!("retry_io called with zero attempts")),
+    }
 }
 
 /// [`Checkpoint::save`] with bounded retry/backoff. The write is atomic
@@ -409,16 +412,17 @@ fn read_verified(path: &Path) -> Result<Checkpoint> {
         }
         match dtype.as_str() {
             "float32" => {
+                // chunks_exact(4) guarantees each chunk is exactly 4 bytes.
                 let data = buf
                     .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect();
                 tensors.push(HostTensor::f32(shape, data));
             }
             _ => {
                 let data = buf
                     .chunks_exact(4)
-                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect();
                 tensors.push(HostTensor::i32(shape, data));
             }

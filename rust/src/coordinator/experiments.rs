@@ -118,7 +118,11 @@ fn print_and_save(
     rows: Vec<Vec<String>>,
 ) -> Result<String> {
     let table = render_table(headers, &rows);
-    println!("\n### {tag}\n{table}");
+    // The rendered experiment table is this function's product, not a log.
+    #[allow(clippy::print_stdout)]
+    {
+        println!("\n### {tag}\n{table}");
+    }
     write_csv(format!("{}/{tag}.csv", opts.out_dir), headers, &rows)?;
     Ok(table)
 }

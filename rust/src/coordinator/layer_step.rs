@@ -734,6 +734,31 @@ mod tests {
         assert_eq!(step.scratch_capacities(), warmed, "smaller shape reallocated");
     }
 
+    /// Hard upgrade of the capacity-pinning argument above: under the
+    /// counting allocator (installed for unit tests only), a warmed
+    /// single-threaded step performs literally **zero** heap allocations,
+    /// for both forward formats. Single-threaded because the MT path
+    /// spawns scoped threads, and spawning allocates by design.
+    #[test]
+    fn hard_zero_alloc_steady_state_both_formats() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x58);
+        let (batch, d_in, d_out) = (9usize, 15, 11);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+            let cfg = LogQuantConfig::luq(LogFormat::FP4);
+            let mut step = QuantizedLayerStep::with_format(cfg, BITS, format);
+            let mut rng = Xoshiro256::seed_from_u64(8);
+            for _ in 0..2 {
+                step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1);
+            }
+            let (_, stats) = crate::testutil::alloc_guard::measure(|| {
+                step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1)
+            });
+            assert_eq!(stats.allocs, 0, "{format:?} step allocated: {stats:?}");
+            assert_eq!(stats.deallocs, 0, "{format:?} step freed: {stats:?}");
+        }
+    }
+
     /// Degenerate inputs flow through as zeros, never NaN: an all-zero
     /// gradient zeroes dx/dW (α = 0), an all-zero activation tensor
     /// zeroes y and dW.

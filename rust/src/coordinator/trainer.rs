@@ -363,11 +363,10 @@ impl Trainer {
         let data_inputs = self.data.batch(batch, meta.model.seq_len, stream);
         let lr_input = HostTensor::scalar_f32(lr);
         for (tensor, bank) in self.noise_inputs.iter_mut().zip(self.noise.iter_mut()) {
-            bank.take_into(
-                tensor
-                    .as_f32_mut()
-                    .expect("noise tensors are f32 by construction"),
-            );
+            let slot = tensor
+                .as_f32_mut()
+                .context("noise tensor is not f32 — artifact meta / input-plan mismatch")?;
+            bank.take_into(slot);
         }
         let ests: Vec<Option<f32>> = self.hindsight.iter().map(|h| h.estimate()).collect();
         let (est_vals, use_est) = resolve_hindsight_inputs(self.opts.hindsight, &ests);

@@ -16,6 +16,11 @@
 //!   ([`metrics`]), deterministic RNG ([`rng`]), config ([`config`]), and
 //!   an in-repo bench/property-test harness ([`bench`], [`testutil`]).
 
+// Library code reports through `metrics`/`eprintln!`; stdout belongs to the
+// binaries. The two deliberate exceptions (the experiment table printer and
+// the bench group banner) carry explicit `#[allow]`s.
+#![warn(clippy::print_stdout)]
+
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -37,7 +37,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), String> {
         if self.bump() == Some(c) {
             Ok(())
         } else {
@@ -76,14 +76,15 @@ impl<'a> Parser<'a> {
         ) {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|e| format!("bad number bytes at {start}: {e}"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|e| format!("bad number `{s}`: {e}"))
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.bump() {
@@ -108,17 +109,33 @@ impl<'a> Parser<'a> {
                     }
                     other => return Err(format!("bad escape {other:?}")),
                 },
+                Some(c) if c < 0x80 => out.push(c as char),
                 Some(c) => {
-                    // reassemble multibyte UTF-8 by byte-pushing
-                    // (src is valid UTF-8 by construction)
-                    unsafe { out.as_mut_vec().push(c) }
+                    // Multibyte UTF-8 lead byte: the continuation bytes
+                    // follow immediately in the (already valid) source, so
+                    // re-slice the whole code point and validate — no byte
+                    // surgery on the String's buffer needed.
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let start = self.i - 1;
+                    let chunk = self
+                        .b
+                        .get(start..start + len)
+                        .ok_or_else(|| "unterminated string".to_string())?;
+                    let s = std::str::from_utf8(chunk)
+                        .map_err(|e| format!("invalid UTF-8 in string at byte {start}: {e}"))?;
+                    out.push_str(s);
+                    self.i = start + len;
                 }
             }
         }
     }
 
     fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -137,7 +154,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -148,7 +165,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let v = self.value()?;
             pairs.push((key, v));
             self.skip_ws();

@@ -1,0 +1,155 @@
+//! Counting global allocator: upgrades "allocation-free at steady state"
+//! from a capacity-pinning argument into a hard zero-alloc assertion.
+//!
+//! The crate's unit-test binary (and only it — see the `#[cfg(test)]` on
+//! the `#[global_allocator]` below) routes every heap call through
+//! [`CountingAlloc`], which bumps **thread-local** counters and delegates
+//! to [`System`]. Thread-locality matters twice over: the libtest harness
+//! runs tests concurrently, so a global counter would pick up allocations
+//! from unrelated tests; and the counters are `const`-initialized `Cell`s,
+//! so reading them never allocates — a lazily-initialized thread-local
+//! would recurse into the allocator it instruments.
+//!
+//! [`measure`] wraps a closure and returns the delta. It first runs a probe
+//! allocation and panics loudly if the counting allocator is not installed
+//! (integration tests and benches link the non-test build of this crate,
+//! where `measure` would otherwise report zeros and vacuously pass).
+//!
+//! Zero-alloc assertions are only meaningful at `n_threads == 1`:
+//! multithreaded layer steps spawn scoped threads, and spawning allocates
+//! on the spawning thread by design.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static DEALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocation counts observed on the current thread.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Number of `alloc`/`alloc_zeroed`/`realloc` calls.
+    pub allocs: u64,
+    /// Number of `dealloc` calls.
+    pub deallocs: u64,
+    /// Total bytes requested across counted allocation calls.
+    pub bytes: u64,
+}
+
+fn snapshot() -> AllocStats {
+    AllocStats {
+        allocs: ALLOCS.with(Cell::get),
+        deallocs: DEALLOCS.with(Cell::get),
+        bytes: BYTES.with(Cell::get),
+    }
+}
+
+fn count_alloc(bytes: usize) {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+    BYTES.with(|c| c.set(c.get() + bytes as u64));
+}
+
+/// `System`, with thread-local call counting bolted on.
+pub struct CountingAlloc;
+
+// SAFETY: every method delegates to System with unchanged arguments; counter
+// bumps are plain thread-local stores, so System's contract is preserved.
+unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        count_alloc(layout.size());
+        // SAFETY: same layout the caller vouched for.
+        unsafe { System.alloc(layout) }
+    }
+
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.with(|c| c.set(c.get() + 1));
+        // SAFETY: ptr/layout pair comes from a prior alloc on this allocator,
+        // which always delegated to System.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        count_alloc(layout.size());
+        // SAFETY: same layout the caller vouched for.
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded to System.
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        count_alloc(new_size);
+        // SAFETY: ptr/layout pair comes from a prior alloc on this allocator;
+        // new_size is forwarded unchanged.
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[cfg(test)]
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` and return its result plus the allocation delta observed on this
+/// thread. Panics if the counting allocator is not installed (i.e. when
+/// called from anything but this crate's unit tests), so a hard zero-alloc
+/// assertion can never pass vacuously.
+pub fn measure<T>(f: impl FnOnce() -> T) -> (T, AllocStats) {
+    let pre = snapshot();
+    let probe = std::hint::black_box(Vec::<u8>::with_capacity(16));
+    drop(probe);
+    assert!(
+        ALLOCS.with(Cell::get) > pre.allocs,
+        "alloc_guard: counting allocator not installed — measure() is only meaningful in this \
+         crate's unit tests (the #[cfg(test)] #[global_allocator])"
+    );
+    let before = snapshot();
+    let out = f();
+    let after = snapshot();
+    (
+        out,
+        AllocStats {
+            allocs: after.allocs - before.allocs,
+            deallocs: after.deallocs - before.deallocs,
+            bytes: after.bytes - before.bytes,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_allocator_registers_allocations() {
+        // Guards against the allocator silently not being installed: a
+        // fresh Vec must register exactly one allocation of >= its request.
+        let (v, stats) = measure(|| std::hint::black_box(vec![0u8; 4096]));
+        assert_eq!(v.len(), 4096);
+        assert!(stats.allocs >= 1, "{stats:?}");
+        assert!(stats.bytes >= 4096, "{stats:?}");
+    }
+
+    #[test]
+    fn measure_sees_zero_for_alloc_free_code() {
+        let mut acc = 0u64;
+        let (_, stats) = measure(|| {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            std::hint::black_box(acc)
+        });
+        assert_eq!(stats.allocs, 0, "{stats:?}");
+        assert_eq!(stats.bytes, 0, "{stats:?}");
+    }
+
+    #[test]
+    fn dealloc_is_counted() {
+        let v = vec![1u8; 128];
+        let (_, stats) = measure(|| drop(std::hint::black_box(v)));
+        assert!(stats.deallocs >= 1, "{stats:?}");
+    }
+}

@@ -7,7 +7,10 @@
 //! every kernel variant (scalar decode loop, flat LUT, tiled LUT, and the
 //! multithreaded row-band driver at any thread count) is **bit-identical**
 //! to the format's decode-then-f32-matmul oracle. This module drives all
-//! three formats through one table: seeded randomized shapes plus a fixed
+//! three formats — plus a corrupted-operand row and a forward-format
+//! layer-step row (thread-count invariance of the full
+//! [`QuantizedLayerStep`] and LUT↔decode agreement) — through one table:
+//! seeded randomized shapes plus a fixed
 //! edge-shape list (`m`/`n` ∈ {0, 1}, `k` ∈ {0, 1, odd}, tile boundaries)
 //! × thread counts {1, 2, num_cpus}, with every packed operand emitted by
 //! the format's real matrix emitter — once densely and once at a row
@@ -18,15 +21,17 @@
 //! first divergence (the `prop_check` reporting convention), so a
 //! replaying `cargo test conformance` pinpoints the exact case.
 
-use crate::hw::mfbprop::Int4Code;
+use crate::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
+use crate::hw::mfbprop::{Fp4Code, Int4Code};
 use crate::hw::qgemm::{
-    qgemm_decode_oracle, qgemm_int4_decode_oracle, qgemm_int4_flat, qgemm_int4_into,
-    qgemm_int4_mt_with, qgemm_int4_scalar_reference, qgemm_int4_with, qgemm_packed_flat,
-    qgemm_packed_into, qgemm_packed_mt_with, qgemm_packed_with, qgemm_radix4_decode_oracle,
-    qgemm_radix4_flat, qgemm_radix4_into, qgemm_radix4_mt_with, qgemm_radix4_scalar_reference,
-    qgemm_radix4_with, qgemm_scalar_reference, QgemmScratch, TILE_M, TILE_N,
+    int4_product_lut, product_lut, qgemm_decode_oracle, qgemm_int4_decode_oracle,
+    qgemm_int4_flat, qgemm_int4_into, qgemm_int4_mt_with, qgemm_int4_scalar_reference,
+    qgemm_int4_with, qgemm_packed_flat, qgemm_packed_into, qgemm_packed_mt_with,
+    qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat, qgemm_radix4_into,
+    qgemm_radix4_mt_with, qgemm_radix4_scalar_reference, qgemm_radix4_with,
+    qgemm_scalar_reference, radix4_product_lut, QgemmScratch, TILE_M, TILE_N,
 };
-use crate::quant::radix4::{Radix4Format, Radix4Quantizer, TprPhase};
+use crate::quant::radix4::{radix4_unit_value, Radix4Format, Radix4Quantizer, TprPhase};
 use crate::quant::{
     LogFormat, LogQuantConfig, LogQuantizer, UniformQuantizer, UniformRounding,
 };
@@ -50,6 +55,7 @@ pub fn conformance_formats() -> Vec<FormatConformance> {
         FormatConformance { name: "forward-int4xint4", check: check_forward },
         FormatConformance { name: "radix4-tpr", check: check_radix4 },
         FormatConformance { name: "corrupted-operand", check: check_corrupted },
+        FormatConformance { name: "forward-format-layer-step", check: check_layer_step },
     ]
 }
 
@@ -381,6 +387,65 @@ fn check_corrupted(
     Ok(())
 }
 
+/// Forward-format layer-step row: the full [`QuantizedLayerStep`] —
+/// forward + dx + dW — must be bit-identical at every thread count to its
+/// single-threaded run, in **both** [`ForwardFormat`]s; and the three
+/// process-wide product LUTs the kernels index must agree bit-for-bit
+/// with decode-then-multiply on all 256 nibble pairs (re-checked per case
+/// so a corrupted `OnceLock` table cannot hide behind one passing case).
+/// Degenerate dims are clamped to 1: a layer step consumes nonempty
+/// tensors; the kernels' own empty-shape behaviour is the rows above.
+fn check_layer_step(
+    rng: &mut Xoshiro256,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: &[usize],
+) -> Result<(), String> {
+    for a in 0..16u8 {
+        for b in 0..16u8 {
+            let i4 = Int4Code::from_nibble(a).value();
+            let fp4 = Fp4Code::from_nibble(b).value();
+            let ib = Int4Code::from_nibble(b).value();
+            let entries = [
+                ("backward", product_lut().product(a, b), i4 * fp4),
+                ("forward", int4_product_lut().product(a, b), i4 * ib),
+                ("radix4", radix4_product_lut().product(a, b), i4 * radix4_unit_value(b)),
+            ];
+            for (name, got, want) in entries {
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "{name} lut[{a:#x}][{b:#x}] = {got} differs from decode product {want}"
+                    ));
+                }
+            }
+        }
+    }
+
+    let (batch, d_in, d_out) = (m.max(1), k.max(1), n.max(1));
+    let acts: Vec<f32> = (0..batch * d_in).map(|_| rng.normal_ms_f32(0.0, 1.2)).collect();
+    let wts: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+    let grads: Vec<f32> =
+        (0..batch * d_out).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let seed = rng.next_u64();
+    for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+        let mut reference: QuantizedLayerStep =
+            QuantizedLayerStep::with_format(LogQuantConfig::luq(LogFormat::FP4), 4, format);
+        let mut r = Xoshiro256::seed_from_u64(seed);
+        reference.step(&acts, &wts, &grads, batch, d_in, d_out, &mut r, 1);
+        for &t in threads {
+            let mut step: QuantizedLayerStep =
+                QuantizedLayerStep::with_format(LogQuantConfig::luq(LogFormat::FP4), 4, format);
+            let mut r = Xoshiro256::seed_from_u64(seed);
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut r, t);
+            bits_check(&format!("{format:?}/y mt[{t}]"), step.y(), reference.y())?;
+            bits_check(&format!("{format:?}/dx_t mt[{t}]"), step.dx_t(), reference.dx_t())?;
+            bits_check(&format!("{format:?}/dw_t mt[{t}]"), step.dw_t(), reference.dw_t())?;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,6 +472,7 @@ mod tests {
                 "forward-int4xint4",
                 "radix4-tpr",
                 "corrupted-operand",
+                "forward-format-layer-step",
             ]
         );
         let threads = conformance_thread_counts();

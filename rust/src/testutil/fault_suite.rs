@@ -14,12 +14,15 @@
 //! - `SaturationStorm`— collapsed hindsight scale clipping the majority
 //!   ([`fault_saturation_storm_detected`]).
 //! - `AlphaCollapse`  — cannot arise from the real pipeline (α = max|x| is
-//!   positive whenever the tensor is nonzero); the detector arm is unit
-//!   tested in `quant::health`.
+//!   positive whenever the tensor is nonzero), so the detector arm is
+//!   driven directly with forged stats
+//!   ([`fault_alpha_collapse_detector_trips_on_forged_stats`]).
 //! - `CheckpointCorrupt` — any truncation and any single-bit flip of a
 //!   v2 checkpoint fails the load
 //!   ([`fault_checkpoint_truncation_always_fails_load`],
-//!   [`fault_checkpoint_bitflip_always_fails_load`]).
+//!   [`fault_checkpoint_bitflip_always_fails_load`]), and the resulting
+//!   verdict outranks every other fault class
+//!   ([`fault_checkpoint_corruption_outranks_all_faults`]).
 //! - Packed-stream bit flips — proven *benign* (finite, conformant):
 //!   the total-decode test below plus the `corrupted-operand` row of
 //!   [`super::conformance`].
@@ -29,14 +32,16 @@
 //! engines ([`fault_kill_and_resume_is_bit_identical`]).
 
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::layer_step::QuantizedLayerStep;
+use crate::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
 use crate::coordinator::supervisor::{
     StepPrecision, SupervisedLayerStep, Supervisor, SupervisorPolicy, Transition,
 };
 use crate::hw::mfbprop::{Fp4Code, Int4Code};
 use crate::hw::qgemm::{int4_product_lut, product_lut, radix4_product_lut};
 use crate::quant::radix4::radix4_unit_value;
-use crate::quant::{FaultClass, LogFormat, LogQuantConfig};
+use crate::quant::{
+    FaultClass, HealthConfig, LogFormat, LogQuantConfig, QuantStats, StepHealth,
+};
 use crate::rng::{NoiseEngine, NoiseSource, Xoshiro256};
 use crate::runtime::HostTensor;
 use crate::testutil::fault::FaultPlan;
@@ -126,6 +131,56 @@ fn fault_nan_poison_detected_in_every_operand() {
         assert_eq!(out.transition, Some(Transition::Escalated));
         assert_eq!(sup.precision(0), StepPrecision::Fp32);
     }
+}
+
+/// NaN poison is caught under **both** forward formats — the sentinels
+/// sit above the [`ForwardFormat`] choice, so the radix-4 TPR baseline
+/// escalates exactly like the paper's LUQ pipeline.
+#[test]
+fn fault_nan_poison_detected_under_both_forward_formats() {
+    let (batch, d_in, d_out) = (5usize, 9, 6);
+    let cfg = LogQuantConfig::luq(LogFormat::FP4);
+    for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+        let (mut acts, wts, grads) = layer_data(0xF8, batch, d_in, d_out);
+        let mut plan = FaultPlan::new(0x98);
+        let hit = plan.poison_f32(&mut acts, 2);
+        assert!(!hit.is_empty());
+        let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+        let mut step: SupervisedLayerStep = SupervisedLayerStep::with_format(cfg, 4, format);
+        let mut rng = Xoshiro256::seed_from_u64(0x58);
+        let out = step.step(
+            &mut sup, 0, 0, &acts, &wts, &grads, batch, d_in, d_out, &mut rng, 1,
+        );
+        assert_eq!(
+            out.health.worst(),
+            Some(FaultClass::NonFinite),
+            "{format:?}: poison not detected"
+        );
+        assert_eq!(out.transition, Some(Transition::Escalated), "{format:?}");
+        assert_eq!(sup.precision(0), StepPrecision::Fp32, "{format:?}");
+    }
+}
+
+/// `AlphaCollapse` cannot arise from the real pipeline (α = max|x| is
+/// positive whenever the tensor is nonzero), so the detector arm is
+/// injected directly: forged stats with a nonzero tensor and a degenerate
+/// scale must trip exactly [`FaultClass::AlphaCollapse`], while a zero
+/// tensor with α = 0 stays healthy.
+#[test]
+fn fault_alpha_collapse_detector_trips_on_forged_stats() {
+    let cfg = HealthConfig::default();
+    let mut health = StepHealth::healthy();
+    cfg.assess_gemm(
+        &QuantStats { max_abs: 3.0, alpha: 0.0, frac_underflow: 0.0, frac_clipped: 0.0 },
+        &mut health,
+    );
+    assert_eq!(health.worst(), Some(FaultClass::AlphaCollapse));
+    let mut health = StepHealth::healthy();
+    cfg.assess_gemm(
+        &QuantStats { max_abs: 0.0, alpha: 0.0, frac_underflow: 0.0, frac_clipped: 0.0 },
+        &mut health,
+    );
+    assert!(health.is_healthy(), "zero tensor with α = 0 is legitimate");
 }
 
 /// An RNG stream desynced by a fault plan between supervised steps is
@@ -282,6 +337,30 @@ fn fault_checkpoint_bitflip_always_fails_load() {
         );
     }
     std::fs::remove_dir_all(dir).ok();
+}
+
+/// The verdict a failed checkpoint load files upstream —
+/// [`FaultClass::CheckpointCorrupt`] — outranks every other fault class,
+/// so a corrupt resume halts instead of blending into a precision
+/// fallback.
+#[test]
+fn fault_checkpoint_corruption_outranks_all_faults() {
+    for other in [
+        FaultClass::UnderflowStorm,
+        FaultClass::SaturationStorm,
+        FaultClass::AlphaCollapse,
+        FaultClass::RngDesync,
+        FaultClass::NonFinite,
+    ] {
+        let mut verdict = StepHealth::healthy();
+        verdict.note(other);
+        verdict.note(FaultClass::CheckpointCorrupt);
+        assert_eq!(
+            verdict.worst(),
+            Some(FaultClass::CheckpointCorrupt),
+            "{other:?} outranked CheckpointCorrupt"
+        );
+    }
 }
 
 /// One toy supervised-format training step: quantized layer step plus an

@@ -6,6 +6,7 @@
 //! can be replayed. Statistical assertions (`assert_mean_within`) wrap the
 //! standard-error machinery used by the unbiasedness tests.
 
+pub mod alloc_guard;
 pub mod conformance;
 pub mod fault;
 #[cfg(test)]

@@ -40,7 +40,14 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 if [[ "$BENCH_ONLY" == 0 ]]; then
-    # fmt first: fail fast on formatting drift before the expensive build.
+    # tidy first: the dependency-free static-analysis pass (hot-path alloc
+    # bans, RNG draw-site registry, coverage, panic ratchet, SAFETY
+    # comments) is the cheapest gate — seconds, one tiny bin, no deps —
+    # so a contract break surfaces before any expensive build or test.
+    echo "== tidy (static analysis: 5 contract rules) =="
+    cargo run -q --bin tidy
+
+    # fmt next: fail fast on formatting drift before the expensive build.
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check =="
         if ! cargo fmt --check; then
