@@ -9,6 +9,10 @@
 //! * **radix-4 TPR INT4×radix-4**: the same ladder, gradient operand
 //!   emitted by the `Radix4Quantizer` fused packed matrix emitter
 //!   (shifted phase) — the `radix4_kernels` JSON section;
+//! * **nibble-split kernel paths**: every available `KernelPath` (scalar
+//!   gather oracle, portable nibble loop, AVX2 shuffle strips) driven
+//!   through the explicit-path INT4×INT4 and radix-4 entry points at one
+//!   thread — the `simd_kernels` JSON section;
 //! * **full layer step**: `QuantizedLayerStep` (forward + dx + dW) in
 //!   both `ForwardFormat`s at 1 and `num_cpus` threads — the
 //!   `layer_step_kernels` JSON section (unasserted; history tracked by
@@ -17,10 +21,15 @@
 //! Emits a machine-readable `BENCH_qgemm.json` (override with
 //! `LUQ_BENCH_JSON=<path>`) and **asserts** the acceptance gates:
 //!
-//! * every kernel variant of both instantiations is bit-identical to its
+//! * every kernel variant of both instantiations — including every
+//!   available `KernelPath` — is bit-identical to its
 //!   decode-then-f32-matmul oracle (same sequential-K accumulation
-//!   order), and
-//! * each tiled LUT kernel is ≥4× faster than its scalar reference loop.
+//!   order),
+//! * each tiled LUT kernel is ≥4× faster than its scalar reference loop,
+//!   and
+//! * on AVX2 hosts, the SIMD nibble-split INT4×INT4 and radix-4 kernels
+//!   are ≥4× faster than their tiled gather counterparts (the gate is
+//!   skipped with a loud log line when only the portable fallback runs).
 
 use luq::bench::{group, BenchResult, Bencher};
 use luq::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
@@ -28,11 +37,11 @@ use luq::coordinator::QgemmPath;
 use luq::hw::mfbprop::Int4Code;
 use luq::hw::qgemm::{
     int4_product_lut, product_lut, qgemm_decode_oracle, qgemm_int4_decode_oracle,
-    qgemm_int4_flat, qgemm_int4_mt_with, qgemm_int4_scalar_reference, qgemm_int4_with,
-    qgemm_packed_flat, qgemm_packed_mt, qgemm_packed_mt_with, qgemm_packed_with,
-    qgemm_radix4_decode_oracle, qgemm_radix4_flat, qgemm_radix4_mt_with,
-    qgemm_radix4_scalar_reference, qgemm_radix4_with, qgemm_scalar_reference,
-    radix4_product_lut, QgemmScratch,
+    qgemm_int4_flat, qgemm_int4_mt_with, qgemm_int4_mt_with_path, qgemm_int4_scalar_reference,
+    qgemm_int4_with, qgemm_packed_flat, qgemm_packed_mt, qgemm_packed_mt_with,
+    qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat, qgemm_radix4_mt_with,
+    qgemm_radix4_mt_with_path, qgemm_radix4_scalar_reference, qgemm_radix4_with,
+    qgemm_scalar_reference, radix4_product_lut, KernelPath, QgemmScratch,
 };
 use luq::metrics::Json;
 use luq::quant::{
@@ -194,6 +203,28 @@ fn main() {
          flat={r4_flat_exact} tiled={r4_tiled_exact} mt={r4_mt_exact}"
     );
 
+    // Every dispatchable kernel path must match both integer-format
+    // oracles before any path is timed. Listed explicitly (not via
+    // `KernelPath::available`) so each variant is visibly wired here.
+    let kernel_paths: Vec<KernelPath> =
+        [KernelPath::Scalar, KernelPath::Portable, KernelPath::Avx2]
+            .into_iter()
+            .filter(|p| p.is_available())
+            .collect();
+    let mut simd_bit_exact = true;
+    for &path in &kernel_paths {
+        for t in [1usize, hw_threads] {
+            qgemm_int4_mt_with_path(
+                &a_packed, &w_packed, m, k, n, &mut out, t, &mut scratch, path,
+            );
+            simd_bit_exact &= bits_equal(&out, &fwd_want);
+            qgemm_radix4_mt_with_path(&a, &r4_packed, m, k, n, &mut out, t, &mut scratch, path);
+            simd_bit_exact &= bits_equal(&out, &r4_want);
+        }
+    }
+    let path_labels: Vec<&str> = kernel_paths.iter().map(|p| p.label()).collect();
+    println!("kernel paths {path_labels:?} bit-exact vs decode oracles: {simd_bit_exact}");
+
     group(&format!("radix-4 TPR packed INT4xradix4 GEMM, {m}x{k}x{n} ({products} products)"));
     let r4_scalar = b.bench_throughput("scalar radix-4 decode+f32-multiply", products, || {
         qgemm_radix4_scalar_reference(&a, &r4_packed, m, k, n, &mut out);
@@ -219,6 +250,28 @@ fn main() {
         });
         println!("{}", r.report());
         r4_mt_results.push((t, r));
+    }
+
+    // --- nibble-split kernel paths: one rung per available path, 1T ------
+    // The scalar rung re-measures the gather engine through the dispatch
+    // entry point as the in-section baseline; portable/avx2 are the
+    // nibble-split kernels the `simd_kernels` gate tracks.
+    group(&format!("nibble-split kernel paths 1T, {m}x{k}x{n} ({products} products)"));
+    let mut simd_results: Vec<(KernelPath, BenchResult, BenchResult)> = Vec::new();
+    for &path in &kernel_paths {
+        let ri = b.bench_throughput(&format!("INT4 path {}", path.label()), products, || {
+            qgemm_int4_mt_with_path(
+                &a_packed, &w_packed, m, k, n, &mut out, 1, &mut scratch, path,
+            );
+            out[0]
+        });
+        println!("{}", ri.report());
+        let rr = b.bench_throughput(&format!("radix-4 path {}", path.label()), products, || {
+            qgemm_radix4_mt_with_path(&a, &r4_packed, m, k, n, &mut out, 1, &mut scratch, path);
+            out[0]
+        });
+        println!("{}", rr.report());
+        simd_results.push((path, ri, rr));
     }
 
     // --- full layer step: forward + dx + dW, both forward formats --------
@@ -294,6 +347,37 @@ fn main() {
         radix4_kernels.push((format!("radix4 lut tiled {t}T"), kernel_json(r, r4_scalar_ns)));
     }
 
+    // simd_kernels: each path's 1T rung, speedup measured against the
+    // *tiled* gather kernel of the same format (the ISSUE's gate basis),
+    // not the scalar decode loop.
+    let fwd_tiled_ns = ns(&fwd_tiled);
+    let r4_tiled_ns = ns(&r4_tiled);
+    let mut simd_kernels: Vec<(String, Json)> = Vec::new();
+    let mut int4_simd_speedup = f64::NAN;
+    let mut r4_simd_speedup = f64::NAN;
+    let avx2_on = kernel_paths.contains(&KernelPath::Avx2);
+    let gate_path = if avx2_on { KernelPath::Avx2 } else { KernelPath::Portable };
+    for (path, ri, rr) in &simd_results {
+        simd_kernels.push((
+            format!("int4 path {}", path.label()),
+            Json::obj(vec![
+                ("ns_per_product", Json::num(ns(ri))),
+                ("speedup_vs_tiled", Json::num(fwd_tiled_ns / ns(ri))),
+            ]),
+        ));
+        simd_kernels.push((
+            format!("radix4 path {}", path.label()),
+            Json::obj(vec![
+                ("ns_per_product", Json::num(ns(rr))),
+                ("speedup_vs_tiled", Json::num(r4_tiled_ns / ns(rr))),
+            ]),
+        ));
+        if *path == gate_path {
+            int4_simd_speedup = fwd_tiled_ns / ns(ri);
+            r4_simd_speedup = r4_tiled_ns / ns(rr);
+        }
+    }
+
     let ls_ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / ls_products as f64;
     let mut layer_step_kernels: Vec<(String, Json)> = Vec::new();
     for (name, r) in &ls_results {
@@ -322,6 +406,7 @@ fn main() {
         ("kernels", Json::Obj(kernels)),
         ("forward_kernels", Json::Obj(fwd_kernels)),
         ("radix4_kernels", Json::Obj(radix4_kernels)),
+        ("simd_kernels", Json::Obj(simd_kernels)),
         ("layer_step_kernels", Json::Obj(layer_step_kernels)),
         (
             "gate",
@@ -333,6 +418,12 @@ fn main() {
                 ("bit_exact_vs_oracle", Json::Bool(bit_exact)),
                 ("forward_bit_exact_vs_oracle", Json::Bool(fwd_bit_exact)),
                 ("radix4_bit_exact_vs_oracle", Json::Bool(r4_bit_exact)),
+                ("simd_path", Json::str(gate_path.label())),
+                ("int4_simd_speedup_vs_tiled", Json::num(int4_simd_speedup)),
+                ("radix4_simd_speedup_vs_tiled", Json::num(r4_simd_speedup)),
+                ("simd_required_speedup", Json::num(4.0)),
+                ("simd_gate_enforced", Json::Bool(avx2_on)),
+                ("simd_bit_exact_vs_oracle", Json::Bool(simd_bit_exact)),
             ]),
         ),
     ]);
@@ -354,9 +445,34 @@ fn main() {
         "radix-4 LUT tiled speedup over scalar decode loop: {r4_tiled_speedup:.2}x \
          (gate: >= 4x)"
     );
+    if avx2_on {
+        println!(
+            "SIMD avx2 speedup over tiled gather: int4 {int4_simd_speedup:.2}x, \
+             radix-4 {r4_simd_speedup:.2}x (gate: >= 4x)"
+        );
+    } else {
+        println!(
+            "SIMD GATE SKIPPED: avx2 unavailable on this host — portable fallback measured \
+             (int4 {int4_simd_speedup:.2}x, radix-4 {r4_simd_speedup:.2}x vs tiled) but the \
+             >= 4x gate only applies to the shuffle path"
+        );
+    }
     assert!(bit_exact, "a backward kernel variant diverged from the f32 oracle");
     assert!(fwd_bit_exact, "a forward kernel variant diverged from the f32 oracle");
     assert!(r4_bit_exact, "a radix-4 kernel variant diverged from the f32 oracle");
+    assert!(simd_bit_exact, "a kernel path diverged from the f32 oracle");
+    if avx2_on {
+        assert!(
+            int4_simd_speedup >= 4.0,
+            "avx2 INT4 nibble-split kernel only {int4_simd_speedup:.2}x over the tiled gather \
+             kernel (gate: >= 4x)"
+        );
+        assert!(
+            r4_simd_speedup >= 4.0,
+            "avx2 radix-4 nibble-split kernel only {r4_simd_speedup:.2}x over the tiled gather \
+             kernel (gate: >= 4x)"
+        );
+    }
     assert!(
         tiled_speedup >= 4.0,
         "backward LUT tiled kernel only {tiled_speedup:.2}x over the scalar loop (gate: >= 4x)"

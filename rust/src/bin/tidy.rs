@@ -20,8 +20,8 @@
 //!   site outside `rng/`, `testutil/` and test code must appear in the
 //!   checked-in `tidy/draw_sites.txt` as `<path> <fn> <token>`.
 //! * `coverage` — every `ForwardFormat` variant, every `FaultClass` variant,
-//!   and every `ProductLut` instantiation (a fn returning
-//!   `&'static ProductLut` in `hw/qgemm.rs`) must be referenced in
+//!   every `KernelPath` variant, and every `ProductLut` instantiation (a fn
+//!   returning `&'static ProductLut` in `hw/qgemm.rs`) must be referenced in
 //!   `testutil/conformance.rs`, the bench ladder (`benches/*.rs`), and the
 //!   fault suite (`testutil/fault_suite.rs`); fault classes in the fault
 //!   suite only.
@@ -725,6 +725,9 @@ fn rule_coverage(files: &[SourceFile]) -> Vec<Violation> {
         for (v, line) in lut_accessors(def) {
             required.push((def, v, line, "ProductLut instantiation", true));
         }
+        for (v, line) in enum_variants(def, "KernelPath") {
+            required.push((def, v, line, "KernelPath variant", true));
+        }
     }
     if let Some(def) = by_rel("rust/src/quant/health.rs") {
         for (v, line) in enum_variants(def, "FaultClass") {
@@ -1163,7 +1166,8 @@ mod tests {
     fn coverage_tree(conf: &str, bench: &str, fault: &str) -> Vec<SourceFile> {
         let defs = "pub enum ForwardFormat {\n    Sawb,\n    Radix4Tpr,\n}\n";
         let health = "pub enum FaultClass {\n    NonFinite,\n}\n";
-        let luts = "pub fn product_lut() -> &'static ProductLut {\n    &LUT\n}\n";
+        let luts = "pub fn product_lut() -> &'static ProductLut {\n    &LUT\n}\n\
+             pub enum KernelPath {\n    Scalar,\n    Portable,\n    Avx2,\n}\n";
         vec![
             file("rust/src/coordinator/layer_step.rs", defs),
             file("rust/src/quant/health.rs", health),
@@ -1176,8 +1180,10 @@ mod tests {
 
     #[test]
     fn tidy_coverage_flags_unreferenced_variant() {
-        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite); }\n";
-        let missing_radix = "fn f() { let _ = (Sawb, product_lut, NonFinite); }\n";
+        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable, Avx2); }\n";
+        let missing_radix = "fn f() { let _ = (Sawb, product_lut, NonFinite, \
+             Scalar, Portable, Avx2); }\n";
         let v = rule_coverage(&coverage_tree(all, all, missing_radix));
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("Radix4Tpr"), "{}", v[0].msg);
@@ -1185,8 +1191,21 @@ mod tests {
     }
 
     #[test]
+    fn tidy_coverage_flags_unreferenced_kernel_path() {
+        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable, Avx2); }\n";
+        let missing_avx2 = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable); }\n";
+        let v = rule_coverage(&coverage_tree(all, missing_avx2, all));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("KernelPath variant `Avx2`"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("benches"), "{}", v[0].msg);
+    }
+
+    #[test]
     fn tidy_coverage_passes_when_referenced() {
-        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite); }\n";
+        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable, Avx2); }\n";
         assert!(rule_coverage(&coverage_tree(all, all, all)).is_empty());
     }
 
@@ -1194,7 +1213,8 @@ mod tests {
     fn tidy_coverage_allow_exempts_at_definition() {
         let defs = "pub enum ForwardFormat {\n    Sawb,\n    \
              // tidy-allow: coverage (format still landing)\n    Radix4Tpr,\n}\n";
-        let rest = "fn f() { let _ = (Sawb, product_lut, NonFinite); }\n";
+        let rest = "fn f() { let _ = (Sawb, product_lut, NonFinite, \
+             Scalar, Portable, Avx2); }\n";
         let mut files = coverage_tree(rest, rest, rest);
         files[0] = file("rust/src/coordinator/layer_step.rs", defs);
         assert!(rule_coverage(&files).is_empty());

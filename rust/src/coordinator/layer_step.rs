@@ -51,8 +51,17 @@
 //! Per-GEMM [`QuantStats`] come back in [`LayerStepStats`];
 //! [`LayerStepStats::grad_max`] is what feeds the hindsight tracker
 //! (Eq. 24) via `Trainer::observe_layer_step`.
+//!
+//! **Kernel dispatch**: the integer-format GEMMs — the INT4×INT4 forward
+//! (both formats) and the radix-4 dx/dW — run on the
+//! [`KernelPath`] `hw::qgemm` detects at runtime (AVX2 shuffle kernels,
+//! portable integer fallback, `QGEMM_KERNEL_PATH` override), while the
+//! Sawb dx/dW stay on the MF-BPROP gather LUT. Every path is
+//! bit-identical, so nothing in this module's reproducibility contracts
+//! (oracle bit-matches, thread invariance, RNG accounting) depends on
+//! the host's instruction set.
 
-use crate::hw::qgemm::{self, row_nibble, QgemmScratch};
+use crate::hw::qgemm::{self, row_nibble, KernelPath, NibbleLut, ProductLut, QgemmScratch};
 use crate::quant::{
     LogQuantConfig, LogQuantizer, QuantScratch, QuantStats, Radix4Format, Radix4Quantizer,
     SawbQuantizer, TprPhase, UniformQuantizer, UniformRounding,
@@ -151,6 +160,35 @@ fn ensure_u8(buf: &mut Vec<u8>, n: usize) {
     if buf.len() < n {
         buf.resize(n, 0);
     }
+}
+
+/// One backward LUT GEMM. Formats with a nibble factorization (radix-4
+/// TPR) run on the detected [`KernelPath`] through the SIMD/portable
+/// nibble engine — bit-identical to the gather engine at every depth,
+/// because [`KernelPath::for_gemm`] clamps past `max_k_exact`. The
+/// MF-BPROP LUT (`nlut = None`) always takes the gather path.
+#[allow(clippy::too_many_arguments)]
+fn backward_gemm(
+    lut: &ProductLut,
+    nlut: Option<&NibbleLut>,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+) {
+    if let Some(nlut) = nlut {
+        match KernelPath::detect().for_gemm(k, nlut) {
+            KernelPath::Scalar => {}
+            p => {
+                qgemm::qgemm_nibble_lut_mt(nlut, p, a_nib, packed_b, m, k, n, out, n_threads);
+                return;
+            }
+        }
+    }
+    qgemm::qgemm_lut_mt(lut, a_nib, packed_b, m, k, n, out, n_threads);
 }
 
 impl<R: NoiseSource> QuantizedLayerStep<R> {
@@ -303,7 +341,7 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
         // PR 3 RNG order, preserved bit-for-bit in Sawb mode. The single
         // dispatch selects the emitters, the product LUT, and the scale
         // applied before each GEMM's Δ.
-        let (lut, dx_stats, dx_scale, dw_stats, dw_scale) = match self.format {
+        let (lut, nlut, dx_stats, dx_scale, dw_stats, dw_scale) = match self.format {
             ForwardFormat::Sawb => {
                 let dx_stats = self.grad_quantizer.quantize_to_codes_matrix_scratch(
                     grads,
@@ -323,7 +361,9 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
                     bb,
                     &mut self.quant_scratch,
                 );
-                (qgemm::product_lut(), dx_stats, dx_stats.alpha, dw_stats, dw_stats.alpha)
+                // The MF-BPROP LUT has no nibble factorization contract
+                // (hw::qgemm module docs) — gather path, no KernelPath.
+                (qgemm::product_lut(), None, dx_stats, dx_stats.alpha, dw_stats, dw_stats.alpha)
             }
             ForwardFormat::Radix4Tpr => {
                 let dx_stats = self.radix4.encode_packed_matrix_into(
@@ -344,6 +384,10 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
                 );
                 (
                     qgemm::radix4_product_lut(),
+                    // Integer LUT: the backward GEMMs run on the detected
+                    // KernelPath through the nibble engine (bit-identical
+                    // on every path, so the oracle tests below hold).
+                    Some(qgemm::radix4_nibble_lut()),
                     dx_stats,
                     dx_stats.alpha * TprPhase::Shifted.shift(),
                     dw_stats,
@@ -354,8 +398,9 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
 
         // --- dx GEMM: dXᵀ = Wᵀ·Gᵀ through the selected LUT -------------
         ensure_f32(&mut self.dx_t, d_in * batch);
-        qgemm::qgemm_lut_mt(
+        backward_gemm(
             lut,
+            nlut,
             &self.wt_nib,
             &self.g_packed,
             d_in,
@@ -373,8 +418,9 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
 
         // --- dW GEMM: dWᵀ = Aᵀ·Gᵀ through the selected LUT -------------
         ensure_f32(&mut self.dw_t, d_in * d_out);
-        qgemm::qgemm_lut_mt(
+        backward_gemm(
             lut,
+            nlut,
             &self.at_nib,
             &self.gt_packed,
             d_in,

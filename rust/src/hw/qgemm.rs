@@ -54,6 +54,37 @@
 //! threading only reorder *which outputs* are computed when, never the
 //! accumulation inside an output.
 //!
+//! **Nibble-split SIMD layer** (ROADMAP Open item 1): the two *integer*
+//! product LUTs factor — each 256-entry table is the outer product of a
+//! 16-entry A-side and a 16-entry B-side integer value table
+//! ([`NibbleLut`], proven exhaustively against the [`ProductLut`]s) — so
+//! the inner loop can decode nibbles to i16 values through
+//! register-resident `pshufb` tables and accumulate in integers instead
+//! of gathering f32 products byte by byte. [`KernelPath`] selects the
+//! implementation once per call (runtime `is_x86_feature_detected!`
+//! dispatch with a `QGEMM_KERNEL_PATH` env override, mirroring the
+//! `ForwardFormat` one-match-per-call pattern): `Avx2` (32-element
+//! shuffle strips + `madd_epi16`), `Portable` (the same integer
+//! accumulation in plain scalar code, available on every target), and
+//! `Scalar` (the f32 gather-LUT tiled kernel — the always-available
+//! oracle path). The exact integer sum equals the sequential-f32 oracle
+//! sum while every prefix sum stays ≤ 2²⁴ ([`NibbleLut::max_k_exact`]:
+//! `K ≤ 342392` for INT4×INT4, `K ≤ 585` for radix-4 TPR); beyond the
+//! bound [`KernelPath::for_gemm`] clamps to `Scalar` — even for explicit
+//! `*_path` calls — so the SIMD variants are **bit-identical** to the
+//! decode oracles unconditionally and join the conformance contract
+//! rather than weakening it.
+//!
+//! The backward MF-BPROP LUT deliberately **stays on the gather path**:
+//! its entries are *defined* as the FP7 decodes of the multiplier-free
+//! hardware block (`decode_fp7(mfbprop_multiply(..))`, Fig. 8) — the LUT
+//! is the validated image of that block, not a pair of per-side code
+//! decodes. Re-deriving it as a nibble outer product would bypass the
+//! very transform the backward kernel exists to model (the numeric
+//! factorization happens to exist today, but nothing contracts it to
+//! keep existing for future log formats, whose decodes are non-integer
+//! dyadic fractions).
+//!
 //! [`mfbprop_dot_packed`](super::mfbprop::mfbprop_dot_packed) is the
 //! `1 × k` special case of the backward instantiation.
 
@@ -317,6 +348,491 @@ pub fn qgemm_lut_mt(
 }
 
 // ---------------------------------------------------------------------------
+// Nibble-split integer engine + KernelPath dispatch (ROADMAP Open item 1).
+// ---------------------------------------------------------------------------
+
+/// Env var overriding [`KernelPath::detect`]: `auto` (default), `scalar`,
+/// `portable`, or `avx2`. CI's portable matrix leg sets `portable` so the
+/// fallback path is exercised on every push, not just on old hardware.
+pub const KERNEL_PATH_ENV: &str = "QGEMM_KERNEL_PATH";
+
+/// Runtime-selected implementation of the integer-format GEMM inner loop.
+///
+/// Selected once per call (like `ForwardFormat`) by [`KernelPath::detect`]
+/// and clamped per GEMM by [`KernelPath::for_gemm`]. Every path is
+/// **bit-identical** to the decode oracles: the integer paths compute the
+/// exact integer sum (equal to the sequential-f32 sum for
+/// `k ≤ max_k_exact`, the only `k` they are dispatched at), and `Scalar`
+/// *is* the gather-LUT oracle path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// The always-available f32 gather-LUT tiled kernel
+    /// ([`qgemm_lut_mt`]) — the oracle path, the clamp target beyond
+    /// `max_k_exact`, and the only path for the MF-BPROP LUT.
+    Scalar,
+    /// Integer nibble-table accumulation in portable scalar code — the
+    /// always-available integer twin the SIMD variants must stay
+    /// bit-identical to, and the AVX2 strip-tail handler.
+    Portable,
+    /// 32-element `pshufb` shuffle strips + `madd_epi16` widening
+    /// accumulation (x86-64 with runtime-detected AVX2 only).
+    Avx2,
+}
+
+impl KernelPath {
+    /// Stable lowercase name (env values, bench JSON keys, log lines).
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Portable => "portable",
+            KernelPath::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this path can run on the current host.
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelPath::Scalar | KernelPath::Portable => true,
+            KernelPath::Avx2 => avx2_available(),
+        }
+    }
+
+    /// Every path the current host can run (always `Scalar` and
+    /// `Portable`, plus `Avx2` when detected) — the list the conformance
+    /// harness, the staging-shape tests, and the benches iterate.
+    pub fn available() -> &'static [KernelPath] {
+        if avx2_available() {
+            &[KernelPath::Scalar, KernelPath::Portable, KernelPath::Avx2]
+        } else {
+            &[KernelPath::Scalar, KernelPath::Portable]
+        }
+    }
+
+    /// The dispatch decision: the [`KERNEL_PATH_ENV`] override when set
+    /// (an unavailable or unrecognized value warns once on stderr and
+    /// falls back), else the fastest available path. Cached per process —
+    /// one env read ever, so warmed GEMM calls stay allocation-free.
+    pub fn detect() -> KernelPath {
+        static CHOICE: OnceLock<KernelPath> = OnceLock::new();
+        *CHOICE.get_or_init(|| {
+            let fastest =
+                if avx2_available() { KernelPath::Avx2 } else { KernelPath::Portable };
+            match std::env::var(KERNEL_PATH_ENV) {
+                Err(_) => fastest,
+                Ok(raw) => match parse_kernel_path(&raw) {
+                    Some(None) => fastest, // explicit "auto"
+                    Some(Some(path)) if path.is_available() => path,
+                    Some(Some(path)) => {
+                        eprintln!(
+                            "qgemm: {KERNEL_PATH_ENV}={} unavailable on this host; \
+                             using portable",
+                            path.label()
+                        );
+                        KernelPath::Portable
+                    }
+                    None => {
+                        eprintln!(
+                            "qgemm: unrecognized {KERNEL_PATH_ENV}={raw:?} \
+                             (known: auto scalar portable avx2); using auto"
+                        );
+                        fastest
+                    }
+                },
+            }
+        })
+    }
+
+    /// The path actually run for one integer-format GEMM: `self` while
+    /// the integer sum is provably bit-identical to the sequential-f32
+    /// oracle (`k ≤ nlut.max_k_exact()`), `Scalar` beyond that bound —
+    /// including for explicit `*_path` calls, so the bit-exactness
+    /// contract never depends on the caller's choice. An unavailable
+    /// request (`Avx2` on a non-AVX2 host) degrades to `Portable`.
+    pub fn for_gemm(self, k: usize, nlut: &NibbleLut) -> KernelPath {
+        if k > nlut.max_k_exact() {
+            KernelPath::Scalar
+        } else if self == KernelPath::Avx2 && !avx2_available() {
+            KernelPath::Portable
+        } else {
+            self
+        }
+    }
+}
+
+/// `Some(None)` = auto, `Some(Some(p))` = explicit path, `None` =
+/// unrecognized. ASCII case-insensitive, whitespace-trimmed.
+fn parse_kernel_path(raw: &str) -> Option<Option<KernelPath>> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Some(None),
+        "scalar" => Some(Some(KernelPath::Scalar)),
+        "portable" => Some(Some(KernelPath::Portable)),
+        "avx2" => Some(Some(KernelPath::Avx2)),
+        _ => None,
+    }
+}
+
+/// Runtime AVX2 detection (cached by the `std` macro); `false` off
+/// x86-64, so non-x86 builds dispatch `Portable` with no `cfg` in any
+/// caller.
+#[inline]
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The per-side factorization of an *integer* [`ProductLut`]: 16 A-side
+/// and 16 B-side i16 code values whose outer product reproduces all 256
+/// f32 entries exactly (proven exhaustively by
+/// `nibble_luts_factor_the_product_luts`). A nibble then decodes through
+/// a 16-entry register-resident table (one `pshufb` per byte half)
+/// instead of a 256-entry memory gather, and products accumulate in
+/// integers. The MF-BPROP LUT has no such *contracted* factorization —
+/// see the module docs for why it stays on the gather path.
+pub struct NibbleLut {
+    a_vals: [i16; 16],
+    b_vals: [i16; 16],
+    max_k_exact: usize,
+}
+
+impl NibbleLut {
+    fn new(a_vals: [i16; 16], b_vals: [i16; 16]) -> NibbleLut {
+        let mut max_abs = 0i64;
+        for &a in &a_vals {
+            for &b in &b_vals {
+                max_abs = max_abs.max((a as i64 * b as i64).abs());
+            }
+        }
+        // Largest K at which every f32-oracle prefix sum is an exact
+        // integer (≤ 2^24), making exact-integer accumulation
+        // bit-identical to sequential-f32 accumulation.
+        let max_k_exact =
+            if max_abs == 0 { usize::MAX } else { ((1i64 << 24) / max_abs) as usize };
+        NibbleLut { a_vals, b_vals, max_k_exact }
+    }
+
+    /// The forward signed INT4 × INT4 factorization (`|a·b| ≤ 49`,
+    /// `max_k_exact` = 342392).
+    pub fn int4_int4() -> NibbleLut {
+        let mut vals = [0i16; 16];
+        for (n, v) in vals.iter_mut().enumerate() {
+            *v = Int4Code::from_nibble(n as u8).value() as i16;
+        }
+        NibbleLut::new(vals, vals)
+    }
+
+    /// The radix-4 TPR factorization: INT4 values × radix-4 unit values
+    /// (`|a·b| ≤ 7·4⁶ = 28672` — inside i16 and `madd_epi16`;
+    /// `max_k_exact` = 585).
+    pub fn radix4() -> NibbleLut {
+        let mut a_vals = [0i16; 16];
+        let mut b_vals = [0i16; 16];
+        for n in 0..16usize {
+            a_vals[n] = Int4Code::from_nibble(n as u8).value() as i16;
+            b_vals[n] = radix4_unit_value(n as u8) as i16;
+        }
+        NibbleLut::new(a_vals, b_vals)
+    }
+
+    /// Exact integer product of two wire nibbles (masked in-bounds).
+    #[inline(always)]
+    pub fn product_i32(&self, a_nibble: u8, b_nibble: u8) -> i32 {
+        self.a_vals[a_nibble as usize & 0xF] as i32
+            * self.b_vals[b_nibble as usize & 0xF] as i32
+    }
+
+    /// Largest reduction depth at which integer accumulation is provably
+    /// bit-identical to the sequential-f32 decode oracles (every prefix
+    /// sum ≤ 2²⁴). [`KernelPath::for_gemm`] clamps to `Scalar` above it.
+    pub fn max_k_exact(&self) -> usize {
+        self.max_k_exact
+    }
+}
+
+static INT4_NIBBLE_LUT: OnceLock<NibbleLut> = OnceLock::new();
+static RADIX4_NIBBLE_LUT: OnceLock<NibbleLut> = OnceLock::new();
+
+/// The process-wide forward INT4 × INT4 nibble factorization (built
+/// once, on first use).
+pub fn int4_nibble_lut() -> &'static NibbleLut {
+    INT4_NIBBLE_LUT.get_or_init(NibbleLut::int4_int4)
+}
+
+/// The process-wide radix-4 TPR nibble factorization (built once, on
+/// first use; serves both TPR phases, like its gather twin).
+pub fn radix4_nibble_lut() -> &'static NibbleLut {
+    RADIX4_NIBBLE_LUT.get_or_init(NibbleLut::radix4)
+}
+
+/// The portable integer dot: elements `[start, k)` of one packed B row
+/// against pre-staged A nibbles, accumulated in i32 through the two
+/// 16-entry nibble tables. `start` must be even (byte-aligned). The
+/// half-filled trailing byte of an odd `k` contributes only its low
+/// nibble — its high nibble is unspecified staging garbage and is never
+/// read. Doubles as the strip-tail handler of the AVX2 dot.
+#[inline(always)]
+fn dot_nib_i32_from(nlut: &NibbleLut, k: usize, brow: &[u8], arow: &[u8], start: usize) -> i32 {
+    debug_assert!(start % 2 == 0 && start <= k, "tail must start on a byte boundary");
+    let mut acc = 0i32;
+    let pairs = k / 2;
+    for (p, &byte) in brow[..pairs].iter().enumerate().skip(start / 2) {
+        acc += nlut.product_i32(arow[2 * p], byte & 0x0F);
+        acc += nlut.product_i32(arow[2 * p + 1], byte >> 4);
+    }
+    if k % 2 == 1 {
+        acc += nlut.product_i32(arow[k - 1], brow[k / 2] & 0x0F);
+    }
+    acc
+}
+
+/// The cache-tiled integer band kernel — the `Portable` path body, and
+/// the loop structure the AVX2 band mirrors. Same tiling as
+/// [`gemm_tiles`], with [`dot_nib_i32_from`] as the dot.
+fn gemm_tiles_portable(
+    nlut: &NibbleLut,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    rows: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let kb = k.div_ceil(2);
+    for i0 in (0..rows).step_by(TILE_M) {
+        let mi = (rows - i0).min(TILE_M);
+        for j0 in (0..n).step_by(TILE_N) {
+            let nj = (n - j0).min(TILE_N);
+            for i in i0..i0 + mi {
+                let arow = &a_nib[i * k..i * k + k];
+                let orow = &mut out[i * n..i * n + n];
+                for j in j0..j0 + nj {
+                    let brow = &packed_b[j * kb..j * kb + kb];
+                    orow[j] = dot_nib_i32_from(nlut, k, brow, arow, 0) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// The AVX2 shuffle path: nibbles decode to i16 values through
+/// register-resident `pshufb` tables and accumulate via `madd_epi16` —
+/// 32 products per strip iteration instead of 32 table gathers. The
+/// integer total is the same exact sum [`dot_nib_i32_from`] computes, so
+/// the path is bit-identical to the oracles wherever it is dispatched
+/// (`k ≤ max_k_exact`).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{dot_nib_i32_from, NibbleLut, TILE_M, TILE_N};
+    use std::arch::x86_64::*;
+
+    /// Per-band `pshufb` tables: the low and high bytes of each side's 16
+    /// i16 code values, duplicated into both 128-bit lanes (`pshufb`
+    /// indexes per lane). Plain stack values — building them allocates
+    /// nothing, keeping the engine's steady state allocation-free.
+    struct Tables {
+        a_lo: __m256i,
+        a_hi: __m256i,
+        b_lo: __m256i,
+        b_hi: __m256i,
+    }
+
+    /// Split 16 i16 values into lane-duplicated low/high byte tables.
+    fn table_bytes(vals: &[i16; 16]) -> ([u8; 32], [u8; 32]) {
+        let mut lo = [0u8; 32];
+        let mut hi = [0u8; 32];
+        for (i, &v) in vals.iter().enumerate() {
+            lo[i] = v as u8;
+            lo[i + 16] = v as u8;
+            hi[i] = (v >> 8) as u8;
+            hi[i + 16] = (v >> 8) as u8;
+        }
+        (lo, hi)
+    }
+
+    // SAFETY: caller guarantees AVX2 (that is all `target_feature` asks).
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_tables(nlut: &NibbleLut) -> Tables {
+        let (a_lo, a_hi) = table_bytes(&nlut.a_vals);
+        let (b_lo, b_hi) = table_bytes(&nlut.b_vals);
+        // SAFETY: every source is a live 32-byte stack array; unaligned
+        // loads have no alignment requirement.
+        unsafe {
+            Tables {
+                a_lo: _mm256_loadu_si256(a_lo.as_ptr().cast()),
+                a_hi: _mm256_loadu_si256(a_hi.as_ptr().cast()),
+                b_lo: _mm256_loadu_si256(b_lo.as_ptr().cast()),
+                b_hi: _mm256_loadu_si256(b_hi.as_ptr().cast()),
+            }
+        }
+    }
+
+    /// One output element: `k/32` shuffle strips, then the scalar tail.
+    #[inline]
+    // SAFETY: caller guarantees AVX2 (that is all `target_feature` asks).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot(t: &Tables, nlut: &NibbleLut, k: usize, brow: &[u8], arow: &[u8]) -> f32 {
+        let strips = k / 32;
+        // The loads below stay in bounds: 32 A bytes at offset 32·s need
+        // 32·(s+1) ≤ k ≤ arow.len(), and 16 B bytes at offset 16·s need
+        // 16·(s+1) ≤ 16·strips ≤ k/2 ≤ brow.len() — for every s < k/32.
+        // SAFETY: register-only intrinsics + the in-bounds loads above.
+        let simd_total = unsafe {
+            let nib_mask = _mm256_set1_epi8(0x0F);
+            let half_mask = _mm_set1_epi8(0x0F);
+            let mut acc = _mm256_setzero_si256();
+            for s in 0..strips {
+                let a_raw = _mm256_loadu_si256(arow.as_ptr().add(32 * s).cast());
+                let a = _mm256_and_si256(a_raw, nib_mask);
+                let b = _mm_loadu_si128(brow.as_ptr().add(16 * s).cast());
+                let b_even = _mm_and_si128(b, half_mask);
+                let b_odd = _mm_and_si128(_mm_srli_epi16::<4>(b), half_mask);
+                // Interleave the two half-streams back to sequential
+                // element order 0..31, matching the A byte stream.
+                let b_seq = _mm256_set_m128i(
+                    _mm_unpackhi_epi8(b_even, b_odd),
+                    _mm_unpacklo_epi8(b_even, b_odd),
+                );
+                let a_l = _mm256_shuffle_epi8(t.a_lo, a);
+                let a_h = _mm256_shuffle_epi8(t.a_hi, a);
+                let b_l = _mm256_shuffle_epi8(t.b_lo, b_seq);
+                let b_h = _mm256_shuffle_epi8(t.b_hi, b_seq);
+                // Widen to i16; the per-lane interleave permutes A and B
+                // identically, so element pairing is preserved (and any
+                // reordering is irrelevant to an exact integer sum).
+                let a01 = _mm256_unpacklo_epi8(a_l, a_h);
+                let a23 = _mm256_unpackhi_epi8(a_l, a_h);
+                let b01 = _mm256_unpacklo_epi8(b_l, b_h);
+                let b23 = _mm256_unpackhi_epi8(b_l, b_h);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a01, b01));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a23, b23));
+            }
+            let quad = _mm_add_epi32(
+                _mm256_castsi256_si128(acc),
+                _mm256_extracti128_si256::<1>(acc),
+            );
+            let pair = _mm_add_epi32(quad, _mm_shuffle_epi32::<0b0100_1110>(quad));
+            let one = _mm_add_epi32(pair, _mm_shuffle_epi32::<0b1011_0001>(pair));
+            _mm_cvtsi128_si32(one)
+        };
+        (simd_total + dot_nib_i32_from(nlut, k, brow, arow, 32 * strips)) as f32
+    }
+
+    /// The AVX2 cache-tiled band kernel — same tiling as the portable
+    /// band, with the shuffle dot inside and tables built once per band.
+    // SAFETY: caller guarantees AVX2 (that is all `target_feature` asks).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_tiles(
+        nlut: &NibbleLut,
+        a_nib: &[u8],
+        packed_b: &[u8],
+        rows: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        // SAFETY: AVX2 is guaranteed by this fn's own calling contract.
+        let t = unsafe { load_tables(nlut) };
+        let kb = k.div_ceil(2);
+        for i0 in (0..rows).step_by(TILE_M) {
+            let mi = (rows - i0).min(TILE_M);
+            for j0 in (0..n).step_by(TILE_N) {
+                let nj = (n - j0).min(TILE_N);
+                for i in i0..i0 + mi {
+                    let arow = &a_nib[i * k..i * k + k];
+                    let orow = &mut out[i * n..i * n + n];
+                    for j in j0..j0 + nj {
+                        let brow = &packed_b[j * kb..j * kb + kb];
+                        // SAFETY: AVX2 guaranteed by this fn's contract.
+                        orow[j] = unsafe { dot(&t, nlut, k, brow, arow) };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one row band through the selected integer path.
+#[allow(clippy::too_many_arguments)]
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+fn gemm_tiles_nibble(
+    path: KernelPath,
+    nlut: &NibbleLut,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    rows: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if path == KernelPath::Avx2 && avx2_available() {
+        // SAFETY: AVX2 availability was verified on this line.
+        unsafe { avx2::gemm_tiles(nlut, a_nib, packed_b, rows, k, n, out) };
+        return;
+    }
+    gemm_tiles_portable(nlut, a_nib, packed_b, rows, k, n, out);
+}
+
+/// The integer-engine twin of [`qgemm_lut_mt`]: tiled packed GEMM over
+/// `n_threads` contiguous row bands through a [`NibbleLut`] on the given
+/// [`KernelPath`] (`Portable` or `Avx2`; for `Scalar` the format entry
+/// points route to [`qgemm_lut_mt`] via [`KernelPath::for_gemm`]).
+/// Identical operand layout, asserts, banding, and per-element
+/// sequential-`k` accumulation as the gather engine, so the result is
+/// bit-identical for every `n_threads` — and, at the depths it is
+/// dispatched at (`k ≤ max_k_exact`), bit-identical to the gather engine
+/// and the decode oracles themselves.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_nibble_lut_mt(
+    nlut: &NibbleLut,
+    path: KernelPath,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+) {
+    if m == 0 || n == 0 {
+        return; // nothing to compute or write
+    }
+    assert!(a_nib.len() >= m * k, "a operand too short: {} < {}", a_nib.len(), m * k);
+    assert!(out.len() >= m * n, "output too short: {} < {}", out.len(), m * n);
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(
+        packed_b.len() >= n * kb,
+        "packed b operand too short: {} < {}",
+        packed_b.len(),
+        n * kb
+    );
+    let t = n_threads.max(1).min(m);
+    if t == 1 {
+        gemm_tiles_nibble(path, nlut, a_nib, packed_b, m, k, n, &mut out[..m * n]);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (b, out_band) in out[..m * n].chunks_mut(rows_per * n).enumerate() {
+            let rows = out_band.len() / n;
+            let nib_band = &a_nib[b * rows_per * k..(b * rows_per + rows) * k];
+            s.spawn(move || {
+                gemm_tiles_nibble(path, nlut, nib_band, packed_b, rows, k, n, out_band)
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Backward instantiation: INT4 (typed codes) × FP4 (packed), MF-BPROP LUT.
 // ---------------------------------------------------------------------------
 
@@ -520,6 +1036,9 @@ pub fn qgemm_scalar_reference(
 /// The result is in **code units**: multiply by `Δ_a · Δ_b` (the two
 /// uniform-quantizer step sizes) outside the accumulation, as with the
 /// backward path's α.
+///
+/// Runs on [`KernelPath::detect`] — the SIMD nibble engine where
+/// available, with bit-identical results on every path.
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm_int4_mt_with(
     a_packed: &[u8],
@@ -530,6 +1049,27 @@ pub fn qgemm_int4_mt_with(
     out: &mut [f32],
     n_threads: usize,
     scratch: &mut QgemmScratch,
+) {
+    let path = KernelPath::detect();
+    qgemm_int4_mt_with_path(a_packed, b_packed, m, k, n, out, n_threads, scratch, path);
+}
+
+/// [`qgemm_int4_mt_with`] with an explicit [`KernelPath`] — what the
+/// conformance harness, the staging-shape tests, and the benches pin;
+/// production callers use the auto-detecting wrapper. The request is
+/// still clamped by [`KernelPath::for_gemm`], so bit-exactness never
+/// depends on the caller's choice.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_int4_mt_with_path(
+    a_packed: &[u8],
+    b_packed: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+    path: KernelPath,
 ) {
     if m == 0 || n == 0 {
         return;
@@ -542,7 +1082,13 @@ pub fn qgemm_int4_mt_with(
         m * kb
     );
     let a_nib = scratch.stage_packed_rows(a_packed, m, k);
-    qgemm_lut_mt(int4_product_lut(), a_nib, b_packed, m, k, n, out, n_threads);
+    let nlut = int4_nibble_lut();
+    match path.for_gemm(k, nlut) {
+        KernelPath::Scalar => {
+            qgemm_lut_mt(int4_product_lut(), a_nib, b_packed, m, k, n, out, n_threads)
+        }
+        p => qgemm_nibble_lut_mt(nlut, p, a_nib, b_packed, m, k, n, out, n_threads),
+    }
 }
 
 /// Single-threaded tiled forward GEMM reusing `scratch`.
@@ -697,6 +1243,9 @@ pub fn qgemm_int4_scalar_reference(
 /// kernel (dx on the shifted grid, dW on the base grid); each call keeps
 /// the engine's sequential-`k` accumulation, so every variant below is
 /// bit-identical to [`qgemm_radix4_decode_oracle`] at any thread count.
+///
+/// Runs on [`KernelPath::detect`] — the SIMD nibble engine where
+/// available, with bit-identical results on every path.
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm_radix4_mt_with(
     int4: &[Int4Code],
@@ -708,12 +1257,39 @@ pub fn qgemm_radix4_mt_with(
     n_threads: usize,
     scratch: &mut QgemmScratch,
 ) {
+    let path = KernelPath::detect();
+    qgemm_radix4_mt_with_path(int4, packed_r4, m, k, n, out, n_threads, scratch, path);
+}
+
+/// [`qgemm_radix4_mt_with`] with an explicit [`KernelPath`] — what the
+/// conformance harness, the staging-shape tests, and the benches pin;
+/// production callers use the auto-detecting wrapper. The request is
+/// still clamped by [`KernelPath::for_gemm`], so bit-exactness never
+/// depends on the caller's choice.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_radix4_mt_with_path(
+    int4: &[Int4Code],
+    packed_r4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+    path: KernelPath,
+) {
     if m == 0 || n == 0 {
         return;
     }
     assert!(int4.len() >= m * k, "int4 operand too short: {} < {}", int4.len(), m * k);
     let a_nib = scratch.stage_codes(&int4[..m * k]);
-    qgemm_lut_mt(radix4_product_lut(), a_nib, packed_r4, m, k, n, out, n_threads);
+    let nlut = radix4_nibble_lut();
+    match path.for_gemm(k, nlut) {
+        KernelPath::Scalar => {
+            qgemm_lut_mt(radix4_product_lut(), a_nib, packed_r4, m, k, n, out, n_threads)
+        }
+        p => qgemm_nibble_lut_mt(nlut, p, a_nib, packed_r4, m, k, n, out, n_threads),
+    }
 }
 
 /// Single-threaded tiled radix-4 GEMM reusing `scratch`.
@@ -942,6 +1518,61 @@ mod tests {
         }
     }
 
+    /// The nibble factorization golden test: for both integer formats,
+    /// `a_vals[a] · b_vals[b]` reproduces every one of the 256 gather-LUT
+    /// entries bit-for-bit, and the exactness bounds are the pinned
+    /// worst-case values (2²⁴ / max |product|).
+    #[test]
+    fn nibble_luts_factor_the_product_luts() {
+        for (nlut, lut, bound, what) in [
+            (int4_nibble_lut(), int4_product_lut(), 342_392usize, "int4"),
+            (radix4_nibble_lut(), radix4_product_lut(), 585, "radix4"),
+        ] {
+            for a in 0..16u8 {
+                for b in 0..16u8 {
+                    let want = lut.product(a, b);
+                    let got = nlut.product_i32(a, b) as f32;
+                    assert_eq!(got.to_bits(), want.to_bits(), "{what}: a={a} b={b}");
+                }
+            }
+            assert_eq!(nlut.max_k_exact(), bound, "{what}: exactness bound");
+        }
+    }
+
+    /// KernelPath plumbing: env parsing, availability invariants, and the
+    /// per-GEMM clamp (`Scalar` beyond `max_k_exact`, `Portable` when
+    /// AVX2 is requested but absent).
+    #[test]
+    fn kernel_path_dispatch_rules() {
+        assert_eq!(parse_kernel_path("auto"), Some(None));
+        assert_eq!(parse_kernel_path(""), Some(None));
+        assert_eq!(parse_kernel_path(" Scalar "), Some(Some(KernelPath::Scalar)));
+        assert_eq!(parse_kernel_path("portable"), Some(Some(KernelPath::Portable)));
+        assert_eq!(parse_kernel_path("AVX2"), Some(Some(KernelPath::Avx2)));
+        assert_eq!(parse_kernel_path("sse9"), None);
+
+        let avail = KernelPath::available();
+        assert!(avail.contains(&KernelPath::Scalar));
+        assert!(avail.contains(&KernelPath::Portable));
+        assert_eq!(avail.contains(&KernelPath::Avx2), KernelPath::Avx2.is_available());
+        assert!(avail.iter().all(|p| p.is_available()));
+        assert!(KernelPath::detect().is_available());
+
+        let nlut = int4_nibble_lut();
+        for p in [KernelPath::Scalar, KernelPath::Portable, KernelPath::Avx2] {
+            // Beyond the exactness bound every request clamps to Scalar.
+            assert_eq!(p.for_gemm(nlut.max_k_exact() + 1, nlut), KernelPath::Scalar);
+            assert!(p.for_gemm(64, nlut).is_available());
+        }
+        assert_eq!(KernelPath::Portable.for_gemm(64, nlut), KernelPath::Portable);
+        if KernelPath::Avx2.is_available() {
+            assert_eq!(KernelPath::Avx2.for_gemm(64, nlut), KernelPath::Avx2);
+        } else {
+            assert_eq!(KernelPath::Avx2.for_gemm(64, nlut), KernelPath::Portable);
+        }
+        assert_eq!(KernelPath::Avx2.label(), "avx2");
+    }
+
     /// Satellite: the property test. All kernel variants match the
     /// decode-then-f32-matmul oracle bit-exactly across shapes including
     /// odd K (half-filled trailing byte), M/N off the tile grid, and
@@ -1021,6 +1652,17 @@ mod tests {
                     if mt.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
                         return Err(format!("{threads}T != oracle at m={m} k={k} n={n}"));
                     }
+                    for &path in KernelPath::available() {
+                        let mut via = vec![0.0f32; m * n];
+                        qgemm_int4_mt_with_path(
+                            a, b, m, k, n, &mut via, threads, &mut scratch, path,
+                        );
+                        if via.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits())
+                        {
+                            let p = path.label();
+                            return Err(format!("{p}/{threads}T at m={m} k={k} n={n}"));
+                        }
+                    }
                 }
                 if flat != tiled || scalar != tiled {
                     return Err(format!("variant disagreement at m={m} k={k} n={n}"));
@@ -1065,6 +1707,17 @@ mod tests {
                     qgemm_radix4_mt_with(a, b, m, k, n, &mut mt, threads, &mut scratch);
                     if mt.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits()) {
                         return Err(format!("{threads}T != oracle at m={m} k={k} n={n}"));
+                    }
+                    for &path in KernelPath::available() {
+                        let mut via = vec![0.0f32; m * n];
+                        qgemm_radix4_mt_with_path(
+                            a, b, m, k, n, &mut via, threads, &mut scratch, path,
+                        );
+                        if via.iter().zip(want.iter()).any(|(g, w)| g.to_bits() != w.to_bits())
+                        {
+                            let p = path.label();
+                            return Err(format!("{p}/{threads}T at m={m} k={k} n={n}"));
+                        }
                     }
                 }
                 if flat != tiled || scalar != tiled {
@@ -1241,6 +1894,64 @@ mod tests {
                 &qgemm_int4_decode_oracle(&ap, &b, m, k, n),
                 &format!("int4 m={m} k={k} n={n}"),
             );
+        }
+    }
+
+    /// Satellite: `QgemmScratch` staging at SIMD-unfriendly shapes — K
+    /// off the 32-element shuffle strip width (strip±1, sub-strip, odd
+    /// tails) crossed with m/n at `TILE_M`/`TILE_N` ± 1 — asserted
+    /// bit-identical across every `KernelPath` and thread count for both
+    /// integer formats, reusing one scratch throughout. (The stride >
+    /// row-bytes staging leg lives in the conformance harness, which
+    /// runs every path through strided emitter output.)
+    #[test]
+    fn simd_unfriendly_shapes_bit_identical_across_paths() {
+        let mut rng = Xoshiro256::seed_from_u64(0x51D);
+        let mut scratch = QgemmScratch::new();
+        for (m, n) in [(TILE_M - 1, TILE_N + 1), (TILE_M + 1, TILE_N - 1), (1, 2 * TILE_N)] {
+            for k in [1usize, 2, 15, 31, 32, 33, 63, 64, 65, 97] {
+                let ap = random_packed(&mut rng, m, k);
+                let bp = random_packed(&mut rng, n, k);
+                let want = qgemm_int4_decode_oracle(&ap, &bp, m, k, n);
+                let a = random_codes(&mut rng, m * k);
+                let want_r4 = qgemm_radix4_decode_oracle(&a, &bp, m, k, n);
+                for &path in KernelPath::available() {
+                    for threads in [1usize, 2, 8] {
+                        let what = format!("{} {threads}T m={m} k={k} n={n}", path.label());
+                        let mut got = vec![0.0f32; m * n];
+                        qgemm_int4_mt_with_path(
+                            &ap, &bp, m, k, n, &mut got, threads, &mut scratch, path,
+                        );
+                        assert_bits_eq(&got, &want, &format!("int4 {what}"));
+                        let mut got = vec![0.0f32; m * n];
+                        qgemm_radix4_mt_with_path(
+                            &a, &bp, m, k, n, &mut got, threads, &mut scratch, path,
+                        );
+                        assert_bits_eq(&got, &want_r4, &format!("radix4 {what}"));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Beyond `max_k_exact` the dispatcher must clamp every request to
+    /// the scalar gather path, keeping bit-identity to the sequential-f32
+    /// oracle even where integer totals and f32 totals diverge.
+    #[test]
+    fn paths_clamp_to_scalar_beyond_exactness_bound() {
+        let nlut = radix4_nibble_lut();
+        let k = nlut.max_k_exact() + 7; // 592: big products overflow 2^24
+        let mut rng = Xoshiro256::seed_from_u64(0xC1A);
+        let (m, n) = (2usize, 3usize);
+        let a = random_codes(&mut rng, m * k);
+        let b = random_packed(&mut rng, n, k);
+        let want = qgemm_radix4_decode_oracle(&a, &b, m, k, n);
+        let mut scratch = QgemmScratch::new();
+        for path in [KernelPath::Scalar, KernelPath::Portable, KernelPath::Avx2] {
+            assert_eq!(path.for_gemm(k, nlut), KernelPath::Scalar, "{}", path.label());
+            let mut got = vec![0.0f32; m * n];
+            qgemm_radix4_mt_with_path(&a, &b, m, k, n, &mut got, 2, &mut scratch, path);
+            assert_bits_eq(&got, &want, &format!("clamped {}", path.label()));
         }
     }
 

@@ -17,6 +17,13 @@
 //! stride **wider than the packed row**, asserting the two emissions
 //! agree byte-for-byte before the GEMM runs.
 //!
+//! The integer-format rows additionally sweep every [`KernelPath`] the
+//! host can run ([`conformance_kernel_paths`]) through the explicit-path
+//! entry points at each thread count, so the SIMD nibble-split kernels
+//! join the bit-exactness contract rather than weakening it: a shuffle
+//! kernel that diverges from the decode oracle by one ULP on one element
+//! fails here, clean and corrupted operands alike.
+//!
 //! [`run_conformance`] panics with the format, case, and shape on the
 //! first divergence (the `prop_check` reporting convention), so a
 //! replaying `cargo test conformance` pinpoints the exact case.
@@ -25,11 +32,12 @@ use crate::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
 use crate::hw::mfbprop::{Fp4Code, Int4Code};
 use crate::hw::qgemm::{
     int4_product_lut, product_lut, qgemm_decode_oracle, qgemm_int4_decode_oracle,
-    qgemm_int4_flat, qgemm_int4_into, qgemm_int4_mt_with, qgemm_int4_scalar_reference,
-    qgemm_int4_with, qgemm_packed_flat, qgemm_packed_into, qgemm_packed_mt_with,
-    qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat, qgemm_radix4_into,
-    qgemm_radix4_mt_with, qgemm_radix4_scalar_reference, qgemm_radix4_with,
-    qgemm_scalar_reference, radix4_product_lut, QgemmScratch, TILE_M, TILE_N,
+    qgemm_int4_flat, qgemm_int4_into, qgemm_int4_mt_with, qgemm_int4_mt_with_path,
+    qgemm_int4_scalar_reference, qgemm_int4_with, qgemm_packed_flat, qgemm_packed_into,
+    qgemm_packed_mt_with, qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat,
+    qgemm_radix4_into, qgemm_radix4_mt_with, qgemm_radix4_mt_with_path,
+    qgemm_radix4_scalar_reference, qgemm_radix4_with, qgemm_scalar_reference,
+    radix4_product_lut, KernelPath, QgemmScratch, TILE_M, TILE_N,
 };
 use crate::quant::radix4::{radix4_unit_value, Radix4Format, Radix4Quantizer, TprPhase};
 use crate::quant::{
@@ -67,6 +75,19 @@ pub fn conformance_thread_counts() -> Vec<usize> {
     t.sort_unstable();
     t.dedup();
     t
+}
+
+/// Kernel paths the integer-format rows sweep: every dispatchable
+/// implementation the host can run — [`KernelPath::Scalar`] and
+/// [`KernelPath::Portable`] always, plus [`KernelPath::Avx2`] where the
+/// feature is detected. Listed explicitly (not via
+/// [`KernelPath::available`]) so each variant is visibly wired into the
+/// harness for the tidy coverage rule.
+pub fn conformance_kernel_paths() -> Vec<KernelPath> {
+    [KernelPath::Scalar, KernelPath::Portable, KernelPath::Avx2]
+        .into_iter()
+        .filter(|p| p.is_available())
+        .collect()
 }
 
 /// Deliberate edge shapes: empty operands in each dimension, single
@@ -243,6 +264,13 @@ fn check_forward(
         qgemm_int4_mt_with(&a, &b, m, k, n, &mut out, t, &mut scratch);
         bits_check(&format!("mt[{t}]"), &out, &want)?;
     }
+    for path in conformance_kernel_paths() {
+        for &t in threads {
+            out.fill(f32::NAN);
+            qgemm_int4_mt_with_path(&a, &b, m, k, n, &mut out, t, &mut scratch, path);
+            bits_check(&format!("{}[{t}]", path.label()), &out, &want)?;
+        }
+    }
     Ok(())
 }
 
@@ -282,6 +310,13 @@ fn check_radix4(
             out.fill(f32::NAN);
             qgemm_radix4_mt_with(&a, &b, m, k, n, &mut out, t, &mut scratch);
             bits_check(&format!("{phase:?}/mt[{t}]"), &out, &want)?;
+        }
+        for path in conformance_kernel_paths() {
+            for &t in threads {
+                out.fill(f32::NAN);
+                qgemm_radix4_mt_with_path(&a, &b, m, k, n, &mut out, t, &mut scratch, path);
+                bits_check(&format!("{phase:?}/{}[{t}]", path.label()), &out, &want)?;
+            }
         }
     }
     Ok(())
@@ -362,6 +397,11 @@ fn check_corrupted(
         qgemm_int4_mt_with(&af, &bw, m, k, n, &mut out, t, &mut scratch);
         bits_check(&format!("forward/mt[{t}]"), &out, &want)?;
     }
+    for path in conformance_kernel_paths() {
+        out.fill(f32::NAN);
+        qgemm_int4_mt_with_path(&af, &bw, m, k, n, &mut out, 2, &mut scratch, path);
+        bits_check(&format!("forward/{}", path.label()), &out, &want)?;
+    }
 
     // Radix-4 TPR on a corrupted packed gradient operand (base phase —
     // the LUT is phase-independent).
@@ -383,6 +423,11 @@ fn check_corrupted(
         out.fill(f32::NAN);
         qgemm_radix4_mt_with(&a, &br, m, k, n, &mut out, t, &mut scratch);
         bits_check(&format!("radix4/mt[{t}]"), &out, &want)?;
+    }
+    for path in conformance_kernel_paths() {
+        out.fill(f32::NAN);
+        qgemm_radix4_mt_with_path(&a, &br, m, k, n, &mut out, 2, &mut scratch, path);
+        bits_check(&format!("radix4/{}", path.label()), &out, &want)?;
     }
     Ok(())
 }
@@ -484,5 +529,9 @@ mod tests {
         assert!(shapes.iter().any(|&(_, k, _)| k == 0), "missing k = 0");
         assert!(shapes.iter().any(|&(_, k, _)| k % 2 == 1), "missing odd k");
         assert!(shapes.iter().any(|&(m, _, n)| m == 1 && n == 1), "missing 1x1");
+        let paths = conformance_kernel_paths();
+        assert!(paths.contains(&KernelPath::Scalar), "scalar oracle missing");
+        assert!(paths.contains(&KernelPath::Portable), "portable path missing");
+        assert!(paths.iter().all(|p| p.is_available()), "{paths:?}");
     }
 }

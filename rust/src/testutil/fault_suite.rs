@@ -25,7 +25,9 @@
 //!   ([`fault_checkpoint_corruption_outranks_all_faults`]).
 //! - Packed-stream bit flips — proven *benign* (finite, conformant):
 //!   the total-decode test below plus the `corrupted-operand` row of
-//!   [`super::conformance`].
+//!   [`super::conformance`], on every dispatchable [`KernelPath`]
+//!   (scalar gather, portable nibble, AVX2 shuffle where available)
+//!   ([`fault_kernel_paths_conformant_on_corrupted_operands`]).
 //!
 //! Plus the crash-safety contract: kill-at-any-step → resume from the
 //! checkpoint is bit-identical to the uninterrupted run, on both noise
@@ -37,7 +39,11 @@ use crate::coordinator::supervisor::{
     StepPrecision, SupervisedLayerStep, Supervisor, SupervisorPolicy, Transition,
 };
 use crate::hw::mfbprop::{Fp4Code, Int4Code};
-use crate::hw::qgemm::{int4_product_lut, product_lut, radix4_product_lut};
+use crate::hw::qgemm::{
+    int4_product_lut, product_lut, qgemm_int4_decode_oracle, qgemm_int4_mt_with_path,
+    qgemm_radix4_decode_oracle, qgemm_radix4_mt_with_path, radix4_product_lut, KernelPath,
+    QgemmScratch,
+};
 use crate::quant::radix4::radix4_unit_value;
 use crate::quant::{
     FaultClass, HealthConfig, LogFormat, LogQuantConfig, QuantStats, StepHealth,
@@ -97,6 +103,65 @@ fn fault_total_decode_all_wire_bytes_is_benign() {
             for b in 0..16u8 {
                 let p = lut.product(a, b);
                 assert!(p.is_finite(), "{name} lut[{a:#x}][{b:#x}] = {p}");
+            }
+        }
+    }
+}
+
+/// Packed-stream corruption stays *conformant* on every dispatchable
+/// kernel path: after bit flips in both packed operands, every
+/// [`KernelPath`] — `Scalar` gather, `Portable` nibble loop, and `Avx2`
+/// shuffle strips where the host has the feature — still produces
+/// finite output bit-identical to the decode oracle *on the corrupted
+/// bytes*, at 1 and 3 threads, for both integer formats. Same garbage in,
+/// same garbage out, on every ISA path.
+#[test]
+fn fault_kernel_paths_conformant_on_corrupted_operands() {
+    let (m, k, n) = (9usize, 33, 10);
+    let rb = k.div_ceil(2);
+    let mut rng = Xoshiro256::seed_from_u64(0x6B1D);
+    let mut plan = FaultPlan::new(0x6B1E);
+    let mut a: Vec<u8> = (0..m * rb).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+    let mut b: Vec<u8> = (0..n * rb).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+    plan.flip_bits(&mut a, 1 + a.len() / 5);
+    plan.flip_bits(&mut b, 1 + b.len() / 5);
+    let a_codes: Vec<Int4Code> =
+        (0..m * k).map(|_| Int4Code::from_nibble((rng.next_u64() & 0xF) as u8)).collect();
+
+    let int4_want = qgemm_int4_decode_oracle(&a, &b, m, k, n);
+    let radix4_want = qgemm_radix4_decode_oracle(&a_codes, &b, m, k, n);
+    for (name, want) in [("int4", &int4_want), ("radix4", &radix4_want)] {
+        for (i, v) in want.iter().enumerate() {
+            assert!(v.is_finite(), "{name} oracle[{i}] non-finite on corrupt bytes: {v}");
+        }
+    }
+
+    let mut scratch = QgemmScratch::new();
+    let mut out = vec![f32::NAN; m * n];
+    for path in [KernelPath::Scalar, KernelPath::Portable, KernelPath::Avx2] {
+        if !path.is_available() {
+            continue;
+        }
+        for t in [1usize, 3] {
+            out.fill(f32::NAN);
+            qgemm_int4_mt_with_path(&a, &b, m, k, n, &mut out, t, &mut scratch, path);
+            for (i, (g, w)) in out.iter().zip(int4_want.iter()).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "int4 {}/{t}T [{i}]: {g} vs oracle {w}",
+                    path.label()
+                );
+            }
+            out.fill(f32::NAN);
+            qgemm_radix4_mt_with_path(&a_codes, &b, m, k, n, &mut out, t, &mut scratch, path);
+            for (i, (g, w)) in out.iter().zip(radix4_want.iter()).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "radix4 {}/{t}T [{i}]: {g} vs oracle {w}",
+                    path.label()
+                );
             }
         }
     }
