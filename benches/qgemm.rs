@@ -13,6 +13,11 @@
 //!   gather oracle, portable nibble loop, AVX2 shuffle strips) driven
 //!   through the explicit-path INT4×INT4 and radix-4 entry points at one
 //!   thread — the `simd_kernels` JSON section;
+//! * **K-sharded reduction tree**: long-K radix-4 (`k` far beyond the
+//!   nibble LUT's exactness bound) through 1/2/4-shard `ShardConfig`s vs
+//!   the unsharded tiled kernel at the same thread budget — the
+//!   `sharded_kernels` JSON section, gating the 4-shard SIMD
+//!   re-admission speedup on AVX2 hosts;
 //! * **full layer step**: `QuantizedLayerStep` (forward + dx + dW) in
 //!   both `ForwardFormat`s at 1 and `num_cpus` threads — the
 //!   `layer_step_kernels` JSON section (unasserted; history tracked by
@@ -29,7 +34,12 @@
 //!   and
 //! * on AVX2 hosts, the SIMD nibble-split INT4×INT4 and radix-4 kernels
 //!   are ≥4× faster than their tiled gather counterparts (the gate is
-//!   skipped with a loud log line when only the portable fallback runs).
+//!   skipped with a loud log line when only the portable fallback runs),
+//!   and
+//! * on AVX2 hosts, the 4-shard long-K radix-4 GEMM is ≥2× the unsharded
+//!   tiled kernel at the same thread budget (same loud-skip convention);
+//!   the 1-shard config must always be bit-identical to the unsharded
+//!   oracle and every config thread-count invariant.
 
 use luq::bench::{group, BenchResult, Bencher};
 use luq::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
@@ -40,8 +50,9 @@ use luq::hw::qgemm::{
     qgemm_int4_flat, qgemm_int4_mt_with, qgemm_int4_mt_with_path, qgemm_int4_scalar_reference,
     qgemm_int4_with, qgemm_packed_flat, qgemm_packed_mt, qgemm_packed_mt_with,
     qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat, qgemm_radix4_mt_with,
-    qgemm_radix4_mt_with_path, qgemm_radix4_scalar_reference, qgemm_radix4_with,
-    qgemm_scalar_reference, radix4_product_lut, KernelPath, QgemmScratch,
+    qgemm_radix4_mt_with_path, qgemm_radix4_scalar_reference, qgemm_radix4_sharded_mt_with,
+    qgemm_radix4_with, qgemm_scalar_reference, radix4_product_lut, KernelPath, QgemmScratch,
+    ShardConfig,
 };
 use luq::metrics::Json;
 use luq::quant::{
@@ -274,6 +285,77 @@ fn main() {
         simd_results.push((path, ri, rr));
     }
 
+    // --- K-sharded reduction tree: long-K radix-4 ------------------------
+    // k = 2048 is far beyond the radix-4 nibble LUT's exactness bound, so
+    // the unsharded dispatch clamps every path to the scalar gather
+    // engine; 4-shard blocks (k = 512) stay under the bound and re-admit
+    // the SIMD kernels — that re-admission, plus K-parallelism, is what
+    // the sharded gate measures, at the *same* total thread budget.
+    let (sm, sk, sn) = (64usize, 2048, 64);
+    let s_products = (sm * sk * sn) as u64;
+    let sa: Vec<Int4Code> = (0..sm * sk)
+        .map(|_| Int4Code::from_nibble((rng.next_u64() & 0xF) as u8))
+        .collect();
+    let sg: Vec<f32> = (0..sn * sk).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let (s_packed, s_st) = r4.encode_packed_matrix(&sg, sn, sk, TprPhase::Shifted);
+    assert!(s_st.alpha > 0.0);
+    let s_threads = hw_threads.min(4);
+    let shard_configs =
+        [ShardConfig::single(), ShardConfig::with_shards(2), ShardConfig::with_shards(4)];
+
+    // Correctness before timing: the 1-shard config must reproduce the
+    // unsharded decode oracle bit-for-bit (tier 1 nested in tier 2), and
+    // every config must be thread-count invariant (the tier-2 contract).
+    let s_want = qgemm_radix4_decode_oracle(&sa, &s_packed, sm, sk, sn);
+    let mut s_out = vec![0.0f32; sm * sn];
+    let mut sharded_bit_exact_1shard = true;
+    let mut sharded_deterministic = true;
+    for &sc in &shard_configs {
+        let mut first: Vec<f32> = Vec::new();
+        for t in [1usize, s_threads] {
+            qgemm_radix4_sharded_mt_with(
+                &sa, &s_packed, sm, sk, sn, &mut s_out, t, &mut scratch, sc,
+            );
+            if sc.is_single() {
+                sharded_bit_exact_1shard &= bits_equal(&s_out, &s_want);
+            }
+            if first.is_empty() {
+                first = s_out.clone();
+            } else {
+                sharded_deterministic &= bits_equal(&s_out, &first);
+            }
+        }
+    }
+    println!(
+        "sharded radix-4 long-K: 1-shard bit-exact vs oracle = {sharded_bit_exact_1shard}, \
+         thread-invariant per config = {sharded_deterministic}"
+    );
+
+    group(&format!(
+        "K-sharded radix-4 GEMM {s_threads}T, {sm}x{sk}x{sn} ({s_products} products)"
+    ));
+    let s_tiled =
+        b.bench_throughput(&format!("radix-4 tiled unsharded {s_threads}T"), s_products, || {
+            qgemm_radix4_mt_with(&sa, &s_packed, sm, sk, sn, &mut s_out, s_threads, &mut scratch);
+            s_out[0]
+        });
+    println!("{}", s_tiled.report());
+    let mut sharded_results: Vec<(usize, BenchResult)> = Vec::new();
+    for &sc in &shard_configs {
+        let r = b.bench_throughput(
+            &format!("radix-4 sharded x{} {s_threads}T", sc.n_shards()),
+            s_products,
+            || {
+                qgemm_radix4_sharded_mt_with(
+                    &sa, &s_packed, sm, sk, sn, &mut s_out, s_threads, &mut scratch, sc,
+                );
+                s_out[0]
+            },
+        );
+        println!("{}", r.report());
+        sharded_results.push((sc.n_shards(), r));
+    }
+
     // --- full layer step: forward + dx + dW, both forward formats --------
     // Warm the three process-wide product LUTs outside the timed region so
     // a first-use OnceLock build never lands inside a sample.
@@ -378,6 +460,32 @@ fn main() {
         }
     }
 
+    // sharded_kernels: the long-K ladder, each rung's speedup measured
+    // against the unsharded tiled kernel at the same thread budget.
+    let s_ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / s_products as f64;
+    let s_tiled_ns = s_ns(&s_tiled);
+    let mut sharded_kernels: Vec<(String, Json)> = vec![(
+        "radix4 tiled unsharded".to_string(),
+        Json::obj(vec![
+            ("ns_per_product", Json::num(s_tiled_ns)),
+            ("speedup_vs_tiled", Json::num(1.0)),
+        ]),
+    )];
+    let mut sharded_4x_speedup = f64::NAN;
+    for (cnt, r) in &sharded_results {
+        let sp = s_tiled_ns / s_ns(r);
+        sharded_kernels.push((
+            format!("radix4 sharded x{cnt}"),
+            Json::obj(vec![
+                ("ns_per_product", Json::num(s_ns(r))),
+                ("speedup_vs_tiled", Json::num(sp)),
+            ]),
+        ));
+        if *cnt == 4 {
+            sharded_4x_speedup = sp;
+        }
+    }
+
     let ls_ns = |r: &BenchResult| r.median.as_secs_f64() * 1e9 / ls_products as f64;
     let mut layer_step_kernels: Vec<(String, Json)> = Vec::new();
     for (name, r) in &ls_results {
@@ -407,6 +515,7 @@ fn main() {
         ("forward_kernels", Json::Obj(fwd_kernels)),
         ("radix4_kernels", Json::Obj(radix4_kernels)),
         ("simd_kernels", Json::Obj(simd_kernels)),
+        ("sharded_kernels", Json::Obj(sharded_kernels)),
         ("layer_step_kernels", Json::Obj(layer_step_kernels)),
         (
             "gate",
@@ -424,6 +533,12 @@ fn main() {
                 ("simd_required_speedup", Json::num(4.0)),
                 ("simd_gate_enforced", Json::Bool(avx2_on)),
                 ("simd_bit_exact_vs_oracle", Json::Bool(simd_bit_exact)),
+                ("sharded_4x_speedup_vs_tiled", Json::num(sharded_4x_speedup)),
+                ("sharded_required_speedup", Json::num(2.0)),
+                ("sharded_gate_enforced", Json::Bool(avx2_on)),
+                ("sharded_bit_exact_1shard", Json::Bool(sharded_bit_exact_1shard)),
+                ("sharded_deterministic_per_config", Json::Bool(sharded_deterministic)),
+                ("env_shards", Json::num(ShardConfig::from_env().n_shards() as f64)),
             ]),
         ),
     ]);
@@ -457,10 +572,37 @@ fn main() {
              >= 4x gate only applies to the shuffle path"
         );
     }
+    if avx2_on {
+        println!(
+            "K-sharded 4-shard long-K speedup over unsharded tiled: {sharded_4x_speedup:.2}x \
+             (gate: >= 2x)"
+        );
+    } else {
+        println!(
+            "SHARDED GATE SKIPPED: avx2 unavailable on this host — 4-shard long-K measured \
+             {sharded_4x_speedup:.2}x vs unsharded tiled, but the >= 2x gate only applies \
+             where block re-admission reaches the shuffle kernels"
+        );
+    }
     assert!(bit_exact, "a backward kernel variant diverged from the f32 oracle");
     assert!(fwd_bit_exact, "a forward kernel variant diverged from the f32 oracle");
     assert!(r4_bit_exact, "a radix-4 kernel variant diverged from the f32 oracle");
     assert!(simd_bit_exact, "a kernel path diverged from the f32 oracle");
+    assert!(
+        sharded_bit_exact_1shard,
+        "the 1-shard config diverged from the unsharded decode oracle"
+    );
+    assert!(
+        sharded_deterministic,
+        "a sharded config's output varied with the thread count (tier-2 violation)"
+    );
+    if avx2_on {
+        assert!(
+            sharded_4x_speedup >= 2.0,
+            "4-shard long-K radix-4 GEMM only {sharded_4x_speedup:.2}x over the unsharded \
+             tiled kernel at {s_threads}T (gate: >= 2x)"
+        );
+    }
     if avx2_on {
         assert!(
             int4_simd_speedup >= 4.0,

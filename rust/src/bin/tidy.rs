@@ -20,11 +20,12 @@
 //!   site outside `rng/`, `testutil/` and test code must appear in the
 //!   checked-in `tidy/draw_sites.txt` as `<path> <fn> <token>`.
 //! * `coverage` — every `ForwardFormat` variant, every `FaultClass` variant,
-//!   every `KernelPath` variant, and every `ProductLut` instantiation (a fn
-//!   returning `&'static ProductLut` in `hw/qgemm.rs`) must be referenced in
-//!   `testutil/conformance.rs`, the bench ladder (`benches/*.rs`), and the
-//!   fault suite (`testutil/fault_suite.rs`); fault classes in the fault
-//!   suite only.
+//!   every `KernelPath` variant, every `ProductLut` instantiation (a fn
+//!   returning `&'static ProductLut` in `hw/qgemm.rs`), and every
+//!   `ShardConfig` constructor (a fn returning `ShardConfig` in
+//!   `hw/qgemm.rs`) must be referenced in `testutil/conformance.rs`, the
+//!   bench ladder (`benches/*.rs`), and the fault suite
+//!   (`testutil/fault_suite.rs`); fault classes in the fault suite only.
 //! * `panic-policy` — `unwrap()`/`expect()`/`panic!`/`unreachable!` in
 //!   non-test library code are counted against `tidy/panic_budget.txt`,
 //!   whose number may only shrink.
@@ -702,6 +703,21 @@ fn lut_accessors(file: &SourceFile) -> Vec<(String, usize)> {
     out
 }
 
+/// Fns in `file` whose signature returns `ShardConfig` — the K-sharding
+/// constructors. Every way to build a shard configuration must be
+/// exercised by the conformance harness, the benches, and the fault
+/// suite, so no tier-2 entry point escapes the contract tests.
+fn shard_constructors(file: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for f in &file.fns {
+        let sig = &file.masked[f.name_pos..f.decl_end.min(file.masked.len())];
+        if String::from_utf8_lossy(sig).contains("-> ShardConfig") {
+            out.push((f.name.clone(), file.line_of(f.name_pos)));
+        }
+    }
+    out
+}
+
 fn rule_coverage(files: &[SourceFile]) -> Vec<Violation> {
     let by_rel = |rel: &str| files.iter().find(|f| f.rel == rel);
     let conformance = by_rel("rust/src/testutil/conformance.rs");
@@ -727,6 +743,9 @@ fn rule_coverage(files: &[SourceFile]) -> Vec<Violation> {
         }
         for (v, line) in enum_variants(def, "KernelPath") {
             required.push((def, v, line, "KernelPath variant", true));
+        }
+        for (v, line) in shard_constructors(def) {
+            required.push((def, v, line, "ShardConfig constructor", true));
         }
     }
     if let Some(def) = by_rel("rust/src/quant/health.rs") {
@@ -1167,7 +1186,8 @@ mod tests {
         let defs = "pub enum ForwardFormat {\n    Sawb,\n    Radix4Tpr,\n}\n";
         let health = "pub enum FaultClass {\n    NonFinite,\n}\n";
         let luts = "pub fn product_lut() -> &'static ProductLut {\n    &LUT\n}\n\
-             pub enum KernelPath {\n    Scalar,\n    Portable,\n    Avx2,\n}\n";
+             pub enum KernelPath {\n    Scalar,\n    Portable,\n    Avx2,\n}\n\
+             pub fn single() -> ShardConfig {\n    ShardConfig { n_shards: 1 }\n}\n";
         vec![
             file("rust/src/coordinator/layer_step.rs", defs),
             file("rust/src/quant/health.rs", health),
@@ -1181,9 +1201,9 @@ mod tests {
     #[test]
     fn tidy_coverage_flags_unreferenced_variant() {
         let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2); }\n";
+             Scalar, Portable, Avx2, single); }\n";
         let missing_radix = "fn f() { let _ = (Sawb, product_lut, NonFinite, \
-             Scalar, Portable, Avx2); }\n";
+             Scalar, Portable, Avx2, single); }\n";
         let v = rule_coverage(&coverage_tree(all, all, missing_radix));
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("Radix4Tpr"), "{}", v[0].msg);
@@ -1193,9 +1213,9 @@ mod tests {
     #[test]
     fn tidy_coverage_flags_unreferenced_kernel_path() {
         let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2); }\n";
+             Scalar, Portable, Avx2, single); }\n";
         let missing_avx2 = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable); }\n";
+             Scalar, Portable, single); }\n";
         let v = rule_coverage(&coverage_tree(all, missing_avx2, all));
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("KernelPath variant `Avx2`"), "{}", v[0].msg);
@@ -1203,9 +1223,21 @@ mod tests {
     }
 
     #[test]
+    fn tidy_coverage_flags_unreferenced_shard_constructor() {
+        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable, Avx2, single); }\n";
+        let missing_single = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable, Avx2); }\n";
+        let v = rule_coverage(&coverage_tree(missing_single, all, all));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("ShardConfig constructor `single`"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("conformance"), "{}", v[0].msg);
+    }
+
+    #[test]
     fn tidy_coverage_passes_when_referenced() {
         let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2); }\n";
+             Scalar, Portable, Avx2, single); }\n";
         assert!(rule_coverage(&coverage_tree(all, all, all)).is_empty());
     }
 
@@ -1214,7 +1246,7 @@ mod tests {
         let defs = "pub enum ForwardFormat {\n    Sawb,\n    \
              // tidy-allow: coverage (format still landing)\n    Radix4Tpr,\n}\n";
         let rest = "fn f() { let _ = (Sawb, product_lut, NonFinite, \
-             Scalar, Portable, Avx2); }\n";
+             Scalar, Portable, Avx2, single); }\n";
         let mut files = coverage_tree(rest, rest, rest);
         files[0] = file("rust/src/coordinator/layer_step.rs", defs);
         assert!(rule_coverage(&files).is_empty());

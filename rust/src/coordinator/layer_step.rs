@@ -60,8 +60,21 @@
 //! bit-identical, so nothing in this module's reproducibility contracts
 //! (oracle bit-matches, thread invariance, RNG accounting) depends on
 //! the host's instruction set.
+//!
+//! **K-sharding**: [`QuantizedLayerStep::set_shards`] routes all three
+//! GEMMs through the K-sharded reduction-tree driver
+//! ([`qgemm::qgemm_sharded_mt`]) — the two-tier determinism contract
+//! applies: results are deterministic for a given [`ShardConfig`] (and
+//! still thread-count invariant), and the default
+//! [`ShardConfig::single`] keeps every bitwise contract above intact by
+//! delegating to the unsharded drivers. The default is *always* single —
+//! never read from the environment — so the step's reproducibility
+//! contracts hold regardless of `QGEMM_SHARDS`; opting in is an explicit
+//! API call.
 
-use crate::hw::qgemm::{self, row_nibble, KernelPath, NibbleLut, ProductLut, QgemmScratch};
+use crate::hw::qgemm::{
+    self, row_nibble, KernelPath, NibbleLut, ProductLut, QgemmScratch, ShardConfig,
+};
 use crate::quant::{
     LogQuantConfig, LogQuantizer, QuantScratch, QuantStats, Radix4Format, Radix4Quantizer,
     SawbQuantizer, TprPhase, UniformQuantizer, UniformRounding,
@@ -132,8 +145,13 @@ pub struct QuantizedLayerStep<R = Xoshiro256> {
     pub weight_sawb: SawbQuantizer,
     bits: u32,
     shape: (usize, usize, usize),
+    /// K-sharding for all three GEMMs (default: unsharded).
+    shards: ShardConfig,
     quant_scratch: QuantScratch<R>,
     gemm_scratch: QgemmScratch,
+    /// Partial-sum pool for the sharded backward GEMMs (stays empty on
+    /// the default single-shard config).
+    shard_partials: Vec<f32>,
     // Forward operands (packed byte-aligned rows).
     a_packed: Vec<u8>,
     w_packed: Vec<u8>,
@@ -166,7 +184,11 @@ fn ensure_u8(buf: &mut Vec<u8>, n: usize) {
 /// TPR) run on the detected [`KernelPath`] through the SIMD/portable
 /// nibble engine — bit-identical to the gather engine at every depth,
 /// because [`KernelPath::for_gemm`] clamps past `max_k_exact`. The
-/// MF-BPROP LUT (`nlut = None`) always takes the gather path.
+/// MF-BPROP LUT (`nlut = None`) always takes the gather path. A
+/// multi-shard [`ShardConfig`] reroutes through the K-sharded
+/// reduction-tree driver (`partials` is the step's pooled shard
+/// scratch); the single-shard default reproduces the unsharded dispatch
+/// above bit-for-bit.
 #[allow(clippy::too_many_arguments)]
 fn backward_gemm(
     lut: &ProductLut,
@@ -178,7 +200,18 @@ fn backward_gemm(
     n: usize,
     out: &mut [f32],
     n_threads: usize,
+    shards: ShardConfig,
+    partials: &mut Vec<f32>,
 ) {
+    if !shards.is_single() {
+        // MF-BPROP stays gather-only (Scalar); integer formats pass
+        // their nibble LUT so each block re-enters the path dispatch.
+        let path = if nlut.is_some() { KernelPath::detect() } else { KernelPath::Scalar };
+        qgemm::qgemm_sharded_mt(
+            lut, nlut, path, a_nib, packed_b, m, k, n, out, n_threads, shards, partials,
+        );
+        return;
+    }
     if let Some(nlut) = nlut {
         match KernelPath::detect().for_gemm(k, nlut) {
             KernelPath::Scalar => {}
@@ -218,8 +251,10 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
             weight_sawb: SawbQuantizer::new(bits),
             bits,
             shape: (0, 0, 0),
+            shards: ShardConfig::single(),
             quant_scratch: QuantScratch::new(),
             gemm_scratch: QgemmScratch::new(),
+            shard_partials: Vec::new(),
             a_packed: Vec::new(),
             w_packed: Vec::new(),
             wt_nib: Vec::new(),
@@ -231,6 +266,19 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
             dx_t: Vec::new(),
             dw_t: Vec::new(),
         }
+    }
+
+    /// Route this step's three GEMMs through the given K-sharding
+    /// configuration (see the module docs for the determinism tier each
+    /// choice buys). Deliberately never defaulted from `QGEMM_SHARDS` —
+    /// pass [`ShardConfig::from_env`] here to honor the env override.
+    pub fn set_shards(&mut self, shards: ShardConfig) {
+        self.shards = shards;
+    }
+
+    /// The step's current K-sharding configuration.
+    pub fn shards(&self) -> ShardConfig {
+        self.shards
     }
 
     /// Run one full quantized layer step.
@@ -293,16 +341,30 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
 
         // --- forward GEMM: Y = A·Wᵀ through the INT4×INT4 LUT ----------
         ensure_f32(&mut self.y, batch * d_out);
-        qgemm::qgemm_int4_mt_with(
-            &self.a_packed,
-            &self.w_packed,
-            batch,
-            d_in,
-            d_out,
-            &mut self.y,
-            n_threads,
-            &mut self.gemm_scratch,
-        );
+        if self.shards.is_single() {
+            qgemm::qgemm_int4_mt_with(
+                &self.a_packed,
+                &self.w_packed,
+                batch,
+                d_in,
+                d_out,
+                &mut self.y,
+                n_threads,
+                &mut self.gemm_scratch,
+            );
+        } else {
+            qgemm::qgemm_int4_sharded_mt_with(
+                &self.a_packed,
+                &self.w_packed,
+                batch,
+                d_in,
+                d_out,
+                &mut self.y,
+                n_threads,
+                &mut self.gemm_scratch,
+                self.shards,
+            );
+        }
         let forward_scale = aq.delta() * wq.delta();
         for v in self.y[..batch * d_out].iter_mut() {
             *v *= forward_scale;
@@ -408,6 +470,8 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
             batch,
             &mut self.dx_t,
             n_threads,
+            self.shards,
+            &mut self.shard_partials,
         );
         // Scale sequence matches backward_matmul: the gradient scale (α,
         // or the radix-4 phase scale α·shift) first, then Δ_w.
@@ -428,6 +492,8 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
             d_out,
             &mut self.dw_t,
             n_threads,
+            self.shards,
+            &mut self.shard_partials,
         );
         for v in self.dw_t[..d_in * d_out].iter_mut() {
             *v *= dw_scale;
@@ -481,6 +547,7 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
             self.dw_t.capacity(),
             self.gemm_scratch.capacity_bytes(),
             self.quant_scratch.noise.capacity(),
+            self.shard_partials.capacity(),
         ]
     }
 }
@@ -1159,6 +1226,100 @@ mod tests {
         assert_eq!(step.scratch_capacities(), warmed);
         step.step(&acts, &wts, &grads, batch - 1, d_in - 2, d_out - 3);
         assert_eq!(step.scratch_capacities(), warmed, "smaller shape reallocated");
+    }
+
+    /// Tentpole: the K-sharded step. A fixed multi-shard config is
+    /// deterministic across thread counts (tier 2 of the determinism
+    /// contract), agrees with the unsharded step to f32 reassociation
+    /// tolerance, stays allocation-free after warm-up, and an explicit
+    /// single-shard config reproduces the default bit-for-bit.
+    #[test]
+    fn sharded_step_is_deterministic_and_close_to_unsharded() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x60);
+        let (batch, d_in, d_out) = (12usize, 33, 17); // odd k-dims: byte tails
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+            let mut base = QuantizedLayerStep::with_format(cfg, BITS, format);
+            let mut rng = Xoshiro256::seed_from_u64(0xD0);
+            base.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 2);
+
+            // Explicit single() ≡ default, bit-for-bit.
+            let mut single = QuantizedLayerStep::with_format(cfg, BITS, format);
+            single.set_shards(ShardConfig::single());
+            assert!(single.shards().is_single());
+            let mut rng = Xoshiro256::seed_from_u64(0xD0);
+            single.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 2);
+            for (g, w) in single
+                .y()
+                .iter()
+                .chain(single.dx_t())
+                .chain(single.dw_t())
+                .zip(base.y().iter().chain(base.dx_t()).chain(base.dw_t()))
+            {
+                assert_eq!(g.to_bits(), w.to_bits(), "{format:?}: single() != default");
+            }
+
+            // Multi-shard: thread-count invariant at a fixed config.
+            let cfg_sharded = ShardConfig::with_shards(3);
+            let mut want: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+            for threads in [1usize, 2, 8] {
+                let mut step = QuantizedLayerStep::with_format(cfg, BITS, format);
+                step.set_shards(cfg_sharded);
+                let mut rng = Xoshiro256::seed_from_u64(0xD0);
+                step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, threads);
+                match &want {
+                    None => {
+                        want = Some((
+                            step.y().to_vec(),
+                            step.dx_t().to_vec(),
+                            step.dw_t().to_vec(),
+                        ))
+                    }
+                    Some((y, dx, dw)) => {
+                        for (g, w) in step
+                            .y()
+                            .iter()
+                            .chain(step.dx_t())
+                            .chain(step.dw_t())
+                            .zip(y.iter().chain(dx).chain(dw))
+                        {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "{format:?} sharded t={threads}: not deterministic"
+                            );
+                        }
+                    }
+                }
+            }
+            // Reassociation only moves f32 rounding, never values: the
+            // sharded outputs track the unsharded step to a few ulps of
+            // each tensor's own magnitude.
+            let (y, dx, dw) = want.unwrap();
+            for (got, base_t, what) in
+                [(&y, base.y(), "y"), (&dx, base.dx_t(), "dx"), (&dw, base.dw_t(), "dw")]
+            {
+                let scale = base_t.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-30);
+                for (g, w) in got.iter().zip(base_t.iter()) {
+                    assert!(
+                        (g - w).abs() <= 1e-3 * scale,
+                        "{format:?} {what}: sharded {g} vs unsharded {w} (scale {scale})"
+                    );
+                }
+            }
+        }
+
+        // Sharded steady state stays allocation-free after warm-up.
+        let mut step = QuantizedLayerStep::new(cfg, BITS);
+        step.set_shards(ShardConfig::with_shards(4));
+        let mut rng = Xoshiro256::seed_from_u64(0xD1);
+        step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 4);
+        let warmed = step.scratch_capacities();
+        for _ in 0..3 {
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 4);
+            assert_eq!(step.scratch_capacities(), warmed, "sharded step regrew buffers");
+        }
     }
 
     /// `grad_max` is the defensive max of the two per-GEMM maxima.

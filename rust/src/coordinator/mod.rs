@@ -9,6 +9,7 @@
 pub mod checkpoint;
 pub mod experiments;
 pub mod layer_step;
+pub mod model_step;
 pub mod qgemm_path;
 pub mod schedule;
 pub mod supervisor;
@@ -16,6 +17,7 @@ pub mod trainer;
 
 pub use checkpoint::{Checkpoint, RngState};
 pub use layer_step::{ForwardFormat, Fp32LayerStep, LayerStepStats, QuantizedLayerStep};
+pub use model_step::{ModelLayerInput, ModelStep};
 pub use qgemm_path::QgemmPath;
 pub use schedule::{FntSchedule, LrSchedule, StepDecay};
 pub use supervisor::{

@@ -1,0 +1,363 @@
+//! Cross-layer parallel model step: run the quantized training steps of
+//! **independent layers concurrently** on a scoped work-stealing pool,
+//! so a multi-layer step saturates the machine instead of walking one
+//! layer at a time (ROADMAP open item 2's cross-layer half).
+//!
+//! The unit of work is one whole [`QuantizedLayerStep::step`] — the
+//! grain is coarse enough that a shared-queue pool (a mutex around an
+//! iterator of per-layer jobs) is a true work-stealing scheduler with
+//! no per-element contention: workers pull the next un-started layer
+//! whenever they finish one, so a straggler layer never idles the rest
+//! of the pool.
+//!
+//! **Determinism.** Work placement cannot affect results:
+//!
+//! * Every layer draws from its own RNG stream, derived O(1) from the
+//!   caller's base generator by [`NoiseSource::fork`]`(layer_index)` —
+//!   the same keyed-stream mechanism that makes chunked quantization
+//!   thread-invariant. The base generator is **not advanced**, and each
+//!   layer's in-stream draw accounting (`2·batch·d_out` uniforms in
+//!   `Sawb` mode, zero in `Radix4Tpr`) is unchanged, so per-layer
+//!   contracts hold verbatim.
+//! * Each layer's outputs are thread-count invariant by the layer-step
+//!   contract (and, under a multi-shard [`ShardConfig`], deterministic
+//!   per shard config), so neither the worker count nor the per-layer
+//!   inner thread budget changes a single bit.
+//!
+//! **Scratch pooling.** All staging lives in the persistent per-layer
+//! [`QuantizedLayerStep`] objects owned by this driver — each layer's
+//! buffers are touched by exactly one worker per step, so repeated
+//! same-shape model steps are allocation-free without any locking.
+
+use std::sync::Mutex;
+
+use super::layer_step::{ForwardFormat, LayerStepStats, QuantizedLayerStep};
+use crate::hw::qgemm::ShardConfig;
+use crate::quant::{LogQuantConfig, QuantStats};
+use crate::rng::{NoiseSource, Xoshiro256};
+
+/// One layer's operands for a [`ModelStep::step`] call — the same
+/// row-major tensors and shape triple [`QuantizedLayerStep::step`]
+/// takes, borrowed so the driver never copies model data.
+pub struct ModelLayerInput<'a> {
+    /// `batch × d_in` activations.
+    pub acts: &'a [f32],
+    /// `d_out × d_in` weights.
+    pub weights: &'a [f32],
+    /// `batch × d_out` output gradient.
+    pub grads: &'a [f32],
+    pub batch: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+/// The stats placeholder workers overwrite — never observable, since
+/// `step` processes every layer exactly once before returning.
+fn empty_stats() -> LayerStepStats {
+    LayerStepStats {
+        act_clip: 0.0,
+        act_delta: 0.0,
+        weight_clip: 0.0,
+        weight_delta: 0.0,
+        forward_scale: 0.0,
+        dx: QuantStats::default(),
+        dw: QuantStats::default(),
+    }
+}
+
+/// A model's worth of per-layer quantized steps plus the work-stealing
+/// driver that runs them concurrently. Layers are fully independent —
+/// this driver parallelizes one optimizer step's worth of layer-local
+/// compute; it does not chain activations between layers.
+pub struct ModelStep<R = Xoshiro256> {
+    steps: Vec<QuantizedLayerStep<R>>,
+    stats: Vec<LayerStepStats>,
+    shards: ShardConfig,
+}
+
+impl<R: NoiseSource + Send + Sync> ModelStep<R> {
+    /// One [`QuantizedLayerStep`] per entry of `formats`, all sharing
+    /// `grad_cfg` and `bits` (mixed gradient pipelines are the point:
+    /// real models mix formats per layer).
+    pub fn new(grad_cfg: LogQuantConfig, bits: u32, formats: &[ForwardFormat]) -> ModelStep<R> {
+        ModelStep::from_steps(
+            formats
+                .iter()
+                .map(|&f| QuantizedLayerStep::with_format(grad_cfg, bits, f))
+                .collect(),
+        )
+    }
+
+    /// Wrap caller-built per-layer steps (e.g. from
+    /// `Trainer::quantized_layer_step`, hindsight configs included).
+    pub fn from_steps(steps: Vec<QuantizedLayerStep<R>>) -> ModelStep<R> {
+        let stats = steps.iter().map(|_| empty_stats()).collect();
+        ModelStep { steps, stats, shards: ShardConfig::single() }
+    }
+
+    /// Route every layer's GEMMs through the given K-sharding
+    /// configuration (applied to current and future steps; the default
+    /// is the unsharded [`ShardConfig::single`], never the env).
+    pub fn set_shards(&mut self, shards: ShardConfig) {
+        self.shards = shards;
+        for step in self.steps.iter_mut() {
+            step.set_shards(shards);
+        }
+    }
+
+    /// The configured K-sharding.
+    pub fn shards(&self) -> ShardConfig {
+        self.shards
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Layer `i`'s step — outputs of the last model step live here
+    /// (`y()`, `dx_t()`, `dw_t()`).
+    pub fn layer(&self, i: usize) -> &QuantizedLayerStep<R> {
+        &self.steps[i]
+    }
+
+    /// Mutable access to layer `i`'s step (format/config tweaks).
+    pub fn layer_mut(&mut self, i: usize) -> &mut QuantizedLayerStep<R> {
+        &mut self.steps[i]
+    }
+
+    /// Per-layer stats of the last [`Self::step`] call.
+    pub fn stats(&self) -> &[LayerStepStats] {
+        &self.stats
+    }
+
+    /// Run every layer's full quantized step (forward + dx + dW) on a
+    /// scoped work-stealing pool of `min(n_threads, n_layers)` workers.
+    ///
+    /// Layer `i` draws from `base_rng.fork(i)`; `base_rng` itself is
+    /// never advanced, so the caller's stream position is untouched.
+    /// `n_threads` is a budget, not a layout: results are bit-identical
+    /// for every value (see the module docs).
+    pub fn step(&mut self, layers: &[ModelLayerInput<'_>], base_rng: &R, n_threads: usize) {
+        assert_eq!(layers.len(), self.steps.len(), "one input per layer required");
+        let n_layers = layers.len();
+        if n_layers == 0 {
+            return;
+        }
+        let workers = n_threads.max(1).min(n_layers);
+        // Each worker gets an equal inner GEMM thread budget. Purely a
+        // throughput knob — every layer step is thread-count invariant.
+        let inner = (n_threads / workers).max(1);
+        let queue = Mutex::new(
+            self.steps.iter_mut().zip(self.stats.iter_mut()).zip(layers).enumerate(),
+        );
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    // A worker panic while holding the lock poisons it;
+                    // the queue itself is still coherent (the panicked
+                    // job is simply lost, and the panic resurfaces at
+                    // scope exit), so keep draining instead of
+                    // double-panicking here.
+                    let job = match queue.lock() {
+                        Ok(mut it) => it.next(),
+                        Err(poisoned) => poisoned.into_inner().next(),
+                    };
+                    let Some((i, ((step, stats), input))) = job else { break };
+                    let mut rng = base_rng.fork(i as u64);
+                    *stats = step.step(
+                        input.acts,
+                        input.weights,
+                        input.grads,
+                        input.batch,
+                        input.d_in,
+                        input.d_out,
+                        &mut rng,
+                        inner,
+                    );
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::LogFormat;
+
+    const BITS: u32 = 4;
+
+    fn layer_inputs(
+        rng: &mut Xoshiro256,
+        shapes: &[(usize, usize, usize)],
+    ) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        shapes
+            .iter()
+            .map(|&(batch, d_in, d_out)| {
+                let acts = (0..batch * d_in).map(|_| rng.normal_ms_f32(0.0, 1.2)).collect();
+                let wts = (0..d_out * d_in).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+                let grads = (0..batch * d_out)
+                    .map(|_| rng.signed_lognormal_f32(0.0, 2.0))
+                    .collect();
+                (acts, wts, grads)
+            })
+            .collect()
+    }
+
+    fn inputs_of<'a>(
+        data: &'a [(Vec<f32>, Vec<f32>, Vec<f32>)],
+        shapes: &[(usize, usize, usize)],
+    ) -> Vec<ModelLayerInput<'a>> {
+        data.iter()
+            .zip(shapes)
+            .map(|((acts, wts, grads), &(batch, d_in, d_out))| ModelLayerInput {
+                acts,
+                weights: wts,
+                grads,
+                batch,
+                d_in,
+                d_out,
+            })
+            .collect()
+    }
+
+    /// Tentpole acceptance: the pooled model step is bit-identical to
+    /// running each layer sequentially on its forked stream — for every
+    /// worker count, with mixed per-layer formats and shapes — and the
+    /// base generator's position is untouched.
+    #[test]
+    fn model_step_matches_sequential_layers_bitwise() {
+        let shapes = [(6usize, 10usize, 9usize), (4, 33, 7), (9, 15, 11), (3, 8, 5)];
+        let formats = [
+            ForwardFormat::Sawb,
+            ForwardFormat::Radix4Tpr,
+            ForwardFormat::Sawb,
+            ForwardFormat::Radix4Tpr,
+        ];
+        let mut data_rng = Xoshiro256::seed_from_u64(0x70);
+        let data = layer_inputs(&mut data_rng, &shapes);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let base = Xoshiro256::seed_from_u64(0xB0);
+
+        // Sequential reference: fresh steps, one per layer, forked rngs.
+        let mut want = Vec::new();
+        for (i, ((acts, wts, grads), (&(batch, d_in, d_out), &format))) in
+            data.iter().zip(shapes.iter().zip(formats.iter())).enumerate()
+        {
+            let mut step = QuantizedLayerStep::<Xoshiro256>::with_format(cfg, BITS, format);
+            let mut rng = base.fork(i as u64);
+            let stats = step.step(acts, wts, grads, batch, d_in, d_out, &mut rng, 2);
+            want.push((step.y().to_vec(), step.dx_t().to_vec(), step.dw_t().to_vec(), stats));
+        }
+
+        for n_threads in [1usize, 2, 8] {
+            let mut model = ModelStep::<Xoshiro256>::new(cfg, BITS, &formats);
+            assert_eq!(model.n_layers(), shapes.len());
+            model.step(&inputs_of(&data, &shapes), &base, n_threads);
+            for (i, (y, dx, dw, stats)) in want.iter().enumerate() {
+                let layer = model.layer(i);
+                for (g, w) in layer
+                    .y()
+                    .iter()
+                    .chain(layer.dx_t())
+                    .chain(layer.dw_t())
+                    .zip(y.iter().chain(dx).chain(dw))
+                {
+                    assert_eq!(g.to_bits(), w.to_bits(), "layer {i} t={n_threads}");
+                }
+                let got = model.stats()[i];
+                assert_eq!(got.dx.alpha.to_bits(), stats.dx.alpha.to_bits(), "layer {i}");
+                assert_eq!(got.dw.alpha.to_bits(), stats.dw.alpha.to_bits(), "layer {i}");
+                assert_eq!(
+                    got.forward_scale.to_bits(),
+                    stats.forward_scale.to_bits(),
+                    "layer {i}"
+                );
+            }
+        }
+
+        // fork() never advances the base: its stream equals a pristine
+        // generator's.
+        let mut a = base.clone();
+        let mut b = Xoshiro256::seed_from_u64(0xB0);
+        assert_eq!(a.next_u64(), b.next_u64(), "model step advanced the base rng");
+    }
+
+    /// The pooled step composes with K-sharding: a fixed multi-shard
+    /// config is deterministic across worker counts and bit-identical to
+    /// the sequential sharded reference.
+    #[test]
+    fn sharded_model_step_is_deterministic_across_workers() {
+        let shapes = [(5usize, 33usize, 9usize), (7, 16, 11), (4, 21, 6)];
+        let formats = [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr, ForwardFormat::Sawb];
+        let mut data_rng = Xoshiro256::seed_from_u64(0x71);
+        let data = layer_inputs(&mut data_rng, &shapes);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let base = Xoshiro256::seed_from_u64(0xB1);
+        let shards = ShardConfig::with_shards(3);
+
+        let mut want = Vec::new();
+        for (i, ((acts, wts, grads), (&(batch, d_in, d_out), &format))) in
+            data.iter().zip(shapes.iter().zip(formats.iter())).enumerate()
+        {
+            let mut step = QuantizedLayerStep::<Xoshiro256>::with_format(cfg, BITS, format);
+            step.set_shards(shards);
+            let mut rng = base.fork(i as u64);
+            step.step(acts, wts, grads, batch, d_in, d_out, &mut rng, 3);
+            want.push((step.y().to_vec(), step.dx_t().to_vec(), step.dw_t().to_vec()));
+        }
+
+        for n_threads in [1usize, 3, 8] {
+            let mut model = ModelStep::<Xoshiro256>::new(cfg, BITS, &formats);
+            model.set_shards(shards);
+            assert_eq!(model.shards(), shards);
+            model.step(&inputs_of(&data, &shapes), &base, n_threads);
+            for (i, (y, dx, dw)) in want.iter().enumerate() {
+                let layer = model.layer(i);
+                assert_eq!(layer.shards(), shards, "set_shards reached layer {i}");
+                for (g, w) in layer
+                    .y()
+                    .iter()
+                    .chain(layer.dx_t())
+                    .chain(layer.dw_t())
+                    .zip(y.iter().chain(dx).chain(dw))
+                {
+                    assert_eq!(g.to_bits(), w.to_bits(), "sharded layer {i} t={n_threads}");
+                }
+            }
+        }
+    }
+
+    /// Degenerate pool shapes: zero layers is a no-op, and repeated
+    /// same-shape model steps are allocation-free after warm-up (scratch
+    /// pooled in the persistent per-layer steps).
+    #[test]
+    fn empty_model_and_steady_state() {
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let mut empty = ModelStep::<Xoshiro256>::new(cfg, BITS, &[]);
+        empty.step(&[], &Xoshiro256::seed_from_u64(1), 4);
+        assert_eq!(empty.n_layers(), 0);
+        assert!(empty.stats().is_empty());
+
+        let shapes = [(6usize, 12usize, 8usize), (5, 9, 7)];
+        let formats = [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr];
+        let mut data_rng = Xoshiro256::seed_from_u64(0x72);
+        let data = layer_inputs(&mut data_rng, &shapes);
+        let base = Xoshiro256::seed_from_u64(0xB2);
+        let mut model = ModelStep::<Xoshiro256>::new(cfg, BITS, &formats);
+        let inputs = inputs_of(&data, &shapes);
+        model.step(&inputs, &base, 4);
+        let warmed: Vec<Vec<usize>> =
+            (0..model.n_layers()).map(|i| model.layer(i).scratch_capacities()).collect();
+        for _ in 0..3 {
+            model.step(&inputs, &base, 4);
+            for (i, caps) in warmed.iter().enumerate() {
+                assert_eq!(
+                    &model.layer(i).scratch_capacities(),
+                    caps,
+                    "layer {i} regrew scratch"
+                );
+            }
+        }
+    }
+}

@@ -186,7 +186,11 @@ impl Supervisor {
             }
             SentinelState::Probation { remaining } => {
                 if faulty {
-                    s.window = (s.window * 2).min(self.policy.max_fallback_steps);
+                    // Saturating: at a huge cap the doubling itself can
+                    // overflow before `min` ever sees it (wrapping to a
+                    // zero window would underflow the countdown on the
+                    // next healthy step).
+                    s.window = s.window.saturating_mul(2).min(self.policy.max_fallback_steps);
                     s.state = SentinelState::Fallback { remaining: s.window };
                     Some(Transition::Relapsed)
                 } else {
@@ -282,6 +286,13 @@ impl<R: NoiseSource> SupervisedLayerStep<R> {
     /// The wrapped quantized step (e.g. to inspect its configuration).
     pub fn quantized(&self) -> &QuantizedLayerStep<R> {
         &self.quant
+    }
+
+    /// Route the quantized pipeline's GEMMs through the given K-sharding
+    /// configuration (see [`QuantizedLayerStep::set_shards`]; the fp32
+    /// reference step is unaffected — it has no quantized GEMMs).
+    pub fn set_shards(&mut self, shards: crate::hw::qgemm::ShardConfig) {
+        self.quant.set_shards(shards);
     }
 
     /// True when the streams of `a` and `b` are at the same position

@@ -8,6 +8,7 @@ use crate::coordinator::supervisor::{
     StepPrecision, SupervisedLayerStep, Supervisor, SupervisorPolicy,
 };
 use crate::data::{CorpusConfig, ImageDataset, ImagesConfig, TokenCorpus};
+use crate::hw::qgemm::ShardConfig;
 use crate::quant::{FaultClass, LogFormat, LogQuantConfig, StepHealth};
 use crate::rng::{EngineRng, NoiseBank, NoiseEngine, NoiseSource, Xoshiro256};
 use crate::runtime::{Engine, Executable, HostTensor};
@@ -213,6 +214,14 @@ pub struct TrainerOptions {
     /// building each step. `None` (the default) keeps the historical
     /// unsupervised behavior.
     pub supervisor: Option<SupervisorPolicy>,
+    /// K-sharding for host-side layer-step GEMMs
+    /// ([`ShardConfig`][crate::hw::qgemm::ShardConfig]). The default
+    /// [`ShardConfig::single`] keeps the tier-1 "bit-identical at any
+    /// thread count" contract; multi-shard configs opt into the weaker
+    /// "deterministic per shard config" tier for long-K throughput.
+    /// Never read from the environment — sharding a trainer is an
+    /// explicit decision made here.
+    pub shards: ShardConfig,
 }
 
 impl Default for TrainerOptions {
@@ -225,6 +234,7 @@ impl Default for TrainerOptions {
             record_hindsight: false,
             noise_engine: NoiseEngine::Xoshiro,
             supervisor: None,
+            shards: ShardConfig::single(),
         }
     }
 }
@@ -524,7 +534,9 @@ impl Trainer {
         layer: usize,
         format: ForwardFormat,
     ) -> QuantizedLayerStep<R> {
-        QuantizedLayerStep::with_format(self.grad_cfg_for_layer(layer), 4, format)
+        let mut step = QuantizedLayerStep::with_format(self.grad_cfg_for_layer(layer), 4, format);
+        step.set_shards(self.opts.shards);
+        step
     }
 
     /// A generator of the trainer's configured noise engine for driving

@@ -85,6 +85,22 @@
 //! keep existing for future log formats, whose decodes are non-integer
 //! dyadic fractions).
 //!
+//! **K-sharded reduction layer** (ROADMAP open item 2): every driver
+//! above keeps K strictly sequential, so long-K shapes whose row count
+//! cannot fill the machine leave it idle, and the integer formats lose
+//! the SIMD kernels entirely beyond `max_k_exact`. [`ShardConfig`] splits
+//! K into contiguous **byte-aligned** blocks: each live block runs the
+//! classic engine (gather or nibble, per [`KernelPath::for_gemm`] applied
+//! to the *block* depth — which re-admits the SIMD kernels whenever the
+//! block stays under the 2²⁴ bound), blocks run concurrently, and the
+//! partials combine through a **fixed-shape pairwise reduction tree**
+//! ([`qgemm_sharded_mt`]). This is an explicitly *weaker* determinism
+//! tier — **deterministic for a given `ShardConfig`** (still
+//! thread-count invariant, but shard counts > 1 group additions
+//! differently from the sequential-`k` oracle) — and the 1-shard config,
+//! the default everywhere, delegates to the unsharded drivers verbatim
+//! and so reproduces today's outputs bit-for-bit.
+//!
 //! [`mfbprop_dot_packed`](super::mfbprop::mfbprop_dot_packed) is the
 //! `1 × k` special case of the backward instantiation.
 
@@ -193,11 +209,15 @@ pub fn radix4_product_lut() -> &'static ProductLut {
 
 /// Reusable staging for the tiled kernels: the A operand converted to raw
 /// wire nibbles once per call (1 byte/element instead of re-deriving it
-/// from the typed code or the packed byte `m·n` times). One instance per
-/// long-lived consumer makes repeated GEMMs allocation-free.
+/// from the typed code or the packed byte `m·n` times), plus the sharded
+/// driver's partial-sum pool. One instance per long-lived consumer makes
+/// repeated GEMMs allocation-free (`partials` stays empty until a
+/// multi-shard [`ShardConfig`] is used, so unsharded steady state is
+/// unchanged).
 #[derive(Default)]
 pub struct QgemmScratch {
     a_nib: Vec<u8>,
+    partials: Vec<f32>,
 }
 
 impl QgemmScratch {
@@ -205,18 +225,25 @@ impl QgemmScratch {
         QgemmScratch::default()
     }
 
-    /// Bytes currently reserved by the staging buffer — diagnostics for
+    /// Bytes currently reserved by the scratch buffers — diagnostics for
     /// the allocation-free steady-state contract (stable across repeated
     /// same-shape calls once warmed up).
     pub fn capacity_bytes(&self) -> usize {
-        self.a_nib.capacity()
+        self.a_nib.capacity() + self.partials.capacity() * std::mem::size_of::<f32>()
     }
 
     /// Stage typed INT4 codes as wire nibbles (backward-path A operand).
     fn stage_codes(&mut self, int4: &[Int4Code]) -> &[u8] {
+        self.stage_codes_and_partials(int4).0
+    }
+
+    /// [`Self::stage_codes`] plus the sharded partial-sum pool as a
+    /// disjoint borrow (the sharded wrappers need both from one
+    /// `&mut self`, which a chained call could not hand out).
+    fn stage_codes_and_partials(&mut self, int4: &[Int4Code]) -> (&[u8], &mut Vec<f32>) {
         self.a_nib.clear();
         self.a_nib.extend(int4.iter().map(Int4Code::nibble));
-        &self.a_nib
+        (&self.a_nib, &mut self.partials)
     }
 
     /// Stage a packed byte-aligned row matrix (`rows` rows of `k` codes,
@@ -224,6 +251,17 @@ impl QgemmScratch {
     /// the forward-path A operand arriving straight from
     /// `UniformQuantizer::encode_packed_matrix_scratch`.
     fn stage_packed_rows(&mut self, packed: &[u8], rows: usize, k: usize) -> &[u8] {
+        self.stage_packed_rows_and_partials(packed, rows, k).0
+    }
+
+    /// [`Self::stage_packed_rows`] with the partial-sum pool split out,
+    /// mirroring [`Self::stage_codes_and_partials`].
+    fn stage_packed_rows_and_partials(
+        &mut self,
+        packed: &[u8],
+        rows: usize,
+        k: usize,
+    ) -> (&[u8], &mut Vec<f32>) {
         let kb = k.div_ceil(2);
         self.a_nib.clear();
         self.a_nib.reserve(rows * k);
@@ -233,7 +271,7 @@ impl QgemmScratch {
                 self.a_nib.push(row_nibble(row, x));
             }
         }
-        &self.a_nib
+        (&self.a_nib, &mut self.partials)
     }
 }
 
@@ -267,6 +305,11 @@ pub fn dot_packed_lut(int4: &[Int4Code], packed_fp4: &[u8], k: usize) -> f32 {
 
 /// The cache-tiled inner kernel over a band of `rows` A-rows (given as
 /// pre-extracted nibbles). `out` is the matching `rows × n` band.
+/// `a_stride`/`b_stride` are the operands' row strides (nibbles / bytes);
+/// for a whole contiguous matrix they are `k` / `k.div_ceil(2)`, while
+/// the sharded driver passes the *full-matrix* strides with a block's
+/// `k`, so a K-block runs in place without copying either operand.
+#[allow(clippy::too_many_arguments)]
 fn gemm_tiles(
     a_nib: &[u8],
     packed_b: &[u8],
@@ -275,6 +318,8 @@ fn gemm_tiles(
     n: usize,
     out: &mut [f32],
     lut: &ProductLut,
+    a_stride: usize,
+    b_stride: usize,
 ) {
     let kb = k.div_ceil(2);
     for i0 in (0..rows).step_by(TILE_M) {
@@ -284,10 +329,10 @@ fn gemm_tiles(
             // j inner: the nj B rows of this tile stay hot across the mi
             // A rows; the A row is a single contiguous nibble stream.
             for i in i0..i0 + mi {
-                let arow = &a_nib[i * k..i * k + k];
+                let arow = &a_nib[i * a_stride..i * a_stride + k];
                 let orow = &mut out[i * n..i * n + n];
                 for j in j0..j0 + nj {
-                    let brow = &packed_b[j * kb..j * kb + kb];
+                    let brow = &packed_b[j * b_stride..j * b_stride + kb];
                     orow[j] = dot_lut(lut, k, brow, |x| arow[x]);
                 }
             }
@@ -316,33 +361,62 @@ pub fn qgemm_lut_mt(
     out: &mut [f32],
     n_threads: usize,
 ) {
+    qgemm_lut_mt_strided(lut, a_nib, packed_b, m, k, n, out, n_threads, k, k.div_ceil(2));
+}
+
+/// [`qgemm_lut_mt`] over strided operand views: `a_stride` (nibbles) and
+/// `b_stride` (bytes) are the full-matrix row strides, so the sharded
+/// driver can run one K-block of a larger GEMM in place (zero copies).
+/// Dense strides (`k` / `k.div_ceil(2)`) reproduce the public entry
+/// exactly — it is a thin delegation to this function.
+#[allow(clippy::too_many_arguments)]
+fn qgemm_lut_mt_strided(
+    lut: &ProductLut,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    a_stride: usize,
+    b_stride: usize,
+) {
     if m == 0 || n == 0 {
         return; // nothing to compute or write
     }
-    assert!(a_nib.len() >= m * k, "a operand too short: {} < {}", a_nib.len(), m * k);
+    let kb = k.div_ceil(2);
+    assert!(a_stride >= k && b_stride >= kb, "row stride shorter than the row");
+    assert!(
+        a_nib.len() >= (m - 1) * a_stride + k,
+        "a operand too short: {} < {}",
+        a_nib.len(),
+        (m - 1) * a_stride + k
+    );
     assert!(out.len() >= m * n, "output too short: {} < {}", out.len(), m * n);
     if k == 0 {
         out[..m * n].fill(0.0);
         return;
     }
-    let kb = k.div_ceil(2);
     assert!(
-        packed_b.len() >= n * kb,
+        packed_b.len() >= (n - 1) * b_stride + kb,
         "packed b operand too short: {} < {}",
         packed_b.len(),
-        n * kb
+        (n - 1) * b_stride + kb
     );
     let t = n_threads.max(1).min(m);
     if t == 1 {
-        gemm_tiles(a_nib, packed_b, m, k, n, &mut out[..m * n], lut);
+        gemm_tiles(a_nib, packed_b, m, k, n, &mut out[..m * n], lut, a_stride, b_stride);
         return;
     }
     let rows_per = m.div_ceil(t);
     std::thread::scope(|s| {
         for (b, out_band) in out[..m * n].chunks_mut(rows_per * n).enumerate() {
             let rows = out_band.len() / n;
-            let nib_band = &a_nib[b * rows_per * k..(b * rows_per + rows) * k];
-            s.spawn(move || gemm_tiles(nib_band, packed_b, rows, k, n, out_band, lut));
+            let nib_band = &a_nib[b * rows_per * a_stride..];
+            s.spawn(move || {
+                gemm_tiles(nib_band, packed_b, rows, k, n, out_band, lut, a_stride, b_stride)
+            });
         }
     });
 }
@@ -408,37 +482,18 @@ impl KernelPath {
         }
     }
 
-    /// The dispatch decision: the [`KERNEL_PATH_ENV`] override when set
-    /// (an unavailable or unrecognized value warns once on stderr and
-    /// falls back), else the fastest available path. Cached per process —
-    /// one env read ever, so warmed GEMM calls stay allocation-free.
+    /// The dispatch decision: the [`KERNEL_PATH_ENV`] override when set,
+    /// else the fastest available path. An *explicitly requested* path
+    /// the host cannot run — and an unrecognized value — fails loudly
+    /// (see [`resolve_kernel_path`]): a silent fallback would quietly
+    /// invalidate any measurement or repro the override was set for.
+    /// `auto`/unset stays silent. Cached per process — one env read
+    /// ever, so warmed GEMM calls stay allocation-free.
     pub fn detect() -> KernelPath {
         static CHOICE: OnceLock<KernelPath> = OnceLock::new();
         *CHOICE.get_or_init(|| {
-            let fastest =
-                if avx2_available() { KernelPath::Avx2 } else { KernelPath::Portable };
-            match std::env::var(KERNEL_PATH_ENV) {
-                Err(_) => fastest,
-                Ok(raw) => match parse_kernel_path(&raw) {
-                    Some(None) => fastest, // explicit "auto"
-                    Some(Some(path)) if path.is_available() => path,
-                    Some(Some(path)) => {
-                        eprintln!(
-                            "qgemm: {KERNEL_PATH_ENV}={} unavailable on this host; \
-                             using portable",
-                            path.label()
-                        );
-                        KernelPath::Portable
-                    }
-                    None => {
-                        eprintln!(
-                            "qgemm: unrecognized {KERNEL_PATH_ENV}={raw:?} \
-                             (known: auto scalar portable avx2); using auto"
-                        );
-                        fastest
-                    }
-                },
-            }
+            let raw = std::env::var(KERNEL_PATH_ENV).ok();
+            resolve_kernel_path(raw.as_deref(), avx2_available())
         })
     }
 
@@ -446,16 +501,88 @@ impl KernelPath {
     /// the integer sum is provably bit-identical to the sequential-f32
     /// oracle (`k ≤ nlut.max_k_exact()`), `Scalar` beyond that bound —
     /// including for explicit `*_path` calls, so the bit-exactness
-    /// contract never depends on the caller's choice. An unavailable
-    /// request (`Avx2` on a non-AVX2 host) degrades to `Portable`.
+    /// contract never depends on the caller's choice. When the clamp
+    /// overrides a path the user explicitly requested through
+    /// [`KERNEL_PATH_ENV`], one loud stderr line says so (once per
+    /// process). An unavailable request (`Avx2` on a non-AVX2 host —
+    /// reachable only through direct `*_path` calls, since [`detect`]
+    /// rejects it) degrades to `Portable`.
     pub fn for_gemm(self, k: usize, nlut: &NibbleLut) -> KernelPath {
         if k > nlut.max_k_exact() {
+            if self != KernelPath::Scalar {
+                note_explicit_clamp(self, k, nlut.max_k_exact());
+            }
             KernelPath::Scalar
         } else if self == KernelPath::Avx2 && !avx2_available() {
             KernelPath::Portable
         } else {
             self
         }
+    }
+}
+
+/// The pure dispatch resolver behind [`KernelPath::detect`], split out so
+/// the failure modes are testable without env games: `raw` is the
+/// [`KERNEL_PATH_ENV`] value (or `None` when unset) and `avx2` the host
+/// capability. Unset/`auto` silently picks the fastest available path;
+/// an explicit path is honored only if the host can run it — a request
+/// the host *cannot* honor, or a value that parses to nothing, is a
+/// misconfiguration and panics instead of silently degrading.
+fn resolve_kernel_path(raw: Option<&str>, avx2: bool) -> KernelPath {
+    let fastest = if avx2 { KernelPath::Avx2 } else { KernelPath::Portable };
+    let Some(raw) = raw else { return fastest };
+    match parse_kernel_path(raw) {
+        Some(None) => fastest, // explicit "auto"
+        Some(Some(KernelPath::Avx2)) if !avx2 => {
+            // tidy-allow: panic-policy (explicit env misconfiguration must fail loudly)
+            panic!(
+                "qgemm: {KERNEL_PATH_ENV}=avx2 requested but AVX2 is unavailable on \
+                 this host; unset it or use auto/portable/scalar"
+            )
+        }
+        Some(Some(path)) => path,
+        None => {
+            // tidy-allow: panic-policy (explicit env misconfiguration must fail loudly)
+            panic!(
+                "qgemm: unrecognized {KERNEL_PATH_ENV}={raw:?} \
+                 (known: auto scalar portable avx2)"
+            )
+        }
+    }
+}
+
+/// The [`KERNEL_PATH_ENV`] value when it names an explicit path (`None`
+/// for unset/`auto`/unparseable) — the clamp notice only fires for a
+/// path the user explicitly asked for. Cached like [`KernelPath::detect`].
+fn explicit_env_path() -> Option<KernelPath> {
+    static EXPLICIT: OnceLock<Option<KernelPath>> = OnceLock::new();
+    *EXPLICIT.get_or_init(|| match std::env::var(KERNEL_PATH_ENV) {
+        Ok(raw) => parse_kernel_path(&raw).flatten(),
+        Err(_) => None,
+    })
+}
+
+/// Whether clamping `requested` to `Scalar` must be announced: only when
+/// it is the path the user explicitly configured (`explicit`). Pure —
+/// the decision [`note_explicit_clamp`] applies, tested directly.
+fn clamp_needs_notice(requested: KernelPath, explicit: Option<KernelPath>) -> bool {
+    explicit == Some(requested)
+}
+
+/// One loud stderr line, once per process, when the exactness clamp
+/// overrides the env-requested path — otherwise an explicit `avx2`/
+/// `portable` run silently measures the scalar gather kernel.
+fn note_explicit_clamp(requested: KernelPath, k: usize, bound: usize) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if clamp_needs_notice(requested, explicit_env_path())
+        && !WARNED.swap(true, Ordering::Relaxed)
+    {
+        eprintln!(
+            "qgemm: {KERNEL_PATH_ENV}={} clamped to scalar at k={k} \
+             (> max_k_exact {bound}); the gather path preserves bit-exactness",
+            requested.label()
+        );
     }
 }
 
@@ -592,7 +719,9 @@ fn dot_nib_i32_from(nlut: &NibbleLut, k: usize, brow: &[u8], arow: &[u8], start:
 
 /// The cache-tiled integer band kernel — the `Portable` path body, and
 /// the loop structure the AVX2 band mirrors. Same tiling as
-/// [`gemm_tiles`], with [`dot_nib_i32_from`] as the dot.
+/// [`gemm_tiles`], with [`dot_nib_i32_from`] as the dot, and the same
+/// `a_stride`/`b_stride` row-stride contract.
+#[allow(clippy::too_many_arguments)]
 fn gemm_tiles_portable(
     nlut: &NibbleLut,
     a_nib: &[u8],
@@ -601,6 +730,8 @@ fn gemm_tiles_portable(
     k: usize,
     n: usize,
     out: &mut [f32],
+    a_stride: usize,
+    b_stride: usize,
 ) {
     let kb = k.div_ceil(2);
     for i0 in (0..rows).step_by(TILE_M) {
@@ -608,10 +739,10 @@ fn gemm_tiles_portable(
         for j0 in (0..n).step_by(TILE_N) {
             let nj = (n - j0).min(TILE_N);
             for i in i0..i0 + mi {
-                let arow = &a_nib[i * k..i * k + k];
+                let arow = &a_nib[i * a_stride..i * a_stride + k];
                 let orow = &mut out[i * n..i * n + n];
                 for j in j0..j0 + nj {
-                    let brow = &packed_b[j * kb..j * kb + kb];
+                    let brow = &packed_b[j * b_stride..j * b_stride + kb];
                     orow[j] = dot_nib_i32_from(nlut, k, brow, arow, 0) as f32;
                 }
             }
@@ -723,7 +854,9 @@ mod avx2 {
     }
 
     /// The AVX2 cache-tiled band kernel — same tiling as the portable
-    /// band, with the shuffle dot inside and tables built once per band.
+    /// band, with the shuffle dot inside and tables built once per band,
+    /// and the same `a_stride`/`b_stride` row-stride contract.
+    #[allow(clippy::too_many_arguments)]
     // SAFETY: caller guarantees AVX2 (that is all `target_feature` asks).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gemm_tiles(
@@ -734,6 +867,8 @@ mod avx2 {
         k: usize,
         n: usize,
         out: &mut [f32],
+        a_stride: usize,
+        b_stride: usize,
     ) {
         // SAFETY: AVX2 is guaranteed by this fn's own calling contract.
         let t = unsafe { load_tables(nlut) };
@@ -743,10 +878,10 @@ mod avx2 {
             for j0 in (0..n).step_by(TILE_N) {
                 let nj = (n - j0).min(TILE_N);
                 for i in i0..i0 + mi {
-                    let arow = &a_nib[i * k..i * k + k];
+                    let arow = &a_nib[i * a_stride..i * a_stride + k];
                     let orow = &mut out[i * n..i * n + n];
                     for j in j0..j0 + nj {
-                        let brow = &packed_b[j * kb..j * kb + kb];
+                        let brow = &packed_b[j * b_stride..j * b_stride + kb];
                         // SAFETY: AVX2 guaranteed by this fn's contract.
                         orow[j] = unsafe { dot(&t, nlut, k, brow, arow) };
                     }
@@ -768,14 +903,18 @@ fn gemm_tiles_nibble(
     k: usize,
     n: usize,
     out: &mut [f32],
+    a_stride: usize,
+    b_stride: usize,
 ) {
     #[cfg(target_arch = "x86_64")]
     if path == KernelPath::Avx2 && avx2_available() {
         // SAFETY: AVX2 availability was verified on this line.
-        unsafe { avx2::gemm_tiles(nlut, a_nib, packed_b, rows, k, n, out) };
+        unsafe {
+            avx2::gemm_tiles(nlut, a_nib, packed_b, rows, k, n, out, a_stride, b_stride)
+        };
         return;
     }
-    gemm_tiles_portable(nlut, a_nib, packed_b, rows, k, n, out);
+    gemm_tiles_portable(nlut, a_nib, packed_b, rows, k, n, out, a_stride, b_stride);
 }
 
 /// The integer-engine twin of [`qgemm_lut_mt`]: tiled packed GEMM over
@@ -799,6 +938,284 @@ pub fn qgemm_nibble_lut_mt(
     out: &mut [f32],
     n_threads: usize,
 ) {
+    qgemm_nibble_lut_mt_strided(
+        nlut,
+        path,
+        a_nib,
+        packed_b,
+        m,
+        k,
+        n,
+        out,
+        n_threads,
+        k,
+        k.div_ceil(2),
+    );
+}
+
+/// [`qgemm_nibble_lut_mt`] over strided operand views — the integer twin
+/// of [`qgemm_lut_mt_strided`], with the same row-stride contract.
+#[allow(clippy::too_many_arguments)]
+fn qgemm_nibble_lut_mt_strided(
+    nlut: &NibbleLut,
+    path: KernelPath,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    a_stride: usize,
+    b_stride: usize,
+) {
+    if m == 0 || n == 0 {
+        return; // nothing to compute or write
+    }
+    let kb = k.div_ceil(2);
+    assert!(a_stride >= k && b_stride >= kb, "row stride shorter than the row");
+    assert!(
+        a_nib.len() >= (m - 1) * a_stride + k,
+        "a operand too short: {} < {}",
+        a_nib.len(),
+        (m - 1) * a_stride + k
+    );
+    assert!(out.len() >= m * n, "output too short: {} < {}", out.len(), m * n);
+    if k == 0 {
+        out[..m * n].fill(0.0);
+        return;
+    }
+    assert!(
+        packed_b.len() >= (n - 1) * b_stride + kb,
+        "packed b operand too short: {} < {}",
+        packed_b.len(),
+        (n - 1) * b_stride + kb
+    );
+    let t = n_threads.max(1).min(m);
+    if t == 1 {
+        gemm_tiles_nibble(
+            path,
+            nlut,
+            a_nib,
+            packed_b,
+            m,
+            k,
+            n,
+            &mut out[..m * n],
+            a_stride,
+            b_stride,
+        );
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (b, out_band) in out[..m * n].chunks_mut(rows_per * n).enumerate() {
+            let rows = out_band.len() / n;
+            let nib_band = &a_nib[b * rows_per * a_stride..];
+            s.spawn(move || {
+                gemm_tiles_nibble(
+                    path, nlut, nib_band, packed_b, rows, k, n, out_band, a_stride, b_stride,
+                )
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// K-sharded execution: blocked reduction through a fixed-shape pairwise
+// tree (ROADMAP Open item 2). See the module docs for the determinism
+// contract this layer trades and keeps.
+// ---------------------------------------------------------------------------
+
+/// Env var read by [`ShardConfig::from_env`]: the K-shard count (`1` =
+/// the unsharded default). CI's shard matrix leg sets `4` so the sharded
+/// reduction path runs on every push.
+pub const SHARDS_ENV: &str = "QGEMM_SHARDS";
+
+/// How a GEMM's reduction (K) dimension is split across shards.
+///
+/// K-sharding trades the engine's strongest determinism tier for
+/// parallelism and SIMD re-admission on long-K shapes: partial sums are
+/// produced per contiguous K-block and combined by a fixed-shape
+/// pairwise reduction tree, so the result is **deterministic for a given
+/// `ShardConfig`** — still invariant to thread count and work placement,
+/// but shard counts > 1 group the f32 additions differently from the
+/// sequential-`k` oracle. [`ShardConfig::single`], the default
+/// everywhere, delegates to the unsharded drivers verbatim and so keeps
+/// the classic "bit-identical at any thread count" tier.
+///
+/// Shard boundaries are **byte-aligned**: the packed B operand stores
+/// two codes per byte, so whole bytes are distributed across shards and
+/// every block starts on an even element index — a block is then a plain
+/// strided view of both operands, no repacking. Shards past the
+/// operand's byte count are empty and skipped (`n > kb` degrades
+/// gracefully), and each live block's depth re-enters
+/// [`KernelPath::for_gemm`], re-admitting the SIMD nibble kernels beyond
+/// [`NibbleLut::max_k_exact`] whenever the *block* stays under the 2²⁴
+/// bound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    n_shards: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig::single()
+    }
+}
+
+impl ShardConfig {
+    /// The unsharded default: sharded entry points delegate straight to
+    /// the classic drivers, bit-identical to every existing oracle.
+    pub fn single() -> ShardConfig {
+        ShardConfig { n_shards: 1 }
+    }
+
+    /// Split K into `n` contiguous byte-aligned blocks (`n` is clamped
+    /// to at least 1; shard counts beyond the packed byte count leave
+    /// the excess shards empty, so any `n` is valid for any `k`).
+    pub fn with_shards(n: usize) -> ShardConfig {
+        ShardConfig { n_shards: n.max(1) }
+    }
+
+    /// The [`SHARDS_ENV`] override: unset or empty means
+    /// [`ShardConfig::single`]; anything else must parse as a positive
+    /// integer — a value that does not is a misconfiguration and fails
+    /// loudly instead of silently running unsharded.
+    pub fn from_env() -> ShardConfig {
+        match std::env::var(SHARDS_ENV) {
+            Err(_) => ShardConfig::single(),
+            Ok(raw) => match parse_shards(&raw) {
+                Some(config) => config,
+                // tidy-allow: panic-policy (explicit env misconfiguration must fail loudly)
+                None => panic!(
+                    "qgemm: unrecognized {SHARDS_ENV}={raw:?} (expected a positive integer)"
+                ),
+            },
+        }
+    }
+
+    pub fn n_shards(self) -> usize {
+        self.n_shards
+    }
+
+    /// Whether this is the unsharded (classic-contract) configuration.
+    pub fn is_single(self) -> bool {
+        self.n_shards == 1
+    }
+
+    /// Element bounds `[k0, k1)` of shard `s` at depth `k`. Whole packed
+    /// bytes are distributed, so `k0` is always even and the half-filled
+    /// trailing byte of an odd `k` stays inside the last live shard.
+    /// Empty (`k0 == k1`) past the live shard count.
+    pub fn shard_span(self, k: usize, s: usize) -> (usize, usize) {
+        let kb = k.div_ceil(2);
+        if kb == 0 {
+            return (0, 0);
+        }
+        let bytes_per = kb.div_ceil(self.n_shards);
+        ((s * bytes_per * 2).min(k), ((s + 1) * bytes_per * 2).min(k))
+    }
+
+    /// Number of nonempty shards at depth `k` — the reduction tree's
+    /// leaf count. The tree shape is a pure function of `(k, config)`,
+    /// never of thread count or timing.
+    pub fn n_live(self, k: usize) -> usize {
+        let kb = k.div_ceil(2);
+        if kb == 0 {
+            0
+        } else {
+            kb.div_ceil(kb.div_ceil(self.n_shards))
+        }
+    }
+}
+
+/// [`SHARDS_ENV`] parser, split out for testability: `Some(config)` for
+/// empty (→ single) or a positive integer, `None` for anything else
+/// (including `0` — sharding into zero blocks is meaningless, not a
+/// degenerate case to absorb).
+fn parse_shards(raw: &str) -> Option<ShardConfig> {
+    match raw.trim() {
+        "" => Some(ShardConfig::single()),
+        t => match t.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(ShardConfig::with_shards(n)),
+            _ => None,
+        },
+    }
+}
+
+/// Fixed-shape pairwise reduction over `n_bufs` stacked `len`-element
+/// partial buffers (the result lands in the first `len` elements). Each
+/// level sums buffer `2i+1` into buffer `2i`, compacts the sums left,
+/// and carries an odd tail up unchanged. The tree's shape — and
+/// therefore the f32 rounding — depends only on `n_bufs`; pairwise
+/// grouping also bounds error growth at O(log n_bufs) across shards.
+fn reduce_pairwise(bufs: &mut [f32], n_bufs: usize, len: usize) {
+    debug_assert!(bufs.len() >= n_bufs * len, "partial pool shorter than its buffers");
+    let mut cnt = n_bufs;
+    while cnt > 1 {
+        let pairs = cnt / 2;
+        for i in 0..pairs {
+            let (head, tail) = bufs.split_at_mut((2 * i + 1) * len);
+            let dst = &mut head[2 * i * len..];
+            for (d, s) in dst[..len].iter_mut().zip(&tail[..len]) {
+                *d += *s;
+            }
+        }
+        // Compact the pair sums (even slots) left; slot 0 is in place.
+        for i in 1..pairs {
+            bufs.copy_within(2 * i * len..(2 * i + 1) * len, i * len);
+        }
+        if cnt % 2 == 1 {
+            bufs.copy_within((cnt - 1) * len..cnt * len, pairs * len);
+        }
+        cnt = pairs + cnt % 2;
+    }
+}
+
+/// **The K-sharded engine driver**: split the reduction dimension into
+/// [`ShardConfig`] byte-aligned blocks, run every live block through the
+/// classic engine — gather or nibble path, per [`KernelPath::for_gemm`]
+/// applied to the *block* depth — into its own partial buffer, and
+/// combine the partials with [`reduce_pairwise`]. Pass `nlut = None` for
+/// gather-only instantiations (the MF-BPROP backward LUT has no
+/// contracted factorization; see the module docs).
+///
+/// Determinism: **per shard-config** — live blocks run concurrently (one
+/// scoped worker per block, the thread budget split across them, row
+/// bands inside each), but every partial uses the engine's sequential-`k`
+/// accumulation and the tree shape is fixed by `(k, shards)`, so the
+/// result never depends on thread count or timing. The 1-shard config
+/// delegates to [`qgemm_lut_mt`] / [`qgemm_nibble_lut_mt`] verbatim and
+/// is bit-identical to the unsharded engine.
+///
+/// `partials` is caller-pooled scratch (grown to `n_live·m·n` once, so a
+/// persistent buffer makes repeated sharded GEMMs allocation-free; the
+/// 1-shard delegation never touches it).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_sharded_mt(
+    lut: &ProductLut,
+    nlut: Option<&NibbleLut>,
+    path: KernelPath,
+    a_nib: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    shards: ShardConfig,
+    partials: &mut Vec<f32>,
+) {
+    if shards.is_single() {
+        match nlut.map(|nl| (nl, path.for_gemm(k, nl))) {
+            Some((nl, p)) if p != KernelPath::Scalar => {
+                qgemm_nibble_lut_mt(nl, p, a_nib, packed_b, m, k, n, out, n_threads)
+            }
+            _ => qgemm_lut_mt(lut, a_nib, packed_b, m, k, n, out, n_threads),
+        }
+        return;
+    }
     if m == 0 || n == 0 {
         return; // nothing to compute or write
     }
@@ -815,21 +1232,204 @@ pub fn qgemm_nibble_lut_mt(
         packed_b.len(),
         n * kb
     );
-    let t = n_threads.max(1).min(m);
-    if t == 1 {
-        gemm_tiles_nibble(path, nlut, a_nib, packed_b, m, k, n, &mut out[..m * n]);
-        return;
+    let n_live = shards.n_live(k);
+    if partials.len() < n_live * m * n {
+        partials.resize(n_live * m * n, 0.0);
     }
-    let rows_per = m.div_ceil(t);
-    std::thread::scope(|s| {
-        for (b, out_band) in out[..m * n].chunks_mut(rows_per * n).enumerate() {
-            let rows = out_band.len() / n;
-            let nib_band = &a_nib[b * rows_per * k..(b * rows_per + rows) * k];
-            s.spawn(move || {
-                gemm_tiles_nibble(path, nlut, nib_band, packed_b, rows, k, n, out_band)
+    let t_total = n_threads.max(1);
+    let (t_base, t_extra) = (t_total / n_live, t_total % n_live);
+    std::thread::scope(|scope| {
+        let mut pool: &mut [f32] = &mut partials[..n_live * m * n];
+        for s in 0..n_live {
+            let (k0, k1) = shards.shard_span(k, s);
+            let kd = k1 - k0;
+            let (buf, rest) = pool.split_at_mut(m * n);
+            pool = rest;
+            // Deterministic thread split (first `t_extra` shards get one
+            // extra) — only throughput depends on it, never results.
+            let t = (t_base + usize::from(s < t_extra)).max(1);
+            let a_blk = &a_nib[k0..];
+            let b_blk = &packed_b[k0 / 2..];
+            scope.spawn(move || match nlut.map(|nl| (nl, path.for_gemm(kd, nl))) {
+                Some((nl, p)) if p != KernelPath::Scalar => qgemm_nibble_lut_mt_strided(
+                    nl, p, a_blk, b_blk, m, kd, n, buf, t, k, kb,
+                ),
+                _ => qgemm_lut_mt_strided(lut, a_blk, b_blk, m, kd, n, buf, t, k, kb),
             });
         }
     });
+    reduce_pairwise(&mut partials[..n_live * m * n], n_live, m * n);
+    out[..m * n].copy_from_slice(&partials[..m * n]);
+}
+
+/// K-sharded forward INT4×INT4 GEMM on an explicit path — the sharded
+/// sibling of [`qgemm_int4_mt_with_path`] (identical operand layout and,
+/// with [`ShardConfig::single`], identical bits).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_int4_sharded_mt_with_path(
+    a_packed: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+    path: KernelPath,
+    shards: ShardConfig,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let kb = k.div_ceil(2);
+    assert!(
+        a_packed.len() >= m * kb,
+        "packed a operand too short: {} < {}",
+        a_packed.len(),
+        m * kb
+    );
+    let (a_nib, partials) = scratch.stage_packed_rows_and_partials(a_packed, m, k);
+    qgemm_sharded_mt(
+        int4_product_lut(),
+        Some(int4_nibble_lut()),
+        path,
+        a_nib,
+        packed_b,
+        m,
+        k,
+        n,
+        out,
+        n_threads,
+        shards,
+        partials,
+    );
+}
+
+/// K-sharded forward INT4×INT4 GEMM on the auto-detected path.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_int4_sharded_mt_with(
+    a_packed: &[u8],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+    shards: ShardConfig,
+) {
+    qgemm_int4_sharded_mt_with_path(
+        a_packed,
+        packed_b,
+        m,
+        k,
+        n,
+        out,
+        n_threads,
+        scratch,
+        KernelPath::detect(),
+        shards,
+    );
+}
+
+/// K-sharded radix-4 TPR GEMM on an explicit path — the sharded sibling
+/// of [`qgemm_radix4_mt_with_path`].
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_radix4_sharded_mt_with_path(
+    int4: &[Int4Code],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+    path: KernelPath,
+    shards: ShardConfig,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(int4.len() >= m * k, "int4 operand too short: {} < {}", int4.len(), m * k);
+    let (a_nib, partials) = scratch.stage_codes_and_partials(&int4[..m * k]);
+    qgemm_sharded_mt(
+        radix4_product_lut(),
+        Some(radix4_nibble_lut()),
+        path,
+        a_nib,
+        packed_b,
+        m,
+        k,
+        n,
+        out,
+        n_threads,
+        shards,
+        partials,
+    );
+}
+
+/// K-sharded radix-4 TPR GEMM on the auto-detected path.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_radix4_sharded_mt_with(
+    int4: &[Int4Code],
+    packed_b: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+    shards: ShardConfig,
+) {
+    qgemm_radix4_sharded_mt_with_path(
+        int4,
+        packed_b,
+        m,
+        k,
+        n,
+        out,
+        n_threads,
+        scratch,
+        KernelPath::detect(),
+        shards,
+    );
+}
+
+/// K-sharded backward INT4×FP4 GEMM — the sharded sibling of
+/// [`qgemm_packed_mt_with`]. The MF-BPROP LUT stays gather-only (module
+/// docs), so every block runs the gather engine; sharding still buys
+/// K-parallelism on the long, narrow backward shapes.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_packed_sharded_mt_with(
+    int4: &[Int4Code],
+    packed_fp4: &[u8],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    n_threads: usize,
+    scratch: &mut QgemmScratch,
+    shards: ShardConfig,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(int4.len() >= m * k, "int4 operand too short: {} < {}", int4.len(), m * k);
+    let (a_nib, partials) = scratch.stage_codes_and_partials(&int4[..m * k]);
+    qgemm_sharded_mt(
+        product_lut(),
+        None,
+        KernelPath::Scalar,
+        a_nib,
+        packed_fp4,
+        m,
+        k,
+        n,
+        out,
+        n_threads,
+        shards,
+        partials,
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -1571,6 +2171,306 @@ mod tests {
             assert_eq!(KernelPath::Avx2.for_gemm(64, nlut), KernelPath::Portable);
         }
         assert_eq!(KernelPath::Avx2.label(), "avx2");
+    }
+
+    /// Satellite: the pure resolver behind `detect()`. Auto/unset silently
+    /// picks the fastest path for the host; explicit available paths are
+    /// honored as-is.
+    #[test]
+    fn resolver_honors_auto_and_explicit_paths() {
+        assert_eq!(resolve_kernel_path(None, true), KernelPath::Avx2);
+        assert_eq!(resolve_kernel_path(None, false), KernelPath::Portable);
+        assert_eq!(resolve_kernel_path(Some("auto"), true), KernelPath::Avx2);
+        assert_eq!(resolve_kernel_path(Some(""), false), KernelPath::Portable);
+        assert_eq!(resolve_kernel_path(Some("scalar"), true), KernelPath::Scalar);
+        assert_eq!(resolve_kernel_path(Some("portable"), true), KernelPath::Portable);
+        assert_eq!(resolve_kernel_path(Some("avx2"), true), KernelPath::Avx2);
+    }
+
+    /// Satellite: an explicitly requested path the host cannot run is a
+    /// misconfiguration — it must fail loudly, not degrade silently.
+    #[test]
+    #[should_panic(expected = "unavailable")]
+    fn explicit_unavailable_kernel_path_fails_loudly() {
+        resolve_kernel_path(Some("avx2"), false);
+    }
+
+    /// Satellite: so is a value that parses to nothing.
+    #[test]
+    #[should_panic(expected = "unrecognized")]
+    fn unrecognized_kernel_path_fails_loudly() {
+        resolve_kernel_path(Some("sse9"), true);
+    }
+
+    /// Satellite: the exactness clamp announces itself only when it
+    /// overrides the path the user explicitly configured via env — auto
+    /// runs and mismatched paths stay silent.
+    #[test]
+    fn clamp_notice_fires_only_for_the_explicit_path() {
+        assert!(clamp_needs_notice(KernelPath::Avx2, Some(KernelPath::Avx2)));
+        assert!(clamp_needs_notice(KernelPath::Portable, Some(KernelPath::Portable)));
+        assert!(!clamp_needs_notice(KernelPath::Avx2, None));
+        assert!(!clamp_needs_notice(KernelPath::Avx2, Some(KernelPath::Portable)));
+        assert!(!clamp_needs_notice(KernelPath::Scalar, None));
+    }
+
+    /// ShardConfig plumbing: env parsing, and spans that partition
+    /// `[0, k)` into byte-aligned contiguous blocks for every shard count
+    /// — including the degenerate `n_shards` ∈ {k, > k} and `k` = 0/1/odd
+    /// corners.
+    #[test]
+    fn shard_spans_partition_k_byte_aligned() {
+        assert_eq!(parse_shards(""), Some(ShardConfig::single()));
+        assert_eq!(parse_shards(" 4 "), Some(ShardConfig::with_shards(4)));
+        assert_eq!(parse_shards("1"), Some(ShardConfig::single()));
+        assert_eq!(parse_shards("0"), None);
+        assert_eq!(parse_shards("four"), None);
+        assert_eq!(ShardConfig::with_shards(0), ShardConfig::single());
+        assert_eq!(ShardConfig::default(), ShardConfig::single());
+        assert!(ShardConfig::single().is_single());
+        assert!(!ShardConfig::with_shards(2).is_single());
+
+        for k in [0usize, 1, 2, 3, 7, 31, 32, 33, 64, 97, 585, 592, 2048] {
+            for n_shards in [1usize, 2, 3, 4, 5, 16, k.max(1), k + 3] {
+                let cfg = ShardConfig::with_shards(n_shards);
+                let n_live = cfg.n_live(k);
+                assert!(n_live <= n_shards.max(1), "k={k} n={n_shards}");
+                assert_eq!(n_live == 0, k == 0, "k={k} n={n_shards}");
+                let mut covered = 0usize;
+                for s in 0..n_live {
+                    let (k0, k1) = cfg.shard_span(k, s);
+                    assert_eq!(k0, covered, "k={k} n={n_shards} s={s}: contiguous");
+                    assert_eq!(k0 % 2, 0, "k={k} n={n_shards} s={s}: byte-aligned");
+                    assert!(k1 > k0, "k={k} n={n_shards} s={s}: live shard nonempty");
+                    covered = k1;
+                }
+                assert_eq!(covered, k, "k={k} n={n_shards}: spans cover [0, k)");
+                // Everything past the live count is empty.
+                let (k0, k1) = cfg.shard_span(k, n_live);
+                assert_eq!(k0, k1, "k={k} n={n_shards}: shard {n_live} empty");
+            }
+        }
+        // 1-shard spans are the whole reduction.
+        assert_eq!(ShardConfig::single().shard_span(33, 0), (0, 33));
+        assert_eq!(ShardConfig::single().n_live(33), 1);
+    }
+
+    /// The independent sharded reference: per-block partials from
+    /// *contiguous copies* of each block's operands through the 1-thread
+    /// gather engine, combined by a freshly written recursive pairwise
+    /// tree (not `reduce_pairwise` — that would test the tree against
+    /// itself).
+    fn tree_reference(
+        lut: &ProductLut,
+        a_nib: &[u8],
+        packed_b: &[u8],
+        m: usize,
+        k: usize,
+        n: usize,
+        shards: ShardConfig,
+    ) -> Vec<f32> {
+        let kb = k.div_ceil(2);
+        let mut parts: Vec<Vec<f32>> = (0..shards.n_live(k))
+            .map(|s| {
+                let (k0, k1) = shards.shard_span(k, s);
+                let (kd, kdb) = (k1 - k0, (k1 - k0).div_ceil(2));
+                let mut a_blk = Vec::new();
+                for i in 0..m {
+                    a_blk.extend_from_slice(&a_nib[i * k + k0..i * k + k1]);
+                }
+                let mut b_blk = Vec::new();
+                for j in 0..n {
+                    b_blk.extend_from_slice(&packed_b[j * kb + k0 / 2..j * kb + k0 / 2 + kdb]);
+                }
+                let mut out = vec![0.0f32; m * n];
+                qgemm_lut_mt(lut, &a_blk, &b_blk, m, kd, n, &mut out, 1);
+                out
+            })
+            .collect();
+        if parts.is_empty() {
+            return vec![0.0f32; m * n];
+        }
+        while parts.len() > 1 {
+            let mut next = Vec::new();
+            for pair in parts.chunks(2) {
+                match pair {
+                    [a, b] => next
+                        .push(a.iter().zip(b.iter()).map(|(x, y)| x + y).collect::<Vec<f32>>()),
+                    [a] => next.push(a.to_vec()),
+                    _ => unreachable!(),
+                }
+            }
+            parts = next;
+        }
+        parts.pop().unwrap_or_default()
+    }
+
+    /// Tentpole: the sharded driver equals the fixed pairwise tree over
+    /// per-block engine results for every shard config (degenerate counts
+    /// included), every path, and every thread count — and the 1-shard
+    /// config is bit-identical to the unsharded engine. Shapes cover
+    /// `k` = 0/1/odd and boundaries off the 32-element SIMD strip width.
+    #[test]
+    fn sharded_engine_matches_pairwise_tree_reference() {
+        let mut rng = Xoshiro256::seed(0x5A4D);
+        let lut = int4_product_lut();
+        let nlut = int4_nibble_lut();
+        for (m, k, n) in
+            [(3usize, 17usize, 5usize), (5, 64, 7), (1, 1, 1), (2, 0, 3), (4, 33, 17), (2, 96, 3)]
+        {
+            let a_nib: Vec<u8> =
+                (0..m * k).map(|_| (rng.next_u64() & 0xF) as u8).collect();
+            let packed_b = random_packed(&mut rng, n, k);
+            let mut unsharded = vec![0.0f32; m * n];
+            qgemm_lut_mt(lut, &a_nib, &packed_b, m, k, n, &mut unsharded, 1);
+            for n_shards in [1usize, 2, 3, 4, 7, k.max(1), k + 3] {
+                let cfg = ShardConfig::with_shards(n_shards);
+                let want = tree_reference(lut, &a_nib, &packed_b, m, k, n, cfg);
+                for &path in KernelPath::available() {
+                    for threads in [1usize, 3, 8] {
+                        let mut got = vec![0.0f32; m * n];
+                        let mut partials = Vec::new();
+                        qgemm_sharded_mt(
+                            lut,
+                            Some(nlut),
+                            path,
+                            &a_nib,
+                            &packed_b,
+                            m,
+                            k,
+                            n,
+                            &mut got,
+                            threads,
+                            cfg,
+                            &mut partials,
+                        );
+                        let what = format!(
+                            "m={m} k={k} n={n} shards={n_shards} {} t={threads}",
+                            path.label()
+                        );
+                        assert_bits_eq(&got, &want, &what);
+                        if cfg.is_single() {
+                            assert_bits_eq(&got, &unsharded, &format!("{what} ≡ unsharded"));
+                            assert!(partials.is_empty(), "{what}: 1-shard pools nothing");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tentpole: beyond `max_k_exact` the unsharded dispatch clamps to the
+    /// scalar gather kernel, but sharding re-admits the SIMD paths — each
+    /// block re-enters `for_gemm` at the *block* depth — and the result
+    /// still equals the gather-built tree reference bit-for-bit (each
+    /// block is inside its exactness bound).
+    #[test]
+    fn sharding_readmits_simd_beyond_exactness_bound() {
+        let nlut = radix4_nibble_lut();
+        let k = 2048usize; // ≫ 585; 4 shards → 512-element blocks ≤ 585
+        assert_eq!(KernelPath::Portable.for_gemm(k, nlut), KernelPath::Scalar);
+        let cfg = ShardConfig::with_shards(4);
+        let (k0, k1) = cfg.shard_span(k, 0);
+        assert!(k1 - k0 <= nlut.max_k_exact(), "block depth back under the bound");
+        assert_eq!(
+            KernelPath::Portable.for_gemm(k1 - k0, nlut),
+            KernelPath::Portable,
+            "the block depth re-admits the SIMD path"
+        );
+
+        let (m, n) = (4usize, 5usize);
+        let mut rng = Xoshiro256::seed(0x51D5);
+        let a_nib: Vec<u8> = (0..m * k).map(|_| (rng.next_u64() & 0xF) as u8).collect();
+        let packed_b = random_packed(&mut rng, n, k);
+        let lut = radix4_product_lut();
+        let want = tree_reference(lut, &a_nib, &packed_b, m, k, n, cfg);
+        for &path in KernelPath::available() {
+            let mut got = vec![0.0f32; m * n];
+            let mut partials = Vec::new();
+            qgemm_sharded_mt(
+                lut,
+                Some(nlut),
+                path,
+                &a_nib,
+                &packed_b,
+                m,
+                k,
+                n,
+                &mut got,
+                3,
+                cfg,
+                &mut partials,
+            );
+            assert_bits_eq(&got, &want, &format!("long-K sharded {}", path.label()));
+        }
+    }
+
+    /// The sharded format wrappers: 1-shard configs reproduce their
+    /// unsharded siblings bit-for-bit (all three instantiations), and the
+    /// partial pool reaches a steady capacity (allocation-free repeats).
+    #[test]
+    fn sharded_wrappers_delegate_and_pool_scratch() {
+        let (m, k, n) = (6usize, 33usize, 9usize);
+        let mut rng = Xoshiro256::seed(0x60D5);
+        let codes = random_codes(&mut rng, m * k);
+        let a_packed = random_packed(&mut rng, m, k);
+        let packed_b = random_packed(&mut rng, n, k);
+        let mut scratch = QgemmScratch::new();
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+
+        qgemm_int4_mt_with(&a_packed, &packed_b, m, k, n, &mut want, 2, &mut scratch);
+        qgemm_int4_sharded_mt_with(
+            &a_packed,
+            &packed_b,
+            m,
+            k,
+            n,
+            &mut got,
+            2,
+            &mut scratch,
+            ShardConfig::single(),
+        );
+        assert_bits_eq(&got, &want, "int4 sharded(1) ≡ unsharded");
+
+        qgemm_radix4_mt_with(&codes, &packed_b, m, k, n, &mut want, 2, &mut scratch);
+        qgemm_radix4_sharded_mt_with(
+            &codes,
+            &packed_b,
+            m,
+            k,
+            n,
+            &mut got,
+            2,
+            &mut scratch,
+            ShardConfig::single(),
+        );
+        assert_bits_eq(&got, &want, "radix4 sharded(1) ≡ unsharded");
+
+        qgemm_packed_mt_with(&codes, &packed_b, m, k, n, &mut want, 2, &mut scratch);
+        qgemm_packed_sharded_mt_with(
+            &codes,
+            &packed_b,
+            m,
+            k,
+            n,
+            &mut got,
+            2,
+            &mut scratch,
+            ShardConfig::single(),
+        );
+        assert_bits_eq(&got, &want, "backward sharded(1) ≡ unsharded");
+
+        // Multi-shard: warm once, then repeats must not regrow scratch.
+        let cfg = ShardConfig::with_shards(3);
+        qgemm_packed_sharded_mt_with(&codes, &packed_b, m, k, n, &mut got, 2, &mut scratch, cfg);
+        let warmed = scratch.capacity_bytes();
+        for _ in 0..3 {
+            qgemm_packed_sharded_mt_with(
+                &codes, &packed_b, m, k, n, &mut got, 2, &mut scratch, cfg,
+            );
+        }
+        assert_eq!(scratch.capacity_bytes(), warmed, "sharded steady state regrew scratch");
     }
 
     /// Satellite: the property test. All kernel variants match the

@@ -24,6 +24,15 @@
 //! kernel that diverges from the decode oracle by one ULP on one element
 //! fails here, clean and corrupted operands alike.
 //!
+//! The `sharded-reduction` row enforces the opt-in **tier-2 contract**
+//! of the K-sharded engine: for every [`conformance_shard_configs`]
+//! entry (including `n_shards` ∈ {1, `k`, > `k`}) × kernel path ×
+//! thread count, clean and corrupted operands alike, the output must be
+//! bit-identical to an independently built per-block decode-oracle
+//! pairwise reduction tree — and the 1-shard config must reproduce the
+//! classic unsharded oracle exactly, which keeps tier 1 nested inside
+//! tier 2 rather than forked from it.
+//!
 //! [`run_conformance`] panics with the format, case, and shape on the
 //! first divergence (the `prop_check` reporting convention), so a
 //! replaying `cargo test conformance` pinpoints the exact case.
@@ -33,11 +42,13 @@ use crate::hw::mfbprop::{Fp4Code, Int4Code};
 use crate::hw::qgemm::{
     int4_product_lut, product_lut, qgemm_decode_oracle, qgemm_int4_decode_oracle,
     qgemm_int4_flat, qgemm_int4_into, qgemm_int4_mt_with, qgemm_int4_mt_with_path,
-    qgemm_int4_scalar_reference, qgemm_int4_with, qgemm_packed_flat, qgemm_packed_into,
-    qgemm_packed_mt_with, qgemm_packed_with, qgemm_radix4_decode_oracle, qgemm_radix4_flat,
-    qgemm_radix4_into, qgemm_radix4_mt_with, qgemm_radix4_mt_with_path,
-    qgemm_radix4_scalar_reference, qgemm_radix4_with, qgemm_scalar_reference,
-    radix4_product_lut, KernelPath, QgemmScratch, TILE_M, TILE_N,
+    qgemm_int4_scalar_reference, qgemm_int4_sharded_mt_with, qgemm_int4_sharded_mt_with_path,
+    qgemm_int4_with, qgemm_packed_flat, qgemm_packed_into, qgemm_packed_mt_with,
+    qgemm_packed_sharded_mt_with, qgemm_packed_with, qgemm_radix4_decode_oracle,
+    qgemm_radix4_flat, qgemm_radix4_into, qgemm_radix4_mt_with, qgemm_radix4_mt_with_path,
+    qgemm_radix4_scalar_reference, qgemm_radix4_sharded_mt_with,
+    qgemm_radix4_sharded_mt_with_path, qgemm_radix4_with, qgemm_scalar_reference,
+    radix4_product_lut, KernelPath, QgemmScratch, ShardConfig, TILE_M, TILE_N,
 };
 use crate::quant::radix4::{radix4_unit_value, Radix4Format, Radix4Quantizer, TprPhase};
 use crate::quant::{
@@ -64,6 +75,28 @@ pub fn conformance_formats() -> Vec<FormatConformance> {
         FormatConformance { name: "radix4-tpr", check: check_radix4 },
         FormatConformance { name: "corrupted-operand", check: check_corrupted },
         FormatConformance { name: "forward-format-layer-step", check: check_layer_step },
+        FormatConformance { name: "sharded-reduction", check: check_sharded },
+    ]
+}
+
+/// Shard configurations the sharded-reduction row sweeps — the opt-in
+/// **tier-2 contract**: output is a pure function of `(operands, shape,
+/// ShardConfig)`, never of thread count. Listed explicitly so all three
+/// [`ShardConfig`] constructors are visibly wired into the harness for
+/// the tidy coverage rule; the degenerate entries (`k` shards, `> k`
+/// shards) pin the empty-trailing-shard behaviour, and
+/// [`ShardConfig::from_env`] folds the CI `QGEMM_SHARDS` matrix leg into
+/// the sweep (it duplicates an explicit entry on unset hosts, which is
+/// fine — the row is idempotent per config).
+pub fn conformance_shard_configs(k: usize) -> Vec<ShardConfig> {
+    vec![
+        ShardConfig::single(),
+        ShardConfig::with_shards(2),
+        ShardConfig::with_shards(3),
+        ShardConfig::with_shards(4),
+        ShardConfig::with_shards(k.max(1)),
+        ShardConfig::with_shards(k + 3),
+        ShardConfig::from_env(),
     ]
 }
 
@@ -491,6 +524,201 @@ fn check_layer_step(
     Ok(())
 }
 
+/// Fold per-shard partial products with the fixed pairwise tree the
+/// engine promises: adjacent pairs combine (`left += right`), an odd
+/// leftover rides to the next level. Built here from scratch — the
+/// reference must not share the engine's reduction code.
+fn pairwise_tree(mut bufs: Vec<Vec<f32>>) -> Vec<f32> {
+    while bufs.len() > 1 {
+        let mut next = Vec::new();
+        let mut it = bufs.into_iter();
+        while let Some(left) = it.next() {
+            match it.next() {
+                Some(right) => {
+                    next.push(left.iter().zip(&right).map(|(l, r)| l + r).collect())
+                }
+                None => next.push(left),
+            }
+        }
+        bufs = next;
+    }
+    bufs.pop().unwrap_or_default()
+}
+
+/// Copy the byte span `[b0, b0 + bd)` of every packed row into a dense
+/// block operand (`rb` is the source row stride in bytes).
+fn packed_block(src: &[u8], rows: usize, rb: usize, b0: usize, bd: usize) -> Vec<u8> {
+    let mut out = vec![0u8; rows * bd];
+    for r in 0..rows {
+        out[r * bd..(r + 1) * bd].copy_from_slice(&src[r * rb + b0..r * rb + b0 + bd]);
+    }
+    out
+}
+
+/// Copy the element span `[k0, k1)` of every typed-code row.
+fn codes_block(src: &[Int4Code], rows: usize, k: usize, k0: usize, k1: usize) -> Vec<Int4Code> {
+    let mut out = Vec::with_capacity(rows * (k1 - k0));
+    for r in 0..rows {
+        out.extend_from_slice(&src[r * k + k0..r * k + k1]);
+    }
+    out
+}
+
+/// The tier-2 reference: run the format's **decode oracle on each shard
+/// block independently** (shard spans are byte-aligned, so block
+/// operands are whole-byte row slices) and fold the partials with
+/// [`pairwise_tree`]. For the 1-shard config this degenerates to the
+/// plain unsharded decode oracle — the tier-1 bitwise row.
+fn sharded_oracle(
+    shards: ShardConfig,
+    k: usize,
+    m: usize,
+    n: usize,
+    block_oracle: impl Fn(usize, usize) -> Vec<f32>,
+) -> Vec<f32> {
+    let leaves: Vec<Vec<f32>> = (0..shards.n_live(k))
+        .map(|s| {
+            let (k0, k1) = shards.shard_span(k, s);
+            block_oracle(k0, k1)
+        })
+        .collect();
+    let mut want = pairwise_tree(leaves);
+    want.resize(m * n, 0.0);
+    want
+}
+
+/// Sharded-reduction row: every [`conformance_shard_configs`] entry ×
+/// every [`conformance_kernel_paths`] path × every thread count, on all
+/// three formats, **clean and corrupted operands** — the engine must
+/// match the independently built per-block decode-oracle reduction tree
+/// bit-for-bit, and the 1-shard config is thereby pinned bitwise to the
+/// classic unsharded oracle. Covers the degenerate configs (`n_shards` ∈
+/// {1, k, > k}) at the table's degenerate depths (`k` = 0/1/odd) and at
+/// shard boundaries that fall off the SIMD strip width.
+fn check_sharded(
+    rng: &mut Xoshiro256,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: &[usize],
+) -> Result<(), String> {
+    let mut plan = FaultPlan::new(rng.next_u64());
+    let rb = k.div_ceil(2);
+    let configs = conformance_shard_configs(k);
+
+    // Forward INT4×INT4: packed A and packed B, full path sweep.
+    let acts: Vec<f32> = (0..m * k).map(|_| rng.normal_ms_f32(0.0, 1.5)).collect();
+    let wts: Vec<f32> = (0..n * k).map(|_| rng.normal_ms_f32(0.0, 0.5)).collect();
+    let aq = UniformQuantizer::new(4, 2.5, UniformRounding::Rdn);
+    let wq = UniformQuantizer::new(4, 1.5, UniformRounding::Rdn);
+    let mut a = vec![0u8; m * rb];
+    aq.encode_packed_matrix_into(&acts, m, k, &[], &mut a, rb);
+    let mut b = vec![0u8; n * rb];
+    wq.encode_packed_matrix_into(&wts, n, k, &[], &mut b, rb);
+    let mut scratch = QgemmScratch::new();
+    let mut out = vec![f32::NAN; m * n];
+    for corrupt in [false, true] {
+        if corrupt && !b.is_empty() {
+            plan.flip_bits(&mut b, 1 + b.len() / 7);
+        }
+        let tag = if corrupt { "corrupt" } else { "clean" };
+        for &shards in &configs {
+            let want = sharded_oracle(shards, k, m, n, |k0, k1| {
+                let ab = packed_block(&a, m, rb, k0 / 2, (k1 - k0).div_ceil(2));
+                let bb = packed_block(&b, n, rb, k0 / 2, (k1 - k0).div_ceil(2));
+                qgemm_int4_decode_oracle(&ab, &bb, m, k1 - k0, n)
+            });
+            if shards.is_single() {
+                bits_check(
+                    &format!("forward/{tag}/1-shard-vs-unsharded-oracle"),
+                    &want,
+                    &qgemm_int4_decode_oracle(&a, &b, m, k, n),
+                )?;
+            }
+            for path in conformance_kernel_paths() {
+                for &t in threads {
+                    out.fill(f32::NAN);
+                    qgemm_int4_sharded_mt_with_path(
+                        &a, &b, m, k, n, &mut out, t, &mut scratch, path, shards,
+                    );
+                    bits_check(
+                        &format!("forward/{tag}/s{}/{}[{t}]", shards.n_shards(), path.label()),
+                        &out,
+                        &want,
+                    )?;
+                }
+            }
+            out.fill(f32::NAN);
+            qgemm_int4_sharded_mt_with(&a, &b, m, k, n, &mut out, 2, &mut scratch, shards);
+            bits_check(&format!("forward/{tag}/s{}/auto", shards.n_shards()), &out, &want)?;
+        }
+    }
+
+    // Radix-4 TPR: typed A codes, packed B, full path sweep.
+    let ac = random_codes(rng, m * k);
+    let g: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 3.0)).collect();
+    let r4 = Radix4Quantizer::new(Radix4Format::FP4);
+    let mut br = vec![0u8; n * rb];
+    r4.encode_packed_matrix_into(&g, n, k, TprPhase::Base, &mut br, rb);
+    for corrupt in [false, true] {
+        if corrupt && !br.is_empty() {
+            plan.flip_bits(&mut br, 1 + br.len() / 7);
+        }
+        let tag = if corrupt { "corrupt" } else { "clean" };
+        for &shards in &configs {
+            let want = sharded_oracle(shards, k, m, n, |k0, k1| {
+                let ab = codes_block(&ac, m, k, k0, k1);
+                let bb = packed_block(&br, n, rb, k0 / 2, (k1 - k0).div_ceil(2));
+                qgemm_radix4_decode_oracle(&ab, &bb, m, k1 - k0, n)
+            });
+            for path in conformance_kernel_paths() {
+                for &t in threads {
+                    out.fill(f32::NAN);
+                    qgemm_radix4_sharded_mt_with_path(
+                        &ac, &br, m, k, n, &mut out, t, &mut scratch, path, shards,
+                    );
+                    bits_check(
+                        &format!("radix4/{tag}/s{}/{}[{t}]", shards.n_shards(), path.label()),
+                        &out,
+                        &want,
+                    )?;
+                }
+            }
+            out.fill(f32::NAN);
+            qgemm_radix4_sharded_mt_with(&ac, &br, m, k, n, &mut out, 2, &mut scratch, shards);
+            bits_check(&format!("radix4/{tag}/s{}/auto", shards.n_shards()), &out, &want)?;
+        }
+    }
+
+    // Backward INT4×FP4 (gather-only by the MF-BPROP contract): typed A
+    // codes against packed LUQ gradient codes.
+    let gq: Vec<f32> = (0..n * k).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let mut noise = vec![0.0f32; n * k];
+    rng.fill_uniform(&mut noise);
+    let q = LogQuantizer::new(LogQuantConfig::luq(LogFormat::FP4));
+    let mut bq = vec![0u8; n * rb];
+    q.quantize_to_codes_matrix_into(&gq, n, k, &noise, &mut bq, rb);
+    for corrupt in [false, true] {
+        if corrupt && !bq.is_empty() {
+            plan.flip_bits(&mut bq, 1 + bq.len() / 7);
+        }
+        let tag = if corrupt { "corrupt" } else { "clean" };
+        for &shards in &configs {
+            let want = sharded_oracle(shards, k, m, n, |k0, k1| {
+                let ab = codes_block(&ac, m, k, k0, k1);
+                let bb = packed_block(&bq, n, rb, k0 / 2, (k1 - k0).div_ceil(2));
+                qgemm_decode_oracle(&ab, &bb, m, k1 - k0, n)
+            });
+            for &t in threads {
+                out.fill(f32::NAN);
+                qgemm_packed_sharded_mt_with(&ac, &bq, m, k, n, &mut out, t, &mut scratch, shards);
+                bits_check(&format!("backward/{tag}/s{}[{t}]", shards.n_shards()), &out, &want)?;
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -518,6 +746,7 @@ mod tests {
                 "radix4-tpr",
                 "corrupted-operand",
                 "forward-format-layer-step",
+                "sharded-reduction",
             ]
         );
         let threads = conformance_thread_counts();
@@ -533,5 +762,48 @@ mod tests {
         assert!(paths.contains(&KernelPath::Scalar), "scalar oracle missing");
         assert!(paths.contains(&KernelPath::Portable), "portable path missing");
         assert!(paths.iter().all(|p| p.is_available()), "{paths:?}");
+    }
+
+    /// The shard-config sweep covers the degenerate corners the tier-2
+    /// contract calls out: unsharded, `k` shards, beyond-`k` shards, and
+    /// the env override (single on unset hosts, so the list is valid
+    /// under any `QGEMM_SHARDS` value the CI matrix pins).
+    #[test]
+    fn conformance_shard_configs_cover_degenerate_corners() {
+        for k in [0usize, 1, 7, 33, 64] {
+            let configs = conformance_shard_configs(k);
+            assert!(configs.iter().any(|c| c.is_single()), "k={k}: unsharded row missing");
+            assert!(
+                configs.iter().any(|c| c.n_shards() == k.max(1)),
+                "k={k}: n_shards = k row missing"
+            );
+            assert!(
+                configs.iter().any(|c| c.n_shards() > k),
+                "k={k}: n_shards > k row missing"
+            );
+            // Every listed config partitions [0, k) regardless of shard
+            // count — empty trailing shards, never lost columns.
+            for &c in &configs {
+                let mut covered = 0;
+                for s in 0..c.n_live(k) {
+                    let (k0, k1) = c.shard_span(k, s);
+                    assert_eq!(k0, covered, "gap before shard {s} of {c:?} at k={k}");
+                    assert!(k1 > k0, "empty live shard {s} of {c:?} at k={k}");
+                    covered = k1;
+                }
+                assert_eq!(covered, k, "{c:?} does not cover k={k}");
+            }
+        }
+    }
+
+    /// The pairwise-tree reference folds like the engine promises: a
+    /// known 5-leaf tree reduces as ((0+1)+(2+3))+4.
+    #[test]
+    fn pairwise_tree_reference_shape() {
+        let leaves: Vec<Vec<f32>> = (0..5).map(|i| vec![10.0f32.powi(i)]).collect();
+        let folded = pairwise_tree(leaves);
+        let want = ((1.0f32 + 10.0) + (100.0 + 1000.0)) + 10000.0;
+        assert_eq!(folded, vec![want]);
+        assert!(pairwise_tree(Vec::new()).is_empty());
     }
 }

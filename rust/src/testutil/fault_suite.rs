@@ -31,7 +31,14 @@
 //!
 //! Plus the crash-safety contract: kill-at-any-step → resume from the
 //! checkpoint is bit-identical to the uninterrupted run, on both noise
-//! engines ([`fault_kill_and_resume_is_bit_identical`]).
+//! engines ([`fault_kill_and_resume_is_bit_identical`]); the K-sharded
+//! layer-step row — tier-2 determinism across thread counts for fixed,
+//! env-selected, and unsharded [`ShardConfig`]s, and same-step NaN
+//! escalation under a sharded supervised step
+//! ([`fault_sharded_layer_step_supervised_and_deterministic`]); and the
+//! long-relapse window regression — doubling follows `min(2^cycle, cap)`
+//! exactly, saturating at the cap without overshoot or overflow
+//! ([`fault_supervisor_long_relapse_window_saturates_at_cap`]).
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
@@ -42,7 +49,7 @@ use crate::hw::mfbprop::{Fp4Code, Int4Code};
 use crate::hw::qgemm::{
     int4_product_lut, product_lut, qgemm_int4_decode_oracle, qgemm_int4_mt_with_path,
     qgemm_radix4_decode_oracle, qgemm_radix4_mt_with_path, radix4_product_lut, KernelPath,
-    QgemmScratch,
+    QgemmScratch, ShardConfig,
 };
 use crate::quant::radix4::radix4_unit_value;
 use crate::quant::{
@@ -223,6 +230,114 @@ fn fault_nan_poison_detected_under_both_forward_formats() {
         );
         assert_eq!(out.transition, Some(Transition::Escalated), "{format:?}");
         assert_eq!(sup.precision(0), StepPrecision::Fp32, "{format:?}");
+    }
+}
+
+/// The K-sharded layer step keeps every supervision guarantee of the
+/// unsharded one. A fixed multi-shard [`ShardConfig`] is deterministic
+/// across thread counts (the tier-2 contract, here end-to-end through
+/// forward + both backward GEMMs); the unsharded config reproduces the
+/// default step bit-for-bit; the env-selected config (CI's
+/// `QGEMM_SHARDS` matrix leg) is equally deterministic; and NaN poison
+/// under a **sharded supervised** step still escalates same-step — the
+/// sentinels sit above the sharding choice.
+#[test]
+fn fault_sharded_layer_step_supervised_and_deterministic() {
+    let (batch, d_in, d_out) = (6usize, 33, 9);
+    let cfg = LogQuantConfig::luq(LogFormat::FP4);
+    let (acts, wts, grads) = layer_data(0xF9, batch, d_in, d_out);
+
+    // Determinism per config: {unsharded, explicit 3-shard, env} × both
+    // forward formats × thread counts {1, 3} — bitwise.
+    for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+        for shards in [ShardConfig::single(), ShardConfig::with_shards(3), ShardConfig::from_env()]
+        {
+            let mut runs = Vec::new();
+            for n_threads in [1usize, 3] {
+                let mut step: QuantizedLayerStep =
+                    QuantizedLayerStep::with_format(cfg, 4, format);
+                step.set_shards(shards);
+                let mut rng = Xoshiro256::seed_from_u64(0x59);
+                step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, n_threads);
+                runs.push(
+                    step.y()
+                        .iter()
+                        .chain(step.dx_t())
+                        .chain(step.dw_t())
+                        .map(|v| v.to_bits())
+                        .collect::<Vec<u32>>(),
+                );
+            }
+            assert_eq!(runs[0], runs[1], "{format:?} {shards:?}: thread count leaked");
+        }
+    }
+
+    // Poison under a sharded supervised step: detected and escalated
+    // exactly like the unsharded suite rows above.
+    let (mut poisoned, wts2, grads2) = layer_data(0xFA, batch, d_in, d_out);
+    let mut plan = FaultPlan::new(0x99);
+    assert!(!plan.poison_f32(&mut poisoned, 2).is_empty());
+    let mut sup = Supervisor::new(1, SupervisorPolicy::default());
+    let mut step: SupervisedLayerStep = SupervisedLayerStep::new(cfg, 4);
+    step.set_shards(ShardConfig::with_shards(3));
+    let mut rng = Xoshiro256::seed_from_u64(0x5A);
+    let out = step.step(
+        &mut sup, 0, 0, &poisoned, &wts2, &grads2, batch, d_in, d_out, &mut rng, 3,
+    );
+    assert_eq!(out.health.worst(), Some(FaultClass::NonFinite), "sharded poison missed");
+    assert_eq!(out.transition, Some(Transition::Escalated));
+    assert_eq!(sup.precision(0), StepPrecision::Fp32);
+}
+
+/// Long-relapse regression for the window-doubling arithmetic: across
+/// many escalate → readmit → relapse cycles the fallback window must
+/// follow exactly `min(2^cycle, cap)` — doubling saturates **at** the
+/// cap on the boundary cycle and stays pinned there, never overshooting
+/// (the readmission off-by-one) and never wrapping (the overflow the
+/// saturating multiply guards).
+#[test]
+fn fault_supervisor_long_relapse_window_saturates_at_cap() {
+    let cap = 8usize;
+    let mut sup = Supervisor::new(
+        1,
+        SupervisorPolicy {
+            fallback_steps: 1,
+            probation_steps: 1,
+            max_fallback_steps: cap,
+            ..SupervisorPolicy::default()
+        },
+    );
+    let faulty = {
+        let mut h = StepHealth::healthy();
+        h.note(FaultClass::NonFinite);
+        h
+    };
+    let mut step = 0u64;
+    let mut observe = |sup: &mut Supervisor, h: &StepHealth| {
+        let t = sup.observe(0, step, h);
+        step += 1;
+        t
+    };
+
+    assert_eq!(observe(&mut sup, &faulty), Some(Transition::Escalated));
+    for cycle in 0..12u32 {
+        // Serve the current fallback window: readmission must land after
+        // exactly min(2^cycle, cap) healthy steps — not one more, not
+        // one fewer.
+        let want = (1usize << cycle.min(16)).min(cap);
+        let mut served = 0usize;
+        loop {
+            let t = observe(&mut sup, &StepHealth::healthy());
+            served += 1;
+            if t == Some(Transition::Readmitted) {
+                break;
+            }
+            assert!(served <= cap, "cycle {cycle}: window exceeded the cap");
+        }
+        assert_eq!(served, want, "cycle {cycle}: wrong fallback window");
+        // Relapse on the single probation step: the window doubles,
+        // saturating at the cap.
+        assert_eq!(observe(&mut sup, &faulty), Some(Transition::Relapsed));
     }
 }
 

@@ -40,6 +40,13 @@ import sys
 
 SNAPSHOT_RE = re.compile(r"^PR(\d+)_BENCH_(\w+)\.json$")
 
+# Below this magnitude a metric carries no usable signal: zero speedups
+# are recorded on hosts where a gate is skipped (e.g. ``speedup_vs_tiled``
+# on non-AVX2 bench hosts), and dividing by — or into — such a value
+# would crash or produce a nonsense ratio. Guarded on both the median and
+# the current value.
+EPS = 1e-9
+
 # Metric-name fragments that mark a numeric leaf as gated, with direction.
 LOWER_IS_BETTER = ("ns_per_elem", "ns_per_product", "memcpy_ratio")
 HIGHER_IS_BETTER = ("melem_per_s", "gb_per_s", "speedup")
@@ -111,8 +118,13 @@ def diff_bench(bench, snapshots, pr, threshold, window):
             lines.append(f"  {key}: {cur:.4g} (no history — baseline)")
             continue
         med = statistics.median(past)
-        if med == 0:
-            lines.append(f"  {key}: {cur:.4g} (median 0 — skipped)")
+        if abs(med) < EPS:
+            lines.append(f"  {key}: {cur:.4g} (no usable history — median ~0, skipped)")
+            continue
+        if direction(key) == "up" and abs(cur) < EPS:
+            # A zero reading of a higher-is-better metric is a skipped
+            # gate (different host class), not a regression signal.
+            lines.append(f"  {key}: current ~0 vs median {med:.4g} — not comparable, skipped")
             continue
         ratio = cur / med
         # Normalize so >1 is always "worse" regardless of direction.

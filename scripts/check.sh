@@ -47,6 +47,16 @@ if [[ "$BENCH_ONLY" == 0 ]]; then
     echo "== tidy (static analysis: 5 contract rules) =="
     cargo run -q --bin tidy
 
+    # The bench regression gate is python; its degenerate-history guards
+    # (zero medians, zero current speedups on skipped-gate hosts) are
+    # pinned by a dependency-free unittest — cheap, so it runs up front.
+    if command -v python3 >/dev/null 2>&1; then
+        echo "== bench_diff.py unit tests =="
+        python3 scripts/test_bench_diff.py
+    else
+        echo "== python3 not found; bench_diff unit tests skipped =="
+    fi
+
     # fmt next: fail fast on formatting drift before the expensive build.
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check =="

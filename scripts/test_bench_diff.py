@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench regression gate (``bench_diff.py``).
+
+Exercises the gate against synthetic history directories, pinning the
+degenerate-history behaviour that once crashed the gate: a rolling
+median of 0.0 (skipped-gate hosts record zero speedups) used to raise
+ZeroDivisionError, and a *current* value of 0.0 on a higher-is-better
+metric crashed the direction-normalisation divide even when the median
+guard passed. Both must now report "skipped" without failing the run.
+
+Run directly (check.sh does):
+
+    python3 scripts/test_bench_diff.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_diff
+
+
+def write_snapshot(history, pr, bench, doc):
+    path = os.path.join(history, f"PR{pr}_BENCH_{bench}.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f)
+    return path
+
+
+class BenchDiffTest(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.history = self._tmp.name
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def run_diff(self, bench, pr, threshold=0.15, window=5):
+        snapshots = bench_diff.collect(self.history)[bench]
+        return bench_diff.diff_bench(bench, snapshots, pr, threshold, window)
+
+    def test_zero_median_is_skipped_not_crashed(self):
+        # Non-AVX2 hosts record speedup_vs_tiled = 0.0; the rolling
+        # median over such history must be reported as unusable, not
+        # divided by.
+        for pr in (1, 2, 3):
+            write_snapshot(self.history, pr, "qgemm", {"k": {"speedup_vs_tiled": 0.0}})
+        write_snapshot(self.history, 4, "qgemm", {"k": {"speedup_vs_tiled": 2.5}})
+        failures, lines = self.run_diff("qgemm", 4)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("no usable history" in ln for ln in lines), lines)
+
+    def test_zero_current_up_metric_is_skipped_not_crashed(self):
+        # The converse: healthy history, but the current PR benched on a
+        # skipped-gate host and recorded 0.0 for a higher-is-better
+        # metric. The 1/ratio normalisation used to ZeroDivisionError.
+        for pr in (1, 2, 3):
+            write_snapshot(self.history, pr, "qgemm", {"k": {"speedup_vs_tiled": 4.0}})
+        write_snapshot(self.history, 4, "qgemm", {"k": {"speedup_vs_tiled": 0.0}})
+        failures, lines = self.run_diff("qgemm", 4)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("not comparable" in ln for ln in lines), lines)
+
+    def test_zero_current_down_metric_is_not_a_regression(self):
+        # A lower-is-better metric dropping to ~0 is an improvement;
+        # ratio is 0/med which is fine — no guard should fire.
+        for pr in (1, 2, 3):
+            write_snapshot(self.history, pr, "qgemm", {"k": {"ns_per_product": 8.0}})
+        write_snapshot(self.history, 4, "qgemm", {"k": {"ns_per_product": 0.0}})
+        failures, lines = self.run_diff("qgemm", 4)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("ok" in ln for ln in lines), lines)
+
+    def test_real_regression_still_fails(self):
+        # The guards must not swallow genuine regressions: a 2x slowdown
+        # on a lower-is-better metric exceeds the 15% threshold.
+        for pr in (1, 2, 3):
+            write_snapshot(self.history, pr, "qgemm", {"k": {"ns_per_product": 4.0}})
+        write_snapshot(self.history, 4, "qgemm", {"k": {"ns_per_product": 8.0}})
+        failures, lines = self.run_diff("qgemm", 4)
+        self.assertEqual(failures, ["k/ns_per_product"])
+        self.assertTrue(any("REGRESSION" in ln for ln in lines), lines)
+
+    def test_up_metric_regression_still_fails(self):
+        # Collapsing speedup that is nonzero (so the zero-current guard
+        # stays out of the way) must still trip the gate.
+        for pr in (1, 2, 3):
+            write_snapshot(self.history, pr, "qgemm", {"k": {"speedup_vs_tiled": 4.0}})
+        write_snapshot(self.history, 4, "qgemm", {"k": {"speedup_vs_tiled": 1.0}})
+        failures, _ = self.run_diff("qgemm", 4)
+        self.assertEqual(failures, ["k/speedup_vs_tiled"])
+
+    def test_no_history_is_baseline(self):
+        # First snapshot of a metric: reported, never failed.
+        write_snapshot(self.history, 4, "qgemm", {"k": {"speedup_vs_tiled": 2.0}})
+        failures, lines = self.run_diff("qgemm", 4)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("baseline" in ln for ln in lines), lines)
+
+    def test_gate_constants_ignored(self):
+        # required_speedup / bit_exact leaves are constants, not metrics.
+        write_snapshot(
+            self.history, 1, "qgemm",
+            {"gate": {"required_speedup": 2.0, "sharded_bit_exact_1shard": True}},
+        )
+        write_snapshot(
+            self.history, 4, "qgemm",
+            {"gate": {"required_speedup": 4.0, "sharded_bit_exact_1shard": False}},
+        )
+        failures, lines = self.run_diff("qgemm", 4)
+        self.assertEqual(failures, [])
+        # Nothing beyond the header line: no gated leaves at all.
+        self.assertEqual(len(lines), 1, lines)
+
+    def test_main_exits_zero_on_empty_history(self):
+        argv_backup = sys.argv
+        sys.argv = ["bench_diff.py", "--history", self.history]
+        try:
+            self.assertEqual(bench_diff.main(), 0)
+        finally:
+            sys.argv = argv_backup
+
+
+if __name__ == "__main__":
+    unittest.main()
