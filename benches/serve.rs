@@ -1,0 +1,224 @@
+//! Serve-mode throughput gate: the multi-tenant job server
+//! (`coordinator::serve::Server`) under a synthetic tenant mix.
+//!
+//! Measures jobs/s at 1 worker vs `min(4, cores)` workers, plus
+//! per-job submit→done latency (p50/p99, collected by one receiver
+//! thread per handle so receipt timestamps are not serialized by the
+//! drain order). The tenant mix deliberately exercises all three
+//! `StepProfile` constructors — `paper_default`, the builder's
+//! `build`, and `from_toml_section` (via `JobSpec::from_toml`) — so
+//! tidy's coverage rule sees every construction point under load.
+//!
+//! Emits `BENCH_serve.json` (override with `LUQ_BENCH_JSON=<path>`)
+//! and **asserts** the acceptance gates:
+//!
+//! * every served job's summary is bit-identical to its standalone
+//!   [`run_job`] replay (the serve determinism contract, checked
+//!   before any timing), and
+//! * on hosts with >= 2 cores, the multi-worker pool beats the
+//!   1-worker pool on jobs/s by >= 1.2x (loud-skip on 1-core hosts,
+//!   where the pool cannot scale by construction).
+
+use std::time::Instant;
+
+use luq::coordinator::layer_step::ForwardFormat;
+use luq::coordinator::serve::run_job;
+use luq::coordinator::{JobEvent, JobSpec, Server, ServerOptions, StepProfile};
+use luq::hw::qgemm::ShardConfig;
+use luq::metrics::Json;
+use luq::rng::NoiseEngine;
+
+/// Percentile of an unsorted sample set (nearest-rank).
+fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
+    samples[rank.clamp(1, samples.len()) - 1]
+}
+
+/// One round: start a pool, submit every spec, drain each handle on
+/// its own receiver thread. Returns (jobs/s, per-job latency in ms).
+fn run_round(workers: usize, inner_threads: usize, specs: &[JobSpec]) -> (f64, Vec<f64>) {
+    let server = Server::start(ServerOptions {
+        workers,
+        queue_depth: specs.len().max(8),
+        inner_threads,
+    });
+    let t0 = Instant::now();
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| (Instant::now(), server.submit(s.clone()).expect("admission")))
+        .collect();
+    let latencies: Vec<f64> = std::thread::scope(|scope| {
+        let collectors: Vec<_> = handles
+            .into_iter()
+            .map(|(submitted, h)| {
+                scope.spawn(move || {
+                    let mut done_at = None;
+                    while let Some(e) = h.next_event() {
+                        if matches!(e, JobEvent::Done(_)) {
+                            done_at = Some(Instant::now());
+                        }
+                    }
+                    let done = done_at.expect("job ended without Done");
+                    done.duration_since(submitted).as_secs_f64() * 1e3
+                })
+            })
+            .collect();
+        collectors.into_iter().map(|c| c.join().expect("collector thread")).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    (specs.len() as f64 / elapsed.max(1e-9), latencies)
+}
+
+fn main() {
+    let fast = std::env::var("LUQ_BENCH_FAST").is_ok();
+    let jobs_per_round = if fast { 8usize } else { 16 };
+    let rounds = if fast { 2usize } else { 5 };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let multi_workers = cores.clamp(2, 4);
+
+    // The tenant mix: one profile per StepProfile constructor.
+    let toml_spec = JobSpec::from_toml(
+        "[job]\nsteps = 4\nlr = 0.05\ncheckpoint_every = 0\nseed = 190\n\
+         layers = [16, 48, 32, 16, 32, 32, 16, 32, 24]\n",
+    )
+    .expect("bench job TOML");
+    let toml_doc = luq::config::parse_toml(
+        "[profile]\nformat = \"radix4_tpr\"\nnoise_engine = \"philox\"\n",
+    )
+    .expect("bench profile TOML");
+    let toml_profile =
+        StepProfile::from_toml_section(toml_doc.get("profile").expect("profile section"))
+            .expect("bench profile");
+    let builder_profile = StepProfile::builder()
+        .format(ForwardFormat::Sawb)
+        .shards(ShardConfig::single())
+        .noise_engine(NoiseEngine::Philox)
+        .build()
+        .expect("bench profile");
+    let default_profile = StepProfile::paper_default();
+    let mk_spec = |i: u64| -> JobSpec {
+        let mut s = toml_spec.clone();
+        s.job_id = i;
+        s.profile = match i % 3 {
+            0 => default_profile,
+            1 => builder_profile,
+            _ => toml_profile,
+        };
+        s
+    };
+    let specs: Vec<JobSpec> = (0..jobs_per_round as u64).map(mk_spec).collect();
+
+    // --- correctness gate before any timing -----------------------------
+    // Every served summary must equal its standalone replay bit-for-bit
+    // (final loss bits + final checkpoint CRC are in the summary).
+    let gate_server = Server::start(ServerOptions {
+        workers: multi_workers,
+        queue_depth: specs.len(),
+        inner_threads: 1,
+    });
+    let gate_handles: Vec<_> =
+        specs.iter().map(|s| gate_server.submit(s.clone()).expect("admission")).collect();
+    let mut replay_bit_identical = true;
+    for (s, h) in specs.iter().zip(gate_handles) {
+        let (_, served) = h.wait().expect("served job");
+        let (_, replayed) = run_job(s).expect("replay");
+        if served != replayed {
+            eprintln!("job {}: served summary != standalone replay", s.job_id);
+            replay_bit_identical = false;
+        }
+    }
+    gate_server.shutdown();
+
+    // --- timing ----------------------------------------------------------
+    let mut best_1w = 0.0f64;
+    let mut best_multi = 0.0f64;
+    let mut lat_1w: Vec<f64> = Vec::new();
+    let mut lat_multi: Vec<f64> = Vec::new();
+    for _ in 0..rounds {
+        let (jps, lats) = run_round(1, 1, &specs);
+        best_1w = best_1w.max(jps);
+        lat_1w.extend(lats);
+        let (jps, lats) = run_round(multi_workers, 1, &specs);
+        best_multi = best_multi.max(jps);
+        lat_multi.extend(lats);
+    }
+    let speedup = best_multi / best_1w.max(1e-9);
+    let gate_enforced = cores >= 2;
+
+    let p50_1w = percentile(&mut lat_1w, 50.0);
+    let p99_1w = percentile(&mut lat_1w, 99.0);
+    let p50_multi = percentile(&mut lat_multi, 50.0);
+    let p99_multi = percentile(&mut lat_multi, 99.0);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("jobs_per_round", Json::num(jobs_per_round as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("steps_per_job", Json::num(4.0)),
+        ("workers_multi", Json::num(multi_workers as f64)),
+        ("cores", Json::num(cores as f64)),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("jobs_per_s_1w", Json::num(best_1w)),
+                ("jobs_per_s_multi", Json::num(best_multi)),
+            ]),
+        ),
+        (
+            "latency_ms",
+            Json::obj(vec![
+                ("p50_1w", Json::num(p50_1w)),
+                ("p99_1w", Json::num(p99_1w)),
+                ("p50_multi", Json::num(p50_multi)),
+                ("p99_multi", Json::num(p99_multi)),
+            ]),
+        ),
+        (
+            "gate",
+            Json::obj(vec![
+                ("serve_scaling_speedup_vs_1w", Json::num(speedup)),
+                ("min_speedup", Json::num(1.2)),
+                ("scaling_gate_enforced", Json::Bool(gate_enforced)),
+                ("replay_bit_identical", Json::Bool(replay_bit_identical)),
+            ]),
+        ),
+    ]);
+    let json_path =
+        std::env::var("LUQ_BENCH_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    match std::fs::write(&json_path, doc.render()) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("failed to write {json_path}: {e}"),
+    }
+
+    println!(
+        "serve: {jobs_per_round} jobs/round, 1w {best_1w:.1} jobs/s \
+         (p50 {p50_1w:.2} ms, p99 {p99_1w:.2} ms)"
+    );
+    println!(
+        "serve: {multi_workers}w {best_multi:.1} jobs/s (p50 {p50_multi:.2} ms, \
+         p99 {p99_multi:.2} ms), speedup {speedup:.2}x (gate: >= 1.2x)"
+    );
+    if !gate_enforced {
+        println!(
+            "SCALING GATE SKIPPED: single-core host — the worker pool cannot scale \
+             by construction (measured {speedup:.2}x)"
+        );
+    }
+
+    assert!(
+        replay_bit_identical,
+        "a served job diverged from its standalone replay (determinism contract broken)"
+    );
+    if gate_enforced {
+        assert!(
+            speedup >= 1.2,
+            "{multi_workers}-worker pool only {speedup:.2}x over 1 worker on jobs/s \
+             (gate: >= 1.2x)"
+        );
+    }
+}

@@ -21,11 +21,13 @@
 //!   checked-in `tidy/draw_sites.txt` as `<path> <fn> <token>`.
 //! * `coverage` — every `ForwardFormat` variant, every `FaultClass` variant,
 //!   every `KernelPath` variant, every `ProductLut` instantiation (a fn
-//!   returning `&'static ProductLut` in `hw/qgemm.rs`), and every
+//!   returning `&'static ProductLut` in `hw/qgemm.rs`), every
 //!   `ShardConfig` constructor (a fn returning `ShardConfig` in
-//!   `hw/qgemm.rs`) must be referenced in `testutil/conformance.rs`, the
-//!   bench ladder (`benches/*.rs`), and the fault suite
-//!   (`testutil/fault_suite.rs`); fault classes in the fault suite only.
+//!   `hw/qgemm.rs`), and every `StepProfile` constructor (a fn returning
+//!   `StepProfile` or `Result<StepProfile, _>` in `coordinator/profile.rs`)
+//!   must be referenced in `testutil/conformance.rs`, the bench ladder
+//!   (`benches/*.rs`), and the fault suite (`testutil/fault_suite.rs`);
+//!   fault classes in the fault suite only.
 //! * `panic-policy` — `unwrap()`/`expect()`/`panic!`/`unreachable!` in
 //!   non-test library code are counted against `tidy/panic_budget.txt`,
 //!   whose number may only shrink.
@@ -718,6 +720,29 @@ fn shard_constructors(file: &SourceFile) -> Vec<(String, usize)> {
     out
 }
 
+/// Fns in `file` whose signature returns `StepProfile` or
+/// `Result<StepProfile, _>` — the session-profile constructors. Every way
+/// to build a [`StepProfile`] (paper defaults, the builder, TOML) must be
+/// exercised by the conformance harness, the benches, and the fault suite:
+/// the profile is the serve/config/trainer session contract, so an
+/// unexercised constructor is an untested entry point into every layer
+/// above the kernels.
+fn profile_constructors(file: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for f in &file.fns {
+        let sig = &file.masked[f.name_pos..f.decl_end.min(file.masked.len())];
+        let sig = String::from_utf8_lossy(sig);
+        // `-> StepProfileBuilder` also contains `-> StepProfile`; the
+        // builder itself is not a profile constructor (its `build` is).
+        if (sig.contains("-> StepProfile") && !sig.contains("-> StepProfileBuilder"))
+            || sig.contains("-> Result<StepProfile")
+        {
+            out.push((f.name.clone(), file.line_of(f.name_pos)));
+        }
+    }
+    out
+}
+
 fn rule_coverage(files: &[SourceFile]) -> Vec<Violation> {
     let by_rel = |rel: &str| files.iter().find(|f| f.rel == rel);
     let conformance = by_rel("rust/src/testutil/conformance.rs");
@@ -746,6 +771,11 @@ fn rule_coverage(files: &[SourceFile]) -> Vec<Violation> {
         }
         for (v, line) in shard_constructors(def) {
             required.push((def, v, line, "ShardConfig constructor", true));
+        }
+    }
+    if let Some(def) = by_rel("rust/src/coordinator/profile.rs") {
+        for (v, line) in profile_constructors(def) {
+            required.push((def, v, line, "StepProfile constructor", true));
         }
     }
     if let Some(def) = by_rel("rust/src/quant/health.rs") {
@@ -1188,10 +1218,17 @@ mod tests {
         let luts = "pub fn product_lut() -> &'static ProductLut {\n    &LUT\n}\n\
              pub enum KernelPath {\n    Scalar,\n    Portable,\n    Avx2,\n}\n\
              pub fn single() -> ShardConfig {\n    ShardConfig { n_shards: 1 }\n}\n";
+        // `builder` returns the builder, not a profile — it must NOT be
+        // picked up as a StepProfile constructor (its `build` is).
+        let profile = "pub fn paper_default() -> StepProfile {\n    todo()\n}\n\
+             pub fn builder() -> StepProfileBuilder {\n    todo()\n}\n\
+             pub fn build(self) -> Result<StepProfile, String> {\n    todo()\n}\n\
+             pub fn from_toml_section(t: &T) -> Result<StepProfile, String> {\n    todo()\n}\n";
         vec![
             file("rust/src/coordinator/layer_step.rs", defs),
             file("rust/src/quant/health.rs", health),
             file("rust/src/hw/qgemm.rs", luts),
+            file("rust/src/coordinator/profile.rs", profile),
             file("rust/src/testutil/conformance.rs", conf),
             file("benches/qgemm.rs", bench),
             file("rust/src/testutil/fault_suite.rs", fault),
@@ -1201,9 +1238,9 @@ mod tests {
     #[test]
     fn tidy_coverage_flags_unreferenced_variant() {
         let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2, single); }\n";
+             Scalar, Portable, Avx2, single, paper_default, build, from_toml_section); }\n";
         let missing_radix = "fn f() { let _ = (Sawb, product_lut, NonFinite, \
-             Scalar, Portable, Avx2, single); }\n";
+             Scalar, Portable, Avx2, single, paper_default, build, from_toml_section); }\n";
         let v = rule_coverage(&coverage_tree(all, all, missing_radix));
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("Radix4Tpr"), "{}", v[0].msg);
@@ -1213,9 +1250,9 @@ mod tests {
     #[test]
     fn tidy_coverage_flags_unreferenced_kernel_path() {
         let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2, single); }\n";
+             Scalar, Portable, Avx2, single, paper_default, build, from_toml_section); }\n";
         let missing_avx2 = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, single); }\n";
+             Scalar, Portable, single, paper_default, build, from_toml_section); }\n";
         let v = rule_coverage(&coverage_tree(all, missing_avx2, all));
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("KernelPath variant `Avx2`"), "{}", v[0].msg);
@@ -1225,9 +1262,9 @@ mod tests {
     #[test]
     fn tidy_coverage_flags_unreferenced_shard_constructor() {
         let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2, single); }\n";
+             Scalar, Portable, Avx2, single, paper_default, build, from_toml_section); }\n";
         let missing_single = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2); }\n";
+             Scalar, Portable, Avx2, paper_default, build, from_toml_section); }\n";
         let v = rule_coverage(&coverage_tree(missing_single, all, all));
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].msg.contains("ShardConfig constructor `single`"), "{}", v[0].msg);
@@ -1237,8 +1274,23 @@ mod tests {
     #[test]
     fn tidy_coverage_passes_when_referenced() {
         let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
-             Scalar, Portable, Avx2, single); }\n";
+             Scalar, Portable, Avx2, single, paper_default, build, from_toml_section); }\n";
         assert!(rule_coverage(&coverage_tree(all, all, all)).is_empty());
+    }
+
+    #[test]
+    fn tidy_coverage_flags_unreferenced_profile_constructor() {
+        // `builder` returns StepProfileBuilder and must not be required;
+        // `from_toml_section` missing from the bench ladder must be.
+        let all = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable, Avx2, single, paper_default, build, from_toml_section); }\n";
+        let missing_toml = "fn f() { let _ = (Sawb, Radix4Tpr, product_lut, NonFinite, \
+             Scalar, Portable, Avx2, single, paper_default, build); }\n";
+        let v = rule_coverage(&coverage_tree(all, missing_toml, all));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains("StepProfile constructor `from_toml_section`"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("benches"), "{}", v[0].msg);
+        assert!(!v.iter().any(|x| x.msg.contains("`builder`")), "{v:?}");
     }
 
     #[test]
@@ -1246,7 +1298,7 @@ mod tests {
         let defs = "pub enum ForwardFormat {\n    Sawb,\n    \
              // tidy-allow: coverage (format still landing)\n    Radix4Tpr,\n}\n";
         let rest = "fn f() { let _ = (Sawb, product_lut, NonFinite, \
-             Scalar, Portable, Avx2, single); }\n";
+             Scalar, Portable, Avx2, single, paper_default, build, from_toml_section); }\n";
         let mut files = coverage_tree(rest, rest, rest);
         files[0] = file("rust/src/coordinator/layer_step.rs", defs);
         assert!(rule_coverage(&files).is_empty());

@@ -2,6 +2,7 @@
 //! the single source of truth the coordinator trains from.
 
 use super::toml::{parse_toml, TomlValue};
+use crate::coordinator::profile::StepProfile;
 use std::collections::BTreeMap;
 
 /// Which model family an experiment trains.
@@ -190,6 +191,10 @@ pub struct RunConfig {
     pub quant: QuantConfig,
     pub train: TrainConfig,
     pub fnt: FntConfig,
+    /// Step-execution profile (`[profile]` section) — format, bits,
+    /// shards, kernel path, noise engine; the same schema serve job
+    /// specs embed. Defaults to [`StepProfile::paper_default`].
+    pub profile: StepProfile,
     /// Output directory for JSONL logs.
     pub out_dir: String,
 }
@@ -209,6 +214,7 @@ impl Default for RunConfig {
             quant: QuantConfig::default(),
             train: TrainConfig::default(),
             fnt: FntConfig::default(),
+            profile: StepProfile::paper_default(),
             out_dir: "runs".into(),
         }
     }
@@ -327,6 +333,13 @@ impl RunConfig {
             check_unknown(t, &used, "fnt")?;
         }
 
+        if let Some(t) = doc.get("profile") {
+            // Delegated wholesale: StepProfile owns its schema (key
+            // validation included), so serve job specs and run configs
+            // cannot drift apart.
+            cfg.profile = StepProfile::from_toml_section(t)?;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -400,6 +413,35 @@ mod tests {
         assert!(cfg.quant.hindsight);
         assert_eq!(cfg.train.steps, 500);
         assert_eq!(cfg.fnt.steps, 100);
+    }
+
+    #[test]
+    fn profile_section_round_trips_through_run_config() {
+        use crate::coordinator::layer_step::ForwardFormat;
+        use crate::hw::qgemm::KernelPath;
+        use crate::rng::NoiseEngine;
+
+        let src = "[profile]\nformat = \"radix4_tpr\"\nbits = 3\nshards = 2\n\
+                   kernel_path = \"portable\"\nnoise_engine = \"philox\"\n";
+        let cfg = RunConfig::from_toml(src).unwrap();
+        assert_eq!(cfg.profile.format(), ForwardFormat::Radix4Tpr);
+        assert_eq!(cfg.profile.bits(), 3);
+        assert_eq!(cfg.profile.shards().n_shards(), 2);
+        assert_eq!(cfg.profile.kernel_path(), Some(KernelPath::Portable));
+        assert_eq!(cfg.profile.noise_engine(), NoiseEngine::Philox);
+
+        // parse → serialize → parse identity through RunConfig.
+        let again = RunConfig::from_toml(&cfg.profile.to_toml()).unwrap();
+        assert_eq!(again.profile, cfg.profile);
+
+        // No [profile] section → paper defaults.
+        assert_eq!(
+            RunConfig::from_toml("name = \"x\"\n").unwrap().profile,
+            StepProfile::paper_default()
+        );
+        // Bad profile values are loud.
+        assert!(RunConfig::from_toml("[profile]\nbits = 9\n").is_err());
+        assert!(RunConfig::from_toml("[profile]\nmystery = 1\n").is_err());
     }
 
     #[test]

@@ -119,6 +119,25 @@ impl Checkpoint {
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         read_verified(path.as_ref())
     }
+
+    /// Serialize to the exact on-disk byte layout without touching the
+    /// filesystem — what serve mode streams to clients as checkpoint
+    /// events. `encode()` then [`Checkpoint::decode`] is a lossless
+    /// round trip, and the bytes are identical to what
+    /// [`Checkpoint::save`] writes.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        encode_into(&mut out, self.step, &self.tensors, self.rng.as_ref())
+            .context("encoding checkpoint")?;
+        Ok(out)
+    }
+
+    /// Parse and fully verify an in-memory checkpoint image — the same
+    /// magic/version/CRC/size validation as [`Checkpoint::load`], so a
+    /// corrupted byte stream is an error, never garbage tensors.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        decode_from(bytes, bytes.len() as u64)
+    }
 }
 
 /// Legacy API (kept for the FNT experiment and the examples): save a bare
@@ -251,6 +270,26 @@ fn render_header(step: u64, tensors: &[HostTensor], rng: Option<&RngState>) -> S
     Json::obj(pairs).render()
 }
 
+/// Write the full checkpoint image (prefix + header + payloads) to any
+/// sink — shared by the atomic file writer and [`Checkpoint::encode`],
+/// so the two byte streams cannot drift apart.
+fn encode_into(
+    f: &mut impl Write,
+    step: u64,
+    tensors: &[HostTensor],
+    rng: Option<&RngState>,
+) -> std::io::Result<()> {
+    let header = render_header(step, tensors, rng);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(&crc32(header.as_bytes()).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in tensors {
+        write_tensor(f, t)?;
+    }
+    Ok(())
+}
+
 fn write_atomic(
     path: &Path,
     step: u64,
@@ -269,19 +308,12 @@ fn write_atomic(
     // The temp file must live in the destination directory: rename(2) is
     // only atomic within one filesystem.
     let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
-    let header = render_header(step, tensors, rng);
 
     let write_all = || -> Result<()> {
         let file = std::fs::File::create(&tmp)
             .with_context(|| format!("creating {}", tmp.display()))?;
         let mut f = std::io::BufWriter::new(file);
-        f.write_all(MAGIC)?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(&crc32(header.as_bytes()).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for t in tensors {
-            write_tensor(&mut f, t)?;
-        }
+        encode_into(&mut f, step, tensors, rng)?;
         f.flush()?;
         // fsync before rename: otherwise the rename can land while the
         // data is still only in the page cache, and a crash yields a
@@ -303,8 +335,14 @@ fn read_verified(path: &Path) -> Result<Checkpoint> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}", path.display()))?;
     let file_len = file.metadata()?.len();
-    let mut f = std::io::BufReader::new(file);
+    decode_from(std::io::BufReader::new(file), file_len)
+}
 
+/// Parse and verify a checkpoint from any byte source whose total
+/// length is known up front — shared by [`Checkpoint::load`] (files)
+/// and [`Checkpoint::decode`] (in-memory images), so both run the
+/// identical magic/version/size/CRC validation chain.
+fn decode_from(mut f: impl Read, file_len: u64) -> Result<Checkpoint> {
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic).context("checkpoint magic: short read")?;
     if &magic == V1_MAGIC {
@@ -647,6 +685,46 @@ mod tests {
         save_with_retry(&ckpt, &path, 3, Duration::from_millis(1)).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap().step, 3);
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn encode_matches_save_bytes_and_decode_round_trips() {
+        let dir = tmpdir("encode");
+        let path = dir.join("t.ckpt");
+        let mut rng = NoiseEngine::Philox.seed_rng(0xE1C0);
+        for _ in 0..5 {
+            NoiseSource::next_u64(&mut rng);
+        }
+        let ckpt = Checkpoint::new(99, sample_tensors()).with_rng(&rng);
+        ckpt.save(&path).unwrap();
+        let bytes = ckpt.encode().unwrap();
+        // The in-memory image is byte-for-byte what save() wrote.
+        assert_eq!(bytes, std::fs::read(&path).unwrap());
+
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back.step, 99);
+        assert_eq!(back.tensors.len(), 3);
+        assert_eq!(back.tensors[0].as_f32().unwrap(), ckpt.tensors[0].as_f32().unwrap());
+        let mut restored = back.rng.as_ref().unwrap().restore().unwrap();
+        for _ in 0..16 {
+            assert_eq!(NoiseSource::next_u64(&mut rng), NoiseSource::next_u64(&mut restored));
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_and_truncated_images() {
+        let bytes = Checkpoint::new(5, sample_tensors()).encode().unwrap();
+        // Truncation at every interesting boundary errors; no panics.
+        for cut in [0, 4, 8, 12, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // A payload bit flip keeps the size valid — only CRC catches it.
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        let err = format!("{:#}", Checkpoint::decode(&flipped).unwrap_err());
+        assert!(err.contains("CRC32 mismatch"), "{err}");
     }
 
     #[test]

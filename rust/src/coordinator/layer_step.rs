@@ -96,6 +96,26 @@ pub enum ForwardFormat {
     Radix4Tpr,
 }
 
+impl ForwardFormat {
+    /// Stable wire/config name, round-tripped by [`Self::from_name`] —
+    /// what `StepProfile` serialization and the serve job spec carry.
+    pub fn name(self) -> &'static str {
+        match self {
+            ForwardFormat::Sawb => "sawb",
+            ForwardFormat::Radix4Tpr => "radix4_tpr",
+        }
+    }
+
+    /// Parse a [`Self::name`] tag (ASCII case-insensitive, trimmed).
+    pub fn from_name(name: &str) -> Option<ForwardFormat> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "sawb" => Some(ForwardFormat::Sawb),
+            "radix4_tpr" => Some(ForwardFormat::Radix4Tpr),
+            _ => None,
+        }
+    }
+}
+
 /// Per-GEMM statistics of one [`QuantizedLayerStep::step`] call.
 #[derive(Clone, Copy, Debug)]
 pub struct LayerStepStats {
@@ -147,6 +167,10 @@ pub struct QuantizedLayerStep<R = Xoshiro256> {
     shape: (usize, usize, usize),
     /// K-sharding for all three GEMMs (default: unsharded).
     shards: ShardConfig,
+    /// Explicit [`KernelPath`] preference for the integer-format GEMMs
+    /// (`None` = runtime auto-detection, the default). Always clamped by
+    /// [`KernelPath::for_gemm`], so every choice stays bit-identical.
+    kernel_path: Option<KernelPath>,
     quant_scratch: QuantScratch<R>,
     gemm_scratch: QgemmScratch,
     /// Partial-sum pool for the sharded backward GEMMs (stays empty on
@@ -193,6 +217,7 @@ fn ensure_u8(buf: &mut Vec<u8>, n: usize) {
 fn backward_gemm(
     lut: &ProductLut,
     nlut: Option<&NibbleLut>,
+    path_pref: Option<KernelPath>,
     a_nib: &[u8],
     packed_b: &[u8],
     m: usize,
@@ -203,17 +228,21 @@ fn backward_gemm(
     shards: ShardConfig,
     partials: &mut Vec<f32>,
 ) {
+    // `None` = the auto-detected path — the historical behavior,
+    // bit-for-bit. An explicit preference is still clamped by
+    // `for_gemm` below / inside the sharded driver.
+    let pref = path_pref.unwrap_or_else(KernelPath::detect);
     if !shards.is_single() {
         // MF-BPROP stays gather-only (Scalar); integer formats pass
         // their nibble LUT so each block re-enters the path dispatch.
-        let path = if nlut.is_some() { KernelPath::detect() } else { KernelPath::Scalar };
+        let path = if nlut.is_some() { pref } else { KernelPath::Scalar };
         qgemm::qgemm_sharded_mt(
             lut, nlut, path, a_nib, packed_b, m, k, n, out, n_threads, shards, partials,
         );
         return;
     }
     if let Some(nlut) = nlut {
-        match KernelPath::detect().for_gemm(k, nlut) {
+        match pref.for_gemm(k, nlut) {
             KernelPath::Scalar => {}
             p => {
                 qgemm::qgemm_nibble_lut_mt(nlut, p, a_nib, packed_b, m, k, n, out, n_threads);
@@ -252,6 +281,7 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
             bits,
             shape: (0, 0, 0),
             shards: ShardConfig::single(),
+            kernel_path: None,
             quant_scratch: QuantScratch::new(),
             gemm_scratch: QgemmScratch::new(),
             shard_partials: Vec::new(),
@@ -279,6 +309,21 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
     /// The step's current K-sharding configuration.
     pub fn shards(&self) -> ShardConfig {
         self.shards
+    }
+
+    /// Pin the integer-format GEMMs to an explicit [`KernelPath`]
+    /// (`None` restores runtime auto-detection, the default). The
+    /// request is always clamped by [`KernelPath::for_gemm`], so this
+    /// never changes results — only which bit-identical engine runs.
+    /// This is how a `StepProfile` kernel-path preference reaches the
+    /// step.
+    pub fn set_kernel_path(&mut self, path: Option<KernelPath>) {
+        self.kernel_path = path;
+    }
+
+    /// The step's current kernel-path preference (`None` = auto).
+    pub fn kernel_path(&self) -> Option<KernelPath> {
+        self.kernel_path
     }
 
     /// Run one full quantized layer step.
@@ -340,9 +385,13 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
         );
 
         // --- forward GEMM: Y = A·Wᵀ through the INT4×INT4 LUT ----------
+        // `None` preference resolves to the detected path — exactly what
+        // the auto wrappers do, so the default is the historical
+        // dispatch bit-for-bit.
+        let fwd_path = self.kernel_path.unwrap_or_else(KernelPath::detect);
         ensure_f32(&mut self.y, batch * d_out);
         if self.shards.is_single() {
-            qgemm::qgemm_int4_mt_with(
+            qgemm::qgemm_int4_mt_with_path(
                 &self.a_packed,
                 &self.w_packed,
                 batch,
@@ -351,9 +400,10 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
                 &mut self.y,
                 n_threads,
                 &mut self.gemm_scratch,
+                fwd_path,
             );
         } else {
-            qgemm::qgemm_int4_sharded_mt_with(
+            qgemm::qgemm_int4_sharded_mt_with_path(
                 &self.a_packed,
                 &self.w_packed,
                 batch,
@@ -362,6 +412,7 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
                 &mut self.y,
                 n_threads,
                 &mut self.gemm_scratch,
+                fwd_path,
                 self.shards,
             );
         }
@@ -463,6 +514,7 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
         backward_gemm(
             lut,
             nlut,
+            self.kernel_path,
             &self.wt_nib,
             &self.g_packed,
             d_in,
@@ -485,6 +537,7 @@ impl<R: NoiseSource> QuantizedLayerStep<R> {
         backward_gemm(
             lut,
             nlut,
+            self.kernel_path,
             &self.at_nib,
             &self.gt_packed,
             d_in,
@@ -820,6 +873,66 @@ mod tests {
                     }
                     for (g, w) in step.dw_t().iter().zip(dw.iter()) {
                         assert_eq!(g.to_bits(), w.to_bits(), "dw threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// `ForwardFormat` wire names round-trip — the tags `StepProfile`
+    /// serialization and the serve job spec carry.
+    #[test]
+    fn forward_format_names_round_trip() {
+        for f in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+            assert_eq!(ForwardFormat::from_name(f.name()), Some(f));
+        }
+        assert_eq!(ForwardFormat::from_name(" SAWB "), Some(ForwardFormat::Sawb));
+        assert_eq!(ForwardFormat::from_name("Radix4_TPR"), Some(ForwardFormat::Radix4Tpr));
+        assert_eq!(ForwardFormat::from_name("fp32"), None);
+    }
+
+    /// An explicit kernel-path preference never changes results: every
+    /// available path — and the `None` auto default — produces the same
+    /// bits in both formats. The `for_gemm` clamp guarantees this;
+    /// pinned here because `StepProfile` exposes the preference to
+    /// config files and serve job specs.
+    #[test]
+    fn kernel_path_preference_is_bit_identical() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0x56);
+        let (batch, d_in, d_out) = (6usize, 14, 9);
+        let (acts, wts, grads) = random_layer(&mut data_rng, batch, d_in, d_out);
+        for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+            let mut prefs: Vec<Option<KernelPath>> = vec![None];
+            prefs.extend(KernelPath::available().iter().copied().map(Some));
+            let mut want: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+            for pref in prefs {
+                let mut step = QuantizedLayerStep::with_format(
+                    LogQuantConfig::luq(LogFormat::FP4),
+                    BITS,
+                    format,
+                );
+                step.set_kernel_path(pref);
+                assert_eq!(step.kernel_path(), pref);
+                let mut rng = Xoshiro256::seed_from_u64(7);
+                step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 2);
+                match &want {
+                    None => {
+                        want = Some((
+                            step.y().to_vec(),
+                            step.dx_t().to_vec(),
+                            step.dw_t().to_vec(),
+                        ))
+                    }
+                    Some((y, dx, dw)) => {
+                        for (g, w) in step.y().iter().zip(y.iter()) {
+                            assert_eq!(g.to_bits(), w.to_bits(), "y {format:?} {pref:?}");
+                        }
+                        for (g, w) in step.dx_t().iter().zip(dx.iter()) {
+                            assert_eq!(g.to_bits(), w.to_bits(), "dx {format:?} {pref:?}");
+                        }
+                        for (g, w) in step.dw_t().iter().zip(dw.iter()) {
+                            assert_eq!(g.to_bits(), w.to_bits(), "dw {format:?} {pref:?}");
+                        }
                     }
                 }
             }

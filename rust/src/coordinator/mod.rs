@@ -10,14 +10,18 @@ pub mod checkpoint;
 pub mod experiments;
 pub mod layer_step;
 pub mod model_step;
+pub mod profile;
 pub mod qgemm_path;
 pub mod schedule;
+pub mod serve;
 pub mod supervisor;
 pub mod trainer;
 
 pub use checkpoint::{Checkpoint, RngState};
 pub use layer_step::{ForwardFormat, Fp32LayerStep, LayerStepStats, QuantizedLayerStep};
 pub use model_step::{ModelLayerInput, ModelStep};
+pub use profile::{StepProfile, StepProfileBuilder};
+pub use serve::{JobEvent, JobHandle, JobKind, JobSpec, JobSummary, Server, ServerOptions, SubmitError};
 pub use qgemm_path::QgemmPath;
 pub use schedule::{FntSchedule, LrSchedule, StepDecay};
 pub use supervisor::{

@@ -32,6 +32,7 @@
 use std::sync::Mutex;
 
 use super::layer_step::{ForwardFormat, LayerStepStats, QuantizedLayerStep};
+use super::profile::StepProfile;
 use crate::hw::qgemm::ShardConfig;
 use crate::quant::{LogQuantConfig, QuantStats};
 use crate::rng::{NoiseSource, Xoshiro256};
@@ -93,6 +94,22 @@ impl<R: NoiseSource + Send + Sync> ModelStep<R> {
     pub fn from_steps(steps: Vec<QuantizedLayerStep<R>>) -> ModelStep<R> {
         let stats = steps.iter().map(|_| empty_stats()).collect();
         ModelStep { steps, stats, shards: ShardConfig::single() }
+    }
+
+    /// `n_layers` identical layers, each built from one [`StepProfile`]
+    /// session config — format, bit width, K-sharding, and kernel-path
+    /// preference all come from the profile, so a serve-mode job spec
+    /// (or a `[profile]` TOML section) maps onto a model step without
+    /// any per-knob plumbing.
+    pub fn from_profile(
+        profile: &StepProfile,
+        grad_cfg: LogQuantConfig,
+        n_layers: usize,
+    ) -> ModelStep<R> {
+        let mut model =
+            ModelStep::from_steps((0..n_layers).map(|_| profile.layer_step(grad_cfg)).collect());
+        model.shards = profile.shards();
+        model
     }
 
     /// Route every layer's GEMMs through the given K-sharding
@@ -324,6 +341,48 @@ mod tests {
                 {
                     assert_eq!(g.to_bits(), w.to_bits(), "sharded layer {i} t={n_threads}");
                 }
+            }
+        }
+    }
+
+    /// A profile-built model step is bit-identical to the hand-wired
+    /// equivalent (`new` + `set_shards`) and records the profile's
+    /// knobs on every layer.
+    #[test]
+    fn profile_built_model_step_matches_hand_wired() {
+        let shapes = [(5usize, 18usize, 7usize), (6, 12, 9)];
+        let mut data_rng = Xoshiro256::seed_from_u64(0x73);
+        let data = layer_inputs(&mut data_rng, &shapes);
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        let base = Xoshiro256::seed_from_u64(0xB3);
+        let shards = ShardConfig::with_shards(2);
+        let profile = StepProfile::builder()
+            .format(ForwardFormat::Radix4Tpr)
+            .shards(shards)
+            .build()
+            .expect("valid profile");
+
+        let formats = [ForwardFormat::Radix4Tpr; 2];
+        let mut want = ModelStep::<Xoshiro256>::new(cfg, BITS, &formats);
+        want.set_shards(shards);
+        want.step(&inputs_of(&data, &shapes), &base, 4);
+
+        let mut got = ModelStep::<Xoshiro256>::from_profile(&profile, cfg, shapes.len());
+        assert_eq!(got.n_layers(), shapes.len());
+        assert_eq!(got.shards(), shards);
+        got.step(&inputs_of(&data, &shapes), &base, 4);
+        for i in 0..shapes.len() {
+            assert_eq!(got.layer(i).format, ForwardFormat::Radix4Tpr);
+            assert_eq!(got.layer(i).shards(), shards);
+            for (g, w) in got
+                .layer(i)
+                .y()
+                .iter()
+                .chain(got.layer(i).dx_t())
+                .chain(got.layer(i).dw_t())
+                .zip(want.layer(i).y().iter().chain(want.layer(i).dx_t()).chain(want.layer(i).dw_t()))
+            {
+                assert_eq!(g.to_bits(), w.to_bits(), "profile layer {i}");
             }
         }
     }

@@ -1,0 +1,400 @@
+//! `StepProfile` — the single serializable session-config surface.
+//!
+//! Before this module, a training session's execution knobs were
+//! scattered: the gradient pipeline ([`ForwardFormat`]) was a per-call
+//! argument, K-sharding ([`ShardConfig`]) a trainer option plus a
+//! per-step setter, the kernel path an env var, and the noise engine
+//! another trainer option. A `StepProfile` bundles all four — plus the
+//! forward bit width — into one validated, copyable value that
+//! round-trips through the `[profile]` TOML section
+//! ([`StepProfile::to_toml`] / [`StepProfile::from_toml_section`]), so
+//! CLI runs (`config::run::RunConfig`) and serve jobs
+//! (`coordinator::serve::JobSpec`) share one schema.
+//!
+//! Construction points (all exercised by the conformance harness, the
+//! benches, and the fault suite — enforced by tidy's coverage rule):
+//!
+//! * [`StepProfile::paper_default`] — the paper's configuration: SAWB
+//!   INT4 forward + LUQ FP4 gradients, 4 bits, unsharded, auto kernel
+//!   path, xoshiro noise.
+//! * [`StepProfileBuilder::build`] — validated explicit construction
+//!   (`StepProfile::builder()`).
+//! * [`StepProfile::from_toml_section`] — the `[profile]` deserializer
+//!   (unknown keys and malformed values are loud errors, matching
+//!   `config::run`).
+//!
+//! A profile *applies* to execution through
+//! [`StepProfile::layer_step`], which builds a fully configured
+//! [`QuantizedLayerStep`] — the one construction point
+//! `Trainer::layer_step_with` and `ModelStep::from_profile` route
+//! through. Every knob is bit-safe by construction: the kernel-path
+//! preference is always clamped by `KernelPath::for_gemm`, and the
+//! default profile reproduces the historical trainer behavior
+//! bit-for-bit (regression-tested in `trainer.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::config::toml::TomlValue;
+use crate::hw::qgemm::{parse_kernel_path, KernelPath, ShardConfig};
+use crate::quant::LogQuantConfig;
+use crate::rng::{NoiseEngine, NoiseSource};
+
+use super::layer_step::{ForwardFormat, QuantizedLayerStep};
+
+/// One session's complete step-execution configuration. Copyable,
+/// comparable, serializable — the value a serve job spec, a TOML config
+/// and a trainer all agree on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepProfile {
+    format: ForwardFormat,
+    bits: u32,
+    shards: ShardConfig,
+    kernel_path: Option<KernelPath>,
+    noise_engine: NoiseEngine,
+}
+
+impl Default for StepProfile {
+    fn default() -> Self {
+        StepProfile::paper_default()
+    }
+}
+
+impl StepProfile {
+    /// The paper's configuration: SAWB INT4 forward + LUQ FP4 gradients
+    /// at 4 bits, unsharded (the strongest determinism tier), runtime
+    /// kernel-path auto-detection, xoshiro noise (the PR 3/4 streams
+    /// bit-for-bit).
+    pub fn paper_default() -> StepProfile {
+        StepProfile {
+            format: ForwardFormat::Sawb,
+            bits: 4,
+            shards: ShardConfig::single(),
+            kernel_path: None,
+            noise_engine: NoiseEngine::default(),
+        }
+    }
+
+    /// Start a builder from the paper defaults.
+    pub fn builder() -> StepProfileBuilder {
+        StepProfileBuilder { profile: StepProfile::paper_default() }
+    }
+
+    /// The gradient pipeline this profile runs.
+    pub fn format(&self) -> ForwardFormat {
+        self.format
+    }
+
+    /// Forward INT width (2..=4; 4 in the paper).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// K-sharding for all three GEMMs.
+    pub fn shards(&self) -> ShardConfig {
+        self.shards
+    }
+
+    /// Kernel-path preference (`None` = runtime auto-detection).
+    pub fn kernel_path(&self) -> Option<KernelPath> {
+        self.kernel_path
+    }
+
+    /// The noise engine driving stochastic quantization.
+    pub fn noise_engine(&self) -> NoiseEngine {
+        self.noise_engine
+    }
+
+    /// Build a fully configured [`QuantizedLayerStep`] — **the** profile
+    /// application point. `grad_cfg` stays a parameter because it is
+    /// per-layer state (hindsight scales evolve during training), not
+    /// session config.
+    pub fn layer_step<R: NoiseSource>(&self, grad_cfg: LogQuantConfig) -> QuantizedLayerStep<R> {
+        let mut step = QuantizedLayerStep::with_format(grad_cfg, self.bits, self.format);
+        step.set_shards(self.shards);
+        step.set_kernel_path(self.kernel_path);
+        step
+    }
+
+    /// Parse the `[profile]` TOML section, starting from the paper
+    /// defaults; unknown keys and malformed values are errors (matching
+    /// `config::run`'s strictness). Inverse of [`Self::to_toml`].
+    pub fn from_toml_section(
+        table: &BTreeMap<String, TomlValue>,
+    ) -> Result<StepProfile, String> {
+        let mut b = StepProfile::builder();
+        let mut used: Vec<&str> = Vec::new();
+        if let Some(v) = table.get("format") {
+            used.push("format");
+            let s = v.as_str().ok_or("profile `format` must be a string")?;
+            let f = ForwardFormat::from_name(s)
+                .ok_or_else(|| format!("unknown profile format `{s}` (known: sawb radix4_tpr)"))?;
+            b = b.format(f);
+        }
+        if let Some(v) = table.get("bits") {
+            used.push("bits");
+            let n = v.as_int().ok_or("profile `bits` must be an integer")?;
+            if !(2..=4).contains(&n) {
+                return Err(format!("profile `bits` must be in 2..=4, got {n}"));
+            }
+            b = b.bits(n as u32);
+        }
+        if let Some(v) = table.get("shards") {
+            used.push("shards");
+            let n = v.as_int().ok_or("profile `shards` must be an integer")?;
+            if n < 1 {
+                return Err(format!("profile `shards` must be >= 1, got {n}"));
+            }
+            b = b.shards(ShardConfig::with_shards(n as usize));
+        }
+        if let Some(v) = table.get("kernel_path") {
+            used.push("kernel_path");
+            let s = v.as_str().ok_or("profile `kernel_path` must be a string")?;
+            let p = parse_kernel_path(s).ok_or_else(|| {
+                format!("unknown profile kernel_path `{s}` (known: auto scalar portable avx2)")
+            })?;
+            b = b.kernel_path(p);
+        }
+        if let Some(v) = table.get("noise_engine") {
+            used.push("noise_engine");
+            let s = v.as_str().ok_or("profile `noise_engine` must be a string")?;
+            let e = NoiseEngine::from_name(s.trim())
+                .ok_or_else(|| format!("unknown profile noise_engine `{s}` (known: xoshiro philox)"))?;
+            b = b.noise_engine(e);
+        }
+        for k in table.keys() {
+            if !used.contains(&k.as_str()) {
+                return Err(format!("unknown key `{k}` in section [profile]"));
+            }
+        }
+        b.build()
+    }
+
+    /// Render the `[profile]` TOML section this profile parses back
+    /// from — the parse → serialize → parse identity is pinned by
+    /// `profile_toml_round_trips`.
+    pub fn to_toml(&self) -> String {
+        let path = match self.kernel_path {
+            None => "auto",
+            Some(p) => p.label(),
+        };
+        format!(
+            "[profile]\nformat = \"{}\"\nbits = {}\nshards = {}\nkernel_path = \"{}\"\nnoise_engine = \"{}\"\n",
+            self.format.name(),
+            self.bits,
+            self.shards.n_shards(),
+            path,
+            self.noise_engine.name(),
+        )
+    }
+}
+
+/// Validated construction of a [`StepProfile`], starting from the paper
+/// defaults. Setters are chainable; [`Self::build`] checks the
+/// invariants that cannot be encoded in the field types.
+#[derive(Clone, Copy, Debug)]
+pub struct StepProfileBuilder {
+    profile: StepProfile,
+}
+
+impl StepProfileBuilder {
+    /// Select the gradient pipeline.
+    pub fn format(mut self, format: ForwardFormat) -> Self {
+        self.profile.format = format;
+        self
+    }
+
+    /// Forward INT width (validated to 2..=4 by [`Self::build`]).
+    pub fn bits(mut self, bits: u32) -> Self {
+        self.profile.bits = bits;
+        self
+    }
+
+    /// K-sharding for all three GEMMs.
+    pub fn shards(mut self, shards: ShardConfig) -> Self {
+        self.profile.shards = shards;
+        self
+    }
+
+    /// Kernel-path preference (`None` = auto-detect at runtime).
+    pub fn kernel_path(mut self, path: Option<KernelPath>) -> Self {
+        self.profile.kernel_path = path;
+        self
+    }
+
+    /// The noise engine driving stochastic quantization.
+    pub fn noise_engine(mut self, engine: NoiseEngine) -> Self {
+        self.profile.noise_engine = engine;
+        self
+    }
+
+    /// Validate and produce the profile. The only invariant the types
+    /// cannot carry is the packed-nibble bit-width bound — everything
+    /// else (shard clamp, path clamp) is enforced where it applies.
+    pub fn build(self) -> Result<StepProfile, String> {
+        if !(2..=4).contains(&self.profile.bits) {
+            return Err(format!(
+                "StepProfile bits must be in 2..=4 (packed-nibble forward emission), got {}",
+                self.profile.bits
+            ));
+        }
+        Ok(self.profile)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml::parse_toml;
+    use crate::quant::LogFormat;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn paper_default_is_the_paper_configuration() {
+        let p = StepProfile::paper_default();
+        assert_eq!(p.format(), ForwardFormat::Sawb);
+        assert_eq!(p.bits(), 4);
+        assert!(p.shards().is_single());
+        assert_eq!(p.kernel_path(), None);
+        assert_eq!(p.noise_engine(), NoiseEngine::Xoshiro);
+        assert_eq!(StepProfile::default(), p);
+    }
+
+    #[test]
+    fn builder_round_trips_every_knob() {
+        let p = StepProfile::builder()
+            .format(ForwardFormat::Radix4Tpr)
+            .bits(3)
+            .shards(ShardConfig::with_shards(4))
+            .kernel_path(Some(KernelPath::Portable))
+            .noise_engine(NoiseEngine::Philox)
+            .build()
+            .unwrap();
+        assert_eq!(p.format(), ForwardFormat::Radix4Tpr);
+        assert_eq!(p.bits(), 3);
+        assert_eq!(p.shards().n_shards(), 4);
+        assert_eq!(p.kernel_path(), Some(KernelPath::Portable));
+        assert_eq!(p.noise_engine(), NoiseEngine::Philox);
+    }
+
+    #[test]
+    fn builder_rejects_out_of_range_bits() {
+        assert!(StepProfile::builder().bits(1).build().is_err());
+        assert!(StepProfile::builder().bits(5).build().is_err());
+        assert!(StepProfile::builder().bits(2).build().is_ok());
+    }
+
+    fn profile_section(src: &str) -> BTreeMap<String, TomlValue> {
+        parse_toml(src).unwrap().remove("profile").unwrap()
+    }
+
+    #[test]
+    fn profile_toml_round_trips() {
+        // Parse → serialize → parse is the identity for every knob
+        // combination, including the non-default corners.
+        let profiles = [
+            StepProfile::paper_default(),
+            StepProfile::builder()
+                .format(ForwardFormat::Radix4Tpr)
+                .bits(2)
+                .shards(ShardConfig::with_shards(4))
+                .kernel_path(Some(KernelPath::Avx2))
+                .noise_engine(NoiseEngine::Philox)
+                .build()
+                .unwrap(),
+            StepProfile::builder()
+                .kernel_path(Some(KernelPath::Scalar))
+                .shards(ShardConfig::with_shards(2))
+                .build()
+                .unwrap(),
+        ];
+        for p in profiles {
+            let toml = p.to_toml();
+            let section = profile_section(&toml);
+            let back = StepProfile::from_toml_section(&section).unwrap();
+            assert_eq!(back, p, "round trip changed the profile:\n{toml}");
+            // And serialization is stable: a second trip is byte-equal.
+            assert_eq!(back.to_toml(), toml);
+        }
+    }
+
+    #[test]
+    fn toml_section_starts_from_defaults() {
+        let section = profile_section("[profile]\nformat = \"radix4_tpr\"\n");
+        let p = StepProfile::from_toml_section(&section).unwrap();
+        assert_eq!(p.format(), ForwardFormat::Radix4Tpr);
+        assert_eq!(p.bits(), 4);
+        assert!(p.shards().is_single());
+    }
+
+    #[test]
+    fn toml_section_rejects_bad_values() {
+        for src in [
+            "[profile]\nformat = \"fp32\"\n",
+            "[profile]\nbits = 9\n",
+            "[profile]\nbits = \"four\"\n",
+            "[profile]\nshards = 0\n",
+            "[profile]\nkernel_path = \"sse9\"\n",
+            "[profile]\nnoise_engine = \"mt19937\"\n",
+            "[profile]\nunknown_knob = 1\n",
+        ] {
+            let section = profile_section(src);
+            assert!(StepProfile::from_toml_section(&section).is_err(), "accepted: {src}");
+        }
+    }
+
+    /// The API-redesign regression gate: a profile-built step is
+    /// bit-identical to the legacy construction
+    /// (`QuantizedLayerStep::with_format` + `set_shards`) that
+    /// `Trainer::quantized_layer_step` used before the redesign — for
+    /// both formats and both determinism tiers.
+    #[test]
+    fn profile_step_bit_matches_legacy_construction() {
+        let mut data_rng = Xoshiro256::seed_from_u64(0xA11CE);
+        let (batch, d_in, d_out) = (5usize, 12, 7);
+        let acts: Vec<f32> = (0..batch * d_in).map(|_| data_rng.normal_ms_f32(0.0, 1.0)).collect();
+        let wts: Vec<f32> = (0..d_out * d_in).map(|_| data_rng.normal_ms_f32(0.0, 0.5)).collect();
+        let grads: Vec<f32> =
+            (0..batch * d_out).map(|_| data_rng.signed_lognormal_f32(0.0, 2.0)).collect();
+        let cfg = LogQuantConfig::luq(LogFormat::FP4);
+        for format in [ForwardFormat::Sawb, ForwardFormat::Radix4Tpr] {
+            for shards in [ShardConfig::single(), ShardConfig::with_shards(2)] {
+                let mut legacy: QuantizedLayerStep<Xoshiro256> =
+                    QuantizedLayerStep::with_format(cfg, 4, format);
+                legacy.set_shards(shards);
+                let mut rng = Xoshiro256::seed_from_u64(11);
+                legacy.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 2);
+
+                let profile =
+                    StepProfile::builder().format(format).shards(shards).build().unwrap();
+                let mut step: QuantizedLayerStep<Xoshiro256> = profile.layer_step(cfg);
+                let mut rng = Xoshiro256::seed_from_u64(11);
+                step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut rng, 2);
+
+                for (g, w) in step.y().iter().zip(legacy.y().iter()) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "y {format:?} {shards:?}");
+                }
+                for (g, w) in step.dx_t().iter().zip(legacy.dx_t().iter()) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "dx {format:?} {shards:?}");
+                }
+                for (g, w) in step.dw_t().iter().zip(legacy.dw_t().iter()) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "dw {format:?} {shards:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_step_applies_every_knob() {
+        let p = StepProfile::builder()
+            .format(ForwardFormat::Radix4Tpr)
+            .shards(ShardConfig::with_shards(2))
+            .kernel_path(Some(KernelPath::Scalar))
+            .build()
+            .unwrap();
+        let step: QuantizedLayerStep<Xoshiro256> =
+            p.layer_step(LogQuantConfig::luq(LogFormat::FP4));
+        assert_eq!(step.format, ForwardFormat::Radix4Tpr);
+        assert_eq!(step.shards().n_shards(), 2);
+        assert_eq!(step.kernel_path(), Some(KernelPath::Scalar));
+    }
+}

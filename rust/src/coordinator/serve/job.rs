@@ -1,0 +1,646 @@
+//! Job specs, event streams, and the pure job engine.
+//!
+//! A [`JobSpec`] is a complete, self-contained description of one
+//! tenant's training (or eval) run: synthetic multi-layer shapes, step
+//! count, learning rate, checkpoint cadence, a seed, a job id, and a
+//! [`StepProfile`] carrying every execution knob. [`run_job`] executes a
+//! spec as a **pure function of the spec alone** — no ambient state, no
+//! env vars, no wall clock — which is what makes the serve-mode
+//! determinism contract testable: replaying a spec standalone is
+//! bit-identical to its execution inside a busy multi-tenant server.
+//!
+//! **Per-job randomness.** Every stream a job consumes derives from one
+//! root: `profile.noise_engine().seed_rng(seed).fork(job_id)`. Purpose
+//! streams then fork from that root under disjoint namespace tags
+//! ([`NS_NOISE`]`|step`, [`NS_DATA`]`|step`, [`NS_INIT`]`|layer`), and
+//! [`NoiseSource::fork`] never advances its base — so no ordering of
+//! jobs, workers, or steps can shift any stream, and two jobs differing
+//! only in `job_id` draw statistically independent noise.
+
+use std::sync::mpsc::Sender;
+
+use crate::config::toml::{parse_toml, TomlValue};
+use crate::coordinator::checkpoint::{crc32, Checkpoint};
+use crate::coordinator::model_step::{ModelLayerInput, ModelStep};
+use crate::coordinator::profile::StepProfile;
+use crate::quant::{LogFormat, LogQuantConfig};
+use crate::rng::{EngineRng, NoiseSource};
+use crate::runtime::HostTensor;
+
+/// Namespace tag for step noise streams (stochastic quantization).
+const NS_NOISE: u64 = 1 << 32;
+/// Namespace tag for step data streams (synthetic batch + gradients).
+const NS_DATA: u64 = 2 << 32;
+/// Namespace tag for per-layer weight-init streams.
+const NS_INIT: u64 = 3 << 32;
+
+/// What a submitted job does each step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// Full quantized step + SGD weight update.
+    Train,
+    /// Forward/backward metrics only; weights stay at their init.
+    Eval,
+}
+
+impl JobKind {
+    /// Stable lower-case tag (job TOML, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Train => "train",
+            JobKind::Eval => "eval",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn from_name(name: &str) -> Option<JobKind> {
+        match name {
+            "train" => Some(JobKind::Train),
+            "eval" => Some(JobKind::Eval),
+            _ => None,
+        }
+    }
+}
+
+/// One tenant's complete job description — the unit of admission. The
+/// execution knobs live in the embedded [`StepProfile`]; everything
+/// else is workload shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Tenant-chosen identity; keys the job's noise fork, so replaying
+    /// the same id reproduces the same bits.
+    pub job_id: u64,
+    pub kind: JobKind,
+    /// The session execution profile (format, bits, shards, kernel
+    /// path, noise engine).
+    pub profile: StepProfile,
+    /// Per-layer `(batch, d_in, d_out)` shapes.
+    pub layers: Vec<(usize, usize, usize)>,
+    /// Optimizer steps to run (>= 1).
+    pub steps: usize,
+    /// SGD learning rate ([`JobKind::Train`] only).
+    pub lr: f32,
+    /// Emit a checkpoint event every N steps (0 = final only; the final
+    /// step always checkpoints).
+    pub checkpoint_every: usize,
+    /// Server-level base seed; the job stream is `seed` forked by
+    /// `job_id`.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// A train job with paper-default profile and conservative knobs.
+    pub fn new(job_id: u64, layers: Vec<(usize, usize, usize)>) -> JobSpec {
+        JobSpec {
+            job_id,
+            kind: JobKind::Train,
+            profile: StepProfile::paper_default(),
+            layers,
+            steps: 1,
+            lr: 0.05,
+            checkpoint_every: 0,
+            seed: 1,
+        }
+    }
+
+    /// Admission-time validation — the server rejects bad specs with
+    /// [`super::SubmitError::Invalid`] instead of panicking a worker.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("job needs at least one layer".into());
+        }
+        for (i, &(batch, d_in, d_out)) in self.layers.iter().enumerate() {
+            if batch == 0 || d_in == 0 || d_out == 0 {
+                return Err(format!(
+                    "layer {i}: dims must be positive, got {batch}x{d_in}x{d_out}"
+                ));
+            }
+            let ok = batch.checked_mul(d_in).is_some()
+                && d_in.checked_mul(d_out).is_some()
+                && batch.checked_mul(d_out).is_some();
+            if !ok {
+                return Err(format!("layer {i}: shape product overflows"));
+            }
+        }
+        if self.steps == 0 {
+            return Err("job `steps` must be >= 1".into());
+        }
+        if !self.lr.is_finite() {
+            return Err(format!("job `lr` must be finite, got {}", self.lr));
+        }
+        Ok(())
+    }
+
+    /// Parse a job TOML: a `[job]` section (shape/workload) plus an
+    /// optional `[profile]` section deserialized directly by
+    /// [`StepProfile::from_toml_section`] — the same schema
+    /// `config::run` uses, so a CLI run config's profile block drops
+    /// into a serve job unchanged. Unknown sections, unknown keys and
+    /// malformed values are loud errors.
+    pub fn from_toml(src: &str) -> Result<JobSpec, String> {
+        let doc = parse_toml(src)?;
+        for (section, table) in &doc {
+            match section.as_str() {
+                "job" | "profile" => {}
+                "" => {
+                    if let Some(k) = table.keys().next() {
+                        return Err(format!("unknown top-level key `{k}` in job spec"));
+                    }
+                }
+                other => return Err(format!("unknown section [{other}] in job spec")),
+            }
+        }
+        let mut spec = JobSpec::new(0, Vec::new());
+        if let Some(profile) = doc.get("profile") {
+            spec.profile = StepProfile::from_toml_section(profile)?;
+        }
+        let job = doc.get("job").ok_or("job spec needs a [job] section")?;
+        let mut used: Vec<&str> = Vec::new();
+        if let Some(v) = job.get("id") {
+            used.push("id");
+            let n = v.as_int().ok_or("job `id` must be an integer")?;
+            if n < 0 {
+                return Err(format!("job `id` must be >= 0, got {n}"));
+            }
+            spec.job_id = n as u64;
+        }
+        if let Some(v) = job.get("kind") {
+            used.push("kind");
+            let s = v.as_str().ok_or("job `kind` must be a string")?;
+            spec.kind = JobKind::from_name(s)
+                .ok_or_else(|| format!("unknown job kind `{s}` (known: train eval)"))?;
+        }
+        if let Some(v) = job.get("steps") {
+            used.push("steps");
+            let n = v.as_int().ok_or("job `steps` must be an integer")?;
+            if n < 1 {
+                return Err(format!("job `steps` must be >= 1, got {n}"));
+            }
+            spec.steps = n as usize;
+        }
+        if let Some(v) = job.get("lr") {
+            used.push("lr");
+            spec.lr = v.as_float().ok_or("job `lr` must be a number")? as f32;
+        }
+        if let Some(v) = job.get("checkpoint_every") {
+            used.push("checkpoint_every");
+            let n = v.as_int().ok_or("job `checkpoint_every` must be an integer")?;
+            if n < 0 {
+                return Err(format!("job `checkpoint_every` must be >= 0, got {n}"));
+            }
+            spec.checkpoint_every = n as usize;
+        }
+        if let Some(v) = job.get("seed") {
+            used.push("seed");
+            let n = v.as_int().ok_or("job `seed` must be an integer")?;
+            if n < 0 {
+                return Err(format!("job `seed` must be >= 0, got {n}"));
+            }
+            spec.seed = n as u64;
+        }
+        if let Some(v) = job.get("layers") {
+            used.push("layers");
+            let TomlValue::Array(items) = v else {
+                return Err("job `layers` must be an array of integers".into());
+            };
+            let dims = items
+                .iter()
+                .map(|i| {
+                    i.as_int().filter(|&d| d > 0).map(|d| d as usize).ok_or_else(|| {
+                        "job `layers` entries must be positive integers".to_string()
+                    })
+                })
+                .collect::<Result<Vec<usize>, String>>()?;
+            if dims.is_empty() || dims.len() % 3 != 0 {
+                return Err(format!(
+                    "job `layers` must be a non-empty flat list of (batch, d_in, d_out) \
+                     triples; got {} entries",
+                    dims.len()
+                ));
+            }
+            spec.layers = dims.chunks_exact(3).map(|c| (c[0], c[1], c[2])).collect();
+        }
+        for k in job.keys() {
+            if !used.contains(&k.as_str()) {
+                return Err(format!("unknown key `{k}` in section [job]"));
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One message on a job's event stream, in emission order: a `Step`
+/// per optimizer step, a `Checkpoint` at the configured cadence (and
+/// always after the final step), then exactly one terminal `Done` (or
+/// `Failed`).
+#[derive(Clone, Debug)]
+pub enum JobEvent {
+    /// Per-step metrics (deterministic: sequential f64 accumulation).
+    Step {
+        step: usize,
+        /// Mean squared forward output across all layers.
+        loss: f32,
+        /// L2 norm of all weight gradients.
+        grad_norm: f32,
+    },
+    /// A full checkpoint image ([`Checkpoint::encode`] bytes) after
+    /// `step` optimizer steps — decodable by [`Checkpoint::decode`].
+    Checkpoint { step: usize, bytes: Vec<u8> },
+    /// Terminal: the job could not run to completion.
+    Failed { error: String },
+    /// Terminal: the job finished; summary mirrors the event stream.
+    Done(JobSummary),
+}
+
+/// Completion record for one job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobSummary {
+    pub job_id: u64,
+    pub kind: JobKind,
+    pub steps_run: usize,
+    /// Last step's loss, as raw bits (u32) so summaries compare
+    /// bit-exactly without float-equality footguns.
+    pub final_loss_bits: u32,
+    /// CRC32 of the final checkpoint image — a cheap bit-identity
+    /// fingerprint for replay verification.
+    pub checkpoint_crc32: u32,
+}
+
+impl JobSummary {
+    /// The last step's loss as a float (lossless: stored as bits).
+    pub fn final_loss(&self) -> f32 {
+        f32::from_bits(self.final_loss_bits)
+    }
+}
+
+/// Per-worker reusable staging: weight/activation/gradient buffers,
+/// re-sliced per job so repeated jobs on one worker stop allocating
+/// once shapes stabilize. Reuse is bit-safe because every buffer is
+/// fully overwritten before each use.
+#[derive(Default)]
+pub(super) struct JobScratch {
+    weights: Vec<Vec<f32>>,
+    acts: Vec<Vec<f32>>,
+    grads: Vec<Vec<f32>>,
+}
+
+impl JobScratch {
+    fn reserve_layers(&mut self, n: usize) {
+        self.weights.resize_with(n.max(self.weights.len()), Vec::new);
+        self.acts.resize_with(n.max(self.acts.len()), Vec::new);
+        self.grads.resize_with(n.max(self.grads.len()), Vec::new);
+    }
+}
+
+/// The gradient quantization config serve jobs run — the paper's LUQ
+/// FP4 pipeline. Per-layer hindsight state is trainer territory; serve
+/// jobs are stateless between submissions.
+fn grad_cfg() -> LogQuantConfig {
+    LogQuantConfig::luq(LogFormat::FP4)
+}
+
+/// Initialize layer `i`'s weights from the job's `NS_INIT` stream:
+/// uniform in [-0.1, 0.1), fully overwriting the buffer.
+fn init_weights(job_rng: &EngineRng, layer: usize, d_in: usize, d_out: usize, w: &mut Vec<f32>) {
+    w.resize(d_out * d_in, 0.0);
+    let mut rng = job_rng.fork(NS_INIT | layer as u64);
+    rng.fill_uniform(w);
+    for v in w.iter_mut() {
+        *v = (*v - 0.5) * 0.2;
+    }
+}
+
+/// Fill one step's synthetic batch: activations in [-1, 1), output
+/// gradients in [-0.5, 0.5), all layers drawn sequentially from the
+/// step's `NS_DATA` stream (a fixed order, so deterministic).
+fn fill_step_data(
+    job_rng: &EngineRng,
+    step: usize,
+    layers: &[(usize, usize, usize)],
+    acts: &mut [Vec<f32>],
+    grads: &mut [Vec<f32>],
+) {
+    let mut rng = job_rng.fork(NS_DATA | step as u64);
+    for (i, &(batch, d_in, d_out)) in layers.iter().enumerate() {
+        acts[i].resize(batch * d_in, 0.0);
+        rng.fill_uniform(&mut acts[i]);
+        for v in acts[i].iter_mut() {
+            *v = *v * 2.0 - 1.0;
+        }
+        grads[i].resize(batch * d_out, 0.0);
+        rng.fill_uniform(&mut grads[i]);
+        for v in grads[i].iter_mut() {
+            *v -= 0.5;
+        }
+    }
+}
+
+/// Snapshot the job's weights (+ its root RNG identity) as a
+/// checkpoint after `step` optimizer steps.
+fn checkpoint_of(
+    spec: &JobSpec,
+    step: usize,
+    weights: &[Vec<f32>],
+    job_rng: &EngineRng,
+) -> Checkpoint {
+    let tensors = spec
+        .layers
+        .iter()
+        .zip(weights)
+        .map(|(&(_, d_in, d_out), w)| HostTensor::f32(vec![d_out, d_in], w.clone()))
+        .collect();
+    Checkpoint::new(step as u64, tensors).with_rng(job_rng)
+}
+
+/// The job engine: validate, init, then per step draw data, run the
+/// profile-built [`ModelStep`], update weights (train jobs), and emit
+/// events through `emit`. Deterministic in the spec alone — `n_threads`
+/// is a throughput knob (thread-count invariance is the layer-step
+/// contract), and scratch reuse never leaks bits between jobs.
+pub(super) fn run_job_with(
+    spec: &JobSpec,
+    n_threads: usize,
+    scratch: &mut JobScratch,
+    mut emit: impl FnMut(JobEvent),
+) -> Result<JobSummary, String> {
+    spec.validate()?;
+    let job_rng = spec.profile.noise_engine().seed_rng(spec.seed).fork(spec.job_id);
+    let n_layers = spec.layers.len();
+    scratch.reserve_layers(n_layers);
+    for (i, &(_, d_in, d_out)) in spec.layers.iter().enumerate() {
+        init_weights(&job_rng, i, d_in, d_out, &mut scratch.weights[i]);
+    }
+    let mut model: ModelStep<EngineRng> =
+        ModelStep::from_profile(&spec.profile, grad_cfg(), n_layers);
+
+    let mut final_loss_bits = 0u32;
+    let mut checkpoint_crc32 = 0u32;
+    for step in 0..spec.steps {
+        fill_step_data(
+            &job_rng,
+            step,
+            &spec.layers,
+            &mut scratch.acts[..n_layers],
+            &mut scratch.grads[..n_layers],
+        );
+        let inputs: Vec<ModelLayerInput<'_>> = spec
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, &(batch, d_in, d_out))| ModelLayerInput {
+                acts: &scratch.acts[i],
+                weights: &scratch.weights[i],
+                grads: &scratch.grads[i],
+                batch,
+                d_in,
+                d_out,
+            })
+            .collect();
+        let noise_base = job_rng.fork(NS_NOISE | step as u64);
+        model.step(&inputs, &noise_base, n_threads);
+        drop(inputs);
+
+        // Metrics: sequential f64 accumulation over a fixed layer
+        // order — bit-deterministic regardless of worker placement.
+        let mut loss_acc = 0.0f64;
+        let mut elems = 0usize;
+        let mut gn_acc = 0.0f64;
+        for i in 0..n_layers {
+            for &v in model.layer(i).y() {
+                loss_acc += (v as f64) * (v as f64);
+            }
+            elems += model.layer(i).y().len();
+            for &g in model.layer(i).dw_t() {
+                gn_acc += (g as f64) * (g as f64);
+            }
+        }
+        let loss = (loss_acc / elems.max(1) as f64) as f32;
+        let grad_norm = gn_acc.sqrt() as f32;
+        final_loss_bits = loss.to_bits();
+
+        if spec.kind == JobKind::Train {
+            for (i, &(_, d_in, d_out)) in spec.layers.iter().enumerate() {
+                let dw_t = model.layer(i).dw_t(); // d_in × d_out
+                let w = &mut scratch.weights[i]; // d_out × d_in
+                for o in 0..d_out {
+                    for ii in 0..d_in {
+                        w[o * d_in + ii] -= spec.lr * dw_t[ii * d_out + o];
+                    }
+                }
+            }
+        }
+        emit(JobEvent::Step { step, loss, grad_norm });
+
+        let cadence_due =
+            spec.checkpoint_every > 0 && (step + 1) % spec.checkpoint_every == 0;
+        if cadence_due || step + 1 == spec.steps {
+            let ckpt = checkpoint_of(spec, step + 1, &scratch.weights[..n_layers], &job_rng);
+            let bytes = ckpt.encode().map_err(|e| format!("checkpoint encode: {e:#}"))?;
+            checkpoint_crc32 = crc32(&bytes);
+            emit(JobEvent::Checkpoint { step: step + 1, bytes });
+        }
+    }
+    let summary = JobSummary {
+        job_id: spec.job_id,
+        kind: spec.kind,
+        steps_run: spec.steps,
+        final_loss_bits,
+        checkpoint_crc32,
+    };
+    emit(JobEvent::Done(summary.clone()));
+    Ok(summary)
+}
+
+/// Execute a spec standalone and collect its full event stream — **the
+/// replay oracle**: bit-identical to the same spec's in-server
+/// execution (pinned by the serve determinism tests).
+pub fn run_job(spec: &JobSpec) -> Result<(Vec<JobEvent>, JobSummary), String> {
+    let mut scratch = JobScratch::default();
+    let mut events = Vec::new();
+    let summary = run_job_with(spec, 1, &mut scratch, |e| events.push(e))?;
+    Ok((events, summary))
+}
+
+/// Stream events to an mpsc sender, ending with `Failed` on error. A
+/// disconnected receiver (client gave up) is not an error: the job
+/// still runs to completion so its side effects stay deterministic.
+pub(super) fn run_job_streaming(
+    spec: &JobSpec,
+    n_threads: usize,
+    scratch: &mut JobScratch,
+    events: &Sender<JobEvent>,
+) {
+    if let Err(error) = run_job_with(spec, n_threads, scratch, |e| {
+        events.send(e).ok();
+    }) {
+        events.send(JobEvent::Failed { error }).ok();
+    }
+}
+
+/// Flatten an event stream into comparable bits — the replay tests'
+/// equality witness (step metrics as raw f32 bits, checkpoints by
+/// CRC32, summaries verbatim).
+#[cfg(test)]
+pub(super) fn event_fingerprint(events: &[JobEvent]) -> Vec<(u8, u64, u64)> {
+    events
+        .iter()
+        .map(|e| match e {
+            JobEvent::Step { step, loss, grad_norm } => (
+                0u8,
+                *step as u64,
+                ((loss.to_bits() as u64) << 32) | grad_norm.to_bits() as u64,
+            ),
+            JobEvent::Checkpoint { step, bytes } => (1u8, *step as u64, crc32(bytes) as u64),
+            JobEvent::Failed { .. } => (2u8, 0, 0),
+            JobEvent::Done(s) => (
+                3u8,
+                s.job_id,
+                ((s.final_loss_bits as u64) << 32) | s.checkpoint_crc32 as u64,
+            ),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::qgemm::ShardConfig;
+    use crate::rng::NoiseEngine;
+
+    fn small_spec(job_id: u64) -> JobSpec {
+        let mut spec = JobSpec::new(job_id, vec![(4, 9, 6), (3, 6, 5)]);
+        spec.steps = 3;
+        spec.checkpoint_every = 2;
+        spec
+    }
+
+    #[test]
+    fn job_toml_round_trips_spec_and_profile() {
+        let spec = JobSpec::from_toml(
+            "[job]\nid = 7\nkind = \"eval\"\nsteps = 5\nlr = 0.125\n\
+             checkpoint_every = 2\nseed = 42\nlayers = [4, 9, 6, 3, 6, 5]\n\
+             [profile]\nformat = \"radix4_tpr\"\nshards = 2\nnoise_engine = \"philox\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.job_id, 7);
+        assert_eq!(spec.kind, JobKind::Eval);
+        assert_eq!(spec.steps, 5);
+        assert_eq!(spec.lr, 0.125);
+        assert_eq!(spec.checkpoint_every, 2);
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.layers, vec![(4, 9, 6), (3, 6, 5)]);
+        assert_eq!(spec.profile.shards(), ShardConfig::with_shards(2));
+        assert_eq!(spec.profile.noise_engine(), NoiseEngine::Philox);
+        // The profile section is exactly StepProfile's own schema.
+        let p = spec.profile.to_toml();
+        assert!(p.contains("noise_engine = \"philox\""), "{p}");
+    }
+
+    #[test]
+    fn job_toml_rejects_malformed_input() {
+        for src in [
+            "steps = 3\n",                                      // no [job]
+            "stray = 1\n[job]\nlayers = [2, 3, 4]\n",           // top-level key
+            "[job]\nlayers = [2, 3, 4]\n[jobs]\n",              // unknown section
+            "[job]\nlayers = [2, 3, 4]\nunknown = 1\n",         // unknown key
+            "[job]\nlayers = [2, 3]\n",                         // not triples
+            "[job]\nlayers = [2, 3, 0]\n",                      // zero dim
+            "[job]\nlayers = [2, 3, 4]\nsteps = 0\n",           // bad steps
+            "[job]\nlayers = [2, 3, 4]\nkind = \"tune\"\n",     // bad kind
+            "[job]\nlayers = [2, 3, 4]\nid = -1\n",             // bad id
+            "[job]\nlayers = [2, 3, 4]\n[profile]\nbits = 9\n", // bad profile
+        ] {
+            assert!(JobSpec::from_toml(src).is_err(), "accepted: {src}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_specs() {
+        assert!(JobSpec::new(0, vec![]).validate().is_err());
+        assert!(JobSpec::new(0, vec![(0, 3, 4)]).validate().is_err());
+        let mut s = JobSpec::new(0, vec![(2, 3, 4)]);
+        s.steps = 0;
+        assert!(s.validate().is_err());
+        let mut s = JobSpec::new(0, vec![(2, 3, 4)]);
+        s.lr = f32::NAN;
+        assert!(s.validate().is_err());
+        assert!(JobSpec::new(0, vec![(2, 3, 4)]).validate().is_ok());
+    }
+
+    #[test]
+    fn run_job_emits_steps_checkpoints_and_done() {
+        let spec = small_spec(3);
+        let (events, summary) = run_job(&spec).unwrap();
+        let steps: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                JobEvent::Step { step, .. } => Some(*step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(steps, vec![0, 1, 2]);
+        // cadence 2 over 3 steps: checkpoint after step 2 and final.
+        let ckpts: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                JobEvent::Checkpoint { step, .. } => Some(*step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ckpts, vec![2, 3]);
+        assert!(matches!(events.last(), Some(JobEvent::Done(_))));
+        assert_eq!(summary.steps_run, 3);
+        assert_eq!(summary.job_id, 3);
+        // The streamed checkpoint decodes and matches the summary crc.
+        let Some(JobEvent::Checkpoint { bytes, .. }) = events
+            .iter()
+            .rev()
+            .find(|e| matches!(e, JobEvent::Checkpoint { .. }))
+        else {
+            panic!("no checkpoint event")
+        };
+        assert_eq!(crc32(bytes), summary.checkpoint_crc32);
+        let ckpt = Checkpoint::decode(bytes).unwrap();
+        assert_eq!(ckpt.step, 3);
+        assert_eq!(ckpt.tensors.len(), 2);
+        assert_eq!(ckpt.tensors[0].shape(), &[6, 9]);
+        assert!(ckpt.rng.is_some());
+    }
+
+    #[test]
+    fn replay_is_bit_identical_and_job_ids_decorrelate() {
+        let spec = small_spec(11);
+        let (ev_a, sum_a) = run_job(&spec).unwrap();
+        let (ev_b, sum_b) = run_job(&spec).unwrap();
+        assert_eq!(sum_a, sum_b);
+        assert_eq!(event_fingerprint(&ev_a), event_fingerprint(&ev_b));
+
+        let mut other = small_spec(12);
+        other.job_id = 12;
+        let (_, sum_c) = run_job(&other).unwrap();
+        assert_ne!(
+            sum_a.final_loss_bits, sum_c.final_loss_bits,
+            "distinct job ids must draw distinct streams"
+        );
+    }
+
+    #[test]
+    fn eval_jobs_leave_weights_at_init() {
+        let mut spec = small_spec(5);
+        spec.kind = JobKind::Eval;
+        let (events, _) = run_job(&spec).unwrap();
+        let images: Vec<&Vec<u8>> = events
+            .iter()
+            .filter_map(|e| match e {
+                JobEvent::Checkpoint { bytes, .. } => Some(bytes),
+                _ => None,
+            })
+            .collect();
+        let first = Checkpoint::decode(images[0]).unwrap();
+        let last = Checkpoint::decode(images[images.len() - 1]).unwrap();
+        for (a, b) in first.tensors.iter().zip(&last.tensors) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "eval updated weights");
+        }
+    }
+}

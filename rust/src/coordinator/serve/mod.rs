@@ -1,0 +1,301 @@
+//! `coordinator::serve` — the multi-tenant training-as-a-service
+//! coordinator (ROADMAP open item 2's serving half).
+//!
+//! A [`Server`] accepts concurrent train/eval [`JobSpec`] submissions
+//! and runs them on a bounded pool of OS-thread workers (no async
+//! runtime — the offline registry has no tokio, and job granularity is
+//! far too coarse to need one). The moving parts:
+//!
+//! * **Admission queue.** A `std::sync::mpsc::sync_channel` of depth
+//!   [`ServerOptions::queue_depth`]. [`Server::submit`] uses `try_send`,
+//!   so a full queue is an immediate, explicit
+//!   [`SubmitError::QueueFull`] — backpressure the tenant sees, never a
+//!   silent unbounded buffer.
+//! * **Worker pool.** [`ServerOptions::workers`] threads share the
+//!   queue receiver behind a mutex (the coarse-grain work-stealing
+//!   shape of [`ModelStep`], one level up) and keep per-worker pooled
+//!   scratch across jobs (`job::JobScratch`).
+//! * **Event streams.** Each submission returns a [`JobHandle`] whose
+//!   channel streams [`JobEvent`]s: per-step metrics, encoded
+//!   checkpoint images ([`Checkpoint::encode`] bytes), then a terminal
+//!   `Done` summary (or `Failed`).
+//!
+//! **Determinism contract (the tentpole guarantee).** A job's entire
+//! execution is a pure function of its [`JobSpec`]: its randomness root
+//! is `profile.noise_engine().seed_rng(seed).fork(job_id)` and every
+//! purpose stream forks from that root under a namespace tag. Neither
+//! worker placement, pool size, queue pressure, nor co-tenant jobs can
+//! shift a single bit — so [`run_job`] (standalone replay) is
+//! bit-identical to the same spec's execution inside a busy server.
+//! `replayed_jobs_match_busy_server_bitwise` pins this on both noise
+//! engines, comparing streamed step metrics and final checkpoint bytes.
+//!
+//! [`ModelStep`]: super::model_step::ModelStep
+//! [`Checkpoint::encode`]: super::checkpoint::Checkpoint::encode
+
+mod job;
+mod worker;
+
+pub use job::{run_job, JobEvent, JobKind, JobSpec, JobSummary};
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use worker::{spawn_workers, Queued};
+
+/// Server sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    /// Worker threads. `0` is a valid admission-only server (nothing
+    /// drains — useful for backpressure tests and drain-later setups).
+    pub workers: usize,
+    /// Bounded admission depth; submissions beyond it get
+    /// [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
+    /// Inner GEMM thread budget per worker (a throughput knob only —
+    /// results are thread-count invariant by the layer-step contract).
+    pub inner_threads: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { workers: 2, queue_depth: 8, inner_threads: 1 }
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity — retry later or
+    /// raise [`ServerOptions::queue_depth`].
+    QueueFull,
+    /// The server is shutting down; no further admissions.
+    ShuttingDown,
+    /// The spec failed [`JobSpec::validate`].
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+            SubmitError::Invalid(why) => write!(f, "invalid job spec: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A tenant's view of one admitted job: its id plus the receiving end
+/// of the event stream.
+pub struct JobHandle {
+    job_id: u64,
+    rx: Receiver<JobEvent>,
+}
+
+impl JobHandle {
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// Next event, blocking; `None` once the stream is finished (after
+    /// the terminal `Done`/`Failed`, or if the worker pool died).
+    pub fn next_event(&self) -> Option<JobEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream to completion, returning every event plus the
+    /// terminal summary. `Err` carries the job's failure message (or a
+    /// pool-death diagnosis if the stream ended without a terminal).
+    pub fn wait(self) -> Result<(Vec<JobEvent>, JobSummary), String> {
+        let mut events = Vec::new();
+        let mut summary = None;
+        let mut failure = None;
+        for e in self.rx.iter() {
+            match &e {
+                JobEvent::Done(s) => summary = Some(s.clone()),
+                JobEvent::Failed { error } => failure = Some(error.clone()),
+                _ => {}
+            }
+            events.push(e);
+        }
+        if let Some(error) = failure {
+            return Err(error);
+        }
+        match summary {
+            Some(s) => Ok((events, s)),
+            None => Err(format!(
+                "job {}: event stream ended without a terminal event (worker pool gone)",
+                self.job_id
+            )),
+        }
+    }
+}
+
+/// The multi-tenant job server. Dropping it (or calling
+/// [`Server::shutdown`]) closes admission, lets the workers drain
+/// every already-admitted job, and joins the pool.
+pub struct Server {
+    tx: Option<SyncSender<Queued>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker pool and open admission.
+    pub fn start(opts: ServerOptions) -> Server {
+        let (tx, rx) = sync_channel::<Queued>(opts.queue_depth.max(1));
+        let queue = Arc::new(Mutex::new(rx));
+        let workers = spawn_workers(&queue, opts.workers, opts.inner_threads.max(1));
+        Server { tx: Some(tx), workers }
+    }
+
+    /// Validate and admit a job. Non-blocking: a full queue is an
+    /// immediate [`SubmitError::QueueFull`] (explicit backpressure),
+    /// never a stall.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle, SubmitError> {
+        spec.validate().map_err(SubmitError::Invalid)?;
+        let job_id = spec.job_id;
+        let tx = self.tx.as_ref().ok_or(SubmitError::ShuttingDown)?;
+        let (etx, erx) = channel();
+        match tx.try_send(Queued { spec, events: etx }) {
+            Ok(()) => Ok(JobHandle { job_id, rx: erx }),
+            Err(TrySendError::Full(_)) => Err(SubmitError::QueueFull),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Close admission, drain already-admitted jobs, join the pool.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.tx = None;
+        for handle in self.workers.drain(..) {
+            // A worker that panicked already surfaced the failure on
+            // its job's event stream; don't double-panic the server.
+            handle.join().ok();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::job::event_fingerprint;
+    use super::*;
+    use crate::rng::NoiseEngine;
+
+    fn spec(job_id: u64, engine: NoiseEngine) -> JobSpec {
+        let mut s = JobSpec::new(job_id, vec![(4, 9, 6), (3, 6, 5)]);
+        s.steps = 3;
+        s.checkpoint_every = 2;
+        s.seed = 0x5E;
+        s.profile = crate::coordinator::profile::StepProfile::builder()
+            .noise_engine(engine)
+            .build()
+            .unwrap();
+        s
+    }
+
+    #[test]
+    fn server_streams_every_submitted_job_to_completion() {
+        let server = Server::start(ServerOptions { workers: 2, ..Default::default() });
+        let handles: Vec<JobHandle> =
+            (0..5).map(|i| server.submit(spec(i, NoiseEngine::Xoshiro)).unwrap()).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.job_id(), i as u64);
+            let (events, summary) = h.wait().unwrap();
+            assert_eq!(summary.job_id, i as u64);
+            assert_eq!(summary.steps_run, 3);
+            let n_steps =
+                events.iter().filter(|e| matches!(e, JobEvent::Step { .. })).count();
+            assert_eq!(n_steps, 3);
+            assert!(matches!(events.last(), Some(JobEvent::Done(_))));
+        }
+        server.shutdown();
+    }
+
+    /// The tentpole acceptance test: a job replayed standalone
+    /// ([`run_job`]) is bit-identical — streamed step metrics,
+    /// checkpoint images, and summary — to its execution inside a busy
+    /// server (4 workers, 6 concurrent tenants), on both noise engines.
+    #[test]
+    fn replayed_jobs_match_busy_server_bitwise() {
+        for engine in [NoiseEngine::Xoshiro, NoiseEngine::Philox] {
+            let server = Server::start(ServerOptions {
+                workers: 4,
+                queue_depth: 16,
+                inner_threads: 2,
+            });
+            let specs: Vec<JobSpec> = (0..6).map(|i| spec(i, engine)).collect();
+            let handles: Vec<JobHandle> =
+                specs.iter().map(|s| server.submit(s.clone()).unwrap()).collect();
+            for (s, h) in specs.iter().zip(handles) {
+                let (served_events, served_summary) = h.wait().unwrap();
+                let (replay_events, replay_summary) = run_job(s).unwrap();
+                assert_eq!(served_summary, replay_summary, "{engine:?} job {}", s.job_id);
+                assert_eq!(
+                    event_fingerprint(&served_events),
+                    event_fingerprint(&replay_events),
+                    "{engine:?} job {} diverged between server and replay",
+                    s.job_id
+                );
+                // Final checkpoint bytes (not just CRCs) are identical.
+                let image = |evs: &[JobEvent]| -> Vec<u8> {
+                    evs.iter()
+                        .rev()
+                        .find_map(|e| match e {
+                            JobEvent::Checkpoint { bytes, .. } => Some(bytes.clone()),
+                            _ => None,
+                        })
+                        .unwrap()
+                };
+                assert_eq!(image(&served_events), image(&replay_events));
+            }
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn full_admission_queue_rejects_loudly() {
+        // No workers: nothing drains, so the queue fills
+        // deterministically.
+        let server =
+            Server::start(ServerOptions { workers: 0, queue_depth: 2, inner_threads: 1 });
+        assert!(server.submit(spec(0, NoiseEngine::Xoshiro)).is_ok());
+        assert!(server.submit(spec(1, NoiseEngine::Xoshiro)).is_ok());
+        assert_eq!(
+            server.submit(spec(2, NoiseEngine::Xoshiro)).unwrap_err(),
+            SubmitError::QueueFull
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_at_admission() {
+        let server = Server::start(ServerOptions::default());
+        let err = server.submit(JobSpec::new(0, vec![])).unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn abandoned_handles_do_not_wedge_the_server() {
+        let server = Server::start(ServerOptions { workers: 1, ..Default::default() });
+        // Drop the handle immediately: the worker's sends fail
+        // silently and the job still completes, freeing the worker.
+        drop(server.submit(spec(0, NoiseEngine::Xoshiro)).unwrap());
+        let h = server.submit(spec(1, NoiseEngine::Xoshiro)).unwrap();
+        let (_, summary) = h.wait().unwrap();
+        assert_eq!(summary.job_id, 1);
+        server.shutdown();
+    }
+}

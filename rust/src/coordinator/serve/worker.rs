@@ -1,0 +1,55 @@
+//! The worker pool: shared-queue job pickup with per-worker pooled
+//! scratch.
+//!
+//! The same coarse-grained work-stealing shape as
+//! [`crate::coordinator::model_step::ModelStep`]'s layer pool, one
+//! level up: the unit of work is a whole job, the queue is a mutex
+//! around the admission channel's receiver, and a worker pulls the next
+//! job whenever it finishes one — a straggler job never idles the rest
+//! of the pool. Each worker owns a [`JobScratch`] that persists across
+//! jobs, so a warm worker re-runs same-shape jobs without allocating.
+//!
+//! Work placement cannot affect results: every job's randomness is
+//! keyed by `(seed, job_id)` (see [`super::job`]), never by which
+//! worker runs it or what ran before.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::job::{run_job_streaming, JobEvent, JobScratch, JobSpec};
+
+/// One admitted job: the spec plus the tenant's event stream.
+pub(super) struct Queued {
+    pub spec: JobSpec,
+    pub events: Sender<JobEvent>,
+}
+
+/// Spawn `n` workers draining the shared admission queue. Workers exit
+/// when the queue's sender side is dropped (server shutdown) and the
+/// buffer is empty; already-admitted jobs always run to completion.
+pub(super) fn spawn_workers(
+    queue: &Arc<Mutex<Receiver<Queued>>>,
+    n: usize,
+    inner_threads: usize,
+) -> Vec<JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let queue = Arc::clone(queue);
+            std::thread::spawn(move || {
+                let mut scratch = JobScratch::default();
+                loop {
+                    // A panicking worker poisons the lock; the queue
+                    // itself stays coherent, so surviving workers keep
+                    // draining (mirroring ModelStep's pool).
+                    let next = match queue.lock() {
+                        Ok(rx) => rx.recv(),
+                        Err(poisoned) => poisoned.into_inner().recv(),
+                    };
+                    let Ok(Queued { spec, events }) = next else { break };
+                    run_job_streaming(&spec, inner_threads, &mut scratch, &events);
+                }
+            })
+        })
+        .collect()
+}

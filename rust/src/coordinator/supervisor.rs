@@ -274,8 +274,15 @@ impl<R: NoiseSource> SupervisedLayerStep<R> {
         bits: u32,
         format: ForwardFormat,
     ) -> SupervisedLayerStep<R> {
+        Self::from_quantized(QuantizedLayerStep::with_format(grad_cfg, bits, format))
+    }
+
+    /// Wrap an already-configured quantized step (e.g. one built by
+    /// `StepProfile::layer_step`, carrying its sharding and kernel-path
+    /// settings) in the fp32 escape hatch.
+    pub fn from_quantized(quant: QuantizedLayerStep<R>) -> SupervisedLayerStep<R> {
         SupervisedLayerStep {
-            quant: QuantizedLayerStep::with_format(grad_cfg, bits, format),
+            quant,
             fp32: Fp32LayerStep::new(),
             last_precision: StepPrecision::Quantized,
             expected_rng: None,

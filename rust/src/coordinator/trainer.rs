@@ -2,6 +2,7 @@
 //! owning data, noise, hindsight state, and metrics.
 
 use crate::coordinator::layer_step::{ForwardFormat, LayerStepStats, QuantizedLayerStep};
+use crate::coordinator::profile::StepProfile;
 use crate::coordinator::qgemm_path::QgemmPath;
 use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::supervisor::{
@@ -511,7 +512,7 @@ impl Trainer {
     /// al. do). Feed the returned step's per-GEMM stats back through
     /// [`Self::observe_layer_step`] to keep the Eq. 24 tracker warm.
     pub fn quantized_layer_step(&self, layer: usize, format: ForwardFormat) -> QuantizedLayerStep {
-        self.quantized_layer_step_for(layer, format)
+        self.layer_step_with(layer, &self.profile_for(format))
     }
 
     /// [`Self::quantized_layer_step`] on the trainer's configured
@@ -524,19 +525,40 @@ impl Trainer {
         layer: usize,
         format: ForwardFormat,
     ) -> QuantizedLayerStep<EngineRng> {
-        self.quantized_layer_step_for(layer, format)
+        self.layer_step_with(layer, &self.profile_for(format))
     }
 
-    /// The single construction point both layer-step variants share —
-    /// any noise source, same hindsight-aware config and bit width.
-    fn quantized_layer_step_for<R: NoiseSource>(
+    /// The [`StepProfile`] this trainer's options resolve to for the
+    /// given gradient pipeline — the bridge from the legacy per-option
+    /// surface (`TrainerOptions::{noise_engine, shards}`, per-call
+    /// `format`) to the unified session config.
+    /// [`Self::layer_step_with`] on this profile reproduces
+    /// [`Self::quantized_layer_step`] bit-for-bit (pinned by
+    /// `profile_step_bit_matches_legacy_construction`).
+    pub fn profile_for(&self, format: ForwardFormat) -> StepProfile {
+        StepProfile::builder()
+            .format(format)
+            .shards(self.opts.shards)
+            .noise_engine(self.opts.noise_engine)
+            .build()
+            // Infallible: `build` only rejects an out-of-range bit
+            // width, and the builder keeps the paper-default 4.
+            .unwrap_or_default()
+    }
+
+    /// **The** layer-step entry point: build the host-side three-GEMM
+    /// step for quantized layer `layer`, configured entirely by
+    /// `profile` (format, bit width, sharding, kernel path), with the
+    /// trainer contributing only the per-layer hindsight-aware gradient
+    /// config. Every legacy constructor
+    /// ([`Self::quantized_layer_step`], the engine-dispatched and
+    /// supervised variants) is a thin wrapper over this.
+    pub fn layer_step_with<R: NoiseSource>(
         &self,
         layer: usize,
-        format: ForwardFormat,
+        profile: &StepProfile,
     ) -> QuantizedLayerStep<R> {
-        let mut step = QuantizedLayerStep::with_format(self.grad_cfg_for_layer(layer), 4, format);
-        step.set_shards(self.opts.shards);
-        step
+        profile.layer_step(self.grad_cfg_for_layer(layer))
     }
 
     /// A generator of the trainer's configured noise engine for driving
@@ -601,12 +623,16 @@ impl Trainer {
     /// fp32 escape hatch: a [`SupervisedLayerStep`] on the trainer's
     /// configured noise engine. Drive it with [`Self::supervisor_mut`]
     /// and a generator from [`Self::layer_step_rng`].
+    /// Routed through [`Self::layer_step_with`] like every other
+    /// constructor — which also closes a latent inconsistency: the
+    /// supervised step now honors `TrainerOptions::shards` (it used to
+    /// silently run unsharded regardless of the option).
     pub fn supervised_layer_step_engine(
         &self,
         layer: usize,
         format: ForwardFormat,
     ) -> SupervisedLayerStep<EngineRng> {
-        SupervisedLayerStep::with_format(self.grad_cfg_for_layer(layer), 4, format)
+        SupervisedLayerStep::from_quantized(self.layer_step_with(layer, &self.profile_for(format)))
     }
 
     /// Train for `steps` under a schedule, with optional progress logging.

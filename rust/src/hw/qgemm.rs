@@ -587,8 +587,10 @@ fn note_explicit_clamp(requested: KernelPath, k: usize, bound: usize) {
 }
 
 /// `Some(None)` = auto, `Some(Some(p))` = explicit path, `None` =
-/// unrecognized. ASCII case-insensitive, whitespace-trimmed.
-fn parse_kernel_path(raw: &str) -> Option<Option<KernelPath>> {
+/// unrecognized. ASCII case-insensitive, whitespace-trimmed. Shared
+/// with `coordinator::profile`, which parses the same names from the
+/// `[profile] kernel_path` config key.
+pub(crate) fn parse_kernel_path(raw: &str) -> Option<Option<KernelPath>> {
     match raw.trim().to_ascii_lowercase().as_str() {
         "" | "auto" => Some(None),
         "scalar" => Some(Some(KernelPath::Scalar)),
@@ -1081,15 +1083,19 @@ impl ShardConfig {
     /// The [`SHARDS_ENV`] override: unset or empty means
     /// [`ShardConfig::single`]; anything else must parse as a positive
     /// integer — a value that does not is a misconfiguration and fails
-    /// loudly instead of silently running unsharded.
+    /// loudly instead of silently running unsharded. Read via `var_os`
+    /// so a non-UTF-8 value is also a loud failure, not a silent
+    /// fallback (`std::env::var` folds `NotUnicode` into its error arm,
+    /// which is how a garbled `QGEMM_SHARDS` used to run unsharded).
     pub fn from_env() -> ShardConfig {
-        match std::env::var(SHARDS_ENV) {
-            Err(_) => ShardConfig::single(),
-            Ok(raw) => match parse_shards(&raw) {
+        match std::env::var_os(SHARDS_ENV) {
+            None => ShardConfig::single(),
+            Some(raw) => match shards_from_env_value(&raw) {
                 Some(config) => config,
                 // tidy-allow: panic-policy (explicit env misconfiguration must fail loudly)
                 None => panic!(
-                    "qgemm: unrecognized {SHARDS_ENV}={raw:?} (expected a positive integer)"
+                    "qgemm: unrecognized {SHARDS_ENV}={raw:?} \
+                     (expected a positive integer, UTF-8)"
                 ),
             },
         }
@@ -1128,6 +1134,14 @@ impl ShardConfig {
             kb.div_ceil(kb.div_ceil(self.n_shards))
         }
     }
+}
+
+/// A *set* [`SHARDS_ENV`] value, split out for testability without
+/// mutating process-global env state: `None` for unparseable **or
+/// non-UTF-8** bytes — both are misconfigurations [`ShardConfig::from_env`]
+/// turns into a panic, never a silent unsharded fallback.
+fn shards_from_env_value(raw: &std::ffi::OsStr) -> Option<ShardConfig> {
+    raw.to_str().and_then(parse_shards)
 }
 
 /// [`SHARDS_ENV`] parser, split out for testability: `Some(config)` for
@@ -2225,6 +2239,21 @@ mod tests {
         assert_eq!(parse_shards("1"), Some(ShardConfig::single()));
         assert_eq!(parse_shards("0"), None);
         assert_eq!(parse_shards("four"), None);
+        // The set-env-value wrapper `from_env` panics through: UTF-8
+        // values delegate to `parse_shards`, non-UTF-8 bytes are a
+        // misconfiguration (`None`), NOT a silent unsharded fallback —
+        // the bug this PR closes (`std::env::var` folded `NotUnicode`
+        // into its unset arm).
+        assert_eq!(
+            shards_from_env_value(std::ffi::OsStr::new("4")),
+            Some(ShardConfig::with_shards(4))
+        );
+        assert_eq!(shards_from_env_value(std::ffi::OsStr::new("junk")), None);
+        #[cfg(unix)]
+        {
+            use std::os::unix::ffi::OsStrExt;
+            assert_eq!(shards_from_env_value(std::ffi::OsStr::from_bytes(b"\xff\xfe4")), None);
+        }
         assert_eq!(ShardConfig::with_shards(0), ShardConfig::single());
         assert_eq!(ShardConfig::default(), ShardConfig::single());
         assert!(ShardConfig::single().is_single());

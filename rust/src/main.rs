@@ -10,6 +10,9 @@
 //!          fig3-right fig4 fig5 fig6 a3 all
 //! luq hw                            MF-BPROP exhaustive check + gate model
 //! luq golden [--out FILE]           emit cross-layer golden vectors
+//! luq serve --spec <job.toml> [--jobs N] [--workers W] [--queue D]
+//!     multi-tenant job server: submit N copies of the spec (job ids
+//!     offset per copy), stream per-step metrics as JSONL
 //! ```
 //!
 //! Hand-rolled argument parsing: the offline registry has no clap.
@@ -105,6 +108,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "exp" => cmd_exp(args, &flags),
         "hw" => cmd_hw(),
         "golden" => cmd_golden(&flags),
+        "serve" => cmd_serve(&flags),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())
@@ -114,12 +118,78 @@ fn dispatch(args: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "luq — 4-bit training (LUQ, ICLR 2023) coordinator
-commands: list | inspect <artifact> | train | exp <id> | hw | golden
+commands: list | inspect <artifact> | train | exp <id> | hw | golden | serve
 see `rust/src/main.rs` docs for flags";
+
+/// `luq serve`: start the multi-tenant job server, submit `--jobs`
+/// copies of the `--spec` TOML (job ids offset per copy so each draws
+/// its own noise streams), and stream every job's metrics as JSONL.
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    use luq::coordinator::{JobEvent, JobSpec, Server, ServerOptions};
+    let spec_path = flags
+        .get("--spec")
+        .context("usage: luq serve --spec <job.toml> [--jobs N] [--workers W] [--queue D]")?;
+    let src = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("reading {spec_path}"))?;
+    let base = JobSpec::from_toml(&src).map_err(|e| anyhow!("job spec: {e}"))?;
+    let jobs = flags.get_parse("--jobs", 1u64)?;
+    let server = Server::start(ServerOptions {
+        workers: flags.get_parse("--workers", 2usize)?,
+        queue_depth: flags.get_parse("--queue", 8usize)?,
+        inner_threads: flags.get_parse("--inner-threads", 1usize)?,
+    });
+    let mut handles = Vec::new();
+    for k in 0..jobs {
+        let mut spec = base.clone();
+        spec.job_id = base.job_id + k;
+        let id = spec.job_id;
+        match server.submit(spec) {
+            Ok(h) => handles.push(h),
+            Err(e) => eprintln!("job {id}: rejected: {e}"),
+        }
+    }
+    let mut failed = 0usize;
+    for h in handles {
+        let job_id = h.job_id();
+        match h.wait() {
+            Ok((events, summary)) => {
+                for e in &events {
+                    match e {
+                        JobEvent::Step { step, loss, grad_norm } => println!(
+                            "{{\"job\":{job_id},\"step\":{step},\"loss\":{loss},\
+                             \"grad_norm\":{grad_norm}}}"
+                        ),
+                        JobEvent::Checkpoint { step, bytes } => println!(
+                            "{{\"job\":{job_id},\"checkpoint_step\":{step},\
+                             \"checkpoint_bytes\":{}}}",
+                            bytes.len()
+                        ),
+                        _ => {}
+                    }
+                }
+                println!(
+                    "job {job_id}: done ({} steps, final loss {:.6}, ckpt crc32 {:#010x})",
+                    summary.steps_run,
+                    summary.final_loss(),
+                    summary.checkpoint_crc32
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                eprintln!("job {job_id}: failed: {e}");
+            }
+        }
+    }
+    server.shutdown();
+    if failed > 0 {
+        bail!("{failed} job(s) failed");
+    }
+    Ok(())
+}
 
 fn cmd_train(flags: &Flags) -> Result<()> {
     let engine = Engine::cpu(Engine::default_artifacts_dir())?;
-    let (profile, scheme, steps, seed, hindsight, noise_reuse, out);
+    let (profile, scheme, steps, seed, hindsight, noise_reuse, out, step_profile);
     if let Some(cfg_path) = flags.get("--config") {
         let src = std::fs::read_to_string(cfg_path)
             .with_context(|| format!("reading {cfg_path}"))?;
@@ -135,6 +205,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         hindsight = cfg.quant.hindsight;
         noise_reuse = cfg.quant.noise_reuse;
         out = cfg.out_dir;
+        step_profile = cfg.profile;
     } else {
         profile = flags.get("--profile").unwrap_or("cnn_s").to_string();
         scheme = flags.get("--scheme").unwrap_or("luq").to_string();
@@ -143,6 +214,7 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         hindsight = flags.has("--hindsight");
         noise_reuse = flags.get_parse("--noise-reuse", 1usize)?;
         out = flags.get("--out").unwrap_or("runs").to_string();
+        step_profile = luq::coordinator::StepProfile::paper_default();
     }
     let opts = ExpOptions {
         steps,
@@ -158,7 +230,14 @@ fn cmd_train(flags: &Flags) -> Result<()> {
         &scheme,
         steps,
         &opts,
-        TrainerOptions { seed, hindsight, noise_reuse, ..Default::default() },
+        TrainerOptions {
+            seed,
+            hindsight,
+            noise_reuse,
+            noise_engine: step_profile.noise_engine(),
+            shards: step_profile.shards(),
+            ..Default::default()
+        },
     )?;
     println!(
         "final: eval_loss {:.4}  eval_acc {:.2}%  ({} steps)",

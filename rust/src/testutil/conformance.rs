@@ -33,11 +33,20 @@
 //! classic unsharded oracle exactly, which keeps tier 1 nested inside
 //! tier 2 rather than forked from it.
 //!
+//! The `step-profile` row enforces the session-API contract on top: for
+//! every [`conformance_step_profiles`] entry — one per [`StepProfile`]
+//! constructor (paper defaults, builder, TOML) — the profile-built
+//! [`QuantizedLayerStep`] must reproduce the hand-wired legacy
+//! construction bit-for-bit at every thread count, so the unified config
+//! surface can never drift from the kernels it configures.
+//!
 //! [`run_conformance`] panics with the format, case, and shape on the
 //! first divergence (the `prop_check` reporting convention), so a
 //! replaying `cargo test conformance` pinpoints the exact case.
 
+use crate::config::toml::parse_toml;
 use crate::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
+use crate::coordinator::profile::StepProfile;
 use crate::hw::mfbprop::{Fp4Code, Int4Code};
 use crate::hw::qgemm::{
     int4_product_lut, product_lut, qgemm_decode_oracle, qgemm_int4_decode_oracle,
@@ -76,6 +85,35 @@ pub fn conformance_formats() -> Vec<FormatConformance> {
         FormatConformance { name: "corrupted-operand", check: check_corrupted },
         FormatConformance { name: "forward-format-layer-step", check: check_layer_step },
         FormatConformance { name: "sharded-reduction", check: check_sharded },
+        FormatConformance { name: "step-profile", check: check_profile },
+    ]
+}
+
+/// Session profiles the `step-profile` row sweeps — one entry per
+/// [`StepProfile`] constructor ([`StepProfile::paper_default`], the
+/// builder's [`StepProfileBuilder::build`], and
+/// [`StepProfile::from_toml_section`]), listed explicitly so every way
+/// to build a session config is visibly wired into the harness for the
+/// tidy coverage rule. The TOML entry parses a non-default section so
+/// the deserializer path is exercised with real knob values, not just
+/// defaults.
+///
+/// [`StepProfileBuilder::build`]: crate::coordinator::profile::StepProfileBuilder::build
+pub fn conformance_step_profiles() -> Vec<StepProfile> {
+    let toml_src = "[profile]\nformat = \"radix4_tpr\"\nbits = 4\nshards = 2\n\
+                    kernel_path = \"portable\"\nnoise_engine = \"xoshiro\"\n";
+    let section = parse_toml(toml_src)
+        .expect("step-profile TOML parses")
+        .remove("profile")
+        .expect("[profile] section present");
+    vec![
+        StepProfile::paper_default(),
+        StepProfile::builder()
+            .format(ForwardFormat::Radix4Tpr)
+            .shards(ShardConfig::with_shards(3))
+            .build()
+            .expect("builder profile is valid"),
+        StepProfile::from_toml_section(&section).expect("TOML profile is valid"),
     ]
 }
 
@@ -524,6 +562,48 @@ fn check_layer_step(
     Ok(())
 }
 
+/// Session-profile row: every [`conformance_step_profiles`] entry — one
+/// per [`StepProfile`] constructor — must drive
+/// [`StepProfile::layer_step`] to the exact bits of the hand-wired
+/// legacy construction (`with_format` + `set_shards` +
+/// `set_kernel_path`), at every thread count. This is the harness-level
+/// version of the trainer's API-redesign regression test: the unified
+/// session surface configures the kernels, it never reroutes them.
+/// Degenerate dims are clamped to 1 as in the layer-step row.
+fn check_profile(
+    rng: &mut Xoshiro256,
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: &[usize],
+) -> Result<(), String> {
+    let (batch, d_in, d_out) = (m.max(1), k.max(1), n.max(1));
+    let acts: Vec<f32> = (0..batch * d_in).map(|_| rng.normal_ms_f32(0.0, 1.2)).collect();
+    let wts: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_ms_f32(0.0, 0.4)).collect();
+    let grads: Vec<f32> =
+        (0..batch * d_out).map(|_| rng.signed_lognormal_f32(0.0, 2.0)).collect();
+    let seed = rng.next_u64();
+    let grad_cfg = LogQuantConfig::luq(LogFormat::FP4);
+    for profile in conformance_step_profiles() {
+        let mut legacy: QuantizedLayerStep =
+            QuantizedLayerStep::with_format(grad_cfg, profile.bits(), profile.format());
+        legacy.set_shards(profile.shards());
+        legacy.set_kernel_path(profile.kernel_path());
+        let mut r = Xoshiro256::seed_from_u64(seed);
+        legacy.step(&acts, &wts, &grads, batch, d_in, d_out, &mut r, 1);
+        for &t in threads {
+            let mut step: QuantizedLayerStep = profile.layer_step(grad_cfg);
+            let mut r = Xoshiro256::seed_from_u64(seed);
+            step.step(&acts, &wts, &grads, batch, d_in, d_out, &mut r, t);
+            let tag = format!("{:?}/{}sh mt[{t}]", profile.format(), profile.shards().n_shards());
+            bits_check(&format!("{tag}/y"), step.y(), legacy.y())?;
+            bits_check(&format!("{tag}/dx_t"), step.dx_t(), legacy.dx_t())?;
+            bits_check(&format!("{tag}/dw_t"), step.dw_t(), legacy.dw_t())?;
+        }
+    }
+    Ok(())
+}
+
 /// Fold per-shard partial products with the fixed pairwise tree the
 /// engine promises: adjacent pairs combine (`left += right`), an odd
 /// leftover rides to the next level. Built here from scratch — the
@@ -747,6 +827,7 @@ mod tests {
                 "corrupted-operand",
                 "forward-format-layer-step",
                 "sharded-reduction",
+                "step-profile",
             ]
         );
         let threads = conformance_thread_counts();
@@ -794,6 +875,21 @@ mod tests {
                 assert_eq!(covered, k, "{c:?} does not cover k={k}");
             }
         }
+    }
+
+    /// The step-profile sweep holds one entry per [`StepProfile`]
+    /// constructor, with non-default knobs actually set (so the builder
+    /// and TOML paths are exercised beyond the defaults they start from).
+    #[test]
+    fn conformance_step_profiles_cover_every_constructor() {
+        let profiles = conformance_step_profiles();
+        assert_eq!(profiles.len(), 3);
+        assert_eq!(profiles[0], StepProfile::paper_default());
+        assert_eq!(profiles[1].format(), ForwardFormat::Radix4Tpr);
+        assert_eq!(profiles[1].shards().n_shards(), 3);
+        assert_eq!(profiles[2].format(), ForwardFormat::Radix4Tpr);
+        assert_eq!(profiles[2].kernel_path(), Some(KernelPath::Portable));
+        assert_eq!(profiles[2].shards().n_shards(), 2);
     }
 
     /// The pairwise-tree reference folds like the engine promises: a

@@ -38,7 +38,11 @@
 //! ([`fault_sharded_layer_step_supervised_and_deterministic`]); and the
 //! long-relapse window regression — doubling follows `min(2^cycle, cap)`
 //! exactly, saturating at the cap without overshoot or overflow
-//! ([`fault_supervisor_long_relapse_window_saturates_at_cap`]).
+//! ([`fault_supervisor_long_relapse_window_saturates_at_cap`]); and the
+//! session-config intake gate — a malformed `[profile]` section is
+//! rejected loudly at every surface (direct parse and serve job spec),
+//! with the builder enforcing the same bounds
+//! ([`fault_malformed_profile_is_loud_at_every_intake`]).
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::layer_step::{ForwardFormat, QuantizedLayerStep};
@@ -628,4 +632,50 @@ fn fault_kill_and_resume_is_bit_identical() {
         }
     }
     std::fs::remove_dir_all(dir).ok();
+}
+
+/// Configuration faults are loud at every intake surface. A malformed
+/// `[profile]` section fails [`StepProfile::from_toml_section`] and the
+/// serve job deserializer with a pointed error — never a silent
+/// fall-back to defaults — and the programmatic constructors enforce
+/// the same invariant: the builder's `build` rejects out-of-range bit
+/// widths while [`StepProfile::paper_default`] always satisfies its own
+/// validation. A bad session config must die at the door, because past
+/// admission every layer above the kernels trusts the profile blindly.
+///
+/// [`StepProfile::from_toml_section`]: crate::coordinator::profile::StepProfile::from_toml_section
+/// [`StepProfile::paper_default`]: crate::coordinator::profile::StepProfile::paper_default
+#[test]
+fn fault_malformed_profile_is_loud_at_every_intake() {
+    use crate::config::toml::parse_toml;
+    use crate::coordinator::profile::StepProfile;
+    use crate::coordinator::serve::JobSpec;
+
+    for (bad, needle) in [
+        ("[profile]\nbits = 9\n", "bits"),
+        ("[profile]\nformat = \"fp32\"\n", "format"),
+        ("[profile]\nshards = 0\n", "shards"),
+        ("[profile]\nkernel_path = \"sse9\"\n", "kernel_path"),
+        ("[profile]\nnoise_engine = \"mt19937\"\n", "noise_engine"),
+        ("[profile]\nunknown_knob = 1\n", "unknown"),
+    ] {
+        let section = parse_toml(bad).unwrap().remove("profile").unwrap();
+        let err = StepProfile::from_toml_section(&section).unwrap_err();
+        assert!(
+            err.contains(needle),
+            "section error for {bad:?} is not pointed: {err}"
+        );
+        let job = format!("[job]\nlayers = [2, 3, 2]\n{bad}");
+        let err = JobSpec::from_toml(&job).unwrap_err();
+        assert!(
+            err.contains(needle),
+            "job-spec error for {bad:?} is not pointed: {err}"
+        );
+    }
+
+    // Programmatic intakes enforce the same invariant.
+    assert!(StepProfile::builder().bits(1).build().is_err());
+    assert!(StepProfile::builder().bits(5).build().is_err());
+    let p = StepProfile::paper_default();
+    assert_eq!(p, StepProfile::builder().build().unwrap());
 }

@@ -111,8 +111,9 @@ fi
 # runs, so the entry count IS the current PR number; pin explicitly with
 # LUQ_PR=<k> when running mid-PR. The benches also *assert* their gates
 # (qgemm: each tiled LUT >= 4x its scalar loop + bit-exactness; quant:
-# interleaved Philox fill >= 2x scalar xoshiro), so a perf regression
-# fails the check. Commit the snapshots with the PR.
+# interleaved Philox fill >= 2x scalar xoshiro; serve: multi-worker
+# jobs/s >= 1.2x one worker + served-vs-replay bit-identity), so a perf
+# regression fails the check. Commit the snapshots with the PR.
 pr_count=$(grep -cE '^PR [0-9]+:' CHANGES.md || true)
 PR_NUM="${LUQ_PR:-${pr_count:-0}}"
 mkdir -p bench_history
@@ -128,7 +129,10 @@ RUSTFLAGS="$BENCH_RUSTFLAGS" LUQ_BENCH_FAST=1 \
 RUSTFLAGS="$BENCH_RUSTFLAGS" LUQ_BENCH_FAST=1 \
     LUQ_BENCH_JSON="bench_history/PR${PR_NUM}_BENCH_qgemm.json" \
     cargo bench --bench qgemm
-echo "snapshots written: bench_history/PR${PR_NUM}_BENCH_{quant,qgemm}.json"
+RUSTFLAGS="$BENCH_RUSTFLAGS" LUQ_BENCH_FAST=1 \
+    LUQ_BENCH_JSON="bench_history/PR${PR_NUM}_BENCH_serve.json" \
+    cargo bench --bench serve
+echo "snapshots written: bench_history/PR${PR_NUM}_BENCH_{quant,qgemm,serve}.json"
 
 # Trajectory gate: the fresh snapshots vs the rolling median of the
 # committed history (>15% worse on any gated metric fails; a missing
